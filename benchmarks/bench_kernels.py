@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness + relative
+cost only; wall-clock MFU belongs to real TPU runs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.attention import decode_attention_ref, flash_attention_ref
+
+from .common import row, time_us
+
+
+def run() -> list[str]:
+    out = []
+    rng = np.random.default_rng(0)
+    B, S, H, KV, D = 1, 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+
+    us_ref = time_us(jax.jit(lambda q, k, v: flash_attention_ref(
+        q, k, v, causal=True, block_k=128)), q, k, v, iters=5)
+    us_pal = time_us(lambda: ops.flash_attention(q, k, v, causal=True,
+                                                 interpret=True), iters=3)
+    err = float(jnp.max(jnp.abs(
+        ops.flash_attention(q, k, v, causal=True, interpret=True)
+        - flash_attention_ref(q, k, v, causal=True))))
+    out.append(row("flash_attention_xla_ref_512", us_ref, "chunked_online_softmax"))
+    out.append(row("flash_attention_pallas_interpret_512", us_pal,
+                   f"max_err_vs_ref={err:.1e}"))
+
+    qd = jnp.asarray(rng.normal(size=(4, 1, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(4, 2048, KV, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(4, 2048, KV, D)), jnp.float32)
+    us_dref = time_us(jax.jit(lambda q, k, v: decode_attention_ref(
+        q, k, v, 2048)), qd, kc, vc, iters=5)
+    us_dpal = time_us(lambda: ops.decode_attention(qd, kc, vc,
+                                                   jnp.int32(2048),
+                                                   interpret=True), iters=3)
+    out.append(row("decode_attention_xla_ref_2k", us_dref, "cache=2048"))
+    out.append(row("decode_attention_pallas_interpret_2k", us_dpal,
+                   "cache=2048"))
+
+    params = {"w": jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)}
+    us_fu = time_us(lambda: ops.fused_async_update(params, grads, 0.01,
+                                                   interpret=True), iters=3)
+    out.append(row("fused_async_update_interpret_262k", us_fu,
+                   "update+gradnorm_one_pass"))
+    return out

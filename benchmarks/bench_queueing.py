@@ -1,0 +1,64 @@
+"""Queueing-core benchmarks: Theorem 2 validation (delay vs simulation),
+Buzen variants (literal vs aggregated vs Pallas kernel), gradient paths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (NetworkParams, delay_jacobian, expected_relative_delay,
+                        throughput)
+from repro.core.buzen import log_normalizing_constants
+from repro.core.simulator import AsyncNetworkSim
+from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
+from repro.kernels import ops
+
+from .common import row, time_us
+
+
+def run() -> list[str]:
+    out = []
+    params = build_network_params(PAPER_CLUSTERS_TABLE1)  # n = 100
+    n, m = params.n, 100
+
+    # --- Buzen variants (the optimizer inner loop) --------------------------
+    f_agg = jax.jit(lambda p: log_normalizing_constants(
+        params._replace(p=p), m, method="aggregate"))
+    us_agg = time_us(f_agg, params.p)
+    f_lit = jax.jit(lambda p: log_normalizing_constants(
+        params._replace(p=p), m, method="literal"))
+    us_lit = time_us(f_lit, params.p, iters=3)
+    us_pal = time_us(lambda: ops.buzen_log_Z(
+        params.log_rho, params.log_gamma_total, m, interpret=True), iters=3)
+    out.append(row("buzen_aggregate_n100_m100", us_agg,
+                   f"speedup_vs_literal={us_lit / us_agg:.1f}x"))
+    out.append(row("buzen_literal_n100_m100", us_lit, "prop15_reference"))
+    out.append(row("buzen_pallas_interpret_n100_m100", us_pal,
+                   "interpret_mode(cpu)"))
+
+    # --- Theorem 2: closed-form delay vs Monte-Carlo ------------------------
+    small = build_network_params(PAPER_CLUSTERS_TABLE1, scale=10)  # n = 11
+    msml = 12
+    d_th = np.asarray(expected_relative_delay(small, msml))
+    sim = AsyncNetworkSim(small, msml, seed=0)
+    stats = sim.run(60_000, warmup=8_000)
+    d_mc = np.asarray(small.p) * stats.mean_delay
+    rel = float(np.max(np.abs(d_mc - d_th) / np.maximum(d_th, 1e-3)))
+    us = time_us(jax.jit(lambda p: expected_relative_delay(
+        small._replace(p=p), msml)), small.p)
+    out.append(row("thm2_delay_closed_form_n11_m12", us,
+                   f"max_rel_err_vs_sim={rel:.3f}"))
+
+    lam_th = float(throughput(small, msml))
+    out.append(row("prop4_throughput_n11_m12", 0.0,
+                   f"sim={stats.throughput:.3f}_theory={lam_th:.3f}"))
+
+    # --- Jacobian: closed form vs autodiff ----------------------------------
+    us_cf = time_us(jax.jit(lambda p: delay_jacobian(
+        small._replace(p=p), msml)), small.p, iters=5)
+    jac_ad = jax.jit(jax.jacobian(lambda p: expected_relative_delay(
+        small._replace(p=p), msml)))
+    us_ad = time_us(jac_ad, small.p, iters=5)
+    out.append(row("thm2_jacobian_closed_form", us_cf,
+                   f"autodiff={us_ad:.0f}us_ratio={us_ad / us_cf:.2f}"))
+    return out

@@ -1,0 +1,55 @@
+"""Table 2 / Table 7 analogue: optimized routing probabilities and staleness
+impact factors per cluster, for the Table-1 population (scaled for CPU)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (LearningConstants, expected_relative_delay, throughput)
+from repro.fl import make_strategies
+from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
+                                 cluster_labels)
+
+from .common import row
+
+CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+
+
+def run(scale: int = 5, steps: int = 250) -> list[str]:
+    out = []
+    params = build_network_params(PAPER_CLUSTERS_TABLE1, scale=scale)
+    labels = cluster_labels(PAPER_CLUSTERS_TABLE1, scale=scale)
+    n = params.n
+
+    t0 = time.perf_counter()
+    strat = make_strategies(params, CONSTS, steps=steps, m_max=n + 8,
+                            which=("asyncsgd", "max_throughput", "round_opt",
+                                   "time_opt"))
+    us = (time.perf_counter() - t0) * 1e6
+
+    lam = {}
+    for name, (p, m) in strat.items():
+        pj = jnp.asarray(p)
+        lam[name] = float(throughput(params._replace(p=pj), m))
+        d = np.asarray(expected_relative_delay(params._replace(p=pj), m))
+        impact = d / np.maximum(p, 1e-12) ** 2
+        per_cluster_p = {}
+        per_cluster_i = {}
+        for lab, pi, ii in zip(labels, p, impact):
+            per_cluster_p.setdefault(lab, []).append(pi)
+            per_cluster_i.setdefault(lab, []).append(ii)
+        summary = ";".join(
+            f"{lab}:p={np.mean(per_cluster_p[lab]) * 100:.3f}%"
+            f":impact={np.mean(per_cluster_i[lab]):.1f}"
+            for lab in sorted(per_cluster_p))
+        out.append(row(f"table2_routing_{name}_m{m}", 0.0, summary))
+
+    out.append(row("table2_strategy_optimization", us,
+                   "lambda:" + ";".join(f"{k}={v:.2f}" for k, v in lam.items())))
+    # paper's qualitative claims to check downstream: lambda order
+    ok = lam["max_throughput"] >= lam["asyncsgd"] >= lam["round_opt"]
+    out.append(row("table2_throughput_ordering", 0.0,
+                   f"max>=uni>=roundopt:{ok}"))
+    return out

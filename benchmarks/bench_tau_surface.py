@@ -1,0 +1,47 @@
+"""Figure 2 analogue: E0[tau_eps] over (m, p1) for the two-client system,
+homogeneous and heterogeneous (client 2 = 3x faster)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LearningConstants, NetworkParams, wallclock_time
+
+from .common import row
+
+CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=5.0, G=14.0, eps=1.0)
+
+
+def surface(mu2: float):
+    params = NetworkParams(
+        p=jnp.asarray([0.5, 0.5]),
+        mu_c=jnp.asarray([1.0, mu2]), mu_d=jnp.asarray([1.0, mu2]),
+        mu_u=jnp.asarray([1.0, mu2]))
+    p1s = np.linspace(0.1, 0.9, 17)
+    ms = list(range(1, 25))
+    grid = np.zeros((len(ms), len(p1s)))
+    for i, m in enumerate(ms):
+        for j, p1 in enumerate(p1s):
+            pp = jnp.asarray([p1, 1 - p1])
+            grid[i, j] = float(wallclock_time(params._replace(p=pp), m, CONSTS))
+    flat = int(np.argmin(grid))
+    mi, pj = np.unravel_index(flat, grid.shape)
+    return ms[mi], p1s[pj], grid.min(), grid[0].min(), grid
+
+def run() -> list[str]:
+    out = []
+    t0 = time.perf_counter()
+    m_h, p1_h, best_h, serial_h, _ = surface(1.0)
+    m_x, p1_x, best_x, serial_x, _ = surface(3.0)
+    us = (time.perf_counter() - t0) * 1e6
+    out.append(row("fig2_tau_homogeneous", us / 2,
+                   f"m*={m_h}_p1*={p1_h:.2f}_tau*={best_h:.1f}_vs_m1={serial_h:.1f}"))
+    out.append(row("fig2_tau_heterogeneous", us / 2,
+                   f"m*={m_x}_p1*={p1_x:.2f}_tau*={best_x:.1f}_vs_m1={serial_x:.1f}"))
+    # paper claim: interior optimum m* > 1, and heterogeneous routing favors
+    # the fast client (p1 < 0.5 = less weight on slow client 1)
+    out.append(row("fig2_claims", 0.0,
+                   f"interior_opt={m_h > 1 and m_x > 1};fast_client_favored={p1_x < 0.5}"))
+    return out

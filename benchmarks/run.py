@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Set BENCH_FAST=1 to shrink
+the training-based benches (CI budget).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    fast = os.environ.get("BENCH_FAST", "0") == "1"
+    from benchmarks import (bench_concurrency_sweep, bench_energy_joint,
+                            bench_kernels, bench_pareto, bench_queueing,
+                            bench_round_optimization, bench_routing_table,
+                            bench_tau_surface, bench_training_comparison)
+
+    suites = [
+        ("queueing", lambda: bench_queueing.run()),
+        ("routing_table", lambda: bench_routing_table.run(
+            scale=10 if fast else 5, steps=120 if fast else 250)),
+        ("round_optimization", lambda: bench_round_optimization.run(
+            scale=10 if fast else 5, steps=150 if fast else 300)),
+        ("tau_surface", lambda: bench_tau_surface.run()),
+        ("concurrency_sweep", lambda: bench_concurrency_sweep.run(
+            steps=80 if fast else 150)),
+        ("pareto", lambda: bench_pareto.run(steps=80 if fast else 150)),
+        ("training_comparison", lambda: bench_training_comparison.run(
+            horizon=120.0 if fast else 240.0,
+            distributions=("exponential",) if fast
+            else ("exponential", "lognormal"),
+            seeds=(0,) if fast else (0, 1))),
+        ("energy_joint", lambda: bench_energy_joint.run(
+            horizon=120.0 if fast else 240.0, seeds=(0,) if fast else (0, 1))),
+        ("kernels", lambda: bench_kernels.run()),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            print(f"{name},nan,FAILED:{e!r}", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

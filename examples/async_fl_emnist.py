@@ -1,0 +1,69 @@
+"""End-to-end driver: Generalized AsyncSGD training on synthetic-EMNIST.
+
+Reproduces the paper's Section 5.3 comparison (Figure 3 / Table 3): four
+scheduling strategies training the same CNN on a Dirichlet(0.2) non-IID
+heterogeneous client population, measured in *virtual wall-clock time* from
+the exact Jackson-network event simulator.
+
+Run:  PYTHONPATH=src python examples/async_fl_emnist.py [--horizon 240]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LearningConstants
+from repro.data import (dirichlet_partition, make_synthetic_image_dataset,
+                        train_test_split)
+from repro.fl import (AsyncFLConfig, AsyncFLTrainer, cnn_classifier,
+                      make_strategies)
+from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--horizon", type=float, default=240.0)
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--target", type=float, default=0.6)
+    ap.add_argument("--distribution", default="exponential")
+    args = ap.parse_args()
+
+    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=args.scale)
+    consts = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
+    strategies = make_strategies(net, consts, steps=200, m_max=net.n + 6)
+
+    full = make_synthetic_image_dataset(num_classes=10, samples_per_class=120)
+    train, test = train_test_split(full, 0.2, seed=1)
+    parts = dirichlet_partition(train.y, net.n, alpha=0.2, seed=0)
+    clients = [(train.x[i], train.y[i]) for i in parts]
+
+    results = {}
+    for name, (p, m) in strategies.items():
+        eta = 0.01 if name == "max_throughput" else 0.05
+        model = cnn_classifier(28, 10)
+        tr = AsyncFLTrainer(
+            model, clients, net._replace(p=jnp.asarray(p)), m,
+            config=AsyncFLConfig(eta=eta, batch_size=32,
+                                 eval_every_time=args.horizon / 40,
+                                 distribution=args.distribution,
+                                 grad_clip=5.0),
+            test_data=(test.x, test.y))
+        log = tr.run(horizon_time=args.horizon)
+        t_hit = log.time_to_accuracy(args.target)
+        results[name] = t_hit
+        print(f"{name:>15}: m={m:3d}  final_acc={log.accuracies[-1]:.3f}  "
+              f"updates={log.updates[-1]:6d}  "
+              f"t(acc>={args.target})={t_hit:.1f}")
+    base = results.get("asyncsgd", float("inf"))
+    if np.isfinite(results.get("time_opt", np.inf)) and np.isfinite(base):
+        print(f"\ntime-optimized reaches {args.target:.0%} "
+              f"{100 * (1 - results['time_opt'] / base):.1f}% faster than "
+              f"AsyncSGD (paper Table 3: 29-46%)")
+
+
+if __name__ == "__main__":
+    main()

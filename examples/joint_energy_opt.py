@@ -1,0 +1,51 @@
+"""Energy-aware scheduling (Section 6): trace the time-energy Pareto
+frontier over rho and print the rho=0.1 operating point the paper recommends.
+
+Run:  PYTHONPATH=src python examples/joint_energy_opt.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (LearningConstants, energy_complexity,
+                        energy_optimal_routing, joint_optimal,
+                        make_time_objective, minimal_energy,
+                        sequential_concurrency_search, wallclock_time)
+from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
+                                 build_power_profile, cluster_labels)
+
+
+def main():
+    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=10)
+    power = build_power_profile(PAPER_CLUSTERS_TABLE1, scale=10)
+    labels = np.array(cluster_labels(PAPER_CLUSTERS_TABLE1, scale=10))
+    consts = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
+    n = net.n
+
+    tau_res = sequential_concurrency_search(
+        make_time_objective(net, consts), n, m_start=2, m_max=n + 6,
+        steps=200, patience=3)
+    e_star = float(minimal_energy(net, consts, power))
+    p_e = energy_optimal_routing(net, power)
+    print(f"time-optimal:   m*={tau_res.m} tau*={tau_res.value:.1f}")
+    print(f"energy-optimal: m=1 E*={e_star:.1f} "
+          f"(closed form p_i ∝ 1/sqrt(E_i), Eq. 16)")
+
+    print("\nPareto frontier (Eq. 18):")
+    print(f"{'rho':>5} {'m*':>4} {'tau':>9} {'energy':>10}  type-E weight")
+    for rho in (0.0, 0.1, 0.3, 0.5, 0.8, 1.0):
+        res = joint_optimal(net, consts, power, rho, tau_res.value, e_star,
+                            m_max=n + 6, steps=200, patience=3)
+        pp = jnp.asarray(res.p)
+        tau = float(wallclock_time(net._replace(p=pp), res.m, consts))
+        en = float(energy_complexity(net._replace(p=pp), res.m, consts, power))
+        pE = np.asarray(res.p)[labels == "E"].mean()
+        print(f"{rho:5.1f} {res.m:4d} {tau:9.1f} {en:10.1f}  {pE * 100:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

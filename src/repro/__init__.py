@@ -1,0 +1,6 @@
+"""repro — Generalized AsyncSGD stochastic-networks framework.
+
+Subpackages are imported lazily; see README.md for the map.
+"""
+
+__version__ = "1.0.0"

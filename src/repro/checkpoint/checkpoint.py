@@ -1,0 +1,76 @@
+"""Minimal pytree checkpointing (npz + structure manifest).
+
+No orbax in the container; this covers the training loop's needs: atomic
+save, exact dtype/shape restore, step metadata, and works for any pytree of
+arrays (params, optimizer state, RNG keys).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    names = [f"leaf_{i}" for i in range(len(flat))]
+    return names, flat, treedef
+
+
+def save_checkpoint(path: str | Path, tree: Any, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    names, flat, treedef = _flatten_with_names(tree)
+
+    def to_np(x):
+        a = np.asarray(x)
+        if a.dtype.kind == "V" or a.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2"):
+            return a.astype(np.float32)  # lossless upcast; dtype restored on load
+        return a
+
+    arrays = {n: to_np(x) for n, x in zip(names, flat)}
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(flat),
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "metadata": metadata or {},
+    }
+    # atomic write: temp file in the same directory, then rename
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".npz")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __manifest__=json.dumps(manifest), **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_checkpoint(path: str | Path, like: Any) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path, allow_pickle=False) as data:
+        manifest = json.loads(str(data["__manifest__"]))
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        if len(flat_like) != manifest["n_leaves"]:
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, "
+                f"expected {len(flat_like)}")
+        leaves = []
+        for i, ref in enumerate(flat_like):
+            arr = data[f"leaf_{i}"]
+            if tuple(arr.shape) != tuple(np.shape(ref)):
+                raise ValueError(f"leaf {i}: shape {arr.shape} != "
+                                 f"{np.shape(ref)}")
+            leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return (jax.tree_util.tree_unflatten(treedef, leaves),
+            manifest["step"], manifest["metadata"])

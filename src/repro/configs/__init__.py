@@ -1,0 +1,20 @@
+"""Assigned architecture registry: ``get_config(arch_id)``."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "qwen3-8b", "xlstm-350m", "qwen2-moe-a2.7b", "kimi-k2-1t-a32b",
+    "llama3-405b", "internlm2-1.8b", "qwen2-vl-2b", "whisper-medium",
+    "granite-34b", "jamba-v0.1-52b",
+]
+
+
+def get_config(arch_id: str):
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,30 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, Mamba+attention 1:7 interleave, MoE 16 experts top-2 on
+alternate layers.  [arXiv:2403.19887]"""
+from repro.models.config import ArchConfig, MoEConfig
+
+# One Jamba group = 8 layers: attention at index 3 (1:7 ratio), MoE on every
+# other layer's FFN (odd slots), dense FFN elsewhere.
+_PATTERN = ("mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba", "mamba")
+_FFNS = ("dense", "moe", "dense", "moe", "dense", "moe", "dense", "moe")
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=65536,
+    head_dim=128,
+    rope="none",            # Jamba uses no positional encoding (Mamba carries order)
+    block_pattern=_PATTERN,
+    ffn_pattern=_FFNS,
+    moe=MoEConfig(num_experts=16, top_k=2, expert_ff=14336),
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+    optimizer="adafactor",
+    citation="arXiv:2403.19887",
+)

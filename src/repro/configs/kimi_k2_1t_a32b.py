@@ -1,0 +1,24 @@
+"""kimi-k2-1t-a32b [moe] — 61L d_model=7168 64H (GQA kv=8) expert d_ff=2048
+vocab=163840, 384 routed experts top-8; first layer dense (DeepSeek-V3-style).
+Trillion-parameter paper-table config.  [arXiv:2501.kimi2]"""
+from repro.models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=163840,
+    head_dim=112,          # 7168 / 64 — note: not 128-aligned (see roofline)
+    rope="standard",
+    rope_theta=5e6,
+    sliding_window=8192,
+    moe=MoEConfig(num_experts=384, top_k=8, expert_ff=2048,
+                  num_shared=1, shared_ff=2048),
+    first_k_dense=1,
+    optimizer="adafactor",  # factored state: Adam moments would not fit HBM
+    citation="arXiv:2501.kimi2",
+)

@@ -1,0 +1,22 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (kv=16) expert d_ff=1408
+vocab=151936, 60 routed experts top-4 + 4 shared.  [hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+from repro.models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=151936,
+    head_dim=128,
+    rope="standard",
+    rope_theta=1e6,
+    sliding_window=8192,
+    moe=MoEConfig(num_experts=60, top_k=4, expert_ff=1408,
+                  num_shared=4, shared_ff=1408),
+    optimizer="adamw",
+    citation="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)

@@ -1,0 +1,23 @@
+"""qwen2-vl-2b [vlm] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936,
+M-RoPE; vision encoder stubbed to precomputed patch embeddings (256 tokens).
+[arXiv:2409.12191]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab=151936,
+    head_dim=128,
+    rope="mrope",
+    rope_theta=1e6,
+    mrope_sections=(16, 24, 24),
+    sliding_window=8192,
+    num_image_tokens=256,
+    optimizer="adamw",
+    citation="arXiv:2409.12191",
+)

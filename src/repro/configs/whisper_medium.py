@@ -1,0 +1,20 @@
+"""whisper-medium [audio] — enc-dec, 24L decoder (+24L encoder) d_model=1024
+16H (MHA) d_ff=4096 vocab=51865; mel/conv frontend stubbed to 1500 frame
+embeddings.  [arXiv:2212.04356]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    rope="none",            # sinusoidal absolute positions
+    encoder_layers=24,
+    encoder_frames=1500,
+    optimizer="adamw",
+    citation="arXiv:2212.04356",
+)

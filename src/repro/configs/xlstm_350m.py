@@ -1,0 +1,20 @@
+"""xlstm-350m [ssm] — 24L d_model=1024 4H d_ff=0 vocab=50304; alternating
+sLSTM + mLSTM blocks (projections internal to the blocks, hence d_ff=0).
+[arXiv:2405.04517]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    rope="none",
+    block_pattern=("mlstm", "slstm"),
+    ffn_pattern=("none", "none"),
+    optimizer="adamw",
+    citation="arXiv:2405.04517",
+)

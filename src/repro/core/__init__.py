@@ -1,0 +1,31 @@
+"""Queueing-theoretic core of the paper: product-form analysis, complexity
+bounds, energy model, and routing/concurrency optimization."""
+from .buzen import NetworkParams, log_normalizing_constants, log_Z_ratio
+from .complexity import (LearningConstants, eta_max, round_complexity,
+                         round_complexity_unbounded, system_staleness_factor,
+                         wallclock_time)
+from .energy import (PowerProfile, energy_complexity, energy_optimal_routing,
+                     energy_per_round, joint_objective, minimal_energy,
+                     per_task_energy)
+from .jackson import (analyze, delay_jacobian, expected_relative_delay,
+                      mean_total_counts, second_moment_matrix, throughput,
+                      throughput_grad)
+from .optimize import (OptResult, joint_optimal, make_energy_objective,
+                       make_joint_objective, make_round_objective,
+                       make_throughput_objective, make_time_objective,
+                       max_throughput, optimize_routing, round_optimal,
+                       sequential_concurrency_search, time_optimal)
+
+__all__ = [
+    "NetworkParams", "log_normalizing_constants", "log_Z_ratio",
+    "LearningConstants", "round_complexity", "round_complexity_unbounded",
+    "eta_max", "system_staleness_factor", "wallclock_time",
+    "PowerProfile", "per_task_energy", "energy_per_round", "energy_complexity",
+    "energy_optimal_routing", "minimal_energy", "joint_objective",
+    "analyze", "expected_relative_delay", "mean_total_counts",
+    "second_moment_matrix", "delay_jacobian", "throughput", "throughput_grad",
+    "OptResult", "optimize_routing", "sequential_concurrency_search",
+    "time_optimal", "round_optimal", "max_throughput", "joint_optimal",
+    "make_round_objective", "make_throughput_objective", "make_time_objective",
+    "make_energy_objective", "make_joint_objective",
+]

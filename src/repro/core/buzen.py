@@ -1,0 +1,196 @@
+"""Buzen's recursive algorithm for closed-network normalization constants.
+
+Implements Proposition 15 (client-only network of Section 2.6) and
+Proposition 19 (network with a CS-side single-server queue, Section 7) of the
+paper, in log space.
+
+Network structure (Section 2.6):
+  * ``n`` single-server FIFO queues ``c_i`` with service rate ``mu_c[i]`` and
+    visit ratio ``p[i]``  ->  load ``rho[i] = p[i] / mu_c[i]``;
+  * ``2n`` infinite-server queues (downlink ``d_i``, uplink ``u_i``) with
+    loads ``p[i]/mu_d[i]`` and ``p[i]/mu_u[i]``.
+
+With the CS buffer (Section 7) there is one extra single-server queue with
+load ``1/mu_cs`` (every task visits the CS once per cycle; the multinomial
+class structure of Eq. (20) sums out to a plain geometric factor, see
+``DESIGN.md``).
+
+Two evaluation strategies, tested to agree:
+
+  * ``method="literal"`` — the station-by-station recursion of Prop. 15:
+    each single-server station convolves the running constants with a
+    geometric series, each IS station with a Poisson series.  O(n m^2).
+  * ``method="aggregate"`` — beyond-paper fast path: all 2n IS stations
+    merge analytically into a single Poisson factor with aggregate load
+    ``gamma_tot = sum_i p_i (1/mu_d[i] + 1/mu_u[i])``, because product-form
+    IS stations only enter Z through the total-load exponential series.
+    O(n m + m^2).
+
+All functions return ``logZ`` arrays of shape ``[m_max + 1]`` with
+``logZ[k] = log Z_{n,k}``; ``Z_{n,0} = 1``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln, logsumexp
+
+from . import numerics  # noqa: F401  (enables x64)
+from .numerics import NEG_INF
+
+
+class NetworkParams(NamedTuple):
+    """Rates of the closed queueing network (Section 2.6 / 7.1)."""
+
+    p: jax.Array  # [n] routing probabilities (positive; need not sum to 1 for raw partials)
+    mu_c: jax.Array  # [n] computation rates (single-server queues)
+    mu_d: jax.Array  # [n] downlink rates (infinite-server queues)
+    mu_u: jax.Array  # [n] uplink rates (infinite-server queues)
+    mu_cs: Optional[jax.Array] = None  # scalar CS processing rate (None = infinite)
+
+    @property
+    def n(self) -> int:
+        return self.p.shape[0]
+
+    @property
+    def log_rho(self) -> jax.Array:
+        """Log-loads of the client single-server (computation) queues."""
+        return jnp.log(self.p) - jnp.log(self.mu_c)
+
+    @property
+    def gamma(self) -> jax.Array:
+        """Per-client aggregate IS load ``gamma_i`` (Theorem 2)."""
+        return self.p * (1.0 / self.mu_d + 1.0 / self.mu_u)
+
+    @property
+    def log_gamma_total(self) -> jax.Array:
+        return jnp.log(jnp.sum(self.gamma))
+
+    def with_cs(self, mu_cs) -> "NetworkParams":
+        return self._replace(mu_cs=jnp.asarray(mu_cs, dtype=self.p.dtype))
+
+
+def _log_conv(log_a: jax.Array, log_b: jax.Array) -> jax.Array:
+    """Truncated convolution in log space.
+
+    ``out[m] = logsumexp_{k=0..m} (log_a[k] + log_b[m - k])`` for
+    ``m in [0, M]`` where both inputs have shape ``[M + 1]``.
+    """
+    M = log_a.shape[0] - 1
+    k = jnp.arange(M + 1)
+    # pairs[m, k] = log_a[k] + log_b[m - k], masked to k <= m
+    idx = k[None, :]
+    rev = jnp.arange(M + 1)[:, None] - idx  # m - k
+    valid = rev >= 0
+    terms = jnp.where(valid, log_a[None, :] + log_b[jnp.clip(rev, 0)], NEG_INF)
+    return logsumexp(terms, axis=1)
+
+
+def _geometric_series(log_rho: jax.Array, m_max: int) -> jax.Array:
+    """``[k * log_rho for k in 0..m_max]`` — generating series of a single-server station."""
+    return jnp.arange(m_max + 1) * log_rho
+
+
+def _poisson_series(log_load: jax.Array, m_max: int) -> jax.Array:
+    """``[k log_load - log k! for k in 0..m_max]`` — series of an IS station."""
+    k = jnp.arange(m_max + 1)
+    return k * log_load - gammaln(k + 1.0)
+
+
+def log_normalizing_constants(
+    params: NetworkParams,
+    m_max: int,
+    *,
+    method: str = "aggregate",
+) -> jax.Array:
+    """Log normalization constants ``log Z_{n,m}`` for ``m = 0..m_max``.
+
+    Includes the CS single-server station when ``params.mu_cs`` is not None
+    (these are the ``W_{n,m}`` constants of Proposition 19).
+    """
+    log_rho = params.log_rho
+
+    if method == "aggregate":
+        # Start from the aggregated IS factor, then fold in single-server stations.
+        logZ = _poisson_series(params.log_gamma_total, m_max)
+        def fold(carry, lr):
+            return _log_conv(carry, _geometric_series(lr, m_max)), None
+        logZ, _ = jax.lax.scan(fold, logZ, log_rho)
+    elif method == "literal":
+        # Station-by-station, exactly the ordering of Proposition 15:
+        # n single-server computation queues, then n downlink IS, then n uplink IS.
+        logZ = jnp.where(jnp.arange(m_max + 1) == 0, 0.0, NEG_INF)  # Z_{.,0}=1 only
+        logZ = logZ.at[0].set(0.0)
+        for i in range(params.n):
+            logZ = _log_conv(logZ, _geometric_series(log_rho[i], m_max))
+        for i in range(params.n):
+            logZ = _log_conv(
+                logZ, _poisson_series(jnp.log(params.p[i] / params.mu_d[i]), m_max)
+            )
+        for i in range(params.n):
+            logZ = _log_conv(
+                logZ, _poisson_series(jnp.log(params.p[i] / params.mu_u[i]), m_max)
+            )
+    else:
+        raise ValueError(f"unknown method: {method}")
+
+    if params.mu_cs is not None:
+        # Multi-class CS station: the multinomial class structure of Eq. (20)
+        # sums out to a geometric factor with load sum_j p_j / mu_cs (= 1/mu_cs
+        # on the simplex).  Keeping the explicit sum_j p_j lets raw partials
+        # d/dp_j flow through the CS station, matching Theorem 7's CS terms.
+        log_load_cs = jnp.log(jnp.sum(params.p)) - jnp.log(params.mu_cs)
+        logZ = _log_conv(logZ, _geometric_series(log_load_cs, m_max))
+    return logZ
+
+
+def log_Z_ratio(logZ: jax.Array, num: int, den: int) -> jax.Array:
+    """``Z[num] / Z[den]`` in linear space, with ``Z[k<0] = 0``."""
+    if num < 0:
+        return jnp.zeros(())
+    return jnp.exp(logZ[num] - logZ[den])
+
+
+def brute_force_log_Z(params: NetworkParams, m: int) -> float:
+    """Exact Z_{n,m} by state enumeration — test oracle, tiny systems only."""
+    import itertools
+    import numpy as np
+
+    n = params.n
+    p = np.asarray(params.p)
+    mu_c = np.asarray(params.mu_c)
+    mu_d = np.asarray(params.mu_d)
+    mu_u = np.asarray(params.mu_u)
+    stations = []  # (load, is_infinite_server)
+    for i in range(n):
+        stations.append((p[i] / mu_c[i], False))
+    for i in range(n):
+        stations.append((p[i] / mu_d[i], True))
+    for i in range(n):
+        stations.append((p[i] / mu_u[i], True))
+    if params.mu_cs is not None:
+        stations.append((float(p.sum()) / float(params.mu_cs), False))
+
+    S = len(stations)
+    total = 0.0
+    # enumerate compositions of m into S parts
+    for comp in itertools.combinations(range(m + S - 1), S - 1):
+        prev = -1
+        xs = []
+        for c in comp:
+            xs.append(c - prev - 1)
+            prev = c
+        xs.append(m + S - 2 - prev)
+        term = 1.0
+        for (load, is_is), x in zip(stations, xs):
+            term *= load**x
+            if is_is:
+                import math
+
+                term /= math.factorial(x)
+        total += term
+    import math
+
+    return math.log(total)

@@ -1,0 +1,106 @@
+"""Round / wall-clock complexity of Generalized AsyncSGD.
+
+Implements:
+  * Theorem 3  — round complexity ``K_eps(p, m)`` (Eq. 9) and the maximal
+    learning rate ``eta_max(p, m)`` (Eq. 8);
+  * Theorem 17 — the bounded-gradient-free variant with the system-wide
+    staleness factor ``S_sys`` (Eq. 58);
+  * Proposition 4/8 — expected wall-clock time ``E0[tau_eps] = K_eps / lambda``.
+
+Constants follow the paper: ``B = 6 (sigma^2 + 2 M^2)``,
+``C = 6 (sigma^2 + G^2)``, ``Delta = f(w_0) - f*``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import numerics  # noqa: F401
+from .buzen import NetworkParams, log_normalizing_constants
+from .jackson import expected_relative_delay, throughput
+
+
+class LearningConstants(NamedTuple):
+    """Problem-dependent constants of Assumptions A1–A5 (Section 2.5)."""
+
+    L: float = 1.0        # smoothness (A2)
+    delta: float = 1.0    # f(w_0) - f^*  (A1)
+    sigma: float = 1.0    # gradient noise std (A3)
+    M: float = 0.0        # gradient dissimilarity (A4)
+    G: float = 1.0        # gradient norm bound (A5)
+    eps: float = 1.0      # target stationarity
+
+    @property
+    def B(self) -> float:
+        return 6.0 * (self.sigma**2 + 2.0 * self.M**2)
+
+    @property
+    def C(self) -> float:
+        return 6.0 * (self.sigma**2 + self.G**2)
+
+
+def round_complexity(params: NetworkParams, m: int, consts: LearningConstants,
+                     logZ: jax.Array | None = None) -> jax.Array:
+    """``K_eps(p, m)`` — Theorem 3, Eq. (9)."""
+    n = params.n
+    p = params.p
+    eps = consts.eps
+    first = (4.0 + consts.B / eps) * jnp.sum(1.0 / (n * p))
+    if m > 1:  # staleness term vanishes identically at m = 1 (serial SGD)
+        delays = expected_relative_delay(params, m, logZ)
+        staleness = jnp.sum(delays / p**2)
+        second = jnp.sqrt(consts.C * (m - 1) / eps * staleness)
+    else:
+        second = 0.0
+    return 24.0 * consts.L * consts.delta / (n * eps) * (first + second)
+
+
+def eta_max(params: NetworkParams, m: int, consts: LearningConstants,
+            logZ: jax.Array | None = None) -> jax.Array:
+    """Maximal admissible learning rate — Theorem 3, Eq. (8)."""
+    n = params.n
+    p = params.p
+    L, eps = consts.L, consts.eps
+    inv_p_sum = jnp.sum(1.0 / p)
+    delays = expected_relative_delay(params, m, logZ)
+    staleness = jnp.maximum(jnp.sum(delays / p**2), 1e-300)
+    t1 = n**2 / (8.0 * L * inv_p_sum)
+    t2 = n**2 * eps / (2.0 * L * consts.B * inv_p_sum)
+    t3 = n * jnp.sqrt(eps) / (2.0 * L) / jnp.sqrt(
+        jnp.maximum(consts.C * max(m - 1, 0) * staleness, 1e-300))
+    return jnp.minimum(t1, jnp.minimum(t2, t3))
+
+
+def system_staleness_factor(params: NetworkParams, m: int) -> jax.Array:
+    """``S_sys`` of Theorem 17 (Eq. 58)."""
+    mu_u_tot = jnp.sum(params.mu_u)
+    per = (1.0 / params.mu_d + 1.0 / params.mu_u + m / params.mu_c) / params.p**2
+    return (m - 1) * mu_u_tot * jnp.sum(per)
+
+
+def round_complexity_unbounded(params: NetworkParams, m: int,
+                               consts: LearningConstants,
+                               logZ: jax.Array | None = None) -> jax.Array:
+    """Theorem 17 — ``K_eps`` without the bounded-gradient assumption A5."""
+    n = params.n
+    p = params.p
+    eps = consts.eps
+    first = (2.0 + consts.B / eps) * jnp.sum(1.0 / (n * p))
+    if m > 1:
+        delays = expected_relative_delay(params, m, logZ)
+        s_sys = system_staleness_factor(params, m)
+        second = jnp.sqrt(jnp.maximum((m - 1) * s_sys, 0.0))
+        third = jnp.sqrt(consts.B * (m - 1) / (2.0 * eps) * jnp.sum(delays / p**2))
+    else:
+        second = third = 0.0
+    return 96.0 * consts.L * consts.delta / (n * eps) * (first + second + third)
+
+
+def wallclock_time(params: NetworkParams, m: int, consts: LearningConstants,
+                   logZ: jax.Array | None = None) -> jax.Array:
+    """``E0[tau_eps] = K_eps(p, m) / lambda(p, m)`` — Prop. 4 / Prop. 8."""
+    if logZ is None:
+        logZ = log_normalizing_constants(params, m)
+    return round_complexity(params, m, consts, logZ) / throughput(params, m, logZ)

@@ -1,0 +1,96 @@
+"""Energy complexity of Generalized AsyncSGD (Section 6 / Section 7.5).
+
+Implements:
+  * the phase-dependent power model (Eq. 13/14) with cubic DVFS computation
+    power ``P_comp = kappa * (mu_c)^3`` (Section 6.5.1);
+  * Proposition 5 — ``E0[E_eps] = K_eps(p, m) * sum_i p_i E_i`` with the
+    per-task energy cost ``E_i = P_c/mu_c + P_u/mu_u + P_d/mu_d``;
+  * Proposition 9 — CS-buffered variant with the extra ``P_cs / mu_cs`` term;
+  * the closed-form energy-optimal routing (Eq. 16 / 28) and minimum energy
+    (Eq. 17 / 29) via Cauchy–Schwarz;
+  * the rho-scalarized joint time–energy objective (Eq. 18).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import numerics  # noqa: F401
+from .buzen import NetworkParams, log_normalizing_constants
+from .complexity import LearningConstants, round_complexity, wallclock_time
+
+
+class PowerProfile(NamedTuple):
+    """Per-client phase powers (Section 6.1)."""
+
+    P_c: jax.Array  # [n] computation power
+    P_u: jax.Array  # [n] uplink transmission power
+    P_d: jax.Array  # [n] downlink reception power
+    P_cs: Optional[jax.Array] = None  # scalar CS processing power (Section 7.5)
+
+    @staticmethod
+    def from_dvfs(kappa: jax.Array, mu_c: jax.Array, P_u: jax.Array,
+                  P_d: jax.Array, P_cs=None) -> "PowerProfile":
+        """Cubic DVFS law: ``P_comp = kappa * mu_c**3`` (Section 6.5.1)."""
+        return PowerProfile(P_c=kappa * mu_c**3, P_u=P_u, P_d=P_d, P_cs=P_cs)
+
+
+def per_task_energy(params: NetworkParams, power: PowerProfile) -> jax.Array:
+    """``E_i = P_c/mu_c + P_u/mu_u + P_d/mu_d`` — mean energy per task."""
+    return (power.P_c / params.mu_c + power.P_u / params.mu_u
+            + power.P_d / params.mu_d)
+
+
+def energy_per_round(params: NetworkParams, power: PowerProfile) -> jax.Array:
+    """``E[P(0)] / lambda`` — mean energy per round (Prop. 5 / Prop. 9)."""
+    e = jnp.sum(params.p / jnp.sum(params.p) * per_task_energy(params, power))
+    if power.P_cs is not None:
+        if params.mu_cs is None:
+            raise ValueError("P_cs given but params.mu_cs is None")
+        e = e + power.P_cs / params.mu_cs
+    return e
+
+
+def energy_complexity(params: NetworkParams, m: int, consts: LearningConstants,
+                      power: PowerProfile,
+                      logZ: jax.Array | None = None) -> jax.Array:
+    """``E0[E_eps] = K_eps(p, m) * energy_per_round`` — Prop. 5 / Prop. 9."""
+    if logZ is None:
+        logZ = log_normalizing_constants(params, m)
+    return round_complexity(params, m, consts, logZ) * energy_per_round(params, power)
+
+
+def energy_optimal_routing(params: NetworkParams, power: PowerProfile) -> jax.Array:
+    """Closed-form minimizer at ``m = 1`` (Eq. 16 / Eq. 28)."""
+    e = per_task_energy(params, power)
+    if power.P_cs is not None:
+        if params.mu_cs is None:
+            raise ValueError("P_cs given but params.mu_cs is None")
+        e = e + power.P_cs / params.mu_cs
+    w = 1.0 / jnp.sqrt(e)
+    return w / jnp.sum(w)
+
+
+def minimal_energy(params: NetworkParams, consts: LearningConstants,
+                   power: PowerProfile) -> jax.Array:
+    """``E*`` — Eq. (17) / Eq. (29): energy at ``(p*_E, m = 1)``."""
+    n = params.n
+    e = per_task_energy(params, power)
+    if power.P_cs is not None:
+        e = e + power.P_cs / params.mu_cs
+    pref = 24.0 * consts.L * consts.delta / (n**2 * consts.eps)
+    return pref * (4.0 + consts.B / consts.eps) * jnp.sum(jnp.sqrt(e)) ** 2
+
+
+def joint_objective(params: NetworkParams, m: int, consts: LearningConstants,
+                    power: PowerProfile, rho: float,
+                    tau_star: jax.Array, e_star: jax.Array,
+                    logZ: jax.Array | None = None) -> jax.Array:
+    """Normalized rho-scalarization (Eq. 18)."""
+    if logZ is None:
+        logZ = log_normalizing_constants(params, m)
+    tau = wallclock_time(params, m, consts, logZ)
+    en = energy_complexity(params, m, consts, power, logZ)
+    return rho * en / e_star + (1.0 - rho) * tau / tau_star

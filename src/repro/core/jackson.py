@@ -1,0 +1,264 @@
+"""Closed-form stationary analysis of the Generalized AsyncSGD network.
+
+Implements, in log space:
+
+  * Theorem 2  — mean relative delay ``E0[D_i]`` (Eqs. 3/5), pairwise second
+    moments (Eq. 6) and the routing Jacobian ``dE0[D_i]/dp_j`` (Eq. 4);
+  * Proposition 4 — update throughput ``lambda(p, m)`` (Eq. 11) and its
+    gradient (Eq. 12);
+  * Section 7 (CS-side buffer) — Theorem 7 (Eqs. 21–24) and Proposition 8
+    (Eqs. 26–27); selected automatically when ``params.mu_cs`` is set.
+
+Population arguments ``m`` are static Python ints; everything else is
+traceable, so all quantities may also be differentiated with ``jax.grad``
+(used in tests to cross-validate the closed-form Jacobians).
+
+Conventions: ``Z[k] = 0`` for ``k < 0``; the embedded chain ``X_k`` lives at
+population ``m - 1`` (Prop. 1), hence most ratios are against ``Z_{n,m-1}``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+from . import numerics  # noqa: F401
+from .buzen import NetworkParams, log_normalizing_constants
+from .numerics import NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _lz(logZ: jax.Array, idx: jax.Array) -> jax.Array:
+    """``log Z[idx]`` with ``Z[idx < 0] = 0`` (log -> NEG_INF). Vectorized."""
+    idx = jnp.asarray(idx)
+    return jnp.where(idx >= 0, logZ[jnp.clip(idx, 0)], NEG_INF)
+
+
+def _log_geom_sum(d: jax.Array, K: jax.Array) -> jax.Array:
+    """``log sum_{k=1}^{K} exp(k d)`` for integer ``K >= 0`` (K=0 -> -inf).
+
+    Stable for any sign/magnitude of ``d``; at ``|d| ~ 0`` returns ``log K``.
+    """
+    K = jnp.asarray(K, dtype=jnp.float64)
+    small = jnp.abs(d) < 1e-12
+    d_safe = jnp.where(small, 1.0, d)  # avoid 0/0 in untaken branch
+
+    def log1mexp(a):  # log(1 - e^{-a}) for a > 0
+        a = jnp.maximum(a, 1e-300)
+        return jnp.where(a < 0.693, jnp.log(-jnp.expm1(-a)), jnp.log1p(-jnp.exp(-a)))
+
+    neg = d_safe + log1mexp(K * jnp.abs(d_safe)) - log1mexp(jnp.abs(d_safe))
+    pos = K * d_safe + log1mexp(K * jnp.abs(d_safe)) - log1mexp(jnp.abs(d_safe))
+    out = jnp.where(d_safe > 0, pos, neg)
+    out = jnp.where(small, jnp.log(jnp.maximum(K, 1e-300)), out)
+    return jnp.where(K >= 1, out, NEG_INF)
+
+
+def _series_vs_Z(log_load: jax.Array, logZ: jax.Array, pop: int, shift: int,
+                 weights_log: jax.Array | None = None) -> jax.Array:
+    """``sum_{k=1}^{pop-shift+1} w_k load^k Z[pop - shift + 1 - k] / Z[pop]``.
+
+    Generic building block: with ``shift=1`` this is
+    ``sum_k load^k Z[pop-k]/Z[pop]`` (mean counts / beta_{i,1}); with
+    ``shift=2`` it is ``beta_{i,2}``-style.  ``log_load`` has shape [n] (or
+    scalar); returns same shape.  ``weights_log[k-1]`` optionally adds
+    ``log w_k`` (e.g. ``log(2k-1)`` for alpha_ii).
+    """
+    top = pop - shift + 1  # largest k with Z index >= 0
+    if top < 1:
+        return jnp.full(jnp.shape(log_load), NEG_INF)
+    k = jnp.arange(1, top + 1)
+    zterm = _lz(logZ, pop - shift + 1 - k) - logZ[pop]
+    terms = jnp.asarray(log_load)[..., None] * k + zterm
+    if weights_log is not None:
+        terms = terms + weights_log[: top]
+    return logsumexp(terms, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# mean station counts & relative delay (Thm 2 Eq 3/5; Thm 7 Eq 21/23)
+# ---------------------------------------------------------------------------
+
+def mean_total_counts(params: NetworkParams, logZ: jax.Array, pop: int) -> jax.Array:
+    """``E[sum_s X_i^s]`` per client at population ``pop`` (includes the
+    class-i CS share when the CS buffer is modelled)."""
+    if pop <= 0:
+        return jnp.zeros(params.n)
+    log_rho = params.log_rho
+    # computation queue: sum_{k>=1} rho_i^k Z[pop-k]/Z[pop]
+    comp = jnp.exp(_series_vs_Z(log_rho, logZ, pop, shift=1))
+    # IS stations: gamma_i Z[pop-1]/Z[pop]
+    is_part = params.gamma * jnp.exp(_lz(logZ, pop - 1) - logZ[pop])
+    total = comp + is_part
+    if params.mu_cs is not None:
+        log_load_cs = jnp.log(jnp.sum(params.p)) - jnp.log(params.mu_cs)
+        cs_total = jnp.exp(_series_vs_Z(log_load_cs, logZ, pop, shift=1))
+        total = total + params.p / jnp.sum(params.p) * cs_total
+    return total
+
+
+def expected_relative_delay(params: NetworkParams, m: int,
+                            logZ: jax.Array | None = None) -> jax.Array:
+    """``E0[D_i]`` for each client (Thm 2 Eq 3/5; Thm 7 Eq 21/23)."""
+    if logZ is None:
+        logZ = log_normalizing_constants(params, m)
+    return mean_total_counts(params, logZ, m - 1)
+
+
+# ---------------------------------------------------------------------------
+# second moments (Thm 2 Eq 6; Thm 7 Eq 24)
+# ---------------------------------------------------------------------------
+
+def second_moment_matrix(params: NetworkParams, m: int,
+                         logZ: jax.Array | None = None) -> jax.Array:
+    """``E[S_i S_j]`` with ``S_i = sum_s X_i^s`` at population ``m - 1``."""
+    if logZ is None:
+        logZ = log_normalizing_constants(params, m)
+    n = params.n
+    log_rho = params.log_rho
+    gamma = params.gamma
+    pop = m - 1
+
+    if pop <= 0:
+        return jnp.zeros((n, n))
+
+    # ---- alpha (queue-queue) ------------------------------------------------
+    # i == j: sum_k (2k-1) rho_i^k Z[pop-k]/Z[pop]
+    kmax = pop
+    wlog = jnp.log(2.0 * jnp.arange(1, kmax + 1) - 1.0)
+    alpha_diag = jnp.exp(_series_vs_Z(log_rho, logZ, pop, shift=1, weights_log=wlog))
+
+    # i != j: sum_{s=2}^{pop} Z[pop-s]/Z[pop] * c_ij(s),
+    # c_ij(s) = sum_{k=1}^{s-1} rho_i^k rho_j^{s-k}
+    #         = exp(s * lr_j) * geom_sum(lr_i - lr_j, s - 1)
+    s = jnp.arange(2, pop + 1)  # [S]
+    if s.size > 0:
+        d = log_rho[:, None] - log_rho[None, :]  # [n, n]
+        # log c[i,j,s] = s*lr_j + log_geom_sum(d_ij, s-1)
+        lgs = jax.vmap(lambda K: _log_geom_sum(d, K))(s - 1)  # [S, n, n]
+        log_c = s[:, None, None] * log_rho[None, None, :] + lgs  # [S, n, n]
+        zlog = (_lz(logZ, pop - s) - logZ[pop])[:, None, None]
+        alpha_off = jnp.exp(logsumexp(log_c + zlog, axis=0))  # [n, n]
+    else:
+        alpha_off = jnp.zeros((n, n))
+    eye = jnp.eye(n, dtype=bool)
+    alpha = jnp.where(eye, alpha_diag[:, None] * jnp.eye(n), alpha_off)
+
+    # ---- beta_{i,2} (queue-IS cross terms) ----------------------------------
+    beta2 = jnp.exp(_series_vs_Z(log_rho, logZ, pop, shift=2))  # [n]
+
+    # ---- psi (IS-IS) ---------------------------------------------------------
+    z3 = jnp.exp(_lz(logZ, pop - 2) - logZ[pop])  # Z[m-3]/Z[m-1]
+    z2 = jnp.exp(_lz(logZ, pop - 1) - logZ[pop])  # Z[m-2]/Z[m-1]
+    psi = gamma[:, None] * gamma[None, :] * z3 + jnp.diag(gamma) * z2
+
+    second = alpha + beta2[:, None] * gamma[None, :] + beta2[None, :] * gamma[:, None] + psi
+
+    if params.mu_cs is not None:
+        second = second + _cs_second_moment_terms(params, logZ, pop)
+    return second
+
+
+def _cs_second_moment_terms(params: NetworkParams, logZ: jax.Array, pop: int) -> jax.Array:
+    """Red CS-specific terms of Theorem 7 Eq (24), at population ``pop = m-1``."""
+    n = params.n
+    p = params.p
+    psum = jnp.sum(p)
+    gamma = params.gamma
+    log_rho = params.log_rho
+    log_load_cs = jnp.log(psum) - jnp.log(params.mu_cs)
+
+    # beta_CS,2 = sum_k load_cs^k W[m-2-k]/W[m-1]
+    beta_cs2 = jnp.exp(_series_vs_Z(log_load_cs, logZ, pop, shift=2))
+
+    # alpha^CS_{i,j} = p_i sum_{k=1}^{pop} load_cs^k W[pop-k]/W[pop] (2 p_j (k-1) + 1{i=j})
+    k = jnp.arange(1, pop + 1)
+    base = k * log_load_cs + _lz(logZ, pop - k) - logZ[pop]  # [K] log
+    s0 = jnp.exp(logsumexp(base))                      # sum_k load^k W./W
+    s1_terms = jnp.where(k > 1, base + jnp.log(jnp.maximum(k - 1.0, 1e-300)), NEG_INF)
+    s1 = jnp.exp(logsumexp(s1_terms))                  # sum_k (k-1) load^k W./W
+    # note: per-class visit share is p_i / sum(p)
+    pi = p / psum
+    alpha_cs = (pi[:, None] * pi[None, :]) * 2.0 * s1 * psum * psum
+    alpha_cs = alpha_cs + jnp.diag(pi * psum) * s0
+    # (The paper writes p_i [2 p_j (k-1) + 1{i=j}] with |p| = 1; the psum
+    # factors keep the expression 1-homogeneous per class index for raw
+    # partials, reducing to the paper's form on the simplex.)
+
+    # alpha_{CS,i} = sum_{k=1}^{pop-1} sum_{l=1}^{pop-k} load_cs^k rho_i^l W[pop-k-l]/W[pop]
+    if pop >= 2:
+        kk = jnp.arange(1, pop)  # k
+        ll = jnp.arange(1, pop)  # l
+        grid = (kk[:, None] * log_load_cs + ll[None, :] * log_rho[:, None, None]
+                + _lz(logZ, pop - kk[:, None] - ll[None, :]) - logZ[pop])
+        valid = (kk[:, None] + ll[None, :]) <= pop
+        grid = jnp.where(valid[None, :, :], grid, NEG_INF)
+        alpha_cs_i = jnp.exp(logsumexp(grid, axis=(1, 2)))  # [n]
+    else:
+        alpha_cs_i = jnp.zeros(n)
+
+    extra = (alpha_cs
+             + beta_cs2 * (pi[:, None] * gamma[None, :] + pi[None, :] * gamma[:, None]) * psum
+             + pi[:, None] * alpha_cs_i[None, :] * psum
+             + pi[None, :] * alpha_cs_i[:, None] * psum)
+    return extra
+
+
+# ---------------------------------------------------------------------------
+# routing Jacobian of the delay (Thm 2 Eq 4; Thm 7 Eq 22)
+# ---------------------------------------------------------------------------
+
+def delay_jacobian(params: NetworkParams, m: int,
+                   logZ: jax.Array | None = None) -> jax.Array:
+    """``J[i, j] = d E0[D_i] / d p_j`` via the covariance identity."""
+    if logZ is None:
+        logZ = log_normalizing_constants(params, m)
+    mean = mean_total_counts(params, logZ, m - 1)
+    second = second_moment_matrix(params, m, logZ)
+    cov = second - mean[:, None] * mean[None, :]
+    return cov / params.p[None, :]
+
+
+# ---------------------------------------------------------------------------
+# throughput (Prop 4 Eq 11/12; Prop 8 Eq 26/27)
+# ---------------------------------------------------------------------------
+
+def throughput(params: NetworkParams, m: int,
+               logZ: jax.Array | None = None) -> jax.Array:
+    """``lambda(p, m) = Z_{n,m-1} / Z_{n,m}`` — updates per unit time."""
+    if logZ is None:
+        logZ = log_normalizing_constants(params, m)
+    return jnp.exp(logZ[m - 1] - logZ[m])
+
+
+def throughput_grad(params: NetworkParams, m: int,
+                    logZ: jax.Array | None = None) -> jax.Array:
+    """``d lambda / d p_j`` (Eq 12/27): ``lambda/p_j * (E[S_j]_{m-1} - E[S_j]_m)``."""
+    if logZ is None:
+        logZ = log_normalizing_constants(params, m)
+    lam = throughput(params, m, logZ)
+    mean_embedded = mean_total_counts(params, logZ, m - 1)
+    mean_stationary = mean_total_counts(params, logZ, m)
+    return lam / params.p * (mean_embedded - mean_stationary)
+
+
+# ---------------------------------------------------------------------------
+# convenience bundle
+# ---------------------------------------------------------------------------
+
+def analyze(params: NetworkParams, m: int) -> dict:
+    """One-shot stationary analysis at concurrency ``m``."""
+    logZ = log_normalizing_constants(params, m)
+    delays = expected_relative_delay(params, m, logZ)
+    lam = throughput(params, m, logZ)
+    return {
+        "logZ": logZ,
+        "delays": delays,
+        "total_delay": jnp.sum(delays),  # == m - 1 (Eq 7)
+        "throughput": lam,
+        "delay_jacobian": delay_jacobian(params, m, logZ),
+        "throughput_grad": throughput_grad(params, m, logZ),
+    }

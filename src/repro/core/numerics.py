@@ -1,0 +1,23 @@
+"""Numeric configuration for the queueing core.
+
+The product-form normalization constants ``Z_{n,m}`` span hundreds of orders
+of magnitude; the whole queueing core therefore runs in log space, and we
+additionally enable float64 so that closed-form identities (e.g.
+``sum_i E0[D_i] = m - 1``) hold to ~1e-12 in tests.
+
+Model code is unaffected: all model/kernel modules request explicit dtypes
+(bf16/f32), which x64 mode does not override.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+NEG_INF = -1e30  # used instead of -inf to keep gradients NaN-free
+
+
+def safe_log(x):
+    import jax.numpy as jnp
+
+    return jnp.log(jnp.maximum(x, 1e-300))

@@ -1,0 +1,184 @@
+"""Gradient-based optimization of routing and concurrency (Sections 5.3.2,
+6.4, Appendices B.2 / J).
+
+The routing vector lives on the simplex via the softmax reparameterization of
+Appendix B.2 (``p = softmax(theta)``); objectives are minimized with Adam.
+Gradients come from ``jax.grad`` through the log-space Buzen pipeline — tested
+to agree with the paper's closed-form expressions (Theorem 2 Eq. 4,
+Prop. 4 Eq. 12).
+
+Concurrency ``m`` is discrete and handled by the paper's sequential search
+with warm-started routing (Section 5.3.2): iterate m = start, start+1, ...,
+re-optimizing ``p`` from the previous optimum, and stop once the objective
+stops improving (with optional patience).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import numerics  # noqa: F401
+from .buzen import NetworkParams, log_normalizing_constants
+from .complexity import LearningConstants, round_complexity, wallclock_time
+from .energy import PowerProfile, energy_complexity, joint_objective
+from .jackson import throughput
+
+
+@dataclasses.dataclass
+class OptResult:
+    p: jax.Array
+    m: int
+    value: float
+    history: list
+
+
+def _adam_minimize(loss_fn: Callable, theta0: jax.Array, steps: int, lr: float):
+    """Plain Adam on unconstrained logits; jitted scan."""
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def run(theta0):
+        def step(carry, t):
+            theta, mu, nu = carry
+            val, g = jax.value_and_grad(loss_fn)(theta)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mu_hat = mu / (1 - b1 ** (t + 1.0))
+            nu_hat = nu / (1 - b2 ** (t + 1.0))
+            theta = theta - lr * mu_hat / (jnp.sqrt(nu_hat) + eps)
+            return (theta, mu, nu), val
+
+        init = (theta0, jnp.zeros_like(theta0), jnp.zeros_like(theta0))
+        (theta, _, _), vals = jax.lax.scan(step, init, jnp.arange(steps, dtype=jnp.float64))
+        return theta, vals
+
+    return run(theta0)
+
+
+def optimize_routing(
+    objective: Callable[[jax.Array, int], jax.Array],
+    n: int,
+    m: int,
+    *,
+    steps: int = 400,
+    lr: float = 0.05,
+    p_init: Optional[jax.Array] = None,
+) -> OptResult:
+    """Minimize ``objective(p, m)`` over the simplex with softmax-Adam."""
+    p0 = jnp.full((n,), 1.0 / n) if p_init is None else p_init
+    theta0 = jnp.log(jnp.clip(p0, 1e-12))
+
+    def loss(theta):
+        p = jax.nn.softmax(theta)
+        return objective(p, m)
+
+    theta, vals = _adam_minimize(loss, theta0, steps, lr)
+    p = jax.nn.softmax(theta)
+    return OptResult(p=p, m=m, value=float(objective(p, m)), history=list(map(float, vals)))
+
+
+def sequential_concurrency_search(
+    objective: Callable[[jax.Array, int], jax.Array],
+    n: int,
+    *,
+    m_start: int = 1,
+    m_max: int = 256,
+    steps: int = 400,
+    lr: float = 0.05,
+    patience: int = 2,
+    p_init: Optional[jax.Array] = None,
+) -> OptResult:
+    """Sequential (m, p) optimization with warm starts (Section 5.3.2)."""
+    best: Optional[OptResult] = None
+    stale = 0
+    p_warm = p_init
+    trace = []
+    for m in range(max(m_start, 1), m_max + 1):
+        res = optimize_routing(objective, n, m, steps=steps, lr=lr, p_init=p_warm)
+        trace.append((m, res.value))
+        p_warm = res.p
+        if best is None or res.value < best.value:
+            best = res
+            stale = 0
+        else:
+            stale += 1
+            if stale >= patience:
+                break
+    best.history = trace
+    return best
+
+
+# ---------------------------------------------------------------------------
+# canned objectives / strategies of Section 5.3
+# ---------------------------------------------------------------------------
+
+def _with_p(params: NetworkParams, p: jax.Array) -> NetworkParams:
+    return params._replace(p=p)
+
+
+def make_round_objective(params: NetworkParams, consts: LearningConstants):
+    """Minimize K_eps — the 'Round-Optimized' strategy."""
+    def obj(p, m):
+        return round_complexity(_with_p(params, p), m, consts)
+    return obj
+
+
+def make_throughput_objective(params: NetworkParams):
+    """Maximize lambda — the 'Max-Throughput' strategy (negated)."""
+    def obj(p, m):
+        return -throughput(_with_p(params, p), m)
+    return obj
+
+
+def make_time_objective(params: NetworkParams, consts: LearningConstants):
+    """Minimize E0[tau_eps] — the paper's proposed strategy."""
+    def obj(p, m):
+        return wallclock_time(_with_p(params, p), m, consts)
+    return obj
+
+
+def make_energy_objective(params: NetworkParams, consts: LearningConstants,
+                          power: PowerProfile):
+    def obj(p, m):
+        return energy_complexity(_with_p(params, p), m, consts, power)
+    return obj
+
+
+def make_joint_objective(params: NetworkParams, consts: LearningConstants,
+                         power: PowerProfile, rho: float,
+                         tau_star: float, e_star: float):
+    """Eq. (18) normalized scalarization."""
+    def obj(p, m):
+        return joint_objective(_with_p(params, p), m, consts, power, rho,
+                               tau_star, e_star)
+    return obj
+
+
+def time_optimal(params: NetworkParams, consts: LearningConstants,
+                 m_max: Optional[int] = None, **kw) -> OptResult:
+    """(p*_tau, m*_tau): jointly time-optimal routing and concurrency."""
+    m_max = m_max or params.n + 32
+    return sequential_concurrency_search(
+        make_time_objective(params, consts), params.n, m_start=2, m_max=m_max, **kw)
+
+
+def round_optimal(params: NetworkParams, consts: LearningConstants, m: int,
+                  **kw) -> OptResult:
+    return optimize_routing(make_round_objective(params, consts), params.n, m, **kw)
+
+
+def max_throughput(params: NetworkParams, m: int, **kw) -> OptResult:
+    return optimize_routing(make_throughput_objective(params), params.n, m, **kw)
+
+
+def joint_optimal(params: NetworkParams, consts: LearningConstants,
+                  power: PowerProfile, rho: float, tau_star: float,
+                  e_star: float, m_max: Optional[int] = None, **kw) -> OptResult:
+    m_max = m_max or params.n + 32
+    return sequential_concurrency_search(
+        make_joint_objective(params, consts, power, rho, tau_star, e_star),
+        params.n, m_start=1, m_max=m_max, **kw)

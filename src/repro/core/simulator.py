@@ -1,0 +1,321 @@
+"""Simulators for the Generalized AsyncSGD queueing network.
+
+Two complementary implementations:
+
+  * ``AsyncNetworkSim`` — an exact discrete-event simulation with per-task
+    identity (heap-based, host Python).  Supports exponential, deterministic
+    and lognormal service/communication times (Section 5.3.3), the optional
+    CS-side FIFO buffer (Section 7), phase-dependent energy accounting
+    (Eq. 14), and measures the *relative delay* exactly as defined in
+    Section 2.4.  It doubles as the virtual-time engine of the FL trainer
+    (``repro.fl.trainer``): ``next_update()`` yields one model-update event
+    at a time.
+
+  * ``jump_chain_throughput`` — a JAX ``lax.scan`` CTMC jump-chain sampler
+    over the count state space (exponential case only); a fast, fully
+    vectorizable cross-check of the product-form stationary distribution and
+    of the throughput formula (Prop. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+from .buzen import NetworkParams
+
+# event kinds
+_DOWN, _COMP, _UP, _CS = 0, 1, 2, 3
+
+
+def make_sampler(kind: str, rng: np.random.Generator) -> Callable[[float], float]:
+    """Sample a service time with mean ``1/mu`` (Section 5.3.3 distributions)."""
+    if kind == "exponential":
+        return lambda mu: rng.exponential(1.0 / mu)
+    if kind == "deterministic":
+        return lambda mu: 1.0 / mu
+    if kind == "lognormal":
+        # underlying normal variance sigma_N^2 = 1, mean of LN = 1/mu
+        # mean = exp(mu_N + 1/2) = 1/mu  ->  mu_N = -log(mu) - 1/2
+        return lambda mu: rng.lognormal(-math.log(mu) - 0.5, 1.0)
+    raise ValueError(f"unknown service distribution: {kind}")
+
+
+@dataclasses.dataclass
+class UpdateEvent:
+    """One model-parameter update at the CS (end of a round)."""
+
+    round: int           # round index k (0-based): this is update number k
+    client: int          # C_k — client whose gradient is applied
+    dispatch_round: int  # round counter value when the task was dispatched
+    time: float          # wall-clock time of the update
+    task_id: int = -1    # identity of the completed task (payload key)
+
+    @property
+    def relative_delay(self) -> int:
+        return self.round - self.dispatch_round
+
+
+@dataclasses.dataclass
+class SimStats:
+    updates: int
+    time: float
+    throughput: float
+    mean_delay: np.ndarray          # [n] E^0[D_i] estimate (0 where no samples)
+    delay_counts: np.ndarray        # [n] number of updates per client
+    energy: float
+    mean_queue_counts: np.ndarray   # [3n(+1)] time-averaged station occupancy
+
+
+class AsyncNetworkSim:
+    """Discrete-event simulation of the closed network of Fig. 1 / Fig. 6."""
+
+    def __init__(
+        self,
+        params: NetworkParams,
+        m: int,
+        *,
+        distribution: str = "exponential",
+        seed: int = 0,
+        power: Optional[object] = None,  # energy.PowerProfile or None
+    ):
+        self.p = np.asarray(params.p, dtype=np.float64)
+        self.p = self.p / self.p.sum()
+        self.mu_c = np.asarray(params.mu_c, dtype=np.float64)
+        self.mu_d = np.asarray(params.mu_d, dtype=np.float64)
+        self.mu_u = np.asarray(params.mu_u, dtype=np.float64)
+        self.mu_cs = None if params.mu_cs is None else float(params.mu_cs)
+        self.n = len(self.p)
+        self.m = m
+        self.rng = np.random.default_rng(seed)
+        self.sample = make_sampler(distribution, self.rng)
+        self.power = power
+
+        self.t = 0.0
+        self.round = 0
+        self.heap: list = []  # (time, seq, kind, client, task_id)
+        self._seq = 0
+        self.comp_queue: list[list[int]] = [[] for _ in range(self.n)]  # FIFO of task ids
+        self.comp_busy = np.zeros(self.n, dtype=bool)
+        self.cs_queue: list[tuple[int, int]] = []  # (task_id, client)
+        self.cs_busy = False
+        self.task_dispatch_round: dict[int, int] = {}
+        self._next_task = 0
+
+        # statistics
+        self.delay_sum = np.zeros(self.n)
+        self.delay_cnt = np.zeros(self.n, dtype=np.int64)
+        self.energy = 0.0
+        self.n_down = np.zeros(self.n, dtype=np.int64)
+        self.n_up = np.zeros(self.n, dtype=np.int64)
+        self._occ_int = np.zeros(3 * self.n + 1)
+        self._last_t = 0.0
+
+        # initial out-of-equilibrium dispatch: m tasks uniformly at random
+        # into the downlink servers (Section 5.3.3)
+        self.initial_tasks: list[tuple[int, int]] = []  # (client, task_id)
+        for _ in range(m):
+            client = int(self.rng.integers(self.n))
+            tid = self._dispatch(client)
+            self.initial_tasks.append((client, tid))
+
+    # -- internals ----------------------------------------------------------
+
+    def _push(self, dt: float, kind: int, client: int, task_id: int):
+        self._seq += 1
+        heapq.heappush(self.heap, (self.t + dt, self._seq, kind, client, task_id))
+
+    def _dispatch(self, client: int) -> int:
+        task_id = self._next_task
+        self._next_task += 1
+        self.task_dispatch_round[task_id] = self.round
+        self.n_down[client] += 1
+        self._push(self.sample(self.mu_d[client]), _DOWN, client, task_id)
+        return task_id
+
+    def _start_compute(self, client: int):
+        if not self.comp_busy[client] and self.comp_queue[client]:
+            task_id = self.comp_queue[client].pop(0)
+            self.comp_busy[client] = True
+            self._push(self.sample(self.mu_c[client]), _COMP, client, task_id)
+
+    def _start_cs(self):
+        if not self.cs_busy and self.cs_queue:
+            task_id, client = self.cs_queue.pop(0)
+            self.cs_busy = True
+            self._push(self.sample(self.mu_cs), _CS, client, task_id)
+
+    def _instantaneous_power(self) -> float:
+        if self.power is None:
+            return 0.0
+        P_c = np.asarray(self.power.P_c)
+        P_u = np.asarray(self.power.P_u)
+        P_d = np.asarray(self.power.P_d)
+        val = float(np.sum(P_c * self.comp_busy) + np.sum(P_u * self.n_up)
+                    + np.sum(P_d * self.n_down))
+        if self.power.P_cs is not None and self.cs_busy:
+            val += float(self.power.P_cs)
+        return val
+
+    def _advance_time(self, new_t: float):
+        dt = new_t - self._last_t
+        if dt > 0:
+            self.energy += dt * self._instantaneous_power()
+            occ = np.concatenate([
+                self.n_down.astype(float),
+                np.array([len(q) for q in self.comp_queue], dtype=float)
+                + self.comp_busy.astype(float),
+                self.n_up.astype(float),
+                np.array([len(self.cs_queue) + float(self.cs_busy)]),
+            ])
+            self._occ_int += dt * occ
+            self._last_t = new_t
+        self.t = new_t
+
+    # -- public -------------------------------------------------------------
+
+    def next_update(self) -> UpdateEvent:
+        """Advance until the next model-parameter update and return it.
+
+        The caller is responsible for calling :meth:`dispatch_next` (routing
+        a fresh task) after consuming the event — the FL trainer does this so
+        it can record which parameter version travels with the task.  For
+        plain statistics collection use :meth:`run`.
+        """
+        while True:
+            time, _, kind, client, task_id = heapq.heappop(self.heap)
+            self._advance_time(time)
+            if kind == _DOWN:
+                self.n_down[client] -= 1
+                self.comp_queue[client].append(task_id)
+                self._start_compute(client)
+            elif kind == _COMP:
+                self.comp_busy[client] = False
+                self._start_compute(client)
+                self.n_up[client] += 1
+                self._push(self.sample(self.mu_u[client]), _UP, client, task_id)
+            elif kind == _UP:
+                self.n_up[client] -= 1
+                if self.mu_cs is None:
+                    return self._apply_update(client, task_id)
+                self.cs_queue.append((task_id, client))
+                self._start_cs()
+            elif kind == _CS:
+                self.cs_busy = False
+                ev = self._apply_update(client, task_id)
+                self._start_cs()
+                return ev
+
+    def _apply_update(self, client: int, task_id: int) -> UpdateEvent:
+        dispatch_round = self.task_dispatch_round.pop(task_id)
+        ev = UpdateEvent(round=self.round, client=client,
+                         dispatch_round=dispatch_round, time=self.t,
+                         task_id=task_id)
+        self.round += 1
+        self.delay_sum[client] += ev.relative_delay
+        self.delay_cnt[client] += 1
+        return ev
+
+    def dispatch_next(self) -> tuple[int, int]:
+        """Route a fresh task according to ``p`` (Algorithm 1, lines 7–8).
+
+        Returns ``(client, task_id)`` so callers can attach a payload (the
+        parameter snapshot travelling with the task)."""
+        client = int(self.rng.choice(self.n, p=self.p))
+        tid = self._dispatch(client)
+        return client, tid
+
+    def run(self, num_updates: int, *, warmup: int = 0) -> SimStats:
+        """Collect stationary statistics over ``num_updates`` rounds."""
+        for k in range(warmup):
+            self.next_update()
+            self.dispatch_next()
+        # reset statistics after warmup
+        self.delay_sum[:] = 0
+        self.delay_cnt[:] = 0
+        self.energy = 0.0
+        self._occ_int[:] = 0
+        t0 = self.t
+        self._last_t = self.t
+        for k in range(num_updates):
+            self.next_update()
+            self.dispatch_next()
+        horizon = self.t - t0
+        mean_delay = np.where(self.delay_cnt > 0,
+                              self.delay_sum / np.maximum(self.delay_cnt, 1), 0.0)
+        return SimStats(
+            updates=num_updates,
+            time=horizon,
+            throughput=num_updates / horizon,
+            mean_delay=mean_delay,
+            delay_counts=self.delay_cnt.copy(),
+            energy=self.energy,
+            mean_queue_counts=self._occ_int / max(horizon, 1e-12),
+        )
+
+
+# ---------------------------------------------------------------------------
+# JAX jump-chain sampler (exponential case)
+# ---------------------------------------------------------------------------
+
+def jump_chain_throughput(params: NetworkParams, m: int, steps: int,
+                          seed: int = 0) -> tuple[float, np.ndarray]:
+    """CTMC jump-chain estimate of ``lambda`` and mean station counts.
+
+    Simulates the count-state Markov chain of Prop. 1 with ``jax.lax.scan``:
+    at each jump, transition rates are (per client i)
+    ``mu_d[i] * x_d[i]``, ``mu_c[i] * 1{x_c[i] > 0}``, ``mu_u[i] * x_u[i]``;
+    uplink completions route to a p-sampled client's downlink.  Sojourn times
+    are Exp(total rate); time-weighted averages estimate E[xi] and
+    ``lambda = E[sum_i mu_u[i] xi_u[i]]`` (Eq. 11).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = params.n
+    p = jnp.asarray(params.p) / jnp.sum(jnp.asarray(params.p))
+    mu_c = jnp.asarray(params.mu_c)
+    mu_d = jnp.asarray(params.mu_d)
+    mu_u = jnp.asarray(params.mu_u)
+
+    # initial state: m tasks spread over downlinks uniformly
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    init_clients = jax.random.randint(k0, (m,), 0, n)
+    x_d0 = jnp.zeros(n).at[init_clients].add(1.0)
+    state0 = (x_d0, jnp.zeros(n), jnp.zeros(n))
+
+    def step(carry, key):
+        x_d, x_c, x_u = carry
+        r_d = mu_d * x_d
+        r_c = mu_c * (x_c > 0)
+        r_u = mu_u * x_u
+        rates = jnp.concatenate([r_d, r_c, r_u])
+        total = jnp.sum(rates)
+        k1, k2, k3 = jax.random.split(key, 3)
+        dt = jax.random.exponential(k1) / total
+        occ_pre = jnp.concatenate([x_d, x_c, x_u])
+        ev = jax.random.categorical(k2, jnp.log(jnp.maximum(rates, 1e-300)))
+        i = ev % n
+        kind = ev // n
+        onei = jax.nn.one_hot(i, n)
+        # downlink completion: d -> c ; compute: c -> u ; uplink: u -> d_j
+        x_d = x_d - onei * (kind == 0)
+        x_c = x_c + onei * (kind == 0) - onei * (kind == 1)
+        x_u = x_u + onei * (kind == 1) - onei * (kind == 2)
+        j = jax.random.categorical(k3, jnp.log(p))
+        x_d = x_d + jax.nn.one_hot(j, n) * (kind == 2)
+        lam_inst = jnp.sum(r_u)
+        return (x_d, x_c, x_u), (dt, dt * lam_inst, dt * occ_pre)
+
+    keys = jax.random.split(key, steps)
+    _, (dts, lam_w, occ_w) = jax.lax.scan(step, state0, keys)
+    # discard first third as warmup
+    w = steps // 3
+    T = jnp.sum(dts[w:])
+    lam = jnp.sum(lam_w[w:]) / T
+    occ = jnp.sum(occ_w[w:], axis=0) / T
+    return float(lam), np.asarray(occ)

@@ -1,0 +1,9 @@
+from .partition import dirichlet_partition, iid_partition, pathological_partition
+from .synthetic import (make_language_modeling_dataset,
+                        make_synthetic_image_dataset, train_test_split)
+
+__all__ = [
+    "make_synthetic_image_dataset", "make_language_modeling_dataset",
+    "train_test_split",
+    "dirichlet_partition", "iid_partition", "pathological_partition",
+]

@@ -1,0 +1,9 @@
+from .models import cnn_classifier, mlp_classifier
+from .strategies import ClusterSpec, build_network_params, make_strategies
+from .trainer import AsyncFLConfig, AsyncFLTrainer, TrainLog
+
+__all__ = [
+    "AsyncFLTrainer", "AsyncFLConfig", "TrainLog",
+    "ClusterSpec", "build_network_params", "make_strategies",
+    "cnn_classifier", "mlp_classifier",
+]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel lives in ``<name>.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling) with its jitted wrapper in ``ops.py`` and pure-jnp oracle in
+``ref.py``.  On this CPU-only container all kernels are validated in
+``interpret=True`` mode; TPU is the deployment target.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

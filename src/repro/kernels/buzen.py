@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for Buzen's convolution algorithm (Proposition 15).
+
+This is the paper's algorithmic inner loop: the routing/concurrency
+optimizer re-evaluates the normalization constants ``Z_{n, 0..m}`` at every
+Adam step.  The DP is sequential over stations but fully vectorizable over
+the population dimension ``m`` (lane axis) — a natural TPU layout:
+
+  * the running log-constant row ``U[0..m]`` lives in VMEM scratch across
+    the sequential station grid axis;
+  * each station performs the log-space truncated convolution
+    ``U'[m] = logsumexp_k (k * log_rho_i + U[m - k])`` as a single
+    (m+1, m+1) masked reduction in VMEM (m ~ O(100) so the tile is ~64 KB);
+  * the aggregated infinite-server Poisson factor is the row initializer.
+
+Validated in interpret mode against the jnp implementation in
+``repro.core.buzen`` (itself validated against brute-force enumeration).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _buzen_kernel(rho_ref, init_ref, out_ref, u_scr, *, n_stations: int,
+                  m_pad: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        u_scr[...] = init_ref[...]  # aggregated IS Poisson factor row
+
+    log_rho = rho_ref[0]
+    u = u_scr[...]  # [m_pad]
+    # T[m, k] = k * log_rho + U[m - k], masked to k <= m
+    mm = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 0)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 1)
+    valid = kk <= mm
+    shifted = jnp.where(valid, (mm - kk), 0)
+    terms = jnp.where(valid, kk.astype(jnp.float32) * log_rho
+                      + jnp.take_along_axis(
+                          jnp.broadcast_to(u[None, :], (m_pad, m_pad)),
+                          shifted, axis=1), NEG_INF)
+    row_max = jnp.max(terms, axis=1)
+    new_u = row_max + jnp.log(
+        jnp.sum(jnp.exp(terms - row_max[:, None]), axis=1))
+    u_scr[...] = new_u
+
+    @pl.when(i == n_stations - 1)
+    def _finalize():
+        out_ref[...] = u_scr[...]
+
+
+def buzen_pallas(log_rho: jax.Array, log_gamma_total: jax.Array, m_max: int,
+                 *, interpret: bool = True) -> jax.Array:
+    """log Z_{n, 0..m_max} for n single-server stations with log-loads
+    ``log_rho`` plus an aggregated IS station with log-load
+    ``log_gamma_total``."""
+    from jax.scipy.special import gammaln
+
+    n = log_rho.shape[0]
+    m_pad = m_max + 1
+    k = jnp.arange(m_pad, dtype=jnp.float32)
+    init_row = (k * log_gamma_total.astype(jnp.float32)
+                - gammaln(k + 1.0)).astype(jnp.float32)
+    rho32 = log_rho.astype(jnp.float32)
+
+    kernel = functools.partial(_buzen_kernel, n_stations=n, m_pad=m_pad)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((m_pad,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m_pad,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m_pad,), jnp.float32)],
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(rho32, init_row)
+    return out

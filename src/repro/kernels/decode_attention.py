@@ -1,0 +1,104 @@
+"""Pallas TPU fused decode attention (single query token vs KV cache).
+
+Serving hot spot: memory-bound streaming of the KV cache.  Tiling: the G
+query heads sharing one KV head stay resident in VMEM ``(G, D)``; the cache
+is streamed in ``(block_s, D)`` tiles along the sequential grid axis with
+online-softmax accumulators in VMEM scratch — one HBM pass over the cache,
+no (S,) score materialization in HBM.
+
+Validated in interpret mode against ``ref.decode_attention_oracle``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_s: int, n_s: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # [G, D]
+    k = k_ref[0].astype(jnp.float32)                    # [block_s, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, block_s]
+    k_pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,        # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, S, KV, D]
+    v_cache: jax.Array,
+    length,              # scalar or [B]
+    *,
+    block_s: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = D ** -0.5
+    n_s = -(-S // block_s)
+    pad = n_s * block_s - S
+
+    qf = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    kf = jnp.moveaxis(k_cache, 2, 1).reshape(B * KV, S, D)
+    vf = jnp.moveaxis(v_cache, 2, 1).reshape(B * KV, S, D)
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1),
+                               (B,))
+    lengths = jnp.repeat(lengths, KV)  # [B*KV]
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_s=block_s,
+                               n_s=n_s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, si: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda h, si: (h, 0, 0)),
+            pl.BlockSpec((1, block_s, D), lambda h, si: (h, si, 0)),
+            pl.BlockSpec((1, block_s, D), lambda h, si: (h, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda h, si: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(lengths, qf, kf, vf)
+    return out.reshape(B, 1, H, D)

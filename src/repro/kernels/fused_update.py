@@ -1,0 +1,71 @@
+"""Pallas TPU fused Generalized-AsyncSGD update.
+
+CS-side update (Algorithm 1, line 6): ``w <- w - (eta / (n p_C)) g`` fused
+with the squared-gradient-norm reduction used for staleness/clipping
+telemetry — one HBM pass over (w, g) instead of two (update + norm).
+
+Tiling: flat 1-D parameter stream in ``block`` -sized VMEM tiles; the norm
+contribution of each tile goes to a per-tile partial-sum output reduced by
+the wrapper (deterministic tree reduction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _update_kernel(scale_ref, w_ref, g_ref, out_ref, norm_ref):
+    g = g_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[...] = (w - scale_ref[0] * g).astype(out_ref.dtype)
+    norm_ref[0] = jnp.sum(g * g)
+
+
+def fused_async_update_flat(w: jax.Array, g: jax.Array, scale: jax.Array,
+                            *, block: int = 4096, interpret: bool = True):
+    """w, g: flat [N]. Returns (w_new [N], sum(g^2) scalar f32)."""
+    N = w.shape[0]
+    n_blocks = -(-N // block)
+    pad = n_blocks * block - N
+    wp = jnp.pad(w, (0, pad))
+    gp = jnp.pad(g, (0, pad))
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+
+    out, norms = pl.pallas_call(
+        _update_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks * block,), w.dtype),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(scale_arr, wp, gp)
+    return out[:N], jnp.sum(norms)
+
+
+def fused_async_update(params, grads, scale, *, interpret: bool = True):
+    """Pytree version: returns (new_params, grad_norm)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    gleaves = treedef.flatten_up_to(grads)
+    new_leaves, total = [], jnp.zeros((), jnp.float32)
+    for w, g in zip(leaves, gleaves):
+        nw, sq = fused_async_update_flat(w.reshape(-1), g.reshape(-1), scale,
+                                         interpret=interpret)
+        new_leaves.append(nw.reshape(w.shape))
+        total = total + sq
+    return treedef.unflatten(new_leaves), jnp.sqrt(total)

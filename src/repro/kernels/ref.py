@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_oracle(q, k, v, *, causal=True, window: Optional[int] = None):
+    from ..models.attention import plain_attention_ref
+    return plain_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def decode_attention_oracle(q, k_cache, v_cache, length):
+    from ..models.attention import decode_attention_ref
+    return decode_attention_ref(q, k_cache, v_cache, length)
+
+
+def buzen_oracle(log_rho, log_gamma_total, m_max):
+    """Aggregate-IS Buzen recursion in plain jnp (see repro.core.buzen)."""
+    from jax.scipy.special import gammaln
+    from ..core.buzen import _log_conv, _geometric_series
+
+    k = jnp.arange(m_max + 1, dtype=jnp.float64)
+    logZ = (k * log_gamma_total - gammaln(k + 1.0))
+    for i in range(log_rho.shape[0]):
+        logZ = _log_conv(logZ, _geometric_series(log_rho[i], m_max))
+    return logZ
+
+
+def fused_async_update_oracle(params, grads, scale):
+    new = jax.tree_util.tree_map(
+        lambda w, g: (w.astype(jnp.float32)
+                      - jnp.float32(scale) * g.astype(jnp.float32)
+                      ).astype(w.dtype), params, grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(grads)))
+    return new, norm

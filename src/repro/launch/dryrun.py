@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init); everything else follows.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_compiled, model_flops
+from repro.models import INPUT_SHAPES, build_model
+from repro.models.parallel import ParallelContext, param_spec
+
+SKIPS = {
+    # enc-dec decoder anchored to a 1500-frame encoder: no sliding-window
+    # analogue preserving cross-attention semantics (DESIGN.md §4)
+    ("whisper-medium", "long_500k"),
+}
+
+
+# ---------------------------------------------------------------------------
+# sharding attachment helpers
+# ---------------------------------------------------------------------------
+
+def _path_str(path):
+    return "/".join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                    for k in path)
+
+
+def _divides(mesh, dim, axes):
+    if axes is None:
+        return True
+    names = axes if isinstance(axes, tuple) else (axes,)
+    size = 1
+    for nm in names:
+        size *= mesh.shape[nm]
+    return dim % size == 0 and dim >= size
+
+
+def param_sds(bundle, ctx, serve_sharding: bool = False):
+    """ShapeDtypeStructs for params with NamedShardings attached.
+
+    ``serve_sharding`` drops the FSDP ('data') axis from parameter shardings
+    (replicate over data, shard over model only) — the serving-optimized
+    layout that avoids per-step parameter all-gathers (§Perf)."""
+    shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    mesh = ctx.mesh
+
+    def strip_data(spec):
+        def fix(ax):
+            if ax == "data":
+                return None
+            if isinstance(ax, tuple):
+                t = tuple(a for a in ax if a != "data")
+                return t if t else None
+            return ax
+        return jax.sharding.PartitionSpec(*[fix(a) for a in spec])
+
+    def visit(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, ctx)
+        if serve_sharding:
+            spec = strip_data(spec)
+        # drop axes that do not divide
+        fixed = []
+        for i, ax in enumerate(spec):
+            fixed.append(ax if ax is None or _divides(mesh, leaf.shape[i], ax)
+                         else None)
+        fixed += [None] * (len(leaf.shape) - len(fixed))
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, P(*fixed[:len(leaf.shape)])))
+
+    return jax.tree_util.tree_map_with_path(visit, shapes)
+
+
+def opt_state_sds(bundle, params_sds, ctx):
+    """Optimizer-state SDS sharded congruently with the parameters."""
+    mesh = ctx.mesh
+    shapes = jax.eval_shape(bundle.optimizer.init, params_sds)
+    # map param path string -> spec
+    spec_of = {}
+    jax.tree_util.tree_map_with_path(
+        lambda p, l: spec_of.__setitem__(_path_str(p), l.sharding.spec),
+        params_sds)
+
+    name = bundle.optimizer.name
+
+    def visit(path, leaf):
+        ps = _path_str(path)
+        spec = P(*([None] * len(leaf.shape)))
+        if name in ("adamw", "momentum"):
+            key = ps
+            for prefix in ("mu/", "nu/", ""):
+                stripped = ps.split("/", 1)[-1] if "/" in ps else ps
+                if stripped in spec_of:
+                    spec = spec_of[stripped]
+                    break
+        elif name == "adafactor":
+            # paths look like slots/<param path>/vr
+            parts = ps.split("/")
+            if parts and parts[-1] in ("vr", "vc", "v"):
+                pkey = "/".join(parts[1:-1])
+                if pkey in spec_of:
+                    base = list(spec_of[pkey])
+                    if parts[-1] == "vr":
+                        spec = P(*base[:-1])
+                    elif parts[-1] == "vc":
+                        spec = P(*(base[:-2] + base[-1:]))
+                    else:
+                        spec = P(*base)
+        # drop non-dividing axes
+        fixed = []
+        for i, ax in enumerate(spec):
+            fixed.append(ax if ax is None or _divides(mesh, leaf.shape[i], ax)
+                         else None)
+        fixed += [None] * (len(leaf.shape) - len(fixed))
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, P(*fixed[:len(leaf.shape)])))
+
+    return jax.tree_util.tree_map_with_path(visit, shapes)
+
+
+def batch_sds(bundle, shape, ctx, window=None):
+    """Input SDS (tokens / embeds / decode cache) with shardings."""
+    mesh = ctx.mesh
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    specs = bundle.input_specs(shape, for_decode_window=window)
+
+    def leaf_spec(path, leaf):
+        shp = leaf.shape
+        ps = _path_str(path)
+        ndim = len(shp)
+        spec = [None] * ndim
+        if ps in ("tokens", "targets", "image_embeds", "frames"):
+            if _divides(mesh, shp[0], batch_axes):
+                spec[0] = batch_axes
+        elif ps == "pos":
+            pass
+        else:  # cache leaves: [G?, B, ...]
+            bdim = None
+            for i, d in enumerate(shp[:2]):
+                if d == shape.global_batch:
+                    bdim = i
+                    break
+            if bdim is not None and _divides(mesh, shp[bdim], batch_axes):
+                spec[bdim] = batch_axes
+            else:
+                # batch too small (long_500k): context-shard the largest dim
+                if ndim >= 3:
+                    cand = max(range(1, ndim), key=lambda i: shp[i])
+                    if _divides(mesh, shp[cand], ("data",)) and "data" in mesh.axis_names:
+                        spec[cand] = "data"
+            # model-shard a feature dim: prefer the heads dim (-2) of KV
+            # caches, then the sequence dim (-3) — sharding head_dim forces
+            # full-cache all-gathers in decode attention (§Perf iteration) —
+            # else the last divisible feature dim
+            order = ([ndim - 2, ndim - 3] if ndim >= 4 else []) + \
+                list(range(ndim - 1, 0, -1))
+            for i in order:
+                if spec[i] is None and shp[i] > 1 and \
+                        _divides(mesh, shp[i], ("model",)):
+                    spec[i] = "model"
+                    break
+        return jax.ShapeDtypeStruct(
+            shp, leaf.dtype, sharding=NamedSharding(mesh, P(*spec)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, specs)
+
+
+# ---------------------------------------------------------------------------
+# one dry-run
+# ---------------------------------------------------------------------------
+
+def _lower_for(bundle, shape, ctx, window, *, serve_sharding=False,
+               donate=False):
+    """jit().lower() the step function matching the shape's kind."""
+    p_sds = param_sds(bundle, ctx, serve_sharding=serve_sharding)
+    if shape.kind == "train":
+        o_sds = opt_state_sds(bundle, p_sds, ctx)
+        b_sds = batch_sds(bundle, shape, ctx)
+        donate_args = (0, 1) if donate else ()
+        return jax.jit(bundle.train_step,
+                       donate_argnums=donate_args).lower(p_sds, o_sds, b_sds)
+    if shape.kind == "prefill":
+        b_sds = batch_sds(bundle, shape, ctx)
+        return jax.jit(bundle.prefill).lower(p_sds, b_sds)
+    b = batch_sds(bundle, shape, ctx, window=window)
+    donate_args = (1,) if donate else ()  # decode: donate the KV cache
+    return jax.jit(bundle.decode_step, donate_argnums=donate_args).lower(
+        p_sds, b["cache"], b["tokens"], b["pos"])
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+            verbose: bool = True, overrides: dict | None = None,
+            tag_suffix: str = "") -> dict:
+    """One (arch x shape x mesh) dry-run.
+
+    Three fast compiles:
+      (a) the FULL-depth scanned module -> proves lowering/sharding and gives
+          exact ``memory_analysis`` (scan keeps HLO size depth-independent);
+      (b,c) unrolled 1-group and 2-group variants (full width) -> exact
+          per-group FLOPs/bytes/collectives by the linear identity
+          ``F(k) = F_fixed + k * F_body`` (layer groups are homogeneous), so
+          ``F(G) = F(1) + (G - 1) * (F(2) - F(1))`` — this sidesteps XLA
+          cost analysis counting while-loop bodies once.
+    """
+    import dataclasses as _dc
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    serve_sharding = donate = False
+    if overrides:
+        overrides = dict(overrides)
+        serve_sharding = bool(overrides.pop("serve_sharding", False))
+        donate = bool(overrides.pop("donate", False))
+        moe_over = {k[4:]: v for k, v in overrides.items()
+                    if k.startswith("moe.")}
+        plain = {k: v for k, v in overrides.items() if "." not in k}
+        if moe_over and cfg.moe is not None:
+            plain["moe"] = _dc.replace(cfg.moe, **moe_over)
+        cfg = _dc.replace(cfg, **plain)
+    if (arch, shape_name) in SKIPS:
+        res = {"arch": arch, "shape": shape_name, "skipped": True,
+               "reason": "documented skip (DESIGN.md §4)"}
+        out_dir.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+        with open(out_dir / f"{tag}.json", "w") as f:
+            json.dump(res, f, indent=2)
+        return res
+    window = None
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        if cfg.sliding_window is None:
+            return {"arch": arch, "shape": shape_name, "skipped": True,
+                    "reason": "full attention at 500k requires SWA variant"}
+        window = cfg.sliding_window
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ParallelContext(mesh=mesh)
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "n_devices": mesh.size, "window": window}
+
+    # (a) full-depth scanned module: lower + compile + memory analysis
+    bundle = build_model(cfg, ctx, window_override=window)
+    t0 = time.time()
+    lowered = _lower_for(bundle, shape, ctx, window,
+                         serve_sharding=serve_sharding, donate=donate)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+
+    # (b, c) unrolled shallow variants for exact per-group cost extrapolation
+    n_pre = cfg.first_k_dense
+    gsz = cfg.group_size
+    roofs = []
+    for k in (1, 2):
+        cfg_k = _dc.replace(cfg, n_layers=(n_pre + k) * gsz,
+                            scan_layers=False)
+        bundle_k = build_model(cfg_k, ctx, window_override=window)
+        comp_k = _lower_for(bundle_k, shape, ctx, window,
+                            serve_sharding=serve_sharding,
+                            donate=donate).compile()
+        roofs.append(analyze_compiled(comp_k))
+    G = cfg.n_groups - n_pre
+
+    def extrap(f1, f2):
+        # per-group body cost; tiny decode graphs can measure f2 < f1 due to
+        # XLA optimization noise — clamp the body to non-negative
+        return f1 + (G - 1) * max(f2 - f1, 0.0)
+
+    flops = extrap(roofs[0].flops_per_device, roofs[1].flops_per_device)
+    byts = extrap(roofs[0].bytes_per_device, roofs[1].bytes_per_device)
+    link = extrap(roofs[0].collectives.link_bytes,
+                  roofs[1].collectives.link_bytes)
+    counts = {op: extrap(roofs[0].collectives.counts.get(op, 0),
+                         roofs[1].collectives.counts.get(op, 0))
+              for op in set(roofs[0].collectives.counts)
+              | set(roofs[1].collectives.counts)}
+    out_b = {op: extrap(roofs[0].collectives.output_bytes.get(op, 0.0),
+                        roofs[1].collectives.output_bytes.get(op, 0.0))
+             for op in counts}
+    from repro.launch.roofline import (CollectiveStats, HBM_BW, ICI_BW,
+                                       PEAK_FLOPS, Roofline)
+    mf = model_flops(cfg, shape, mesh.size)
+    roof = Roofline(
+        flops_per_device=flops, bytes_per_device=byts,
+        collectives=CollectiveStats(counts=counts, output_bytes=out_b,
+                                    link_bytes=link),
+        compute_s=flops / PEAK_FLOPS, memory_s=byts / HBM_BW,
+        collective_s=link / ICI_BW, model_flops=mf)
+
+    result.update(
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=int(ma.argument_size_in_bytes),
+            output_bytes=int(ma.output_size_in_bytes),
+            temp_bytes=int(ma.temp_size_in_bytes),
+            peak_bytes=int(ma.peak_memory_in_bytes),
+        ),
+        roofline=roof.to_dict(),
+    )
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}{tag_suffix}"
+    with open(out_dir / f"{tag}.json", "w") as f:
+        json.dump(result, f, indent=2)
+    if verbose:
+        print(f"[ok] {tag}: lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops/dev {roof.flops_per_device:.3e} "
+              f"peak {ma.peak_memory_in_bytes/2**30:.2f} GiB "
+              f"dominant {roof.dominant}", flush=True)
+        print(f"     memory_analysis: args={ma.argument_size_in_bytes:,} "
+              f"temp={ma.temp_size_in_bytes:,} peak={ma.peak_memory_in_bytes:,}")
+        print(f"     cost_analysis(extrapolated): flops={roof.flops_per_device:.3e} "
+              f"bytes={roof.bytes_per_device:.3e} "
+              f"collective_link_bytes={roof.collectives.link_bytes:.3e}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (perf variants), e.g. "
+                         "remat_policy=dots prefill_last_only=1 "
+                         "moe.capacity_factor=1.0")
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False", "0", "1") and k != "remat_policy":
+            overrides[k] = v in ("True", "1")
+        else:
+            try:
+                overrides[k] = float(v) if "." in v else int(v)
+            except ValueError:
+                overrides[k] = v
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, mp, out_dir, overrides=overrides,
+                            tag_suffix=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[FAIL] {arch} {shape} "
+                          f"{'multi' if mp else 'single'}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""§Perf helper: rank dry-run pairs for hillclimbing and diff variants.
+
+  python -m repro.launch.hillclimb rank            # pick interesting pairs
+  python -m repro.launch.hillclimb diff A.json B.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def load_all(out_dir="experiments/dryrun"):
+    rows = []
+    for f in sorted(Path(out_dir).glob("*.json")):
+        r = json.loads(f.read_text())
+        if not r.get("skipped") and r.get("mesh") == "16x16":
+            rows.append(r)
+    return rows
+
+
+def rank():
+    rows = load_all()
+    print("== worst useful-flops ratio (compute waste) ==")
+    by_ratio = sorted(rows, key=lambda r: r["roofline"]["useful_flops_ratio"])
+    for r in by_ratio[:6]:
+        print(f"  {r['arch']} {r['shape']}: ratio="
+              f"{r['roofline']['useful_flops_ratio']:.3f} "
+              f"dominant={r['roofline']['dominant']}")
+    print("== most collective-bound (collective_s / max(other)) ==")
+    def coll_frac(r):
+        ro = r["roofline"]
+        other = max(ro["compute_s"], ro["memory_s"], 1e-12)
+        return ro["collective_s"] / other
+    by_coll = sorted(rows, key=coll_frac, reverse=True)
+    for r in by_coll[:6]:
+        print(f"  {r['arch']} {r['shape']}: frac={coll_frac(r):.2f} "
+              f"coll={r['roofline']['collective_s']:.2e}s")
+    print("== memory over v5e capacity (peak > 16 GiB) ==")
+    for r in rows:
+        peak = r["memory"]["peak_bytes"] / 2**30
+        if peak > 16:
+            print(f"  {r['arch']} {r['shape']}: peak={peak:.2f} GiB")
+
+
+def diff(a_path, b_path):
+    a = json.loads(Path(a_path).read_text())
+    b = json.loads(Path(b_path).read_text())
+
+    def line(name, va, vb):
+        delta = (vb - va) / va * 100 if va else float("nan")
+        print(f"  {name:24s} {va:.4e} -> {vb:.4e}  ({delta:+.1f}%)")
+
+    ra, rb = a["roofline"], b["roofline"]
+    print(f"{a['arch']} {a['shape']} {a['mesh']}:")
+    for k in ("compute_s", "memory_s", "collective_s", "flops_per_device",
+              "bytes_per_device", "collective_link_bytes"):
+        line(k, ra[k], rb[k])
+    line("peak_bytes", a["memory"]["peak_bytes"], b["memory"]["peak_bytes"])
+    line("temp_bytes", a["memory"]["temp_bytes"], b["memory"]["temp_bytes"])
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "diff":
+        diff(sys.argv[2], sys.argv[3])
+    else:
+        rank()

@@ -1,0 +1,79 @@
+"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.1f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def load(out_dir: Path, include_variants: bool = False):
+    rows = []
+    for f in sorted(out_dir.glob("*.json")):
+        if not include_variants and f.stem.count("__") != 2:
+            continue  # skip §Perf variant runs (arch__shape__mesh__tag)
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def table(rows, mesh="16x16"):
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "peak GiB/dev | FLOPs/dev | MODEL/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("skipped"):
+            if mesh == "16x16":
+                lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
+                             f" — | — | — | SKIP: {r['reason']} |")
+            continue
+        if r["mesh"] != mesh:
+            continue
+        ro = r["roofline"]
+        note = f"SWA w={r['window']}" if r.get("window") else ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(ro['compute_s'])} | "
+            f"{fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} | "
+            f"{ro['dominant']} | "
+            f"{r['memory']['peak_bytes'] / 2**30:.2f} | "
+            f"{ro['flops_per_device']:.2e} | "
+            f"{ro['useful_flops_ratio']:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def multi_pod_status(rows):
+    lines = ["| arch | shape | compiled | peak GiB/dev | link bytes/dev |",
+             "|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped") or r["mesh"] != "2x16x16":
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | yes | "
+            f"{r['memory']['peak_bytes'] / 2**30:.2f} | "
+            f"{r['roofline']['collective_link_bytes']:.2e} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(Path(args.dir))
+    print(f"## Roofline (single pod {args.mesh})\n")
+    print(table(rows, args.mesh))
+    print("\n## Multi-pod (2x16x16) compile status\n")
+    print(multi_pod_status(rows))
+
+
+if __name__ == "__main__":
+    main()

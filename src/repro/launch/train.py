@@ -1,0 +1,131 @@
+"""End-to-end training driver.
+
+Two modes:
+
+  * ``--mode sync``  — plain data-parallel training of the selected
+    architecture on synthetic LM data (sanity/perf driver; uses the host
+    devices, full configs are for TPU).
+  * ``--mode async`` — the paper's Generalized AsyncSGD: a heterogeneous
+    client population (Table-1 clusters) computes gradient tasks whose
+    timing follows the closed Jackson network; routing/concurrency come
+    from a strategy in {asyncsgd, max_throughput, round_opt, time_opt}.
+
+Examples (CPU-sized):
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \\
+      --preset tiny --steps 200
+  PYTHONPATH=src python -m repro.launch.train --mode async \\
+      --strategy time_opt --horizon 150
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run_sync(args):
+    from repro.configs import get_config
+    from repro.data import make_language_modeling_dataset
+    from repro.models import build_model
+
+    cfg = get_config(args.arch)
+    if args.preset == "tiny":
+        cfg = cfg.reduced(vocab=512, n_layers=2 * cfg.group_size)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] {cfg.name} preset={args.preset} params={n_params:,}")
+
+    ds = make_language_modeling_dataset(num_sequences=512,
+                                        seq_len=args.seq_len,
+                                        vocab=cfg.vocab, seed=args.seed)
+    opt_state = bundle.optimizer.init(params)
+    step_fn = jax.jit(bundle.train_step)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for step in range(args.steps):
+        idx = rng.integers(0, ds.tokens.shape[0], size=args.batch)
+        toks = ds.tokens[idx]
+        batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                 "targets": jnp.asarray(toks[:, 1:])}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+            print(f"  step {step:4d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)")
+    print(f"[train] done in {time.time()-t0:.1f}s")
+
+
+def run_async(args):
+    from repro.core import LearningConstants
+    from repro.data import (dirichlet_partition, make_synthetic_image_dataset,
+                            train_test_split)
+    from repro.fl import (AsyncFLConfig, AsyncFLTrainer, cnn_classifier,
+                          make_strategies)
+    from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1,
+                                     build_network_params)
+
+    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=args.scale)
+    n = net.n
+    consts = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0,
+                               eps=1.0)
+    strategies = make_strategies(net, consts, steps=args.opt_steps,
+                                 which=(args.strategy,))
+    p, m = strategies[args.strategy]
+    print(f"[async] strategy={args.strategy} n={n} m={m} "
+          f"p range [{p.min():.4f}, {p.max():.4f}]")
+
+    full = make_synthetic_image_dataset(num_classes=args.classes,
+                                        samples_per_class=args.per_class,
+                                        seed=args.seed)
+    train, test = train_test_split(full, 0.2, seed=args.seed)
+    parts = dirichlet_partition(train.y, n, alpha=0.2, seed=args.seed)
+    clients = [(train.x[i], train.y[i]) for i in parts]
+    model = cnn_classifier(28, args.classes)
+    trainer = AsyncFLTrainer(
+        model, clients, net._replace(p=jnp.asarray(p)), m,
+        config=AsyncFLConfig(eta=args.eta, batch_size=args.batch,
+                             eval_every_time=args.horizon / 10,
+                             distribution=args.distribution, seed=args.seed),
+        test_data=(test.x, test.y))
+    log = trainer.run(horizon_time=args.horizon)
+    for t, a, l in zip(log.times, log.accuracies, log.losses):
+        print(f"  t={t:8.1f}  acc={a:.3f}  loss={l:.4f}")
+    print(f"[async] updates={log.updates[-1]} "
+          f"throughput={log.throughput:.2f}/s energy={log.energy:.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"])
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    # async mode
+    ap.add_argument("--strategy", default="time_opt",
+                    choices=["asyncsgd", "max_throughput", "round_opt",
+                             "time_opt"])
+    ap.add_argument("--scale", type=int, default=10,
+                    help="divide Table-1 cluster counts by this")
+    ap.add_argument("--horizon", type=float, default=150.0)
+    ap.add_argument("--distribution", default="exponential",
+                    choices=["exponential", "deterministic", "lognormal"])
+    ap.add_argument("--eta", type=float, default=0.05)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--per-class", type=int, default=100)
+    ap.add_argument("--opt-steps", type=int, default=200)
+    args = ap.parse_args()
+    if args.mode == "sync":
+        run_sync(args)
+    else:
+        run_async(args)
+
+
+if __name__ == "__main__":
+    main()

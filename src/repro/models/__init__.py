@@ -1,0 +1,6 @@
+from .config import INPUT_SHAPES, ArchConfig, InputShape, MoEConfig
+from .model import ModelBundle, build_model
+from .parallel import ParallelContext
+
+__all__ = ["ArchConfig", "MoEConfig", "InputShape", "INPUT_SHAPES",
+           "ModelBundle", "build_model", "ParallelContext"]

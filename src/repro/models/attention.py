@@ -1,0 +1,131 @@
+"""Attention implementations (XLA reference paths).
+
+``flash_attention_ref`` is a chunked online-softmax attention in pure jnp
+(``lax.scan`` over KV blocks): O(S * block) memory, so 32k-token prefill
+lowers without materializing S x S score matrices.  It is also the oracle
+for the Pallas kernel in ``repro.kernels.flash_attention``.
+
+Supports GQA (q heads grouped over kv heads), causal masking, and sliding
+windows (the dense archs' ``long_500k`` variant).  ``decode_attention_ref``
+is the single-token cache-attention used by ``serve_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """[q, k] additive bias implementing causal / sliding-window masks."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, S_q, H, D]
+    k: jax.Array,  # [B, S_k, KV, D]
+    v: jax.Array,  # [B, S_k, KV, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_k: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Chunked online-softmax attention; returns [B, S_q, H, D]."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = D ** -0.5
+    orig_dtype = q.dtype
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, KV, G, D)
+
+    n_blocks = -(-Sk // block_k)
+    pad = n_blocks * block_k - Sk
+    kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.float32)
+    vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.float32)
+    kf = kf.reshape(B, n_blocks, block_k, KV, D)
+    vf = vf.reshape(B, n_blocks, block_k, KV, D)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, start = blk
+        k_pos = start + jnp.arange(block_k)
+        s = jnp.einsum("bqngd,bknd->bqngk", qf, kb)  # [B,Sq,KV,G,block]
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        bias = jnp.where(k_pos[None, :] < Sk, bias, NEG)  # padding mask
+        s = s + bias[None, :, None, None, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqngk,bknd->bqngd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, D), jnp.float32)
+    starts = jnp.arange(n_blocks) * block_k
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0), starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, D).astype(orig_dtype)
+
+
+def plain_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    """Naive O(S^2)-memory attention — oracle for tests on small shapes."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, D) * D ** -0.5
+    s = jnp.einsum("bqngd,bknd->bqngk", qf, k.astype(jnp.float32))
+    bias = _mask_bias(q_offset + jnp.arange(Sq), jnp.arange(k.shape[1]),
+                      causal, window)
+    s = s + bias[None, :, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqngk,bknd->bqngd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, S, KV, D]
+    v_cache: jax.Array,  # [B, S, KV, D]
+    length: jax.Array,   # scalar or [B] — number of valid cache entries
+) -> jax.Array:
+    """Single-token attention over a (possibly ring-buffered) KV cache."""
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, D) * D ** -0.5
+    s = jnp.einsum("bngd,bknd->bngk", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < jnp.broadcast_to(
+        jnp.asarray(length).reshape(-1, 1), (B, S))
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngk,bknd->bngd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, impl="ref", q_offset=0,
+              block_k=1024):
+    """Dispatch between XLA reference and the Pallas TPU kernel."""
+    if impl == "pallas":
+        from ..kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "plain":
+        return plain_attention_ref(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_k=block_k)

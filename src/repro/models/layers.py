@@ -1,0 +1,224 @@
+"""Shared transformer layers: norms, rotary embeddings (standard + M-RoPE),
+SwiGLU FFN, and the GQA attention block (train / prefill / decode modes)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, decode_attention_ref
+from .config import ArchConfig
+from .parallel import ParallelContext
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, cfg: ArchConfig):
+    return {"scale": jnp.ones((dim,), pdtype_of(cfg))}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE. x: [B, S, H, D]; positions: [S] or [B, S]."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)  # [D/2]
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    angles = pos[..., None] * freqs[None, None, :]        # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: three position streams (t, h, w), each
+    rotating its own section of the head dim.  positions3: [3, B, S]."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)  # [D/2]
+    # section s owns freqs[offset:offset+sections[s]]
+    assert sum(sections) == D // 2, "mrope sections must sum to head_dim/2"
+    sect_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                         total_repeat_length=D // 2)  # [D/2]
+    pos = positions3.astype(jnp.float32)               # [3, B, S]
+    angles_all = pos[..., None] * freqs[None, None, None, :]  # [3, B, S, D/2]
+    angles = jnp.take_along_axis(
+        angles_all, sect_id[None, None, None, :].repeat(pos.shape[1], 1)
+        .repeat(pos.shape[2], 2), axis=0)[0]            # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg: ArchConfig, batch: int, seq: int, offset=0):
+    """Build the position stream(s) for rope / mrope."""
+    pos = offset + jnp.arange(seq)
+    if cfg.rope == "mrope":
+        # stubbed vision layout: first num_image_tokens form a grid (t=0),
+        # text continues at t = grid_size
+        n_img = cfg.num_image_tokens
+        side = max(int(n_img ** 0.5), 1)
+        t = jnp.where(pos < n_img, 0, pos - n_img + side)
+        h = jnp.where(pos < n_img, pos // side, pos - n_img + side)
+        w = jnp.where(pos < n_img, pos % side, pos - n_img + side)
+        p3 = jnp.stack([t, h, w])  # [3, S]
+        return jnp.broadcast_to(p3[:, None, :], (3, batch, seq))
+    return jnp.broadcast_to(pos[None, :], (batch, seq))
+
+
+def _rope_q_or_k(cfg: ArchConfig, x, positions):
+    if cfg.rope == "standard":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return x  # "none"
+
+
+# ---------------------------------------------------------------------------
+# dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_dense_ffn(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    pd = pdtype_of(cfg)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f), jnp.float32) * s_in).astype(pd),
+        "w_up": (jax.random.normal(k2, (d, f), jnp.float32) * s_in).astype(pd),
+        "w_down": (jax.random.normal(k3, (f, d), jnp.float32) * s_out).astype(pd),
+    }
+
+
+def dense_ffn(params, x, ctx: ParallelContext):
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = ctx.shard(h, ("pod", "data"), None, "model")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+class AttnCache(NamedTuple):
+    k: jax.Array  # [B, S_cache, KV, D]
+    v: jax.Array  # [B, S_cache, KV, D]
+
+
+def init_attention(key, cfg: ArchConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    so = (H * hd) ** -0.5
+    pd = pdtype_of(cfg)
+    params = {
+        "wq": (jax.random.normal(k1, (d, H * hd), jnp.float32) * s).astype(pd),
+        "wk": (jax.random.normal(k2, (d, KV * hd), jnp.float32) * s).astype(pd),
+        "wv": (jax.random.normal(k3, (d, KV * hd), jnp.float32) * s).astype(pd),
+        "wo": (jax.random.normal(k4, (H * hd, d), jnp.float32) * so).astype(pd),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = init_rmsnorm(hd, cfg)
+        params["k_norm"] = init_rmsnorm(hd, cfg)
+    return params
+
+
+def _project_qkv(params, cfg: ArchConfig, x, positions, ctx):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, KV, hd)
+    v = (x @ params["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = _rope_q_or_k(cfg, q, positions)
+    k = _rope_q_or_k(cfg, k, positions)
+    q = ctx.shard(q, ("pod", "data"), None, "model", None)
+    k = ctx.shard(k, ("pod", "data"), None, "model", None)
+    return q, k, v
+
+
+def attention_block(params, cfg: ArchConfig, x, positions, ctx,
+                    *, causal=True, window=None, impl="ref",
+                    return_cache=False):
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _project_qkv(params, cfg, x, positions, ctx)
+    if cfg.repeat_kv and cfg.n_kv_heads < cfg.n_heads:
+        # GQA -> MHA layout: lets the head dim shard over the model axis
+        # even when n_kv_heads < axis size (avoids replicated attention
+        # activations + f32 score all-gathers; §Perf)
+        G = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = ctx.shard(k, ("pod", "data"), None, "model", None)
+        v = ctx.shard(v, ("pod", "data"), None, "model", None)
+    out = attention(q, k, v, causal=causal,
+                    window=window or cfg.sliding_window, impl=impl)
+    B, S = x.shape[:2]
+    y = out.reshape(B, S, -1) @ params["wo"]
+    if return_cache:
+        return y, AttnCache(k=k, v=v)
+    return y, None
+
+
+def attention_decode(params, cfg: ArchConfig, x, pos, cache: AttnCache, ctx,
+                     *, window=None):
+    """One-token decode against a KV cache.
+
+    With a sliding window the cache is a ring buffer of size ``window``; the
+    write slot is ``pos % window`` and all entries are valid once
+    ``pos >= window``.  Without a window the cache has static length
+    ``S_cache`` and entries ``< pos`` (+ the new one) are valid.
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, 1))
+    if cfg.rope == "mrope":
+        # decode is always past the image grid: all three streams share the
+        # text position value used by positions_for (pos - n_img + side)
+        n_img = cfg.num_image_tokens
+        side = max(int(n_img ** 0.5), 1)
+        val = jnp.asarray(pos) - n_img + side
+        positions = jnp.broadcast_to(val[None, None, None], (3, B, 1))
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions, ctx)
+
+    S_cache = cache.k.shape[1]
+    slot = (pos % S_cache) if window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    length = jnp.minimum(pos + 1, S_cache)
+    out = decode_attention_ref(q, k_cache, v_cache, length)
+    y = out.reshape(B, 1, H * hd) @ params["wo"]
+    return y, AttnCache(k=k_cache, v=v_cache)

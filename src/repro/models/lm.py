@@ -1,0 +1,335 @@
+"""Decoder-only language model assembling arbitrary block patterns.
+
+A model is ``embed -> [prelude groups] -> scan(stacked groups) -> norm -> head``
+where one *group* is ``cfg.block_pattern`` (e.g. Jamba's 7x mamba + 1x attn)
+and groups are stacked along a leading axis and driven by ``jax.lax.scan``
+(+ ``jax.checkpoint`` when ``cfg.remat``) so HLO size is depth-independent.
+
+Each pattern slot is ``mixer (attn | mamba | mlstm | slstm) [+ FFN
+(dense | moe | none)]`` with pre-RMSNorm residuals.  The same group code
+serves train/prefill (full sequence, optional cache collection) and decode
+(single token, carried recurrent state / KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (AttnCache, attention_block, attention_decode,
+                     dense_ffn, dtype_of, init_attention, init_dense_ffn,
+                     init_rmsnorm, pdtype_of, positions_for, rmsnorm)
+from .moe import init_moe, moe_ffn
+from .parallel import ParallelContext
+from .ssm import (MambaState, MLSTMState, SLSTMState, init_mamba,
+                  init_mamba_state, init_mlstm, init_mlstm_state, init_slstm,
+                  init_slstm_state, mamba_decode, mamba_forward, mlstm_decode,
+                  mlstm_forward, slstm_decode, slstm_forward)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, slot: int, force_dense_ffn=False):
+    kind = cfg.block_pattern[slot]
+    ffn_kind = cfg.ffns[slot]
+    if force_dense_ffn and ffn_kind == "moe":
+        ffn_kind = "dense"
+    k1, k2 = jax.random.split(key)
+    params: dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model, cfg)}
+    if kind == "attn":
+        params["mixer_attn"] = init_attention(k1, cfg)
+    elif kind == "mamba":
+        params["mixer_mamba"] = init_mamba(k1, cfg)
+    elif kind == "mlstm":
+        params["mixer_mlstm"] = init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        params["mixer_slstm"] = init_slstm(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if ffn_kind != "none":
+        params["ln2"] = init_rmsnorm(cfg.d_model, cfg)
+        if ffn_kind == "moe":
+            params["ffn_moe"] = init_moe(k2, cfg)
+        else:
+            params["ffn_dense"] = init_dense_ffn(k2, cfg)
+    return params
+
+
+def init_group(key, cfg: ArchConfig, force_dense_ffn=False):
+    keys = jax.random.split(key, cfg.group_size)
+    return {f"slot{i}": init_block(keys[i], cfg, i, force_dense_ffn)
+            for i in range(cfg.group_size)}
+
+
+def init_lm(key, cfg: ArchConfig):
+    k_embed, k_groups, k_head, k_pre = jax.random.split(key, 4)
+    pd = pdtype_of(cfg)
+    n_pre = cfg.first_k_dense
+    n_scan = cfg.n_groups - n_pre
+    params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(pd),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model ** -0.5).astype(pd)
+    if n_pre:
+        pre_keys = jax.random.split(k_pre, n_pre)
+        params["prelude"] = [init_group(pre_keys[i], cfg, force_dense_ffn=True)
+                             for i in range(n_pre)]
+    group_keys = jax.random.split(k_groups, n_scan)
+    params["groups"] = jax.vmap(lambda k: init_group(k, cfg))(group_keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application — full sequence
+# ---------------------------------------------------------------------------
+
+def apply_block(bparams, cfg: ArchConfig, slot: int, x, positions, ctx,
+                *, impl="ref", window=None, collect_cache=False,
+                force_dense_ffn=False):
+    """Returns (x, aux_loss, cache_entry)."""
+    kind = cfg.block_pattern[slot]
+    h = rmsnorm(bparams["ln1"], x)
+    cache_entry = None
+    if kind == "attn":
+        y, cache_entry = attention_block(
+            bparams["mixer_attn"], cfg, h, positions, ctx, causal=True,
+            window=window, impl=impl, return_cache=collect_cache)
+    elif kind == "mamba":
+        y, cache_entry = mamba_forward(bparams["mixer_mamba"], cfg, h, ctx,
+                                       return_state=collect_cache)
+    elif kind == "mlstm":
+        y, cache_entry = mlstm_forward(bparams["mixer_mlstm"], cfg, h, ctx,
+                                       return_state=collect_cache)
+    else:  # slstm
+        y, cache_entry = slstm_forward(bparams["mixer_slstm"], cfg, h, ctx,
+                                       return_state=collect_cache)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    # FFN kind dispatch by parameter presence (prelude groups may force dense)
+    if "ffn_moe" in bparams:
+        h2 = rmsnorm(bparams["ln2"], x)
+        y2, aux = moe_ffn(bparams["ffn_moe"], h2, cfg, ctx)
+        x = x + y2
+    elif "ffn_dense" in bparams:
+        h2 = rmsnorm(bparams["ln2"], x)
+        x = x + dense_ffn(bparams["ffn_dense"], h2, ctx)
+    if cfg.seq_parallel:
+        # sequence parallelism: residual stays seq-sharded over 'model';
+        # XLA inserts all-gather before attention projections and
+        # reduce-scatter after — replacing the replicate-based reshard at
+        # MoE (seq-sharded) <-> attention (head-sharded) boundaries
+        x = ctx.shard(x, ("pod", "data"), "model", None)
+    else:
+        x = ctx.shard(x, ("pod", "data"), None, None)
+    return x, aux, cache_entry
+
+
+def apply_group(gparams, cfg: ArchConfig, x, positions, ctx, *, impl="ref",
+                window=None, collect_cache=False, force_dense_ffn=False):
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+    for i in range(cfg.group_size):
+        x, aux, ce = apply_block(gparams[f"slot{i}"], cfg, i, x, positions,
+                                 ctx, impl=impl, window=window,
+                                 collect_cache=collect_cache,
+                                 force_dense_ffn=force_dense_ffn)
+        aux_total = aux_total + aux
+        if collect_cache:
+            caches[f"slot{i}"] = ce
+    return x, aux_total, caches
+
+
+# ---------------------------------------------------------------------------
+# forward — train / prefill
+# ---------------------------------------------------------------------------
+
+class ForwardOut(NamedTuple):
+    logits: jax.Array
+    aux_loss: jax.Array
+    cache: Any = None
+
+
+def embed_inputs(params, cfg: ArchConfig, tokens, image_embeds=None):
+    """Token embedding, with optional stubbed modality embeddings prepended."""
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    if image_embeds is not None:
+        x = jnp.concatenate([image_embeds.astype(dtype_of(cfg)), x], axis=1)
+    return x
+
+
+def _remat(cfg: ArchConfig, fn):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def lm_forward(params, cfg: ArchConfig, ctx: ParallelContext, tokens,
+               image_embeds=None, *, impl="ref", window=None,
+               collect_cache=False, last_only=False) -> ForwardOut:
+    x = embed_inputs(params, cfg, tokens, image_embeds)
+    B, S, _ = x.shape
+    x = ctx.shard(x, ("pod", "data"), None, None)
+    positions = positions_for(cfg, B, S)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    pre_caches = []
+    for g in params.get("prelude", []):
+        x, aux, c = apply_group(g, cfg, x, positions, ctx, impl=impl,
+                                window=window, collect_cache=collect_cache,
+                                force_dense_ffn=True)
+        aux_total = aux_total + aux
+        pre_caches.append(c)
+
+    def body(carry, gparams):
+        x, aux = carry
+        x, a, caches = apply_group(gparams, cfg, x, positions, ctx, impl=impl,
+                                   window=window, collect_cache=collect_cache)
+        return (x, aux + a), caches
+
+    body_fn = _remat(cfg, body)
+    if cfg.scan_layers:
+        (x, aux_total), scan_caches = jax.lax.scan(body_fn, (x, aux_total),
+                                                   params["groups"])
+    else:  # unrolled: exact per-layer HLO accounting for the dry-run
+        n_scan = cfg.n_groups - cfg.first_k_dense
+        outs = []
+        for gi in range(n_scan):
+            g = jax.tree_util.tree_map(lambda a: a[gi], params["groups"])
+            (x, aux_total), c = body_fn((x, aux_total), g)
+            outs.append(c)
+        scan_caches = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+                       if collect_cache and outs else None)
+    x = rmsnorm(params["final_norm"], x)
+    if last_only or (collect_cache and cfg.prefill_last_only):
+        x = x[:, -1:]  # prefill only needs the next-token distribution
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    logits = ctx.shard(logits, ("pod", "data"), None, "model")
+    cache = None
+    if collect_cache:
+        cache = {"prelude": pre_caches, "groups": scan_caches}
+    return ForwardOut(logits=logits, aux_loss=aux_total, cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ArchConfig, slot: int, batch: int, cache_len: int,
+                     window: Optional[int], dtype):
+    kind = cfg.block_pattern[slot]
+    if kind == "attn":
+        L = min(window, cache_len) if window else cache_len
+        return AttnCache(
+            k=jnp.zeros((batch, L, cfg.n_kv_heads, cfg.hd), dtype),
+            v=jnp.zeros((batch, L, cfg.n_kv_heads, cfg.hd), dtype))
+    if kind == "mamba":
+        return init_mamba_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return init_mlstm_state(cfg, batch, dtype)
+    return init_slstm_state(cfg, batch, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               window: Optional[int] = None, dtype=None):
+    dtype = dtype or dtype_of(cfg)
+
+    def one_group():
+        return {f"slot{i}": init_block_cache(cfg, i, batch, cache_len, window,
+                                             dtype)
+                for i in range(cfg.group_size)}
+
+    n_pre = cfg.first_k_dense
+    n_scan = cfg.n_groups - n_pre
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *([one_group()] * n_scan)) if n_scan > 1 \
+        else jax.tree_util.tree_map(lambda x: x[None], one_group())
+    return {"prelude": [one_group() for _ in range(n_pre)], "groups": stacked}
+
+
+def decode_block(bparams, cfg: ArchConfig, slot: int, x, pos, cache_entry,
+                 ctx, *, window=None):
+    kind = cfg.block_pattern[slot]
+    h = rmsnorm(bparams["ln1"], x)
+    if kind == "attn":
+        y, new_cache = attention_decode(bparams["mixer_attn"], cfg, h, pos,
+                                        cache_entry, ctx, window=window)
+    elif kind == "mamba":
+        y, new_cache = mamba_decode(bparams["mixer_mamba"], cfg, h,
+                                    cache_entry, ctx)
+    elif kind == "mlstm":
+        y, new_cache = mlstm_decode(bparams["mixer_mlstm"], cfg, h,
+                                    cache_entry, ctx)
+    else:
+        y, new_cache = slstm_decode(bparams["mixer_slstm"], cfg, h,
+                                    cache_entry, ctx)
+    x = x + y
+    if "ffn_moe" in bparams:
+        h2 = rmsnorm(bparams["ln2"], x)
+        y2, _ = moe_ffn(bparams["ffn_moe"], h2, cfg, ctx)
+        x = x + y2
+    elif "ffn_dense" in bparams:
+        h2 = rmsnorm(bparams["ln2"], x)
+        x = x + dense_ffn(bparams["ffn_dense"], h2, ctx)
+    return x, new_cache
+
+
+def decode_group(gparams, cfg: ArchConfig, x, pos, gcache, ctx, *,
+                 window=None, force_dense_ffn=False):
+    new_cache = {}
+    for i in range(cfg.group_size):
+        if force_dense_ffn:
+            # prelude groups replace moe with dense; handled by param presence
+            pass
+        x, nc = decode_block(gparams[f"slot{i}"], cfg, i, x, pos,
+                             gcache[f"slot{i}"], ctx, window=window)
+        new_cache[f"slot{i}"] = nc
+    return x, new_cache
+
+
+def lm_decode_step(params, cfg: ArchConfig, ctx: ParallelContext, cache,
+                   tokens, pos, *, window=None):
+    """One decode step. tokens: [B, 1]; pos: scalar int32.  Returns
+    (logits [B, 1, V], new cache)."""
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    x = ctx.shard(x, ("pod", "data"), None, None)
+
+    new_pre = []
+    for g, c in zip(params.get("prelude", []), cache["prelude"]):
+        x, nc = decode_group(g, cfg, x, pos, c, ctx, window=window)
+        new_pre.append(nc)
+
+    def body(x, xs):
+        gparams, gcache = xs
+        x, nc = decode_group(gparams, cfg, x, pos, gcache, ctx, window=window)
+        return x, nc
+
+    if cfg.scan_layers:
+        x, new_scan = jax.lax.scan(body, x,
+                                   (params["groups"], cache["groups"]))
+    else:
+        n_scan = cfg.n_groups - cfg.first_k_dense
+        outs = []
+        for gi in range(n_scan):
+            g = jax.tree_util.tree_map(lambda a: a[gi], params["groups"])
+            gc = jax.tree_util.tree_map(lambda a: a[gi], cache["groups"])
+            x, nc = decode_group(g, cfg, x, pos, gc, ctx, window=window)
+            outs.append(nc)
+        new_scan = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    x = rmsnorm(params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    return logits, {"prelude": new_pre, "groups": new_scan}

@@ -1,0 +1,201 @@
+"""Model bundle: a uniform functional API over all assigned architectures.
+
+``build_model(cfg, ctx)`` returns a :class:`ModelBundle` with:
+
+  * ``init(rng) -> params``                     (pure; shape-only via eval_shape)
+  * ``loss_fn(params, batch) -> (loss, metrics)``
+  * ``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+  * ``prefill(params, batch) -> (logits, cache)``
+  * ``decode_step(params, cache, tokens, pos) -> (logits, cache)``
+  * ``init_cache(batch, cache_len, window) -> cache``
+  * ``input_specs(shape) -> batch of ShapeDtypeStructs``  (dry-run stand-ins)
+
+Batch dict conventions:
+  lm / moe / ssm / hybrid / dense: {"tokens": [B,S], "targets": [B,S]}
+  vlm:   + {"image_embeds": [B, n_img, d]} (tokens cover S - n_img positions)
+  audio: {"frames": [B,F,d], "tokens": [B,S], "targets": [B,S]}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from . import encdec, lm
+from .config import ArchConfig, InputShape
+from .parallel import ParallelContext
+
+
+class ModelBundle(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    loss_fn: Callable
+    train_step: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    input_specs: Callable
+    optimizer: optim.Optimizer
+
+
+def _xent(logits: jax.Array, targets: jax.Array, z_loss: float):
+    """Token-mean cross entropy with optional z-loss, in f32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(logz))
+    return loss
+
+
+def build_model(cfg: ArchConfig, ctx: ParallelContext = ParallelContext(),
+                *, attention_impl: str = "ref",
+                window_override: Optional[int] = None) -> ModelBundle:
+    window = window_override if window_override is not None else cfg.sliding_window
+    optimizer = optim.get_optimizer(cfg.optimizer, cfg.learning_rate)
+    is_audio = cfg.family == "audio"
+    is_vlm = cfg.family == "vlm"
+
+    # -- init ---------------------------------------------------------------
+    def init(rng):
+        if is_audio:
+            return encdec.init_encdec(rng, cfg)
+        return lm.init_lm(rng, cfg)
+
+    # -- loss ---------------------------------------------------------------
+    def loss_fn(params, batch):
+        if is_audio:
+            enc_out = encdec.encode(params, cfg, batch["frames"], ctx,
+                                    impl=attention_impl)
+            logits = encdec.decode_train(params, cfg, batch["tokens"], enc_out,
+                                         ctx, impl=attention_impl)
+            loss = _xent(logits, batch["targets"], cfg.z_loss)
+            return loss, {"loss": loss, "aux_loss": jnp.zeros(())}
+        image_embeds = batch.get("image_embeds") if is_vlm else None
+        out = lm.lm_forward(params, cfg, ctx, batch["tokens"],
+                            image_embeds=image_embeds, impl=attention_impl)
+        logits = out.logits
+        if is_vlm and image_embeds is not None:
+            logits = logits[:, image_embeds.shape[1]:]
+        loss = _xent(logits, batch["targets"], cfg.z_loss) + out.aux_loss
+        return loss, {"loss": loss, "aux_loss": out.aux_loss}
+
+    # -- train step ----------------------------------------------------------
+    def _grads(params, batch):
+        mb = cfg.microbatches
+        if mb <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        # gradient accumulation: scan over microbatch slices of the batch
+        # (peak activation memory / mb, identical mean gradient)
+        split = jax.tree_util.tree_map(
+            lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+        def body(acc, micro):
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                  micro)
+            acc_g, acc_l = acc
+            acc_g = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype) / mb, acc_g, g)
+            return (acc_g, acc_l + l / mb), m
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), ms = jax.lax.scan(body, (zeros, jnp.zeros(())), split)
+        metrics = jax.tree_util.tree_map(lambda x: x[-1], ms)
+        metrics["loss"] = loss
+        return (loss, metrics), grads
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = _grads(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    # -- prefill ---------------------------------------------------------------
+    def prefill(params, batch):
+        if is_audio:
+            enc_out = encdec.encode(params, cfg, batch["frames"], ctx,
+                                    impl=attention_impl)
+            logits = encdec.decode_train(params, cfg, batch["tokens"], enc_out,
+                                         ctx, impl=attention_impl)
+            cache = encdec.build_decode_cache(
+                params, cfg, enc_out, cache_len=batch["tokens"].shape[1], ctx=ctx)
+            return logits[:, -1:], cache
+        image_embeds = batch.get("image_embeds") if is_vlm else None
+        out = lm.lm_forward(params, cfg, ctx, batch["tokens"],
+                            image_embeds=image_embeds, impl=attention_impl,
+                            window=window, collect_cache=True)
+        return out.logits[:, -1:], out.cache
+
+    # -- decode ----------------------------------------------------------------
+    def decode_step(params, cache, tokens, pos):
+        if is_audio:
+            return encdec.decode_step(params, cfg, cache, tokens, pos, ctx)
+        return lm.lm_decode_step(params, cfg, ctx, cache, tokens, pos,
+                                 window=window)
+
+    def init_cache(batch_size: int, cache_len: int,
+                   use_window: Optional[int] = None):
+        w = use_window if use_window is not None else window
+        if is_audio:
+            # cross K/V stub shapes (encoder output is required in practice;
+            # dry-run uses ShapeDtypeStructs via eval_shape of this function)
+            frames = jnp.zeros((batch_size, cfg.encoder_frames, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+            return encdec.EncDecCache(
+                self_kv=encdec.AttnCache(
+                    k=jnp.zeros((cfg.n_layers, batch_size, cache_len,
+                                 cfg.n_kv_heads, cfg.hd), jnp.dtype(cfg.dtype)),
+                    v=jnp.zeros((cfg.n_layers, batch_size, cache_len,
+                                 cfg.n_kv_heads, cfg.hd), jnp.dtype(cfg.dtype))),
+                cross_k=jnp.zeros((cfg.n_layers, batch_size, cfg.encoder_frames,
+                                   cfg.n_kv_heads, cfg.hd), jnp.dtype(cfg.dtype)),
+                cross_v=jnp.zeros((cfg.n_layers, batch_size, cfg.encoder_frames,
+                                   cfg.n_kv_heads, cfg.hd), jnp.dtype(cfg.dtype)))
+        return lm.init_cache(cfg, batch_size, cache_len, window=w)
+
+    # -- input specs for the dry-run ------------------------------------------
+    def input_specs(shape: InputShape, *, for_decode_window: Optional[int] = None):
+        B, S = shape.global_batch, shape.seq_len
+        ti = jnp.int32
+        if shape.kind == "train":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), ti),
+                     "targets": jax.ShapeDtypeStruct((B, S), ti)}
+            if is_vlm:
+                n_img = cfg.num_image_tokens
+                batch["tokens"] = jax.ShapeDtypeStruct((B, S - n_img), ti)
+                batch["targets"] = jax.ShapeDtypeStruct((B, S - n_img), ti)
+                batch["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, n_img, cfg.d_model), jnp.dtype(cfg.dtype))
+            if is_audio:
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), ti)}
+            if is_vlm:
+                n_img = cfg.num_image_tokens
+                batch["tokens"] = jax.ShapeDtypeStruct((B, S - n_img), ti)
+                batch["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, n_img, cfg.d_model), jnp.dtype(cfg.dtype))
+            if is_audio:
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+            return batch
+        # decode: (cache, tokens, pos)
+        w = for_decode_window if for_decode_window is not None else window
+        cache = jax.eval_shape(lambda: init_cache(B, S, use_window=w))
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((B, 1), ti),
+                "pos": jax.ShapeDtypeStruct((), ti)}
+
+    return ModelBundle(cfg=cfg, init=init, loss_fn=loss_fn,
+                       train_step=train_step, prefill=prefill,
+                       decode_step=decode_step, init_cache=init_cache,
+                       input_specs=input_specs, optimizer=optimizer)

@@ -1,0 +1,278 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two execution paths with identical routing semantics:
+
+  * **EP path** (mesh active): experts are sharded over the ``model`` axis
+    (expert parallelism) and FSDP-sharded over ``data``.  Tokens are
+    dispatched to their experts' owners with a fixed-capacity
+    ``jax.lax.all_to_all`` inside ``jax.shard_map`` (Switch-/DeepSeek-style:
+    top-k routing, per-destination capacity ``ceil(T*k/ep * cf)``, overflow
+    dropped), computed locally with ``jax.lax.ragged_dot`` after an argsort
+    group-by, and returned with a second all-to-all.  Differentiable
+    end-to-end (train_step lowers on the production mesh).
+
+  * **ragged path** (no mesh / 1-device tests): same top-k routing, global
+    argsort group-by + ragged_dot, no collectives, no capacity drop.  The EP
+    path reduces to this semantics when capacity is generous — tested.
+
+Shared ("always-on") experts (Qwen2-MoE) run as a dense SwiGLU with a
+sigmoid gate.  Router auxiliary losses: switch load-balance loss and router
+z-loss, averaged across the mesh.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, MoEConfig
+from .layers import dense_ffn, init_dense_ffn
+from .parallel import ParallelContext
+
+
+def init_moe(key, cfg: ArchConfig):
+    moe = cfg.moe
+    d, E, f = cfg.d_model, moe.num_experts, moe.expert_ff
+    keys = jax.random.split(key, 6)
+    pd = jnp.dtype(cfg.param_dtype)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    params = {
+        "router": (jax.random.normal(keys[0], (d, E), jnp.float32) * s_in
+                   ).astype(jnp.float32),  # router stays f32 for stable top-k
+        "experts": {
+            "w_gate": (jax.random.normal(keys[1], (E, d, f), jnp.float32) * s_in).astype(pd),
+            "w_up": (jax.random.normal(keys[2], (E, d, f), jnp.float32) * s_in).astype(pd),
+            "w_down": (jax.random.normal(keys[3], (E, f, d), jnp.float32) * s_out).astype(pd),
+        },
+    }
+    if moe.num_shared > 0:
+        params["shared"] = init_dense_ffn(keys[4], cfg,
+                                          d_ff=moe.num_shared * moe.shared_ff)
+        params["shared_gate"] = (jax.random.normal(keys[5], (d, 1), jnp.float32)
+                                 * s_in).astype(jnp.float32)
+    return params
+
+
+def _route(router_w, x_flat, moe: MoEConfig):
+    """Top-k routing. Returns (ids [T,k], weights [T,k], aux_loss scalar)."""
+    logits = (x_flat.astype(jnp.float32) @ router_w)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, moe.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+    # switch load-balance loss: E * sum_e f_e * P_e
+    E = logits.shape[-1]
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(top_ids, E), axis=1), axis=0)  # [E]
+    P_e = jnp.mean(probs, axis=0)
+    aux = moe.router_aux_weight * E * jnp.sum(f_e * P_e)
+    zl = moe.router_z_weight * jnp.mean(
+        jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    # keep f32 even under global x64 (test collection enables x64 for the
+    # queueing core; scan carries must stay dtype-stable)
+    return top_ids, top_w.astype(x_flat.dtype), (aux + zl).astype(jnp.float32)
+
+
+def _group_by_expert(ids_flat: jax.Array, num_groups: int):
+    """Stable argsort group-by. Returns (order, group_sizes, idx_in_group)."""
+    order = jnp.argsort(ids_flat, stable=True)
+    counts = jnp.bincount(ids_flat, length=num_groups)
+    starts = jnp.cumsum(counts) - counts
+    idx_sorted = jnp.arange(ids_flat.shape[0]) - starts[ids_flat[order]]
+    idx_in_group = jnp.zeros_like(idx_sorted).at[order].set(idx_sorted)
+    return order, counts, idx_in_group
+
+
+def _expert_swiglu(w, x_sorted, group_sizes):
+    """ragged SwiGLU over grouped tokens: x [R, d] -> [R, d].
+
+    Exact (no capacity drops); used on the collective-free path.  Note the
+    XLA cost model prices ragged_dot as a dense [R,d]x[E,d,f] contraction,
+    so the EP path uses :func:`_expert_swiglu_capacity` instead."""
+    gs = group_sizes.astype(jnp.int32)
+    h = (jax.nn.silu(jax.lax.ragged_dot(x_sorted, w["w_gate"], gs))
+         * jax.lax.ragged_dot(x_sorted, w["w_up"], gs))
+    return jax.lax.ragged_dot(h, w["w_down"], gs)
+
+
+def _expert_swiglu_capacity(w, x_sorted, ids_sorted, group_sizes,
+                            capacity: int):
+    """Capacity-buffer SwiGLU: scatter sorted tokens into a dense
+    [E_loc, C, d] buffer, run batched-einsum experts (MXU-shaped, correctly
+    priced by the XLA cost model), gather back.  Overflow beyond per-expert
+    capacity is dropped (Switch semantics)."""
+    R, d = x_sorted.shape
+    E_loc = group_sizes.shape[0]
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    idx_in_e = jnp.arange(R) - starts[ids_sorted]
+    keep = idx_in_e < capacity
+    slot = jnp.where(keep, ids_sorted * capacity + idx_in_e, E_loc * capacity)
+    buf = jnp.zeros((E_loc * capacity, d), x_sorted.dtype).at[slot].set(
+        x_sorted, mode="drop").reshape(E_loc, capacity, d)
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w["w_gate"]))
+         * jnp.einsum("ecd,edf->ecf", buf, w["w_up"]))
+    out = jnp.einsum("ecf,efd->ecd", h, w["w_down"]).reshape(
+        E_loc * capacity, d)
+    y = out[slot.clip(0, E_loc * capacity - 1)]
+    return jnp.where(keep[:, None], y, 0)
+
+
+def _moe_ragged(params, x, cfg: ArchConfig):
+    """Collective-free path: global group-by + ragged_dot (exact, no drops)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    T, k, E = B * S, moe.top_k, moe.num_experts
+    xf = x.reshape(T, d)
+    ids, w, aux = _route(params["router"], xf, moe)
+    rep_ids = ids.reshape(T * k)
+    rep_src = jnp.repeat(jnp.arange(T), k)
+    order, counts, _ = _group_by_expert(rep_ids, E)
+    x_sorted = xf[rep_src[order]]
+    y_sorted = _expert_swiglu(params["experts"], x_sorted, counts)
+    y = jnp.zeros((T, d), x.dtype).at[rep_src[order]].add(
+        y_sorted * w.reshape(T * k)[order][:, None])
+    return y.reshape(B, S, d), aux
+
+
+def _moe_ep_local(params_local, x_local, cfg: ArchConfig, ep: int,
+                  data_axes: tuple, all_axes: tuple = (), E_pad: int = 0,
+                  gather_out: bool = False, slice_seq: bool = False):
+    """shard_map body: x_local [B_loc, S, d]; experts local [E_loc, d(/dp), f].
+
+    ``E_pad`` >= num_experts is the zero-padded expert count (divisible by
+    ``ep``); padded experts' router logits are masked to -inf in _route."""
+    moe = cfg.moe
+    if slice_seq:
+        # replicated-in dispatch: each EP rank slices its own seq chunk in
+        # bf16 (free), so SPMD never materializes a seq-sharded boundary —
+        # avoids f32 cotangent all-gathers in backward (§Perf iteration)
+        B, S_full, d = x_local.shape
+        S = S_full // ep
+        start = jax.lax.axis_index("model") * S
+        x_local = jax.lax.dynamic_slice_in_dim(x_local, start, S, axis=1)
+    B, S, d = x_local.shape
+    T, k = B * S, moe.top_k
+    E = E_pad or moe.num_experts
+    E_loc = E // ep
+    xf = x_local.reshape(T, d)
+
+    # FSDP gather of local expert weights over the data axis (axis=1: d rows)
+    def gather(wname, axis):
+        w = params_local["experts"][wname]
+        for a in data_axes:
+            w = jax.lax.all_gather(w, a, axis=axis, tiled=True)
+        return w
+
+    w_full = {"w_gate": gather("w_gate", 1), "w_up": gather("w_up", 1),
+              "w_down": gather("w_down", 1)}
+
+    ids, wts, aux = _route(params_local["router"], xf, moe)
+    rep_ids = ids.reshape(T * k)                       # global expert ids
+    rep_w = wts.reshape(T * k)
+    rep_src = jnp.repeat(jnp.arange(T), k)             # owning token
+    dest = rep_ids // E_loc                            # EP peer in [0, ep)
+    e_loc = rep_ids % E_loc
+
+    C = max(1, math.ceil(T * k / ep * moe.capacity_factor))
+    _, _, idx_in_dest = _group_by_expert(dest, ep)
+    keep = idx_in_dest < C
+    slot = jnp.where(keep, dest * C + idx_in_dest, ep * C)  # OOB -> dropped
+
+    send_x = jnp.zeros((ep * C, d), x_local.dtype).at[slot].set(xf[rep_src],
+                                                                mode="drop")
+    send_e = jnp.zeros((ep * C,), jnp.int32).at[slot].set(
+        e_loc.astype(jnp.int32), mode="drop")
+    send_valid = jnp.zeros((ep * C,), jnp.bool_).at[slot].set(True, mode="drop")
+
+    recv_x = jax.lax.all_to_all(send_x.reshape(ep, C, d), "model", 0, 0,
+                                tiled=False).reshape(ep * C, d)
+    recv_e = jax.lax.all_to_all(send_e.reshape(ep, C), "model", 0, 0,
+                                tiled=False).reshape(ep * C)
+    recv_valid = jax.lax.all_to_all(send_valid.reshape(ep, C), "model", 0, 0,
+                                    tiled=False).reshape(ep * C)
+
+    # local expert compute (invalid rows are zeros routed to expert 0)
+    recv_e = jnp.where(recv_valid, recv_e, 0)
+    order, counts, _ = _group_by_expert(recv_e, E_loc)
+    cap_local = max(1, math.ceil(ep * C * moe.capacity_factor / E_loc))
+    y_sorted = _expert_swiglu_capacity(w_full, recv_x[order], recv_e[order],
+                                       counts, cap_local)
+    y_local = jnp.zeros_like(recv_x).at[order].set(y_sorted)
+    y_local = jnp.where(recv_valid[:, None], y_local, 0)
+
+    back = jax.lax.all_to_all(y_local.reshape(ep, C, d), "model", 0, 0,
+                              tiled=False).reshape(ep * C, d)
+    # combine at origin: slot layout matches send_x
+    contrib = back[slot.clip(0, ep * C - 1)] * rep_w[:, None]
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    y = jnp.zeros((T, d), x_local.dtype).at[rep_src].add(contrib)
+
+    # average aux loss across the whole mesh
+    for a in all_axes:
+        aux = jax.lax.pmean(aux, a)
+    y = y.reshape(B, S, d)
+    if gather_out:
+        # explicit bf16 all-gather of the seq-sharded output: downstream
+        # layers want the residual replicated over 'model'; letting SPMD do
+        # this reshard costs f32 gathers in fwd+bwd (§Perf iteration)
+        y = jax.lax.all_gather(y, "model", axis=1, tiled=True)
+    return y, aux
+
+
+def moe_ffn(params, x, cfg: ArchConfig, ctx: ParallelContext):
+    """MoE FFN returning (y, aux_loss)."""
+    moe = cfg.moe
+    if ctx.mesh is not None and ctx.model_axis is not None \
+            and ctx.mesh.shape["model"] > 1:
+        mesh = ctx.mesh
+        ep = mesh.shape["model"]
+        # zero-pad the expert dim to a multiple of the EP degree (padded
+        # slots own no router ids and never receive tokens)
+        E = moe.num_experts
+        E_pad = -(-E // ep) * ep
+        experts = params["experts"]
+        if E_pad != E:
+            experts = jax.tree_util.tree_map(
+                lambda w: jnp.pad(w, ((0, E_pad - E),) + ((0, 0),) * (w.ndim - 1)),
+                experts)
+        data_axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+        P = jax.sharding.PartitionSpec
+        batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        # Sequence-shard the tokens over the model axis when divisible so
+        # each EP rank routes a disjoint token slice (decode's S=1 falls back
+        # to replicated routing — negligible compute, still correct).
+        seq_ax = "model" if x.shape[1] % ep == 0 and x.shape[1] > 1 else None
+        bsz = 1
+        for a in batch:
+            bsz *= mesh.shape[a]
+        batch_ax = batch if batch and x.shape[0] % bsz == 0 else None
+        in_specs = (
+            {"router": P(None, None),
+             "experts": {"w_gate": P("model", "data", None),
+                         "w_up": P("model", "data", None),
+                         "w_down": P("model", "data", None)}},
+            P(batch_ax, seq_ax, None),
+        )
+        out_specs = (P(batch_ax, seq_ax, None), P())
+        gather_out = bool(moe.gather_output and seq_ax is not None)
+        slice_seq = gather_out  # replicated-in + manual slice pairs with it
+        if gather_out:
+            in_specs = (in_specs[0], P(batch_ax, None, None))
+            out_specs = (P(batch_ax, None, None), P())
+        routed = {"router": params["router"], "experts": experts}
+        fn = partial(_moe_ep_local, cfg=cfg, ep=ep, data_axes=data_axes,
+                     all_axes=tuple(mesh.axis_names), E_pad=E_pad,
+                     gather_out=gather_out, slice_seq=slice_seq)
+        y, aux = jax.shard_map(
+            lambda pr, xx: fn(pr, xx), mesh=mesh,
+            in_specs=in_specs, out_specs=out_specs,
+            check_vma=False)(routed, x)
+    else:
+        y, aux = _moe_ragged(params, x, cfg)
+
+    if moe.num_shared > 0:
+        gate = jax.nn.sigmoid(
+            (x.astype(jnp.float32) @ params["shared_gate"]))
+        y = y + dense_ffn(params["shared"], x, ctx) * gate.astype(x.dtype)
+    return y, aux

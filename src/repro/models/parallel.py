@@ -1,0 +1,153 @@
+"""Parallelism context and sharding rules for the model zoo.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  Logical placement:
+
+  * batch                      -> ("pod", "data")      (DP)
+  * attention heads / kv heads -> "model"              (TP)
+  * FFN hidden / experts       -> "model"              (TP / EP)
+  * vocab                      -> "model"
+  * d_model rows of weights    -> "data"               (FSDP / ZeRO-3)
+  * KV-cache sequence (B == 1) -> "data"               (context sharding)
+
+When ``mesh is None`` (unit tests / single host) everything is a no-op and
+the MoE layer uses its collective-free ragged path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Optional[Mesh] = None
+
+    @property
+    def batch_axes(self):
+        if self.mesh is None:
+            return None
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def model_axis(self):
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return None
+        return "model"
+
+    @property
+    def data_axis(self):
+        if self.mesh is None or "data" not in self.mesh.axis_names:
+            return None
+        return "data"
+
+    def spec(self, *axes) -> P:
+        """PartitionSpec with axes filtered against the mesh."""
+        if self.mesh is None:
+            return P()
+        names = self.mesh.axis_names
+
+        def ok(a):
+            if a is None:
+                return None
+            if isinstance(a, tuple):
+                t = tuple(x for x in a if x in names)
+                return t if t else None
+            return a if a in names else None
+
+        return P(*[ok(a) for a in axes])
+
+    def shard(self, x, *axes):
+        """with_sharding_constraint if a mesh is active, else identity.
+
+        Axes that do not divide the corresponding dimension are dropped
+        (e.g. 12 attention heads cannot shard over a 16-way model axis)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(*axes)
+        fixed = []
+        for i, a in enumerate(spec):
+            if a is None or i >= x.ndim:
+                fixed.append(None if i < x.ndim else None)
+                continue
+            names = a if isinstance(a, tuple) else (a,)
+            size = 1
+            for nm in names:
+                size *= self.mesh.shape[nm]
+            fixed.append(a if x.shape[i] % size == 0 else None)
+        fixed += [None] * (x.ndim - len(fixed))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*fixed[:x.ndim])))
+
+    def named_sharding(self, *axes) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+def param_spec(path: str, shape: tuple, ctx: ParallelContext) -> P:
+    """Sharding rule for a parameter, keyed on its tree path.
+
+    Conventions (leading ``n_groups`` scan axis is never sharded):
+      embed/lm_head: vocab -> model, d_model -> data
+      attention projections: d_model -> data, heads*hd -> model
+      FFN: d_model -> data, hidden -> model
+      experts: expert -> model, d_model -> data
+      norms / small vectors: replicated
+    """
+    if ctx.mesh is None:
+        return P()
+    last2 = [None] * max(0, len(shape) - 2)
+
+    def rule(*axes):
+        pad = [None] * (len(shape) - len(axes))
+        return ctx.spec(*pad, *axes)
+
+    if "embed" in path or "lm_head" in path:
+        # [vocab, d] or [d, vocab]
+        if shape[-2] >= shape[-1]:
+            return rule("model", "data")
+        return rule("data", "model")
+    if any(k in path for k in ("wq", "wk", "wv")):
+        return rule("data", "model")
+    if "wo" in path:
+        return rule("model", "data")
+    if "experts" in path:
+        # [E, d, ff] or [E, ff, d]
+        if len(shape) >= 3:
+            return ctx.spec(*([None] * (len(shape) - 3)), "model", "data", None)
+        return rule(None, None)
+    if "router" in path:
+        return rule(None, None)
+    if any(k in path for k in ("w_gate", "w_up")):
+        return rule("data", "model")
+    if "w_down" in path:
+        return rule("model", "data")
+    if "in_proj" in path or "x_proj" in path or "up_proj" in path:
+        return rule("data", "model")
+    if "out_proj" in path or "down_proj" in path or "dt_proj" in path:
+        return rule("model", "data")
+    if any(k in path for k in ("conv", "A_log", "D_skip", "dt_bias")):
+        return rule(*([None] * min(2, len(shape))))
+    if len(shape) >= 2 and shape[-1] >= 1024 and shape[-2] >= 1024:
+        return rule("data", "model")
+    return P(*([None] * len(shape)))
+
+
+def shard_params_tree(params, ctx: ParallelContext):
+    """Attach NamedShardings to a parameter pytree (by tree path)."""
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda x: None, params)
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return NamedSharding(ctx.mesh, param_spec(name, leaf.shape, ctx))
+
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,337 @@
+"""State-space / recurrent blocks: Mamba (Jamba), mLSTM and sLSTM (xLSTM).
+
+All three expose a parallel/train form over full sequences and a single-step
+decode form carrying an O(1)-size recurrent state — this is what makes the
+``long_500k`` decode shape native for the ssm/hybrid architectures (no KV
+cache, constant memory in position).
+
+TPU adaptation notes (see DESIGN.md):
+  * Mamba's selective scan uses ``jax.lax.associative_scan`` (log-depth tree
+    of elementwise ops) instead of the CUDA fused scan kernel.
+  * mLSTM uses the stabilized recurrent form (running-max ``m`` state) under
+    ``lax.scan``; a chunkwise-parallel variant is a recorded perf iteration.
+  * sLSTM is inherently sequential (paper: no parallel form); ``lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import init_rmsnorm, pdtype_of, rmsnorm
+from .parallel import ParallelContext
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # [B, d_conv - 1, d_inner]
+    h: jax.Array     # [B, d_inner, d_state] (f32)
+
+
+def _mamba_dims(cfg: ArchConfig):
+    di = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, cfg.mamba_d_state, cfg.mamba_d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    pd = pdtype_of(cfg)
+    s = d ** -0.5
+    si = di ** -0.5
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * s).astype(pd),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32) * 0.1).astype(pd),
+        "conv_b": jnp.zeros((di,), pd),
+        "x_proj": (jax.random.normal(ks[2], (di, dtr + 2 * ds), jnp.float32) * si).astype(pd),
+        "dt_proj": (jax.random.normal(ks[3], (dtr, di), jnp.float32) * dtr ** -0.5).astype(pd),
+        "dt_bias": jnp.full((di,), -2.0, pd),  # softplus(-2) ~ 0.12 init dt
+        "A_log": jnp.log(A),                   # f32
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d), jnp.float32) * si).astype(pd),
+    }
+
+
+def _mamba_ssm_params(params, u):
+    """Shared projections: u [B, S, di] -> (dt, Bs, Cs) in f32."""
+    di = u.shape[-1]
+    ds = params["A_log"].shape[1]
+    dtr = params["dt_proj"].shape[0]
+    proj = (u @ params["x_proj"]).astype(jnp.float32)
+    dt, Bs, Cs = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,S,di]
+    return dt, Bs, Cs
+
+
+def _causal_depthwise_conv(params, x, state=None):
+    """x [B, S, di]; returns (y, new_state [B, dc-1, di])."""
+    dc = params["conv_w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dc - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(dc))
+    y = y + params["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(dc - 1):, :] if dc > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def mamba_forward(params, cfg: ArchConfig, x, ctx: ParallelContext,
+                  state: MambaState | None = None, return_state=False):
+    """Full-sequence selective scan. x: [B, S, d] -> [B, S, d]."""
+    B, S, d = x.shape
+    di, ds, dc, _ = _mamba_dims(cfg)
+    u, z = jnp.split(x @ params["in_proj"], 2, axis=-1)
+    conv_state = state.conv if state is not None else None
+    u, new_conv = _causal_depthwise_conv(params, u, conv_state)
+    u = ctx.shard(u, ("pod", "data"), None, "model")
+    dt, Bs, Cs = _mamba_ssm_params(params, u)
+    A = -jnp.exp(params["A_log"])                       # [di, ds]
+    uf = u.astype(jnp.float32)
+    aA = jnp.exp(dt[..., None] * A[None, None])         # [B,S,di,ds]
+    bB = (dt * uf)[..., None] * Bs[:, :, None, :]       # [B,S,di,ds]
+    if state is not None:
+        # fold carried state into the first step
+        bB = bB.at[:, 0].add(aA[:, 0] * state.h)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hS = jax.lax.associative_scan(combine, (aA, bB), axis=1)
+    y = jnp.einsum("btdn,btn->btd", hS, Cs)
+    y = y + params["D_skip"][None, None] * uf
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, MambaState(conv=new_conv, h=hS[:, -1])
+    return out, None
+
+
+def mamba_decode(params, cfg: ArchConfig, x, state: MambaState,
+                 ctx: ParallelContext):
+    """One-token step. x: [B, 1, d]."""
+    u, z = jnp.split(x @ params["in_proj"], 2, axis=-1)
+    u, new_conv = _causal_depthwise_conv(params, u, state.conv)
+    dt, Bs, Cs = _mamba_ssm_params(params, u)
+    A = -jnp.exp(params["A_log"])
+    uf = u.astype(jnp.float32)
+    aA = jnp.exp(dt[:, 0, :, None] * A[None])           # [B,di,ds]
+    bB = (dt[:, 0] * uf[:, 0])[..., None] * Bs[:, 0, None, :]
+    h = aA * state.h + bB
+    y = jnp.einsum("bdn,bn->bd", h, Cs[:, 0])
+    y = y + params["D_skip"][None] * uf[:, 0]
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ params["out_proj"], MambaState(conv=new_conv, h=h)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    di, ds, dc, _ = _mamba_dims(cfg)
+    return MambaState(conv=jnp.zeros((batch, dc - 1, di), dtype),
+                      h=jnp.zeros((batch, di, ds), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM with exponential gating) — xLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # [B, H, dh, dh] f32
+    n: jax.Array  # [B, H, dh] f32
+    m: jax.Array  # [B, H] f32 (log-space stabilizer)
+
+
+def _mlstm_dims(cfg: ArchConfig):
+    di = 2 * cfg.d_model           # projection factor 2 (xLSTM paper)
+    H = cfg.n_heads
+    dh = di // H
+    return di, H, dh
+
+
+def init_mlstm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di, H, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    pd = pdtype_of(cfg)
+    s, si = d ** -0.5, di ** -0.5
+    return {
+        "up_proj": (jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * s).astype(pd),
+        "wq": (jax.random.normal(ks[1], (di, di), jnp.float32) * si).astype(pd),
+        "wk": (jax.random.normal(ks[2], (di, di), jnp.float32) * si).astype(pd),
+        "wv": (jax.random.normal(ks[3], (di, di), jnp.float32) * si).astype(pd),
+        "w_i": (jax.random.normal(ks[4], (di, H), jnp.float32) * si).astype(jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": (jax.random.normal(ks[5], (di, H), jnp.float32) * si).astype(jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # forget-gate bias init high
+        "down_proj": (jax.random.normal(ks[6], (di, d), jnp.float32) * si).astype(pd),
+        "out_norm": init_rmsnorm(di, cfg),
+    }
+
+
+def _mlstm_step(carry: MLSTMState, inp):
+    """Stabilized recurrent step (xLSTM Eqs. 19-27)."""
+    q, k, v, i_t, f_t = inp  # q,k,v: [B,H,dh] f32; gates [B,H]
+    C, n, m = carry
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n_new = f_p[..., None] * n + i_p[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                        jnp.exp(-m_new)) + 1e-6
+    h = jnp.einsum("bhde,bhe->bhd", C_new, q) / denom[..., None]
+    return MLSTMState(C_new, n_new, m_new), h
+
+
+def mlstm_forward(params, cfg: ArchConfig, x, ctx: ParallelContext,
+                  state: MLSTMState | None = None, return_state=False):
+    B, S, d = x.shape
+    di, H, dh = _mlstm_dims(cfg)
+    xm, z = jnp.split(x @ params["up_proj"], 2, axis=-1)
+    q = (xm @ params["wq"]).reshape(B, S, H, dh).astype(jnp.float32) * dh ** -0.5
+    k = (xm @ params["wk"]).reshape(B, S, H, dh).astype(jnp.float32) * dh ** -0.5
+    v = (xm @ params["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    xf = xm.astype(jnp.float32)
+    i_t = xf @ params["w_i"] + params["b_i"]
+    f_t = xf @ params["w_f"] + params["b_f"]
+    if state is None:
+        state = init_mlstm_state(cfg, B, x.dtype)
+    seq = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+           jnp.moveaxis(i_t, 1, 0), jnp.moveaxis(f_t, 1, 0))
+    new_state, hs = jax.lax.scan(_mlstm_step, state, seq)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(x.dtype)
+    h = rmsnorm(params["out_norm"], h)
+    out = (h * jax.nn.silu(z)) @ params["down_proj"]
+    return (out, new_state) if return_state else (out, None)
+
+
+def mlstm_decode(params, cfg: ArchConfig, x, state: MLSTMState,
+                 ctx: ParallelContext):
+    out, new_state = mlstm_forward(params, cfg, x, ctx, state=state,
+                                   return_state=True)
+    return out, new_state
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int, dtype) -> MLSTMState:
+    di, H, dh = _mlstm_dims(cfg)
+    return MLSTMState(C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+                      n=jnp.zeros((batch, H, dh), jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with exponential gating) — xLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, dh] f32
+    n: jax.Array  # [B, H, dh] f32
+    h: jax.Array  # [B, H, dh] f32
+    m: jax.Array  # [B, H, dh] f32
+
+
+def _slstm_dims(cfg: ArchConfig):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+def init_slstm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    H, dh = _slstm_dims(cfg)
+    ks = jax.random.split(key, 10)
+    pd = pdtype_of(cfg)
+    s = d ** -0.5
+    sr = dh ** -0.5
+    f_ff = int(4 * d / 3)
+
+    def W(k):
+        return (jax.random.normal(k, (d, H * dh), jnp.float32) * s).astype(pd)
+
+    def R(k):  # block-diagonal recurrent weights, per head
+        return (jax.random.normal(k, (H, dh, dh), jnp.float32) * sr).astype(pd)
+
+    return {
+        "w_z": W(ks[0]), "r_z": R(ks[1]),
+        "w_i": W(ks[2]), "r_i": R(ks[3]),
+        "w_f": W(ks[4]), "r_f": R(ks[5]),
+        "w_o": W(ks[6]), "r_o": R(ks[7]),
+        "b_z": jnp.zeros((H, dh), jnp.float32),
+        "b_i": jnp.zeros((H, dh), jnp.float32),
+        "b_f": jnp.full((H, dh), 3.0, jnp.float32),
+        "b_o": jnp.zeros((H, dh), jnp.float32),
+        "up_proj": (jax.random.normal(ks[8], (d, 2 * f_ff), jnp.float32) * s).astype(pd),
+        "down_proj": (jax.random.normal(ks[9], (f_ff, d), jnp.float32)
+                      * f_ff ** -0.5).astype(pd),
+        "out_norm": init_rmsnorm(d, cfg),
+    }
+
+
+def _slstm_step(params, carry: SLSTMState, wx):
+    """wx: dict of pre-computed W @ x_t, each [B, H, dh] (f32)."""
+    c, n, h, m = carry
+
+    def rec(name):
+        return jnp.einsum("bhd,hde->bhe", h, params[f"r_{name}"].astype(jnp.float32))
+
+    z = jnp.tanh(wx["z"] + rec("z") + params["b_z"])
+    i_t = wx["i"] + rec("i") + params["b_i"]
+    f_t = wx["f"] + rec("f") + params["b_f"]
+    o = jax.nn.sigmoid(wx["o"] + rec("o") + params["b_o"])
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(params, cfg: ArchConfig, x, ctx: ParallelContext,
+                  state: SLSTMState | None = None, return_state=False):
+    B, S, d = x.shape
+    H, dh = _slstm_dims(cfg)
+    if state is None:
+        state = init_slstm_state(cfg, B, x.dtype)
+    wx = {name: jnp.moveaxis(
+        (x @ params[f"w_{name}"]).reshape(B, S, H, dh).astype(jnp.float32), 1, 0)
+        for name in ("z", "i", "f", "o")}
+
+    def step(carry, inp):
+        return _slstm_step(params, carry, inp)
+
+    new_state, hs = jax.lax.scan(
+        step, state, {k: v for k, v in wx.items()})
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rmsnorm(params["out_norm"], h)
+    # GeGLU post-FFN (projection factor 4/3, part of the sLSTM block)
+    u, g = jnp.split(h @ params["up_proj"], 2, axis=-1)
+    out = (u * jax.nn.gelu(g)) @ params["down_proj"]
+    return (out, new_state) if return_state else (out, None)
+
+
+def slstm_decode(params, cfg: ArchConfig, x, state: SLSTMState,
+                 ctx: ParallelContext):
+    out, new_state = slstm_forward(params, cfg, x, ctx, state=state,
+                                   return_state=True)
+    return out, new_state
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int, dtype) -> SLSTMState:
+    H, dh = _slstm_dims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, H, dh), -1e30, jnp.float32))

@@ -1,0 +1,5 @@
+from .optimizers import (Optimizer, adafactor, adamw, apply_updates,
+                         get_optimizer, momentum, sgd)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adamw", "adafactor",
+           "apply_updates", "get_optimizer"]

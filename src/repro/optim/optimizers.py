@@ -1,0 +1,151 @@
+"""Minimal optax-style optimizers (the container ships no optax).
+
+``init(params) -> state`` ; ``update(grads, state, params) -> (updates, state)``
+where ``updates`` are *subtracted* via :func:`apply_updates`.
+
+``adafactor`` implements factored second moments (Shazeer & Stern) so the
+>=34B assigned configs carry O(rows + cols) optimizer state instead of
+O(rows * cols) — the standard choice for trillion-parameter dry-runs.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+    name: str = "optimizer"
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p - u).astype(p.dtype), params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree_util.tree_map(lambda g: lr * g, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        new_m = jax.tree_util.tree_map(lambda m, g: beta * m + g, state, grads)
+        return jax.tree_util.tree_map(lambda m: lr * m, new_m), new_m
+
+    return Optimizer(init, update, "momentum")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    class State(NamedTuple):
+        step: jax.Array
+        mu: object
+        nu: object
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return State(jnp.zeros((), jnp.int32),
+                     jax.tree_util.tree_map(z, params),
+                     jax.tree_util.tree_map(z, params))
+
+    def update(grads, state, params):
+        t = state.step + 1
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                                    state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return step.astype(p.dtype) if p.dtype == jnp.float32 else step
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, State(t, mu, nu)
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr: float = 0.01, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored RMS optimizer: O(r + c) state per (r, c) matrix."""
+
+    class Slot(NamedTuple):
+        vr: jax.Array | None  # row accumulator (for >=2D)
+        vc: jax.Array | None  # col accumulator
+        v: jax.Array | None   # full accumulator (for <2D)
+
+    class State(NamedTuple):
+        step: jax.Array
+        slots: object
+
+    def _make_slot(p):
+        if p.ndim >= 2:
+            return Slot(jnp.zeros(p.shape[:-1], jnp.float32),
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                        None)
+        return Slot(None, None, jnp.zeros_like(p, dtype=jnp.float32))
+
+    def init(params):
+        return State(jnp.zeros((), jnp.int32),
+                     jax.tree_util.tree_map(_make_slot, params,
+                                            is_leaf=lambda x: isinstance(x, jax.Array)))
+
+    def update(grads, state, params):
+        t = state.step + 1
+        decay = 1.0 - (t.astype(jnp.float32) + 1.0) ** -0.8
+
+        def upd(slot, g, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr = decay * slot.vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * slot.vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None] * vc[..., None, :]
+                u = g32 / jnp.sqrt(denom + eps)
+                new_slot = Slot(vr, vc, None)
+            else:
+                v = decay * slot.v + (1 - decay) * g2
+                u = g32 / jnp.sqrt(v + eps)
+                new_slot = Slot(None, None, v)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return lr * u, new_slot
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state.slots)
+        outs = [upd(s, g, p) for s, g, p in zip(flat_s, flat_g, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        slots = treedef.unflatten([o[1] for o in outs])
+        return updates, State(t, slots)
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, lr: float) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    if name == "adamw":
+        return adamw(lr)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise ValueError(f"unknown optimizer: {name}")

@@ -1,0 +1,77 @@
+"""Buzen normalization constants: literal vs aggregate vs brute force."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.buzen import (NetworkParams, brute_force_log_Z,
+                              log_normalizing_constants)
+
+
+def random_params(rng, n, with_cs=False):
+    p = rng.dirichlet(np.ones(n))
+    params = NetworkParams(
+        p=jnp.asarray(p),
+        mu_c=jnp.asarray(rng.uniform(0.1, 10.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.1, 10.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.1, 10.0, n)),
+    )
+    if with_cs:
+        params = params.with_cs(rng.uniform(0.5, 10.0))
+    return params
+
+
+@pytest.mark.parametrize("n,m", [(1, 1), (2, 3), (3, 4), (4, 3)])
+@pytest.mark.parametrize("with_cs", [False, True])
+def test_brute_force_agreement(n, m, with_cs):
+    rng = np.random.default_rng(n * 100 + m)
+    params = random_params(rng, n, with_cs)
+    logZ = log_normalizing_constants(params, m)
+    for k in range(1, m + 1):
+        np.testing.assert_allclose(float(logZ[k]), brute_force_log_Z(params, k),
+                                   rtol=1e-10)
+
+
+@pytest.mark.parametrize("with_cs", [False, True])
+def test_literal_equals_aggregate(with_cs):
+    rng = np.random.default_rng(7)
+    params = random_params(rng, 5, with_cs)
+    a = log_normalizing_constants(params, 12, method="aggregate")
+    b = log_normalizing_constants(params, 12, method="literal")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-11)
+
+
+def test_Z0_is_one():
+    rng = np.random.default_rng(0)
+    params = random_params(rng, 3)
+    logZ = log_normalizing_constants(params, 5)
+    assert float(logZ[0]) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_extreme_rates_no_overflow():
+    """Log-space handles rate spreads of 1e6 without inf/nan."""
+    n = 20
+    params = NetworkParams(
+        p=jnp.full((n,), 1.0 / n),
+        mu_c=jnp.asarray(np.geomspace(1e-3, 1e3, n)),
+        mu_d=jnp.asarray(np.geomspace(1e3, 1e-3, n)),
+        mu_u=jnp.full((n,), 1.0),
+    )
+    logZ = log_normalizing_constants(params, 200)
+    assert np.all(np.isfinite(np.asarray(logZ)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 8), st.integers(0, 10_000))
+def test_monotone_ratio_property(n, m, seed):
+    """Z_{m-1}/Z_m (= throughput) is positive; Z log-concave in m for
+    single-chain closed networks implies non-increasing ratios Z[m-1]/Z[m]
+    as loads saturate — we check positivity + finiteness as the invariant."""
+    rng = np.random.default_rng(seed)
+    params = random_params(rng, n)
+    logZ = log_normalizing_constants(params, m + 1)
+    vals = np.asarray(logZ)
+    assert np.all(np.isfinite(vals))
+    lam = np.exp(vals[:-1] - vals[1:])
+    assert np.all(lam > 0)

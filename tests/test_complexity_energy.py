@@ -1,0 +1,178 @@
+"""Theorem 3 / Prop 4 / Section 6 energy results and the optimizers."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LearningConstants, NetworkParams, PowerProfile,
+                        energy_complexity, energy_optimal_routing,
+                        energy_per_round, eta_max, joint_optimal,
+                        make_energy_objective, make_round_objective,
+                        make_throughput_objective, make_time_objective,
+                        minimal_energy, optimize_routing, per_task_energy,
+                        round_complexity, round_complexity_unbounded,
+                        sequential_concurrency_search, throughput,
+                        wallclock_time)
+
+
+def small_params(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return NetworkParams(
+        p=jnp.full((n,), 1.0 / n),
+        mu_c=jnp.asarray(rng.uniform(0.3, 6.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.3, 6.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.3, 6.0, n)),
+    )
+
+
+CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+
+
+def test_round_complexity_monotone_in_m():
+    """Section 4.2: K_eps is non-decreasing in m for fixed routing."""
+    params = small_params()
+    ks = [float(round_complexity(params, m, CONSTS)) for m in range(1, 10)]
+    assert all(b >= a - 1e-9 for a, b in zip(ks, ks[1:]))
+
+
+def test_round_complexity_m1_is_serial_sgd():
+    """At m=1 the staleness term vanishes; K depends only on sum 1/p_i."""
+    params = small_params()
+    k1 = float(round_complexity(params, 1, CONSTS))
+    n, p = params.n, params.p
+    expected = (24 * CONSTS.L * CONSTS.delta / (n * CONSTS.eps)
+                * (4 + CONSTS.B / CONSTS.eps) * float(jnp.sum(1 / (n * p))))
+    assert k1 == pytest.approx(expected, rel=1e-12)
+
+
+def test_uniform_minimizes_first_term():
+    """sum 1/p_i is minimized at uniform routing (Section 4.2)."""
+    params = small_params()
+    k_uni = float(round_complexity(params, 1, CONSTS))
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        p = rng.dirichlet(np.ones(params.n))
+        k = float(round_complexity(params._replace(p=jnp.asarray(p)), 1, CONSTS))
+        assert k >= k_uni - 1e-9
+
+
+def test_eta_max_positive_and_unbounded_variant():
+    params = small_params()
+    for m in (1, 4, 8):
+        assert float(eta_max(params, m, CONSTS)) > 0
+        assert float(round_complexity_unbounded(params, m, CONSTS)) > 0
+
+
+def test_wallclock_tradeoff_has_interior_optimum():
+    """Fig. 2: E0[tau_eps] decreases then increases in m — interior m*."""
+    params = small_params(n=2, seed=3)
+    taus = [float(wallclock_time(params, m, CONSTS)) for m in range(1, 40)]
+    m_star = int(np.argmin(taus)) + 1
+    assert 1 < m_star < 40
+    # and it's not monotone
+    assert taus[0] > min(taus) and taus[-1] > min(taus)
+
+
+# ---------------------------------------------------------------------------
+# energy (Section 6)
+# ---------------------------------------------------------------------------
+
+def power_profile(params):
+    kappa = jnp.asarray([0.5, 2.0, 0.1, 1.0])
+    return PowerProfile.from_dvfs(kappa, params.mu_c,
+                                  P_u=jnp.asarray([1.0, 2.0, 0.5, 1.5]),
+                                  P_d=jnp.asarray([0.5, 1.0, 0.2, 0.7]))
+
+
+def test_energy_per_round_independent_of_m():
+    params = small_params()
+    power = power_profile(params)
+    assert float(energy_per_round(params, power)) == pytest.approx(
+        float(jnp.sum(params.p * per_task_energy(params, power))), rel=1e-12)
+
+
+def test_energy_minimized_at_m1():
+    """Section 6.3: E0[E_eps] is minimized at m=1 for fixed p."""
+    params = small_params()
+    power = power_profile(params)
+    es = [float(energy_complexity(params, m, CONSTS, power)) for m in range(1, 8)]
+    assert es[0] == min(es)
+    assert all(b >= a - 1e-9 for a, b in zip(es, es[1:]))
+
+
+def test_cauchy_schwarz_optimal_routing():
+    """Eq. 16: numeric optimizer at m=1 recovers p* ∝ 1/sqrt(E_i) and Eq. 17."""
+    params = small_params()
+    power = power_profile(params)
+    p_star = np.asarray(energy_optimal_routing(params, power))
+    obj = make_energy_objective(params, CONSTS, power)
+    res = optimize_routing(obj, params.n, 1, steps=2500, lr=0.05)
+    np.testing.assert_allclose(np.asarray(res.p), p_star, rtol=2e-3)
+    e_star = float(minimal_energy(params, CONSTS, power))
+    assert res.value == pytest.approx(e_star, rel=1e-4)
+    # optimum is a lower bound over random routings
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        p = jnp.asarray(rng.dirichlet(np.ones(params.n)))
+        assert float(energy_complexity(params._replace(p=p), 1, CONSTS, power)) >= e_star - 1e-9
+
+
+def test_energy_sim_matches_formula():
+    """Prop 5: mean energy per round E[P(0)]/lambda == sum_i p_i E_i (simulated)."""
+    from repro.core.simulator import AsyncNetworkSim
+    params = small_params(seed=7)
+    power = power_profile(params)
+    m = 5
+    sim = AsyncNetworkSim(params, m, seed=11, power=power)
+    stats = sim.run(60_000, warmup=6_000)
+    per_round_sim = stats.energy / stats.updates
+    per_round_th = float(energy_per_round(params, power))
+    np.testing.assert_allclose(per_round_sim, per_round_th, rtol=0.04)
+
+
+# ---------------------------------------------------------------------------
+# optimizers (Section 5.3.2 / 6.4)
+# ---------------------------------------------------------------------------
+
+def test_routing_optimizers_beat_uniform():
+    params = small_params(seed=5)
+    m = 6
+    uni = jnp.full((params.n,), 1.0 / params.n)
+
+    t_obj = make_time_objective(params, CONSTS)
+    res = optimize_routing(t_obj, params.n, m, steps=800)
+    assert res.value <= float(t_obj(uni, m)) + 1e-9
+
+    k_obj = make_round_objective(params, CONSTS)
+    res_k = optimize_routing(k_obj, params.n, m, steps=800)
+    assert res_k.value <= float(k_obj(uni, m)) + 1e-9
+
+    l_obj = make_throughput_objective(params)
+    res_l = optimize_routing(l_obj, params.n, m, steps=800)
+    assert -res_l.value >= float(throughput(params, m)) - 1e-9
+
+
+def test_sequential_search_finds_interior_m():
+    params = small_params(n=3, seed=2)
+    res = sequential_concurrency_search(
+        make_time_objective(params, CONSTS), params.n,
+        m_start=1, m_max=30, steps=250, patience=2)
+    assert 1 <= res.m < 30
+    assert res.value > 0
+
+
+def test_joint_rho_pareto_monotone():
+    """Higher rho (more energy weight) => optimal energy non-increasing."""
+    params = small_params(seed=4)
+    power = power_profile(params)
+    tau_res = sequential_concurrency_search(
+        make_time_objective(params, CONSTS), params.n, m_start=1, m_max=20,
+        steps=200)
+    tau_star = tau_res.value
+    e_star = float(minimal_energy(params, CONSTS, power))
+    energies = []
+    for rho in (0.0, 0.5, 1.0):
+        res = joint_optimal(params, CONSTS, power, rho, tau_star, e_star,
+                            m_max=20, steps=200)
+        energies.append(float(energy_complexity(
+            params._replace(p=res.p), res.m, CONSTS, power)))
+    assert energies[0] >= energies[1] - 1e-6 >= energies[2] - 2e-6

@@ -1,0 +1,80 @@
+"""Section 7 (CS-side buffer) — behaviour beyond the closed-form identity
+tests in test_jackson (which already cover Thm 7 vs autodiff/brute force)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LearningConstants, NetworkParams, PowerProfile,
+                        energy_complexity, energy_optimal_routing,
+                        expected_relative_delay, make_time_objective,
+                        optimize_routing, throughput, wallclock_time)
+
+
+def params_with_cs(mu_cs, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    base = NetworkParams(
+        p=jnp.full((n,), 1.0 / n),
+        mu_c=jnp.asarray(rng.uniform(0.5, 5.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.5, 5.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.5, 5.0, n)))
+    return base.with_cs(mu_cs) if mu_cs else base
+
+
+CONSTS = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
+
+
+def test_slow_cs_reduces_throughput():
+    """A congested CS throttles lambda toward mu_cs (Eq 26)."""
+    m = 6
+    lam_fast = float(throughput(params_with_cs(None), m))
+    lam_slow = float(throughput(params_with_cs(0.5), m))
+    assert lam_slow < lam_fast
+    assert lam_slow < 0.5 + 1e-9  # cannot exceed the CS service rate
+
+
+def test_cs_monotone_in_mu_cs():
+    m = 5
+    lams = [float(throughput(params_with_cs(mu), m))
+            for mu in (0.3, 1.0, 3.0, 30.0, 1e6)]
+    assert all(b >= a - 1e-12 for a, b in zip(lams, lams[1:]))
+    lam_base = float(throughput(params_with_cs(None), m))
+    assert lams[-1] == pytest.approx(lam_base, rel=1e-4)
+
+
+def test_cs_simulation_agreement():
+    from repro.core.simulator import AsyncNetworkSim
+    params = params_with_cs(1.5, seed=3)
+    m = 5
+    sim = AsyncNetworkSim(params, m, seed=7)
+    stats = sim.run(80_000, warmup=10_000)
+    np.testing.assert_allclose(stats.throughput,
+                               float(throughput(params, m)), rtol=0.03)
+    d_sim = np.asarray(params.p) * stats.mean_delay
+    np.testing.assert_allclose(
+        d_sim, np.asarray(expected_relative_delay(params, m)),
+        rtol=0.08, atol=0.03)
+
+
+def test_time_optimization_under_cs_congestion():
+    """Routing optimization still improves tau with the CS queue modelled."""
+    params = params_with_cs(1.0, seed=5)
+    m = 6
+    obj = make_time_objective(params, CONSTS)
+    res = optimize_routing(obj, params.n, m, steps=400)
+    uni = jnp.full((params.n,), 1.0 / params.n)
+    assert res.value <= float(obj(uni, m)) + 1e-9
+
+
+def test_cs_energy_routing_closed_form():
+    """Eq 28: p*_E ∝ 1/sqrt(P_cs/mu_cs + E_i) recovered numerically."""
+    params = params_with_cs(2.0, seed=1)
+    n = params.n
+    power = PowerProfile(P_c=jnp.asarray([1.0, 4.0, 0.5, 2.0]),
+                         P_u=jnp.asarray([1.0, 1.0, 2.0, 0.5]),
+                         P_d=jnp.asarray([0.5, 0.2, 1.0, 0.3]),
+                         P_cs=jnp.asarray(3.0))
+    p_closed = np.asarray(energy_optimal_routing(params, power))
+    from repro.core import make_energy_objective
+    res = optimize_routing(make_energy_objective(params, CONSTS, power),
+                           n, 1, steps=2500, lr=0.05)
+    np.testing.assert_allclose(np.asarray(res.p), p_closed, rtol=5e-3)

@@ -1,0 +1,165 @@
+"""FL engine: data pipeline, optimizers, async trainer end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LearningConstants, NetworkParams
+from repro.data import (dirichlet_partition, iid_partition,
+                        make_language_modeling_dataset,
+                        make_synthetic_image_dataset, pathological_partition)
+from repro.fl import (AsyncFLConfig, AsyncFLTrainer, build_network_params,
+                      cnn_classifier, make_strategies, mlp_classifier)
+from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_power_profile
+from repro.optim import adafactor, adamw, apply_updates, momentum, sgd
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_synthetic_dataset_shapes_and_balance():
+    ds = make_synthetic_image_dataset(num_classes=10, samples_per_class=20,
+                                      seed=0)
+    assert ds.x.shape == (200, 28, 28, 1)
+    assert ds.x.min() >= 0 and ds.x.max() <= 1
+    counts = np.bincount(ds.y, minlength=10)
+    assert np.all(counts == 20)
+
+
+def test_partitions_cover_and_disjoint():
+    ds = make_synthetic_image_dataset(num_classes=10, samples_per_class=30)
+    for parts in (iid_partition(ds.y, 7), dirichlet_partition(ds.y, 7, 0.2),
+                  pathological_partition(ds.y, 7, 3)):
+        allidx = np.concatenate(parts)
+        assert len(allidx) == len(ds.y)
+        assert len(np.unique(allidx)) == len(ds.y)
+
+
+def test_dirichlet_is_skewed_vs_iid():
+    ds = make_synthetic_image_dataset(num_classes=10, samples_per_class=100)
+    iid = iid_partition(ds.y, 10, seed=1)
+    dir_ = dirichlet_partition(ds.y, 10, alpha=0.2, seed=1)
+
+    def skew(parts):
+        # mean TV distance between client label dist and global dist
+        tv = []
+        for part in parts:
+            h = np.bincount(ds.y[part], minlength=10) / len(part)
+            tv.append(0.5 * np.abs(h - 0.1).sum())
+        return np.mean(tv)
+
+    assert skew(dir_) > 3 * skew(iid)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opt", [sgd(0.1), momentum(0.1), adamw(0.05),
+                                 adafactor(0.05)])
+def test_optimizers_minimize_quadratic(opt):
+    params = {"w": jnp.array([[3.0, -2.0], [1.0, 4.0]]), "b": jnp.array([5.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(loss(params)) < 0.05 * l0
+
+
+# ---------------------------------------------------------------------------
+# async FL training end-to-end
+# ---------------------------------------------------------------------------
+
+def _small_setup(n_clients=6, non_iid=False, seed=0):
+    from repro.data import train_test_split
+    full = make_synthetic_image_dataset(num_classes=8, samples_per_class=75,
+                                        seed=seed)
+    ds, test = train_test_split(full, 0.2, seed=seed + 1)
+    if non_iid:
+        parts = dirichlet_partition(ds.y, n_clients, alpha=0.2, seed=seed)
+    else:
+        parts = iid_partition(ds.y, n_clients, seed=seed)
+    clients = [(ds.x[idx], ds.y[idx]) for idx in parts]
+    rng = np.random.default_rng(seed)
+    net = NetworkParams(
+        p=jnp.full((n_clients,), 1.0 / n_clients),
+        mu_c=jnp.asarray(rng.uniform(0.5, 5.0, n_clients)),
+        mu_d=jnp.asarray(rng.uniform(1.0, 8.0, n_clients)),
+        mu_u=jnp.asarray(rng.uniform(1.0, 8.0, n_clients)))
+    return clients, (test.x, test.y), net
+
+
+def test_async_training_learns():
+    clients, test, net = _small_setup()
+    model = mlp_classifier(28 * 28, 8, hidden=(64,))
+    tr = AsyncFLTrainer(model, clients, net, m=6,
+                        config=AsyncFLConfig(eta=0.1, batch_size=32,
+                                             eval_every_time=50.0, seed=0),
+                        test_data=test)
+    log = tr.run(horizon_time=150.0)
+    assert log.accuracies[-1] > 0.5        # well above 1/8 chance
+    assert log.losses[-1] < log.losses[0]
+    assert log.throughput > 0
+    # staleness identity holds approximately in-sim
+    assert abs(np.sum(log.mean_delay) - (6 - 1)) < 1.5
+
+
+def test_async_training_nonexponential():
+    clients, test, net = _small_setup(seed=2)
+    model = mlp_classifier(28 * 28, 8, hidden=(32,))
+    for dist in ("deterministic", "lognormal"):
+        tr = AsyncFLTrainer(model, clients, net, m=4,
+                            config=AsyncFLConfig(eta=0.1, batch_size=32,
+                                                 eval_every_time=100.0,
+                                                 distribution=dist, seed=1),
+                            test_data=test)
+        log = tr.run(horizon_time=100.0)
+        assert np.isfinite(log.losses).all()
+
+
+def test_bias_correction_unbiased_updates():
+    """With the 1/(n p_i) scaling, the *expected* aggregate drift equals the
+    global gradient direction even under skewed routing: train with a very
+    non-uniform p on non-IID data and check the model still learns all
+    classes (rather than collapsing to fast clients' classes)."""
+    clients, test, net = _small_setup(n_clients=6, non_iid=True, seed=3)
+    p = np.array([0.4, 0.25, 0.15, 0.1, 0.06, 0.04])
+    net = net._replace(p=jnp.asarray(p))
+    model = mlp_classifier(28 * 28, 8, hidden=(64,))
+    tr = AsyncFLTrainer(model, clients, net, m=6,
+                        config=AsyncFLConfig(eta=0.05, batch_size=32,
+                                             eval_every_time=100.0, seed=0),
+                        test_data=test)
+    log = tr.run(horizon_time=250.0)
+    assert log.accuracies[-1] > 0.4
+
+
+def test_cnn_forward():
+    model = cnn_classifier(28, 10)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, 28, 28, 1))
+    logits = model.apply(params, x)
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_strategies_factory_small():
+    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=20)
+    power = build_power_profile(PAPER_CLUSTERS_TABLE1, scale=20)
+    consts = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
+    strat = make_strategies(net, consts, power, steps=120, m_max=net.n + 4,
+                            which=("asyncsgd", "max_throughput", "round_opt",
+                                   "time_opt", "energy_opt"))
+    n = net.n
+    for name, (p, m) in strat.items():
+        assert p.shape == (n,)
+        assert abs(p.sum() - 1) < 1e-6
+        assert 1 <= m <= net.n + 8
+    assert strat["energy_opt"][1] == 1

@@ -1,0 +1,190 @@
+"""Theorem 2 / Prop 4 closed forms: brute-force, autodiff and simulation checks."""
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (NetworkParams, delay_jacobian, expected_relative_delay,
+                        second_moment_matrix, throughput, throughput_grad)
+from repro.core.buzen import log_normalizing_constants
+from repro.core.simulator import AsyncNetworkSim, jump_chain_throughput
+
+
+def random_params(rng, n, with_cs=False):
+    p = rng.dirichlet(np.ones(n))
+    params = NetworkParams(
+        p=jnp.asarray(p),
+        mu_c=jnp.asarray(rng.uniform(0.2, 8.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.2, 8.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.2, 8.0, n)),
+    )
+    if with_cs:
+        params = params.with_cs(rng.uniform(0.5, 8.0))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# brute-force oracle over the embedded stationary distribution pi_{n, m-1}
+# ---------------------------------------------------------------------------
+
+def _enumerate_states(S, m):
+    for comp in itertools.combinations(range(m + S - 1), S - 1):
+        prev = -1
+        xs = []
+        for c in comp:
+            xs.append(c - prev - 1)
+            prev = c
+        xs.append(m + S - 2 - prev)
+        yield xs
+
+
+def brute_force_moments(params, m):
+    """Exact E[S_i], E[S_i S_j] under pi_{n, m-1} by enumeration (no CS)."""
+    n = params.n
+    p = np.asarray(params.p)
+    mu_c = np.asarray(params.mu_c)
+    mu_d = np.asarray(params.mu_d)
+    mu_u = np.asarray(params.mu_u)
+    loads = np.concatenate([p / mu_c, p / mu_d, p / mu_u])
+    is_is = np.array([False] * n + [True] * (2 * n))
+    pop = m - 1
+    Z = 0.0
+    mean = np.zeros(n)
+    second = np.zeros((n, n))
+    for xs in _enumerate_states(3 * n, pop):
+        xs = np.asarray(xs)
+        w = np.prod(loads**xs)
+        for s in range(3 * n):
+            if is_is[s]:
+                w /= math.factorial(xs[s])
+        S_i = xs[:n] + xs[n:2 * n] + xs[2 * n:]
+        Z += w
+        mean += w * S_i
+        second += w * np.outer(S_i, S_i)
+    return mean / Z, second / Z
+
+
+@pytest.mark.parametrize("n,m", [(2, 2), (2, 4), (3, 3), (3, 5)])
+def test_moments_vs_enumeration(n, m):
+    rng = np.random.default_rng(n * 10 + m)
+    params = random_params(rng, n)
+    mean_bf, second_bf = brute_force_moments(params, m)
+    d = np.asarray(expected_relative_delay(params, m))
+    s = np.asarray(second_moment_matrix(params, m))
+    np.testing.assert_allclose(d, mean_bf, rtol=1e-9)
+    np.testing.assert_allclose(s, second_bf, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# invariants and gradients
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 12), st.integers(0, 10_000),
+       st.booleans())
+def test_total_delay_identity(n, m, seed, with_cs):
+    """Eq. (7): sum_i E0[D_i] = m - 1, for any p, mu (and with CS buffer)."""
+    rng = np.random.default_rng(seed)
+    params = random_params(rng, n, with_cs)
+    d = expected_relative_delay(params, m)
+    assert float(jnp.sum(d)) == pytest.approx(m - 1, abs=1e-8)
+
+
+@pytest.mark.parametrize("with_cs", [False, True])
+@pytest.mark.parametrize("m", [2, 3, 7])
+def test_delay_jacobian_matches_autodiff(with_cs, m):
+    """Closed-form covariance Jacobian (Eq. 4 / 22) == jax.jacobian."""
+    rng = np.random.default_rng(42 + m)
+    params = random_params(rng, 5, with_cs)
+    J = delay_jacobian(params, m)
+    J_ad = jax.jacobian(
+        lambda p: expected_relative_delay(params._replace(p=p), m))(params.p)
+    np.testing.assert_allclose(np.asarray(J), np.asarray(J_ad),
+                               rtol=1e-8, atol=1e-10)
+
+
+@pytest.mark.parametrize("with_cs", [False, True])
+def test_throughput_grad_matches_autodiff(with_cs):
+    rng = np.random.default_rng(3)
+    params = random_params(rng, 4, with_cs)
+    m = 6
+    g = throughput_grad(params, m)
+    g_ad = jax.grad(lambda p: throughput(params._replace(p=p), m))(params.p)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ad),
+                               rtol=1e-8, atol=1e-12)
+
+
+def test_m_equals_one_no_staleness():
+    """m = 1 is serial SGD: all relative delays are zero (Section 4.2)."""
+    rng = np.random.default_rng(0)
+    params = random_params(rng, 4)
+    d = np.asarray(expected_relative_delay(params, 1))
+    np.testing.assert_allclose(d, 0.0, atol=1e-12)
+
+
+def test_delay_nondecreasing_in_m():
+    """E0[D_i] is non-decreasing in m (Section 3.3 via [55, Lemma 2])."""
+    rng = np.random.default_rng(5)
+    params = random_params(rng, 3)
+    prev = np.zeros(3)
+    for m in range(1, 10):
+        d = np.asarray(expected_relative_delay(params, m))
+        assert np.all(d >= prev - 1e-9)
+        prev = d
+
+
+def test_cs_limit_recovers_base_model():
+    """mu_cs -> inf recovers Theorem 2 from Theorem 7 (Section 7.3)."""
+    rng = np.random.default_rng(11)
+    params = random_params(rng, 4)
+    m = 5
+    d_base = np.asarray(expected_relative_delay(params, m))
+    d_cs = np.asarray(expected_relative_delay(params.with_cs(1e9), m))
+    np.testing.assert_allclose(d_cs, d_base, rtol=1e-6)
+    J_base = np.asarray(delay_jacobian(params, m))
+    J_cs = np.asarray(delay_jacobian(params.with_cs(1e9), m))
+    np.testing.assert_allclose(J_cs, J_base, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# simulation cross-checks (Monte Carlo tolerance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("with_cs", [False, True])
+def test_simulator_matches_theory(with_cs):
+    rng = np.random.default_rng(8)
+    n, m = 4, 6
+    params = random_params(rng, n, with_cs)
+    sim = AsyncNetworkSim(params, m, seed=123)
+    stats = sim.run(120_000, warmup=15_000)
+    p = np.asarray(params.p)
+    d_sim = p * stats.mean_delay  # E0[D_i] = p_i E0[R_i] (proof of Thm 2)
+    d_th = np.asarray(expected_relative_delay(params, m))
+    np.testing.assert_allclose(d_sim, d_th, rtol=0.06, atol=0.02)
+    np.testing.assert_allclose(stats.throughput, float(throughput(params, m)),
+                               rtol=0.03)
+
+
+def test_jump_chain_matches_throughput():
+    rng = np.random.default_rng(9)
+    params = random_params(rng, 3)
+    m = 5
+    lam, occ = jump_chain_throughput(params, m, 150_000, seed=1)
+    np.testing.assert_allclose(lam, float(throughput(params, m)), rtol=0.05)
+    # total occupancy must equal m at all times (closed network)
+    np.testing.assert_allclose(occ.sum(), m, rtol=1e-6)
+
+
+def test_nonexponential_distributions_run():
+    rng = np.random.default_rng(10)
+    params = random_params(rng, 3)
+    for dist in ["deterministic", "lognormal"]:
+        sim = AsyncNetworkSim(params, 4, distribution=dist, seed=0)
+        stats = sim.run(5_000, warmup=500)
+        assert stats.throughput > 0
+        assert np.isfinite(stats.mean_delay).all()

@@ -1,0 +1,163 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,D", [
+    (1, 128, 128, 4, 4, 64),    # MHA, block-aligned
+    (2, 100, 100, 8, 2, 64),    # GQA 4:1, ragged seq
+    (1, 33, 257, 4, 1, 128),    # MQA, cross lengths, ragged blocks
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_matches_oracle(dtype, B, Sq, Sk, H, KV, D, causal,
+                                        window):
+    rng = np.random.default_rng(hash((B, Sq, H, causal)) % 2**31)
+    q = rand(rng, (B, Sq, H, D), dtype)
+    k = rand(rng, (B, Sk, KV, D), dtype)
+    v = rand(rng, (B, Sk, KV, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention_oracle(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_matches_chunked_reference():
+    """Pallas kernel == the chunked XLA path used by the models."""
+    from repro.models.attention import flash_attention_ref
+    rng = np.random.default_rng(0)
+    q = rand(rng, (2, 96, 8, 64), jnp.float32)
+    k = rand(rng, (2, 96, 4, 64), jnp.float32)
+    v = rand(rng, (2, 96, 4, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                            interpret=True)
+    b = flash_attention_ref(q, k, v, causal=True, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 90), st.integers(0, 3),
+       st.booleans())
+def test_flash_attention_property(B, S, kv_log, causal):
+    """Random shapes: kernel == oracle (GQA ratios 1/2/4/8)."""
+    KV = 1
+    G = 2 ** kv_log
+    H = KV * G
+    D = 64
+    rng = np.random.default_rng(S * 7 + G)
+    q = rand(rng, (B, S, H, D), jnp.float32)
+    k = rand(rng, (B, S, KV, D), jnp.float32)
+    v = rand(rng, (B, S, KV, D), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.flash_attention_oracle(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-5,
+                               atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D,length", [
+    (2, 256, 8, 2, 64, 200),
+    (1, 100, 4, 4, 128, 100),
+    (3, 513, 4, 1, 64, 77),
+])
+def test_decode_attention_matches_oracle(dtype, B, S, H, KV, D, length):
+    rng = np.random.default_rng(S + H)
+    q = rand(rng, (B, 1, H, D), dtype)
+    kc = rand(rng, (B, S, KV, D), dtype)
+    vc = rand(rng, (B, S, KV, D), dtype)
+    out = ops.decode_attention(q, kc, vc, jnp.int32(length), block_s=64,
+                               interpret=True)
+    want = ref.decode_attention_oracle(q, kc, vc, jnp.int32(length))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_decode_attention_per_batch_lengths():
+    rng = np.random.default_rng(5)
+    B, S, H, KV, D = 3, 128, 4, 2, 64
+    q = rand(rng, (B, 1, H, D), jnp.float32)
+    kc = rand(rng, (B, S, KV, D), jnp.float32)
+    vc = rand(rng, (B, S, KV, D), jnp.float32)
+    lengths = jnp.asarray([10, 64, 128], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, lengths, block_s=32, interpret=True)
+    want = ref.decode_attention_oracle(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# buzen
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 40), st.integers(0, 10_000))
+def test_buzen_kernel_matches_core(n, m, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.ones(n))
+    mu_c = rng.uniform(0.2, 8.0, n)
+    mu_d = rng.uniform(0.2, 8.0, n)
+    mu_u = rng.uniform(0.2, 8.0, n)
+    from repro.core.buzen import NetworkParams, log_normalizing_constants
+    params = NetworkParams(p=jnp.asarray(p), mu_c=jnp.asarray(mu_c),
+                           mu_d=jnp.asarray(mu_d), mu_u=jnp.asarray(mu_u))
+    want = np.asarray(log_normalizing_constants(params, m))
+    got = np.asarray(ops.buzen_log_Z(params.log_rho, params.log_gamma_total,
+                                     m, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_buzen_kernel_paper_scale():
+    """n=100 clients, m=100 tasks (the paper's experimental scale)."""
+    from repro.core.buzen import NetworkParams, log_normalizing_constants
+    from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
+    params = build_network_params(PAPER_CLUSTERS_TABLE1)
+    want = np.asarray(log_normalizing_constants(params, 100))
+    got = np.asarray(ops.buzen_log_Z(params.log_rho, params.log_gamma_total,
+                                     100, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused async update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_update_matches_oracle(dtype):
+    rng = np.random.default_rng(3)
+    params = {"a": rand(rng, (37, 19), dtype), "b": rand(rng, (1001,), dtype)}
+    grads = {"a": rand(rng, (37, 19), dtype), "b": rand(rng, (1001,), dtype)}
+    scale = 0.137
+    new, norm = ops.fused_async_update(params, grads, scale, interpret=True)
+    want_new, want_norm = ref.fused_async_update_oracle(params, grads, scale)
+    for kk in params:
+        np.testing.assert_allclose(np.asarray(new[kk], np.float32),
+                                   np.asarray(want_new[kk], np.float32),
+                                   **TOL[dtype])
+    np.testing.assert_allclose(float(norm), float(want_norm), rtol=1e-4)

@@ -1,0 +1,104 @@
+"""Hypothesis property tests for deeper system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (NetworkParams, delay_jacobian,
+                        expected_relative_delay, throughput)
+from repro.core.buzen import log_normalizing_constants
+
+
+def params_from(seed, n, with_cs=False):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.ones(n) * 2.0)
+    params = NetworkParams(
+        p=jnp.asarray(p),
+        mu_c=jnp.asarray(rng.uniform(0.2, 6.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.2, 6.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.2, 6.0, n)))
+    return params.with_cs(rng.uniform(0.5, 6.0)) if with_cs else params
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 8), st.integers(0, 10_000),
+       st.booleans())
+def test_jacobian_columns_sum_to_zero(n, m, seed, with_cs):
+    """d/dp_j sum_i E0[D_i] = d/dp_j (m-1) = 0: every column of the delay
+    Jacobian sums to zero (conservation of total staleness, Eq. 7)."""
+    params = params_from(seed, n, with_cs)
+    J = np.asarray(delay_jacobian(params, m))
+    np.testing.assert_allclose(J.sum(axis=0), 0.0, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 10), st.integers(0, 10_000))
+def test_throughput_monotone_in_m(n, m, seed):
+    """Closed-network throughput is non-decreasing in the population size."""
+    params = params_from(seed, n)
+    lam1 = float(throughput(params, m))
+    lam2 = float(throughput(params, m + 1))
+    assert lam2 >= lam1 - 1e-10
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 6), st.integers(0, 10_000))
+def test_throughput_monotone_in_service_rates(n, m, seed):
+    """Uniformly faster servers can only increase throughput."""
+    params = params_from(seed, n)
+    faster = NetworkParams(p=params.p, mu_c=params.mu_c * 1.5,
+                           mu_d=params.mu_d * 1.5, mu_u=params.mu_u * 1.5)
+    assert float(throughput(faster, m)) >= float(throughput(params, m)) - 1e-10
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 6), st.integers(0, 10_000))
+def test_throughput_scaling_law(n, m, seed):
+    """Speeding every server by c scales lambda by exactly c (time rescale)."""
+    params = params_from(seed, n)
+    c = 2.7
+    scaled = NetworkParams(p=params.p, mu_c=params.mu_c * c,
+                           mu_d=params.mu_d * c, mu_u=params.mu_u * c)
+    np.testing.assert_allclose(float(throughput(scaled, m)),
+                               c * float(throughput(params, m)), rtol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 6), st.integers(0, 10_000))
+def test_delays_invariant_under_time_rescale(n, m, seed):
+    """Relative delay counts updates, not seconds: invariant to c * mu."""
+    params = params_from(seed, n)
+    c = 3.3
+    scaled = NetworkParams(p=params.p, mu_c=params.mu_c * c,
+                           mu_d=params.mu_d * c, mu_u=params.mu_u * c)
+    np.testing.assert_allclose(np.asarray(expected_relative_delay(scaled, m)),
+                               np.asarray(expected_relative_delay(params, m)),
+                               rtol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 7), st.integers(0, 10_000))
+def test_Z_log_concavity_ratios(n, m, seed):
+    """Z_{m+1} Z_{m-1} <= Z_m^2 (log-concavity of normalizing constants —
+    equivalent to lambda(m) = Z_{m-1}/Z_m being non-decreasing in m)."""
+    params = params_from(seed, n)
+    logZ = np.asarray(log_normalizing_constants(params, m + 1))
+    for k in range(1, m + 1):
+        assert logZ[k + 1] + logZ[k - 1] <= 2 * logZ[k] + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_symmetry_uniform_clients(seed):
+    """Identical clients + uniform routing => identical delays = (m-1)/n."""
+    rng = np.random.default_rng(seed)
+    n, m = 4, 7
+    mu = rng.uniform(0.3, 5.0, 3)
+    params = NetworkParams(p=jnp.full((n,), 1 / n),
+                           mu_c=jnp.full((n,), mu[0]),
+                           mu_d=jnp.full((n,), mu[1]),
+                           mu_u=jnp.full((n,), mu[2]))
+    d = np.asarray(expected_relative_delay(params, m))
+    np.testing.assert_allclose(d, (m - 1) / n, rtol=1e-9)

@@ -1,0 +1,112 @@
+"""Roofline machinery: HLO collective scraping, param counting, mesh fn."""
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (CollectiveStats, parse_collectives,
+                                   count_params, model_flops, _shape_bytes,
+                                   _link_factor)
+from repro.models.config import INPUT_SHAPES
+
+
+HLO = """
+HloModule jit_f
+
+%region_0 (a: f32[]) -> f32[] { ... }
+
+%body.1 (arg: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %ar = f32[16,128]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%region_0
+  ROOT %t = tuple(...)
+}
+
+ENTRY %main {
+  %w = while((s32[], f32[16,128]) %init), condition=%cond, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = bf16[32,1024]{1,0} all-gather(%y), channel_id=2, replica_groups=[16,16]<=[256], dimensions={1}
+  %cp = f32[8,8]{1,0} collective-permute(%z), channel_id=3, source_target_pairs={{0,1}}
+  %a2a = (f32[4,64]{1,0}, f32[4,64]{1,0}) all-to-all(%u, %v), channel_id=4, replica_groups=[32,8]<=[256]
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("bf16[32,1024]") == 32 * 1024 * 2
+    assert _shape_bytes("(f32[4,64], f32[4,64])") == 2 * 4 * 64 * 4
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_with_trip_counts():
+    stats = parse_collectives(HLO)
+    # all-reduce inside the while body is weighted by trip count 12
+    assert stats.counts["all-reduce"] == 12
+    assert stats.output_bytes["all-reduce"] == 12 * 16 * 128 * 4
+    assert stats.counts["all-gather"] == 1
+    assert stats.counts["collective-permute"] == 1
+    assert stats.counts["all-to-all"] == 1
+    # link bytes: ring factors applied with parsed group sizes
+    expected = (12 * 16 * 128 * 4 * 2 * 15 / 16        # all-reduce n=16
+                + 32 * 1024 * 2 * 15 / 16              # all-gather n=16
+                + 8 * 8 * 4 * 1                        # permute
+                + 2 * 4 * 64 * 4 * 7 / 8)              # all-to-all n=8
+    np.testing.assert_allclose(stats.link_bytes, expected, rtol=1e-9)
+
+
+def test_link_factors():
+    assert _link_factor("all-reduce", 16) == pytest.approx(2 * 15 / 16)
+    assert _link_factor("all-gather", 4) == pytest.approx(3 / 4)
+    assert _link_factor("collective-permute", 8) == 1.0
+    assert _link_factor("all-reduce", 1) == 0.0
+
+
+@pytest.mark.parametrize("arch,expected_b,tol", [
+    ("internlm2-1.8b", 1.9e9, 0.15),
+    ("qwen3-8b", 8.2e9, 0.15),
+    ("llama3-405b", 405e9, 0.10),
+    # granite-34b/whisper use 2-matrix MLPs upstream; this framework's blocks
+    # are SwiGLU (3-matrix), so the assigned layer dims give ~47B / ~1.0B.
+    ("granite-34b", 47e9, 0.10),
+    ("whisper-medium", 1.0e9, 0.15),
+])
+def test_count_params_matches_model_cards(arch, expected_b, tol):
+    from repro.configs import get_config
+    total, active = count_params(get_config(arch))
+    assert abs(total - expected_b) / expected_b < tol, total
+    assert active <= total + 1
+
+
+def test_moe_active_params():
+    from repro.configs import get_config
+    total, active = count_params(get_config("kimi-k2-1t-a32b"))
+    assert total > 0.8e12          # ~1T total
+    assert 20e9 < active < 60e9    # ~32B active
+
+
+def test_count_params_matches_actual_init():
+    """Analytic count == actual initialized leaf count (reduced configs)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    for arch in ("internlm2-1.8b", "qwen2-moe-a2.7b", "xlstm-350m"):
+        cfg = get_config(arch).reduced()
+        bundle = build_model(cfg)
+        params = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(params))
+        analytic, _ = count_params(cfg)
+        # analytic ignores norms/small biases: allow 5%
+        assert abs(actual - analytic) / actual < 0.05, (arch, actual, analytic)
+
+
+def test_model_flops_shapes():
+    from repro.configs import get_config
+    cfg = get_config("qwen3-8b")
+    f_train = model_flops(cfg, INPUT_SHAPES["train_4k"], 256)
+    f_dec = model_flops(cfg, INPUT_SHAPES["decode_32k"], 256)
+    assert f_train > f_dec * 1000
+
+
+def test_make_mesh_shapes():
+    # mesh construction (the 512-device dry-run variant runs in subprocess
+    # tests; here we only validate the host mesh helper)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")

@@ -1,0 +1,69 @@
+"""Scanned vs unrolled layer execution must be numerically identical —
+this underpins the dry-run's 1/2-group cost extrapolation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "jamba-v0.1-52b",
+                                  "kimi-k2-1t-a32b", "whisper-medium"])
+def test_scan_equals_unroll(arch):
+    cfg = get_config(arch).reduced()
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    b_s = build_model(cfg)
+    b_u = build_model(cfg_u)
+    params = b_s.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32),
+             "targets": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                    jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.encoder_frames, cfg.d_model)),
+            jnp.float32)
+    l_s, _ = b_s.loss_fn(params, batch)
+    l_u, _ = b_u.loss_fn(params, batch)
+    assert float(l_s) == pytest.approx(float(l_u), rel=2e-4)
+
+
+def test_remat_policy_dots_same_loss():
+    cfg = get_config("internlm2-1.8b").reduced()
+    cfg_d = dataclasses.replace(cfg, remat_policy="dots")
+    b0, b1 = build_model(cfg), build_model(cfg_d)
+    params = b0.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32),
+             "targets": jnp.ones((2, 8), jnp.int32)}
+    l0, _ = b0.loss_fn(params, batch)
+    l1, _ = b1.loss_fn(params, batch)
+    assert float(l0) == pytest.approx(float(l1), rel=1e-6)
+    # gradients identical too (remat changes schedule, not math)
+    g0 = jax.grad(lambda p: b0.loss_fn(p, batch)[0])(params)
+    g1 = jax.grad(lambda p: b1.loss_fn(p, batch)[0])(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_prefill_last_only_same_next_token():
+    cfg = get_config("internlm2-1.8b").reduced()
+    cfg_l = dataclasses.replace(cfg, prefill_last_only=True)
+    b0, b1 = build_model(cfg), build_model(cfg_l)
+    params = b0.init(jax.random.PRNGKey(1))
+    batch = {"tokens": jnp.arange(10, dtype=jnp.int32)[None] % cfg.vocab}
+    l0, c0 = b0.prefill(params, batch)
+    l1, c1 = b1.prefill(params, batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-4, atol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(c0),
+                    jax.tree_util.tree_leaves(c1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-4,
+                                   atol=1e-5)

@@ -1,0 +1,80 @@
+"""End-to-end behaviour of the paper's system.
+
+The full pipeline: heterogeneous population -> closed-form analysis ->
+routing/concurrency optimization -> async FL training in virtual wall-clock
+time -> the optimized schedule beats the AsyncSGD baseline.  This is the
+paper's central claim exercised through every layer of the framework.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LearningConstants, expected_relative_delay,
+                        throughput, wallclock_time)
+from repro.data import (dirichlet_partition, make_synthetic_image_dataset,
+                        train_test_split)
+from repro.fl import (AsyncFLConfig, AsyncFLTrainer, make_strategies,
+                      mlp_classifier)
+from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
+
+CONSTS = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
+
+
+@pytest.fixture(scope="module")
+def population():
+    return build_network_params(PAPER_CLUSTERS_TABLE1, scale=20)  # n = 6
+
+
+@pytest.fixture(scope="module")
+def strategies(population):
+    return make_strategies(population, CONSTS, steps=200,
+                           m_max=population.n + 6,
+                           which=("asyncsgd", "time_opt", "round_opt"))
+
+
+def test_time_opt_improves_theoretical_tau(population, strategies):
+    p_t, m_t = strategies["time_opt"]
+    tau_opt = float(wallclock_time(
+        population._replace(p=jnp.asarray(p_t)), m_t, CONSTS))
+    tau_uni = float(wallclock_time(population, population.n, CONSTS))
+    assert tau_opt < tau_uni
+
+
+def test_round_opt_favors_stragglers(population, strategies):
+    """Round-opt shifts routing mass toward slow clients (Section 4.2)."""
+    p_k, _ = strategies["round_opt"]
+    mu = np.asarray(population.mu_c)
+    slowest, fastest = int(np.argmin(mu)), int(np.argmax(mu))
+    assert p_k[slowest] > p_k[fastest]
+
+
+def test_end_to_end_training_ordering(population, strategies):
+    """Trained in virtual time, time-opt reaches the accuracy target no
+    later than AsyncSGD (paper Fig. 3 / Table 3)."""
+    n = population.n
+    full = make_synthetic_image_dataset(num_classes=8, samples_per_class=90,
+                                        seed=4)
+    train, test = train_test_split(full, 0.2, seed=5)
+    parts = dirichlet_partition(train.y, n, alpha=0.2, seed=4)
+    clients = [(train.x[i], train.y[i]) for i in parts]
+
+    hits = {}
+    for name in ("asyncsgd", "time_opt"):
+        p, m = strategies[name]
+        model = mlp_classifier(28 * 28, 8, hidden=(64,))
+        tr = AsyncFLTrainer(
+            model, clients, population._replace(p=jnp.asarray(p)), m,
+            config=AsyncFLConfig(eta=0.05, batch_size=32,
+                                 eval_every_time=6.0, seed=0, grad_clip=5.0),
+            test_data=(test.x, test.y))
+        log = tr.run(horizon_time=220.0)
+        hits[name] = log.time_to_accuracy(0.5)
+        assert np.isfinite(log.losses).all()
+    assert hits["time_opt"] <= hits["asyncsgd"] * 1.05  # small MC slack
+
+
+def test_staleness_identity_through_stack(population):
+    for m in (1, 3, population.n):
+        d = expected_relative_delay(population, m)
+        assert float(jnp.sum(d)) == pytest.approx(m - 1, abs=1e-8)
+        assert float(throughput(population, m)) > 0
