@@ -1,13 +1,17 @@
-"""Figure 8 analogue: optimized E0[tau_eps](p*, m) as a function of m with
-warm-started sequential search — locates the optimal concurrency m*."""
+"""Figure 8 analogue: optimized E0[tau_eps](p*, m) as a function of m —
+locates the optimal concurrency m*.
+
+Uses the batched sweep engine: ONE jitted Adam scan optimizes routing for
+every candidate m simultaneously (no warm-started per-m loop, no per-m
+recompilation)."""
 from __future__ import annotations
 
 import time
 
 import jax.numpy as jnp
 
-from repro.core import (LearningConstants, make_time_objective,
-                        optimize_routing)
+from repro.core import (LearningConstants, batched_concurrency_sweep,
+                        make_time_objective_padded)
 from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
 
 from .common import row
@@ -18,16 +22,14 @@ CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
 def run(scale: int = 10, steps: int = 150) -> list[str]:
     params = build_network_params(PAPER_CLUSTERS_TABLE1, scale=scale)
     n = params.n
-    obj = make_time_objective(params, CONSTS)
+    m_max = n + 5
     t0 = time.perf_counter()
-    values = []
-    p_warm = None
-    for m in range(1, n + 6):
-        res = optimize_routing(obj, n, m, steps=steps, p_init=p_warm)
-        p_warm = res.p
-        values.append((m, res.value))
+    res = batched_concurrency_sweep(
+        make_time_objective_padded(params, CONSTS, m_max), params,
+        m_grid=jnp.arange(1, m_max + 1), steps=steps)
     us = (time.perf_counter() - t0) * 1e6
-    m_star, v_star = min(values, key=lambda t: t[1])
+    values = res.best.history
+    m_star, v_star = res.best.m, res.best.value
     v1 = values[0][1]
     v_full = dict(values)[n]
     curve = ";".join(f"m{m}={v:.1f}" for m, v in values[::max(1, len(values)//8)])

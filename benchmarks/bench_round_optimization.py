@@ -7,9 +7,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LearningConstants, expected_relative_delay,
-                        make_round_objective, optimize_routing, round_complexity,
-                        throughput)
+from repro.core import (LearningConstants, batched_concurrency_sweep,
+                        expected_relative_delay, make_round_objective_padded,
+                        round_complexity, throughput)
 from repro.fl.strategies import (PAPER_CLUSTERS_TABLE6, build_network_params,
                                  cluster_labels)
 
@@ -26,8 +26,10 @@ def run(scale: int = 5, steps: int = 300) -> list[str]:
     m = n  # full concurrency, as in Appendix H
 
     t0 = time.perf_counter()
-    res = optimize_routing(make_round_objective(params, CONSTS), n, m,
-                           steps=steps)
+    # single-m sweep (B = 1) through the shared batched engine / Buzen batch
+    res = batched_concurrency_sweep(
+        make_round_objective_padded(params, CONSTS, m), params,
+        m_grid=jnp.asarray([m]), steps=steps).best
     us = (time.perf_counter() - t0) * 1e6
 
     uni = jnp.full((n,), 1.0 / n)

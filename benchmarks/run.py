@@ -1,25 +1,54 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Set BENCH_FAST=1 to shrink
-the training-based benches (CI budget).
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Modes:
+  * default        — full settings (paper-scale CPU budget, ~minutes);
+  * BENCH_FAST=1   — shrink the training-based benches (CI budget);
+  * ``--smoke``    — a few optimizer steps / tiny horizons per bench and a
+    machine-readable ``BENCH_smoke.json`` snapshot (written to the repo
+    root, or ``--out PATH``) so the perf trajectory populates over PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
+import time
 import traceback
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+sys.path.insert(0, _REPO_ROOT)  # `import benchmarks` when run as a script
 
 
-def main() -> None:
-    fast = os.environ.get("BENCH_FAST", "0") == "1"
+def build_suites(mode: str):
     from benchmarks import (bench_concurrency_sweep, bench_energy_joint,
                             bench_kernels, bench_pareto, bench_queueing,
                             bench_round_optimization, bench_routing_table,
                             bench_tau_surface, bench_training_comparison)
 
-    suites = [
+    fast = mode == "fast"
+    if mode == "smoke":
+        return [
+            ("queueing", lambda: bench_queueing.run()),
+            ("routing_table", lambda: bench_routing_table.run(
+                scale=20, steps=30)),
+            ("round_optimization", lambda: bench_round_optimization.run(
+                scale=20, steps=30)),
+            ("tau_surface", lambda: bench_tau_surface.run()),
+            ("concurrency_sweep", lambda: bench_concurrency_sweep.run(
+                scale=20, steps=30)),
+            ("pareto", lambda: bench_pareto.run(scale=20, steps=30,
+                                                rhos=(0.0, 0.1, 1.0))),
+            ("training_comparison", lambda: bench_training_comparison.run(
+                horizon=40.0, distributions=("exponential",), seeds=(0,))),
+            ("energy_joint", lambda: bench_energy_joint.run(
+                horizon=40.0, seeds=(0,))),
+            ("kernels", lambda: bench_kernels.run()),
+        ]
+    return [
         ("queueing", lambda: bench_queueing.run()),
         ("routing_table", lambda: bench_routing_table.run(
             scale=10 if fast else 5, steps=120 if fast else 250)),
@@ -38,16 +67,62 @@ def main() -> None:
             horizon=120.0 if fast else 240.0, seeds=(0,) if fast else (0, 1))),
         ("kernels", lambda: bench_kernels.run()),
     ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="few-step run per bench + BENCH_smoke.json snapshot")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (smoke mode only); default "
+                         "<repo>/BENCH_smoke.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        mode = "smoke"
+    elif os.environ.get("BENCH_FAST", "0") == "1":
+        mode = "fast"
+    else:
+        mode = "full"
+    suites = build_suites(mode)
+
     print("name,us_per_call,derived")
+    results = []
     failures = []
+    t_start = time.time()
     for name, fn in suites:
+        t0 = time.time()
         try:
             for line in fn():
                 print(line, flush=True)
+                rname, us, derived = line.split(",", 2)
+                results.append({"suite": name, "name": rname,
+                                "us_per_call": float(us), "derived": derived})
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             traceback.print_exc()
             print(f"{name},nan,FAILED:{e!r}", flush=True)
+        results.append({"suite": name, "name": f"{name}.__suite_s",
+                        "us_per_call": (time.time() - t0) * 1e6,
+                        "derived": "suite_wall_time"})
+
+    if mode == "smoke":
+        import jax
+
+        payload = {
+            "mode": mode,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "total_s": time.time() - t_start,
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "failures": [list(f) for f in failures],
+            "rows": results,
+        }
+        out_path = args.out or os.path.join(_REPO_ROOT, "BENCH_smoke.json")
+        with open(out_path, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        print(f"# wrote {out_path}", flush=True)
+
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -12,9 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (LearningConstants, energy_complexity,
-                        energy_optimal_routing, joint_optimal,
-                        make_time_objective, minimal_energy,
-                        sequential_concurrency_search, wallclock_time)
+                        energy_optimal_routing, minimal_energy, pareto_sweep,
+                        time_optimal, wallclock_time)
 from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
                                  build_power_profile, cluster_labels)
 
@@ -25,25 +24,29 @@ def main():
     labels = np.array(cluster_labels(PAPER_CLUSTERS_TABLE1, scale=10))
     consts = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
     n = net.n
+    m_max = n + 6
 
-    tau_res = sequential_concurrency_search(
-        make_time_objective(net, consts), n, m_start=2, m_max=n + 6,
-        steps=200, patience=3)
+    # one jitted sweep over m = 2..n+6 replaces the warm-started loop
+    tau_res = time_optimal(net, consts, m_max=m_max, steps=200)
     e_star = float(minimal_energy(net, consts, power))
     p_e = energy_optimal_routing(net, power)
     print(f"time-optimal:   m*={tau_res.m} tau*={tau_res.value:.1f}")
     print(f"energy-optimal: m=1 E*={e_star:.1f} "
           f"(closed form p_i ∝ 1/sqrt(E_i), Eq. 16)")
 
+    # the whole frontier — every (rho, m) pair — in ONE further sweep,
+    # with rho entering as the batched objective context
+    rhos = (0.0, 0.1, 0.3, 0.5, 0.8, 1.0)
+    _, per_rho = pareto_sweep(net, consts, power, rhos, tau_res.value, e_star,
+                              m_max=m_max, steps=200)
+
     print("\nPareto frontier (Eq. 18):")
     print(f"{'rho':>5} {'m*':>4} {'tau':>9} {'energy':>10}  type-E weight")
-    for rho in (0.0, 0.1, 0.3, 0.5, 0.8, 1.0):
-        res = joint_optimal(net, consts, power, rho, tau_res.value, e_star,
-                            m_max=n + 6, steps=200, patience=3)
+    for rho, res in zip(rhos, per_rho):
         pp = jnp.asarray(res.p)
         tau = float(wallclock_time(net._replace(p=pp), res.m, consts))
         en = float(energy_complexity(net._replace(p=pp), res.m, consts, power))
-        pE = np.asarray(res.p)[labels == "E"].mean()
+        pE = np.asarray(pp)[labels == "E"].mean()
         print(f"{rho:5.1f} {res.m:4d} {tau:9.1f} {en:10.1f}  {pE * 100:.2f}%")
 
 

@@ -15,8 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (LearningConstants, expected_relative_delay,
-                        make_time_objective, sequential_concurrency_search,
-                        throughput, wallclock_time)
+                        throughput, time_optimal, wallclock_time)
 from repro.core.simulator import AsyncNetworkSim
 from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
 
@@ -42,10 +41,9 @@ def main():
     print(f"  simulator lambda = {stats.throughput:.3f}  "
           f"(closed form {lam:.3f})")
 
-    # jointly optimize routing + concurrency for wall-clock time (Section 5)
-    res = sequential_concurrency_search(
-        make_time_objective(net, consts), n, m_start=2, m_max=n + 6,
-        steps=200, patience=3)
+    # jointly optimize routing + concurrency for wall-clock time (Section 5):
+    # one jitted sweep over every candidate m (batched engine)
+    res = time_optimal(net, consts, m_max=n + 6, steps=200)
     tau_uni = float(wallclock_time(net, m, consts))
     print(f"\ntime-optimized: m* = {res.m}, "
           f"tau* = {res.value:.1f} vs uniform {tau_uni:.1f} "

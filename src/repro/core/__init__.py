@@ -1,6 +1,20 @@
 """Queueing-theoretic core of the paper: product-form analysis, complexity
-bounds, energy model, and routing/concurrency optimization."""
-from .buzen import NetworkParams, log_normalizing_constants, log_Z_ratio
+bounds, energy model, and routing/concurrency optimization.
+
+``repro.core.batched`` holds the padded (traced-``m``) variants of the
+closed forms that power :func:`batched_concurrency_sweep` — the one-compile
+sweep over the whole ``(p, m)`` grid."""
+from .batched import (batch_log_normalizing_constants,
+                      energy_complexity_padded,
+                      expected_relative_delay_padded,
+                      joint_objective_padded, make_energy_objective_padded,
+                      make_joint_objective_padded, make_round_objective_padded,
+                      make_throughput_objective_padded,
+                      make_time_objective_padded, objective_surface,
+                      round_complexity_padded, tau_surface, throughput_padded,
+                      wallclock_time_padded)
+from .buzen import (NetworkParams, get_backend, log_normalizing_constants,
+                    log_Z_ratio, set_backend)
 from .complexity import (LearningConstants, eta_max, round_complexity,
                          round_complexity_unbounded, system_staleness_factor,
                          wallclock_time)
@@ -10,7 +24,9 @@ from .energy import (PowerProfile, energy_complexity, energy_optimal_routing,
 from .jackson import (analyze, delay_jacobian, expected_relative_delay,
                       mean_total_counts, second_moment_matrix, throughput,
                       throughput_grad)
-from .optimize import (OptResult, joint_optimal, make_energy_objective,
+from .optimize import (OptResult, SweepResult, batched_concurrency_sweep,
+                       pareto_sweep,
+                       joint_optimal, make_energy_objective,
                        make_joint_objective, make_round_objective,
                        make_throughput_objective, make_time_objective,
                        max_throughput, optimize_routing, round_optimal,
@@ -18,6 +34,14 @@ from .optimize import (OptResult, joint_optimal, make_energy_objective,
 
 __all__ = [
     "NetworkParams", "log_normalizing_constants", "log_Z_ratio",
+    "set_backend", "get_backend",
+    "batch_log_normalizing_constants", "expected_relative_delay_padded",
+    "throughput_padded", "round_complexity_padded", "wallclock_time_padded",
+    "energy_complexity_padded", "joint_objective_padded",
+    "make_round_objective_padded", "make_throughput_objective_padded",
+    "make_time_objective_padded", "make_energy_objective_padded",
+    "make_joint_objective_padded", "objective_surface", "tau_surface",
+    "SweepResult", "batched_concurrency_sweep", "pareto_sweep",
     "LearningConstants", "round_complexity", "round_complexity_unbounded",
     "eta_max", "system_staleness_factor", "wallclock_time",
     "PowerProfile", "per_task_energy", "energy_per_round", "energy_complexity",

@@ -1,0 +1,283 @@
+"""Batched (padded, traced-``m``) evaluation of the closed-form pipeline.
+
+The scalar modules (``jackson``, ``complexity``, ``energy``) treat the
+population ``m`` as a *static* Python int: series lengths like
+``jnp.arange(1, m)`` and branches like ``if m > 1`` bake ``m`` into the
+trace, so evaluating a grid of concurrency candidates recompiles once per
+``m``.  This module provides the same quantities in a *padded* form — every
+series runs to a static bound ``m_max`` and is masked by the traced
+population — so a whole ``(p, m)`` grid can be evaluated (and
+differentiated) inside one jit trace via ``jax.vmap``:
+
+  * ``batch_log_normalizing_constants`` — ``[B, m_max+1]`` log-space Buzen
+    DP for a batch of routing vectors, dispatching to either the ``jnp``
+    reference or the batched Pallas TPU kernel
+    (``repro.kernels.buzen.buzen_pallas_batched``) behind the backend flag
+    of ``repro.core.buzen``;
+  * ``*_padded`` — throughput, mean relative delay, ``K_eps``, wall-clock
+    and energy complexity, and the rho-scalarized joint objective, each
+    accepting a traced ``m`` and a precomputed padded ``logZ`` row;
+  * ``make_*_objective_padded`` — factories matching
+    ``repro.core.optimize.make_*_objective`` but with the padded call
+    signature ``obj(p, m, logZ)`` used by the batched sweep engine;
+  * ``tau_surface`` / ``objective_surface`` — one-jit evaluation of dense
+    ``(m, p)`` grids (Figure 2 / Figure 8 style sweeps).
+
+All padded quantities agree with their static counterparts to float64
+round-off; ``tests/test_batched_optimizer.py`` cross-checks both paths.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+from . import numerics  # noqa: F401  (enables x64)
+from .buzen import NetworkParams, get_backend, log_normalizing_constants
+from .complexity import LearningConstants
+from .energy import PowerProfile, energy_per_round
+from .jackson import _lz  # log Z[idx] with Z[idx < 0] = 0, traced-idx safe
+from .numerics import NEG_INF
+from .optimize import _with_p  # shared routing-replace helper
+
+
+# ---------------------------------------------------------------------------
+# padded log-Z helpers
+# ---------------------------------------------------------------------------
+
+def batch_log_normalizing_constants(
+    params: NetworkParams,
+    p_batch: jax.Array,
+    m_max: int,
+    *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """``log Z_{n, 0..m_max}`` for every routing row of ``p_batch`` [B, n].
+
+    Backend ``"jnp"`` vmaps the float64 reference DP of
+    :func:`repro.core.buzen.log_normalizing_constants`; ``"pallas"`` runs the
+    batched ``B x stations`` Pallas kernel (float32 forward, reference VJP —
+    see ``repro.kernels.buzen``).  ``None`` defers to the process-wide flag
+    (:func:`repro.core.buzen.set_backend` / ``REPRO_BUZEN_BACKEND``).
+    """
+    backend = get_backend() if backend is None else backend
+    if backend == "pallas":
+        from ..kernels.buzen import buzen_log_Z_batched
+
+        log_rho = jnp.log(p_batch) - jnp.log(params.mu_c)[None, :]
+        gamma = p_batch * (1.0 / params.mu_d + 1.0 / params.mu_u)[None, :]
+        log_gamma_total = jnp.log(jnp.sum(gamma, axis=-1))
+        if params.mu_cs is not None:
+            # the CS single-server station folds in as one extra column
+            log_load_cs = (jnp.log(jnp.sum(p_batch, axis=-1))
+                           - jnp.log(params.mu_cs))
+            log_rho = jnp.concatenate([log_rho, log_load_cs[:, None]], axis=-1)
+        return buzen_log_Z_batched(log_rho, log_gamma_total, m_max)
+    if backend != "jnp":
+        raise ValueError(f"unknown buzen backend: {backend}")
+    return jax.vmap(
+        lambda p: log_normalizing_constants(params._replace(p=p), m_max,
+                                            backend="jnp"))(p_batch)
+
+
+def _padded_series_vs_Z(log_load: jax.Array, logZ: jax.Array, pop: jax.Array,
+                        shift: int, m_max: int) -> jax.Array:
+    """Padded analogue of ``jackson._series_vs_Z`` for traced ``pop``.
+
+    ``log sum_{k=1}^{pop-shift+1} load^k Z[pop-shift+1-k] / Z[pop]`` with the
+    series padded to the static length ``m_max`` and masked by ``pop``.
+    """
+    k = jnp.arange(1, m_max + 1)
+    idx = pop - shift + 1 - k
+    zterm = _lz(logZ, idx) - _lz(logZ, pop)
+    terms = jnp.asarray(log_load)[..., None] * k + zterm
+    return logsumexp(jnp.where(idx >= 0, terms, NEG_INF), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# padded closed forms (Thm 2 / Prop 4 / Thm 3 / Prop 5)
+# ---------------------------------------------------------------------------
+
+def mean_total_counts_padded(params: NetworkParams, logZ: jax.Array,
+                             pop: jax.Array, m_max: int) -> jax.Array:
+    """``E[sum_s X_i^s]`` per client at traced population ``pop``.
+
+    Identical to ``jackson.mean_total_counts`` but with the series masked to
+    ``pop`` rather than sized by it; at ``pop <= 0`` every term masks to
+    zero, matching the static early-return.
+    """
+    comp = jnp.exp(_padded_series_vs_Z(params.log_rho, logZ, pop, 1, m_max))
+    is_part = params.gamma * jnp.exp(_lz(logZ, pop - 1) - _lz(logZ, pop))
+    total = comp + is_part
+    if params.mu_cs is not None:
+        log_load_cs = jnp.log(jnp.sum(params.p)) - jnp.log(params.mu_cs)
+        cs_total = jnp.exp(_padded_series_vs_Z(log_load_cs, logZ, pop, 1,
+                                               m_max))
+        total = total + params.p / jnp.sum(params.p) * cs_total
+    return total
+
+
+def expected_relative_delay_padded(params: NetworkParams, m: jax.Array,
+                                   logZ: jax.Array, m_max: int) -> jax.Array:
+    """``E0[D_i]`` (Thm 2 Eq 3/5) for a traced concurrency ``m``."""
+    return mean_total_counts_padded(params, logZ, m - 1, m_max)
+
+
+def throughput_padded(logZ: jax.Array, m: jax.Array) -> jax.Array:
+    """``lambda(p, m) = Z_{n,m-1} / Z_{n,m}`` for traced ``m``."""
+    return jnp.exp(_lz(logZ, m - 1) - _lz(logZ, m))
+
+
+def round_complexity_padded(params: NetworkParams, m: jax.Array,
+                            consts: LearningConstants, logZ: jax.Array,
+                            m_max: int) -> jax.Array:
+    """``K_eps(p, m)`` (Thm 3 Eq 9) for traced ``m``.
+
+    The staleness term vanishes identically at ``m = 1``; the double
+    ``where`` keeps both the value and the gradient finite there (a naive
+    ``sqrt(where(...))`` has a NaN cotangent at 0).
+    """
+    n = params.n
+    p = params.p
+    eps = consts.eps
+    first = (4.0 + consts.B / eps) * jnp.sum(1.0 / (n * p))
+    delays = expected_relative_delay_padded(params, m, logZ, m_max)
+    staleness = jnp.sum(delays / p**2)
+    raw = consts.C * (m - 1.0) / eps * staleness
+    safe = jnp.where(m > 1, raw, 1.0)
+    second = jnp.where(m > 1, jnp.sqrt(safe), 0.0)
+    return 24.0 * consts.L * consts.delta / (n * eps) * (first + second)
+
+
+def wallclock_time_padded(params: NetworkParams, m: jax.Array,
+                          consts: LearningConstants, logZ: jax.Array,
+                          m_max: int) -> jax.Array:
+    """``E0[tau_eps] = K_eps / lambda`` (Prop. 4/8) for traced ``m``."""
+    return (round_complexity_padded(params, m, consts, logZ, m_max)
+            / throughput_padded(logZ, m))
+
+
+def energy_complexity_padded(params: NetworkParams, m: jax.Array,
+                             consts: LearningConstants, power: PowerProfile,
+                             logZ: jax.Array, m_max: int) -> jax.Array:
+    """``E0[E_eps]`` (Prop. 5/9) for traced ``m``."""
+    return (round_complexity_padded(params, m, consts, logZ, m_max)
+            * energy_per_round(params, power))
+
+
+def joint_objective_padded(params: NetworkParams, m: jax.Array,
+                           consts: LearningConstants, power: PowerProfile,
+                           rho: jax.Array, tau_star: jax.Array,
+                           e_star: jax.Array, logZ: jax.Array,
+                           m_max: int) -> jax.Array:
+    """Normalized rho-scalarization (Eq. 18); ``rho`` may be traced/batched."""
+    k_eps = round_complexity_padded(params, m, consts, logZ, m_max)
+    tau = k_eps / throughput_padded(logZ, m)
+    en = k_eps * energy_per_round(params, power)
+    return rho * en / e_star + (1.0 - rho) * tau / tau_star
+
+
+# ---------------------------------------------------------------------------
+# padded objective factories (protocol: obj(p, m, logZ) -> scalar)
+# ---------------------------------------------------------------------------
+
+
+def make_round_objective_padded(params: NetworkParams,
+                                consts: LearningConstants, m_max: int):
+    def obj(p, m, logZ):
+        return round_complexity_padded(_with_p(params, p), m, consts, logZ,
+                                       m_max)
+    obj.m_max = m_max  # consumed by the sweep-side padding guard
+    return obj
+
+
+def make_throughput_objective_padded(params: NetworkParams, m_max: int):
+    def obj(p, m, logZ):
+        return -throughput_padded(logZ, m)
+    obj.m_max = m_max  # consumed by the sweep-side padding guard
+    return obj
+
+
+def make_time_objective_padded(params: NetworkParams,
+                               consts: LearningConstants, m_max: int):
+    def obj(p, m, logZ):
+        return wallclock_time_padded(_with_p(params, p), m, consts, logZ,
+                                     m_max)
+    obj.m_max = m_max  # consumed by the sweep-side padding guard
+    return obj
+
+
+def make_energy_objective_padded(params: NetworkParams,
+                                 consts: LearningConstants,
+                                 power: PowerProfile, m_max: int):
+    def obj(p, m, logZ):
+        return energy_complexity_padded(_with_p(params, p), m, consts, power,
+                                        logZ, m_max)
+    obj.m_max = m_max  # consumed by the sweep-side padding guard
+    return obj
+
+
+def make_joint_objective_padded(params: NetworkParams,
+                                consts: LearningConstants,
+                                power: PowerProfile, tau_star, e_star,
+                                m_max: int):
+    """Joint objective with ``rho`` as the per-row context (see
+    ``batched_concurrency_sweep(ctx=...)``) so one sweep traces the whole
+    Pareto frontier."""
+    def obj(p, m, logZ, rho):
+        return joint_objective_padded(_with_p(params, p), m, consts, power,
+                                      rho, tau_star, e_star, logZ, m_max)
+    obj.m_max = m_max  # consumed by the sweep-side padding guard
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# dense surface evaluation (Figure 2 / Figure 8 grids)
+# ---------------------------------------------------------------------------
+
+def objective_surface(objective: Callable, params: NetworkParams,
+                      p_grid: jax.Array, m_grid: jax.Array,
+                      *, m_max: Optional[int] = None,
+                      backend: Optional[str] = None) -> jax.Array:
+    """Evaluate a padded objective on aligned grids ``p_grid`` [B, n] and
+    ``m_grid`` [B] as ONE jitted batch: a single compile covers the whole
+    grid (the jit is per-call — its cache dies with the closure — so
+    repeated calls retrace but never leak cache entries)."""
+    m_grid = jnp.asarray(m_grid)
+    m_max = int(jnp.max(m_grid)) if m_max is None else m_max
+    obj_pad = getattr(objective, "m_max", None)
+    if obj_pad is not None and obj_pad != m_max:
+        raise ValueError(
+            f"objective was built with m_max={obj_pad} but the surface pads "
+            f"logZ to m_max={m_max}; the paddings must match")
+    backend = get_backend() if backend is None else backend
+
+    @jax.jit
+    def impl(params, p_grid, m_grid):
+        logZ = batch_log_normalizing_constants(params, p_grid, m_max,
+                                               backend=backend)
+        return jax.vmap(objective)(p_grid, m_grid, logZ)
+
+    return impl(params, jnp.asarray(p_grid), m_grid)
+
+
+def tau_surface(params: NetworkParams, consts: LearningConstants,
+                ms, p_rows: jax.Array,
+                *, backend: Optional[str] = None) -> jax.Array:
+    """``E0[tau_eps]`` on the outer grid ``ms x p_rows`` — the Figure 2
+    surface — evaluated in one jitted batch.
+
+    ``ms`` is a 1-D int array of concurrency candidates, ``p_rows`` is
+    ``[P, n]`` routing vectors; returns ``[len(ms), P]``.
+    """
+    ms = jnp.asarray(ms)
+    p_rows = jnp.asarray(p_rows)
+    M, P = ms.shape[0], p_rows.shape[0]
+    m_flat = jnp.repeat(ms, P)
+    p_flat = jnp.tile(p_rows, (M, 1))
+    obj = make_time_objective_padded(params, consts, int(jnp.max(ms)))
+    vals = objective_surface(obj, params, p_flat, m_flat,
+                             m_max=int(jnp.max(ms)), backend=backend)
+    return vals.reshape(M, P)

@@ -28,9 +28,19 @@ Two evaluation strategies, tested to agree:
 
 All functions return ``logZ`` arrays of shape ``[m_max + 1]`` with
 ``logZ[k] = log Z_{n,k}``; ``Z_{n,0} = 1``.
+
+Backends: the DP can also run on the Pallas TPU kernel
+(``repro.kernels.buzen``).  Select it per call with ``backend="pallas"``,
+process-wide with :func:`set_backend` (or ``REPRO_BUZEN_BACKEND=pallas``).
+The kernel computes the forward pass in float32 (compiled on TPU,
+interpreted elsewhere) and differentiates through the float64 reference, so
+it is usable inside the routing optimizer; the default remains ``"jnp"``
+because the analytic identities in the test-suite hold to 1e-12 only in
+float64.
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Optional
 
 import jax
@@ -39,6 +49,21 @@ from jax.scipy.special import gammaln, logsumexp
 
 from . import numerics  # noqa: F401  (enables x64)
 from .numerics import NEG_INF
+
+_BACKENDS = ("jnp", "pallas")
+_backend = os.environ.get("REPRO_BUZEN_BACKEND", "jnp")
+
+
+def set_backend(name: str) -> None:
+    """Set the process-wide default Buzen backend (``"jnp"``/``"pallas"``)."""
+    global _backend
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown buzen backend: {name!r}")
+    _backend = name
+
+
+def get_backend() -> str:
+    return _backend
 
 
 class NetworkParams(NamedTuple):
@@ -104,12 +129,28 @@ def log_normalizing_constants(
     m_max: int,
     *,
     method: str = "aggregate",
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Log normalization constants ``log Z_{n,m}`` for ``m = 0..m_max``.
 
     Includes the CS single-server station when ``params.mu_cs`` is not None
-    (these are the ``W_{n,m}`` constants of Proposition 19).
+    (these are the ``W_{n,m}`` constants of Proposition 19).  ``backend``
+    overrides the process-wide flag (see :func:`set_backend`); the Pallas
+    path only implements the ``"aggregate"`` method.
     """
+    backend = _backend if backend is None else backend
+    if backend == "pallas":
+        if method != "aggregate":
+            raise ValueError(
+                f"the pallas backend only implements method='aggregate', "
+                f"got {method!r}")
+        from .batched import batch_log_normalizing_constants  # lazy: no cycle
+
+        return batch_log_normalizing_constants(
+            params, params.p[None, :], m_max, backend="pallas")[0]
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown buzen backend: {backend!r}")
+
     log_rho = params.log_rho
 
     if method == "aggregate":

@@ -7,10 +7,24 @@ Gradients come from ``jax.grad`` through the log-space Buzen pipeline — tested
 to agree with the paper's closed-form expressions (Theorem 2 Eq. 4,
 Prop. 4 Eq. 12).
 
-Concurrency ``m`` is discrete and handled by the paper's sequential search
-with warm-started routing (Section 5.3.2): iterate m = start, start+1, ...,
-re-optimizing ``p`` from the previous optimum, and stop once the objective
-stops improving (with optional patience).
+Concurrency ``m`` is discrete.  Two search modes are provided:
+
+  * :func:`sequential_concurrency_search` — the paper's warm-started
+    sequential search (Section 5.3.2): iterate m = start, start+1, ...,
+    re-optimizing ``p`` from the previous optimum, stopping once the
+    objective stops improving (with optional patience).  One jit compile
+    *per candidate m* — kept as the reference implementation.
+  * :func:`batched_concurrency_sweep` — the batched engine: ONE jitted
+    Adam ``lax.scan`` optimizes routing for *all* candidate concurrencies
+    (and optionally a batch of objective contexts, e.g. Pareto weights
+    ``rho``) simultaneously.  Each scan step evaluates the padded log-space
+    Buzen DP for the whole ``[B, n]`` routing batch
+    (``repro.core.batched``), so the discrete search reduces to an argmin
+    over the precomputed ``(p*, m)`` surface with zero per-``m``
+    recompilation.
+
+``time_optimal`` / ``joint_optimal`` use the batched engine by default
+(``search="sequential"`` restores the legacy path).
 """
 from __future__ import annotations
 
@@ -20,6 +34,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import numerics  # noqa: F401
 from .buzen import NetworkParams, log_normalizing_constants
@@ -34,6 +49,22 @@ class OptResult:
     m: int
     value: float
     history: list
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Full ``(p, m)`` surface from one batched sweep.
+
+    ``p[b]`` is the optimized routing for concurrency ``m_grid[b]`` (and
+    context ``ctx[b]`` if given); ``values[b]`` the final objective there.
+    ``best`` is the argmin row repackaged as an :class:`OptResult` whose
+    ``history`` is the ``(m, value)`` trace across the grid.
+    """
+
+    p: jax.Array          # [B, n]
+    m_grid: np.ndarray    # [B]
+    values: np.ndarray    # [B]
+    best: OptResult
 
 
 def _adam_minimize(loss_fn: Callable, theta0: jax.Array, steps: int, lr: float):
@@ -79,6 +110,114 @@ def optimize_routing(
     theta, vals = _adam_minimize(loss, theta0, steps, lr)
     p = jax.nn.softmax(theta)
     return OptResult(p=p, m=m, value=float(objective(p, m)), history=list(map(float, vals)))
+
+
+def batched_concurrency_sweep(
+    objective: Callable,
+    params: NetworkParams,
+    *,
+    m_grid,
+    ctx=None,
+    steps: int = 400,
+    lr: float = 0.05,
+    p_init: Optional[jax.Array] = None,
+    m_max: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> SweepResult:
+    """Optimize routing for every concurrency candidate in ONE jitted sweep.
+
+    ``objective`` follows the padded protocol of ``repro.core.batched``:
+    ``obj(p, m, logZ)`` (or ``obj(p, m, logZ, ctx_row)`` when ``ctx`` is
+    given) with ``m`` traced and ``logZ`` the precomputed ``[m_max + 1]``
+    log-constant row for ``p``.  The engine stacks ``B = len(m_grid)``
+    softmax logits, computes the batched Buzen DP once per Adam step (one
+    ``[B, m_max+1]`` evaluation, Pallas or jnp backend), and runs a single
+    ``lax.scan`` whose summed loss decouples row-wise — elementwise Adam on
+    a block-diagonal problem is exactly ``B`` independent Adam runs, minus
+    the ``B`` recompiles.
+
+    ``ctx`` optionally batches an extra per-row objective input (e.g. the
+    Pareto weight ``rho``), so one sweep can also span strategy variants.
+    """
+    from .batched import batch_log_normalizing_constants
+
+    m_grid = jnp.asarray(m_grid, dtype=jnp.int64)
+    B = int(m_grid.shape[0])
+    n = params.n
+    m_top = int(jnp.max(m_grid))
+    m_pad = m_top if m_max is None else m_max
+    if m_pad < m_top:
+        # jit'd gathers clamp out-of-range indices silently — fail loudly
+        # instead of returning plausible-but-truncated objective values
+        raise ValueError(
+            f"m_max={m_pad} must cover max(m_grid)={m_top}; the padded "
+            "objective must be built with the same m_max")
+    obj_pad = getattr(objective, "m_max", None)
+    if obj_pad is not None and obj_pad != m_pad:
+        raise ValueError(
+            f"objective was built with m_max={obj_pad} but this sweep pads "
+            f"logZ to m_max={m_pad}; the paddings must match")
+
+    p0 = jnp.full((n,), 1.0 / n) if p_init is None else jnp.asarray(p_init)
+    theta0 = jnp.log(jnp.clip(p0, 1e-12))
+    if theta0.ndim == 1:
+        theta0 = jnp.broadcast_to(theta0, (B, n))
+
+    def row_values(thetas):
+        ps = jax.nn.softmax(thetas, axis=-1)
+        logZ = batch_log_normalizing_constants(params, ps, m_pad,
+                                               backend=backend)
+        if ctx is None:
+            vals = jax.vmap(objective)(ps, m_grid, logZ)
+        else:
+            vals = jax.vmap(objective)(ps, m_grid, logZ, ctx)
+        return ps, vals
+
+    def loss(thetas):
+        return jnp.sum(row_values(thetas)[1])
+
+    theta, _ = _adam_minimize(loss, theta0, steps, lr)
+    ps, vals = row_values(theta)  # one eager final evaluation — no re-jit
+
+    m_np = np.asarray(m_grid)
+    vals_np = np.asarray(vals)
+    b = int(np.argmin(vals_np))
+    best = OptResult(p=ps[b], m=int(m_np[b]), value=float(vals_np[b]),
+                     history=[(int(m), float(v))
+                              for m, v in zip(m_np, vals_np)])
+    return SweepResult(p=ps, m_grid=m_np, values=vals_np, best=best)
+
+
+def pareto_sweep(params: NetworkParams, consts, power, rhos, tau_star,
+                 e_star, *, m_max: int, **kw
+                 ) -> tuple[SweepResult, list[OptResult]]:
+    """Trace the Eq.-18 time-energy frontier in ONE batched sweep.
+
+    Optimizes the joint objective over the full ``rhos x (1..m_max)``
+    product grid (``rho`` rides the ctx batch) and argmins per rho.
+    Returns the raw :class:`SweepResult` (rows ordered rho-major, matching
+    ``np.tile(m_cands, len(rhos))``) plus one :class:`OptResult` per rho
+    whose ``history`` is that rho's ``(m, value)`` slice.
+    """
+    from .batched import make_joint_objective_padded
+
+    m_cands = np.arange(1, m_max + 1)
+    mm = jnp.asarray(np.tile(m_cands, len(rhos)))
+    rr = jnp.asarray(np.repeat(np.asarray(rhos, dtype=np.float64),
+                               len(m_cands)))
+    sweep = batched_concurrency_sweep(
+        make_joint_objective_padded(params, consts, power, tau_star, e_star,
+                                    m_max), params,
+        m_grid=mm, ctx=rr, m_max=m_max, **kw)
+    vals = sweep.values.reshape(len(rhos), len(m_cands))
+    per_rho = []
+    for r_i in range(len(rhos)):
+        b = r_i * len(m_cands) + int(np.argmin(vals[r_i]))
+        per_rho.append(OptResult(
+            p=sweep.p[b], m=int(sweep.m_grid[b]),
+            value=float(sweep.values[b]),
+            history=[(int(m), float(v)) for m, v in zip(m_cands, vals[r_i])]))
+    return sweep, per_rho
 
 
 def sequential_concurrency_search(
@@ -159,9 +298,18 @@ def make_joint_objective(params: NetworkParams, consts: LearningConstants,
 
 
 def time_optimal(params: NetworkParams, consts: LearningConstants,
-                 m_max: Optional[int] = None, **kw) -> OptResult:
+                 m_max: Optional[int] = None, *, search: str = "batched",
+                 **kw) -> OptResult:
     """(p*_tau, m*_tau): jointly time-optimal routing and concurrency."""
     m_max = m_max or params.n + 32
+    if search == "batched":
+        from .batched import make_time_objective_padded
+
+        kw.pop("patience", None)  # full grid — no early stop to tune
+        res = batched_concurrency_sweep(
+            make_time_objective_padded(params, consts, m_max), params,
+            m_grid=jnp.arange(2, m_max + 1), **kw)
+        return res.best
     return sequential_concurrency_search(
         make_time_objective(params, consts), params.n, m_start=2, m_max=m_max, **kw)
 
@@ -177,8 +325,19 @@ def max_throughput(params: NetworkParams, m: int, **kw) -> OptResult:
 
 def joint_optimal(params: NetworkParams, consts: LearningConstants,
                   power: PowerProfile, rho: float, tau_star: float,
-                  e_star: float, m_max: Optional[int] = None, **kw) -> OptResult:
+                  e_star: float, m_max: Optional[int] = None, *,
+                  search: str = "batched", **kw) -> OptResult:
     m_max = m_max or params.n + 32
+    if search == "batched":
+        from .batched import make_joint_objective_padded
+
+        kw.pop("patience", None)
+        m_grid = jnp.arange(1, m_max + 1)
+        res = batched_concurrency_sweep(
+            make_joint_objective_padded(params, consts, power, tau_star,
+                                        e_star, m_max), params,
+            m_grid=m_grid, ctx=jnp.full(m_grid.shape, rho), **kw)
+        return res.best
     return sequential_concurrency_search(
         make_joint_objective(params, consts, power, rho, tau_star, e_star),
         params.n, m_start=1, m_max=m_max, **kw)

@@ -64,7 +64,9 @@ class SimStats:
     updates: int
     time: float
     throughput: float
-    mean_delay: np.ndarray          # [n] E^0[D_i] estimate (0 where no samples)
+    # [n] unscaled per-client conditional mean delay E0[R_i], 0 where no
+    # samples; E0[D_i] of Theorem 2 is p_i * mean_delay[i]
+    mean_delay: np.ndarray
     delay_counts: np.ndarray        # [n] number of updates per client
     energy: float
     mean_queue_counts: np.ndarray   # [3n(+1)] time-averaged station occupancy
@@ -249,7 +251,7 @@ class AsyncNetworkSim:
         return SimStats(
             updates=num_updates,
             time=horizon,
-            throughput=num_updates / horizon,
+            throughput=num_updates / horizon if horizon > 0 else 0.0,
             mean_delay=mean_delay,
             delay_counts=self.delay_cnt.copy(),
             energy=self.energy,

@@ -70,7 +70,10 @@ def cnn_classifier(image_size: int, num_classes: int,
         return jax.nn.relu(out + b)
 
     def apply(params, x):
-        h = conv(x, params["conv1"]["w"], params["conv1"]["b"])
+        # the queueing core enables x64, so host batches arrive as float64;
+        # conv (unlike matmul) refuses mixed dtypes — keep the model in f32
+        h = conv(x.astype(params["conv1"]["w"].dtype),
+                 params["conv1"]["w"], params["conv1"]["b"])
         h = conv(h, params["conv2"]["w"], params["conv2"]["b"])
         h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                   (1, 2, 2, 1), "VALID")

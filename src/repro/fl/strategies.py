@@ -20,9 +20,8 @@ import numpy as np
 
 from ..core import (LearningConstants, NetworkParams, PowerProfile,
                     energy_optimal_routing, joint_optimal, make_round_objective,
-                    make_throughput_objective, make_time_objective,
-                    minimal_energy, optimize_routing,
-                    sequential_concurrency_search)
+                    make_throughput_objective, minimal_energy,
+                    optimize_routing, time_optimal)
 
 
 @dataclasses.dataclass
@@ -129,9 +128,7 @@ def make_strategies(
         out["round_opt"] = (np.asarray(res.p), m_full)
 
     if "time_opt" in which:
-        res = sequential_concurrency_search(
-            make_time_objective(params, consts), n, m_start=2, m_max=m_max,
-            steps=steps, patience=3)
+        res = time_optimal(params, consts, m_max=m_max, steps=steps)
         out["time_opt"] = (np.asarray(res.p), res.m)
 
     if "energy_opt" in which:
@@ -146,13 +143,11 @@ def make_strategies(
             tau_star = float(wallclock_time(params._replace(p=jnp.asarray(p_tau)),
                                             m_tau, consts))
         else:
-            res = sequential_concurrency_search(
-                make_time_objective(params, consts), n, m_start=2, m_max=m_max,
-                steps=steps, patience=3)
-            tau_star = res.value
+            tau_star = time_optimal(params, consts, m_max=m_max,
+                                    steps=steps).value
         e_star = float(minimal_energy(params, consts, power))
         res = joint_optimal(params, consts, power, rho, tau_star, e_star,
-                            m_max=m_max, steps=steps, patience=3)
+                            m_max=m_max, steps=steps)
         out["joint"] = (np.asarray(res.p), res.m)
 
     return out

@@ -45,6 +45,8 @@ class TrainLog:
     accuracies: list
     losses: list
     updates: list        # cumulative update count at eval points
+    # [n] unscaled per-client conditional mean delay E0[R_i] (same estimator
+    # as SimStats.mean_delay); E0[D_i] of Thm 2 is p_i * mean_delay[i]
     mean_delay: np.ndarray | None = None
     throughput: float = 0.0
     energy: float = 0.0
@@ -130,6 +132,11 @@ class AsyncFLTrainer:
             ev = sim.next_update()
             if ev.time > horizon_time or k >= max_updates:
                 break
+            # grid points strictly before the update event see the
+            # pre-update snapshot (the update lands exactly at ev.time)
+            while next_eval < ev.time:
+                self._log_eval(log, params, next_eval, k)
+                next_eval += self.cfg.eval_every_time
             stale = payloads.pop(ev.task_id)
             x, y = self._batch(ev.client)
             scale = self.cfg.eta / (self.n * self.p[ev.client])
@@ -139,14 +146,24 @@ class AsyncFLTrainer:
             _, tid = sim.dispatch_next()
             payloads[tid] = params
 
+            # a grid point landing exactly on the update instant sees the
+            # post-update params (exact hits are real under deterministic
+            # service laws, where event times are rational sums)
             while ev.time >= next_eval:
                 self._log_eval(log, params, next_eval, k)
                 next_eval += self.cfg.eval_every_time
-        # final eval at horizon
-        self._log_eval(log, params, min(sim.t, horizon_time), k)
+        # fill grid points between the last update and the horizon, then a
+        # final eval at the horizon itself
+        t_end = min(sim.t, horizon_time)
+        while next_eval < t_end:
+            self._log_eval(log, params, next_eval, k)
+            next_eval += self.cfg.eval_every_time
+        self._log_eval(log, params, t_end, k)
         stats_delay = np.where(sim.delay_cnt > 0,
                                sim.delay_sum / np.maximum(sim.delay_cnt, 1), 0.0)
-        log.mean_delay = self.p * stats_delay
+        # E0[D_i] of Theorem 2 is the *unscaled* per-client conditional mean,
+        # exactly what AsyncNetworkSim.run reports (SimStats.mean_delay)
+        log.mean_delay = stats_delay
         log.throughput = k / max(sim.t, 1e-9)
         log.energy = sim.energy
         self.final_params = params

@@ -2,22 +2,37 @@
 
 This is the paper's algorithmic inner loop: the routing/concurrency
 optimizer re-evaluates the normalization constants ``Z_{n, 0..m}`` at every
-Adam step.  The DP is sequential over stations but fully vectorizable over
-the population dimension ``m`` (lane axis) — a natural TPU layout:
+Adam step, for every candidate concurrency.  The DP is sequential over
+stations but fully vectorizable over the population dimension ``m`` (lane
+axis) *and* over the batch of routing vectors (grid axis) — a natural TPU
+layout:
 
+  * grid ``(B, n_stations)``: batch rows are independent (``parallel``
+    semantics), stations run the sequential recursion (``arbitrary``);
   * the running log-constant row ``U[0..m]`` lives in VMEM scratch across
-    the sequential station grid axis;
+    the station axis, initialized from the aggregated infinite-server
+    Poisson factor at station 0 of each row;
   * each station performs the log-space truncated convolution
     ``U'[m] = logsumexp_k (k * log_rho_i + U[m - k])`` as a single
-    (m+1, m+1) masked reduction in VMEM (m ~ O(100) so the tile is ~64 KB);
-  * the aggregated infinite-server Poisson factor is the row initializer.
+    ``(m+1, m+1)`` masked reduction in VMEM (m ~ O(100), so ~64 KB).
 
-Validated in interpret mode against the jnp implementation in
-``repro.core.buzen`` (itself validated against brute-force enumeration).
+Public entry points:
+
+  * :func:`buzen_pallas_batched` — raw float32 kernel, ``[B, S] -> [B, m+1]``;
+    compiled when running on TPU, interpret fallback elsewhere.
+  * :func:`buzen_log_Z_batched` — differentiable wrapper: float32 Pallas
+    forward, VJP through the float64 ``jnp`` reference DP (the kernel itself
+    has no autodiff rule), so the batched optimizer can run on this backend.
+  * :func:`buzen_pallas` — single-row compatibility wrapper (``B = 1``).
+
+Validated in interpret mode against ``repro.core.buzen`` (itself validated
+against brute-force state enumeration) in ``tests/test_kernels.py`` and
+``tests/test_batched_optimizer.py``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,16 +41,20 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 
 def _buzen_kernel(rho_ref, init_ref, out_ref, u_scr, *, n_stations: int,
                   m_pad: int):
-    i = pl.program_id(0)
+    i = pl.program_id(1)
 
     @pl.when(i == 0)
     def _init():
-        u_scr[...] = init_ref[...]  # aggregated IS Poisson factor row
+        u_scr[...] = init_ref[0]  # aggregated IS Poisson factor row
 
-    log_rho = rho_ref[0]
+    log_rho = rho_ref[0, 0]
     u = u_scr[...]  # [m_pad]
     # T[m, k] = k * log_rho + U[m - k], masked to k <= m
     mm = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 0)
@@ -53,36 +72,101 @@ def _buzen_kernel(rho_ref, init_ref, out_ref, u_scr, *, n_stations: int,
 
     @pl.when(i == n_stations - 1)
     def _finalize():
-        out_ref[...] = u_scr[...]
+        out_ref[0] = u_scr[...]
 
 
-def buzen_pallas(log_rho: jax.Array, log_gamma_total: jax.Array, m_max: int,
-                 *, interpret: bool = True) -> jax.Array:
-    """log Z_{n, 0..m_max} for n single-server stations with log-loads
-    ``log_rho`` plus an aggregated IS station with log-load
-    ``log_gamma_total``."""
-    from jax.scipy.special import gammaln
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
 
-    n = log_rho.shape[0]
+
+@functools.partial(jax.jit, static_argnames=("m_max", "interpret"))
+def buzen_pallas_batched(log_rho: jax.Array, log_gamma_total: jax.Array,
+                         m_max: int, *,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """``log Z_{., 0..m_max}`` for a batch of networks.
+
+    ``log_rho`` is ``[B, S]`` single-server log-loads (S stations per row —
+    include the CS station as an extra column if modelled) and
+    ``log_gamma_total`` is ``[B]`` aggregated infinite-server log-loads.
+    Returns float32 ``[B, m_max + 1]``.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    B, n = log_rho.shape
     m_pad = m_max + 1
     k = jnp.arange(m_pad, dtype=jnp.float32)
-    init_row = (k * log_gamma_total.astype(jnp.float32)
-                - gammaln(k + 1.0)).astype(jnp.float32)
+    from jax.scipy.special import gammaln
+    init_rows = (k[None, :] * log_gamma_total[:, None].astype(jnp.float32)
+                 - gammaln(k + 1.0)[None, :]).astype(jnp.float32)
     rho32 = log_rho.astype(jnp.float32)
 
     kernel = functools.partial(_buzen_kernel, n_stations=n, m_pad=m_pad)
-    out = pl.pallas_call(
+    return pl.pallas_call(
         kernel,
-        grid=(n,),
+        grid=(B, n),
         in_specs=[
-            pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((m_pad,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, i)),
+            pl.BlockSpec((1, m_pad), lambda b, i: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((m_pad,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+        out_specs=pl.BlockSpec((1, m_pad), lambda b, i: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m_pad), jnp.float32),
         scratch_shapes=[pltpu.VMEM((m_pad,), jnp.float32)],
-        interpret=interpret,
-        compiler_params=None if interpret else pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
-    )(rho32, init_row)
-    return out
+        interpret=interp,
+        compiler_params=None if interp else _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(rho32, init_rows)
+
+
+def _reference_log_Z(log_rho: jax.Array, log_gamma_total: jax.Array,
+                     m_max: int) -> jax.Array:
+    """Float64 ``jnp`` DP on the same ``[B, S]``/``[B]`` layout — VJP donor
+    for :func:`buzen_log_Z_batched` (matches ``core.buzen`` "aggregate")."""
+    from ..core.buzen import _geometric_series, _log_conv, _poisson_series
+
+    def one(lr_row, lg):
+        logZ = _poisson_series(lg, m_max)
+
+        def fold(carry, lr):
+            return _log_conv(carry, _geometric_series(lr, m_max)), None
+
+        logZ, _ = jax.lax.scan(fold, logZ, lr_row)
+        return logZ
+
+    return jax.vmap(one)(log_rho, log_gamma_total)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def buzen_log_Z_batched(log_rho: jax.Array, log_gamma_total: jax.Array,
+                        m_max: int) -> jax.Array:
+    """Differentiable batched Buzen DP: Pallas forward, reference VJP.
+
+    Forward runs the float32 TPU kernel (interpret fallback off-TPU) and
+    casts back to the input dtype; the backward pass differentiates the
+    float64 ``jnp`` recursion at the same primal point, so ``jax.grad``
+    through the routing optimizer works on this backend.
+    """
+    out = buzen_pallas_batched(log_rho, log_gamma_total, m_max)
+    return out.astype(log_rho.dtype)
+
+
+def _buzen_log_Z_fwd(log_rho, log_gamma_total, m_max):
+    return (buzen_log_Z_batched(log_rho, log_gamma_total, m_max),
+            (log_rho, log_gamma_total))
+
+
+def _buzen_log_Z_bwd(m_max, residuals, g):
+    log_rho, log_gamma_total = residuals
+    _, vjp = jax.vjp(
+        lambda lr, lg: _reference_log_Z(lr, lg, m_max), log_rho,
+        log_gamma_total)
+    return vjp(g.astype(log_rho.dtype))
+
+
+buzen_log_Z_batched.defvjp(_buzen_log_Z_fwd, _buzen_log_Z_bwd)
+
+
+def buzen_pallas(log_rho: jax.Array, log_gamma_total: jax.Array, m_max: int,
+                 *, interpret: Optional[bool] = None) -> jax.Array:
+    """Single-network compatibility wrapper: ``[n] -> [m_max + 1]``."""
+    return buzen_pallas_batched(log_rho[None, :],
+                                jnp.asarray(log_gamma_total)[None], m_max,
+                                interpret=interpret)[0]

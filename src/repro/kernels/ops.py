@@ -11,14 +11,10 @@ from typing import Optional
 
 import jax
 
-from .buzen import buzen_pallas
+from .buzen import buzen_pallas, default_interpret
 from .decode_attention import decode_attention_pallas
 from .flash_attention import flash_attention_pallas
 from .fused_update import fused_async_update as _fused_update
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",

@@ -107,8 +107,10 @@ def test_async_training_learns():
     assert log.accuracies[-1] > 0.5        # well above 1/8 chance
     assert log.losses[-1] < log.losses[0]
     assert log.throughput > 0
-    # staleness identity holds approximately in-sim
-    assert abs(np.sum(log.mean_delay) - (6 - 1)) < 1.5
+    # staleness identity (Eq. 7): sum_i p_i E0[R_i] = m - 1; mean_delay is
+    # the unscaled per-client conditional mean, matching SimStats.mean_delay
+    p = np.asarray(net.p)
+    assert abs(np.sum(p * log.mean_delay) - (6 - 1)) < 1.5
 
 
 def test_async_training_nonexponential():
@@ -139,6 +141,66 @@ def test_bias_correction_unbiased_updates():
                         test_data=test)
     log = tr.run(horizon_time=250.0)
     assert log.accuracies[-1] > 0.4
+
+
+def test_trainer_delay_matches_simulator():
+    """Trainer-side and simulator-side mean-delay estimates agree exactly on
+    the same seed (regression: the trainer used to report p_i-scaled values
+    while AsyncNetworkSim.run reported unscaled conditional means)."""
+    from repro.core.simulator import AsyncNetworkSim
+
+    clients, test, net = _small_setup(seed=5)
+    model = mlp_classifier(28 * 28, 8, hidden=(16,))
+    K = 400
+    tr = AsyncFLTrainer(model, clients, net, m=5,
+                        config=AsyncFLConfig(eta=0.05, batch_size=16,
+                                             eval_every_time=1e9, seed=7))
+    log = tr.run(horizon_time=1e9, max_updates=K)
+    # the trainer's break happens after next_update() has applied one more
+    # event to the sim statistics, hence K + 1 below
+    sim = AsyncNetworkSim(net, 5, seed=7)
+    stats = sim.run(K + 1)
+    np.testing.assert_allclose(log.mean_delay, stats.mean_delay,
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_simstats_zero_updates_guarded():
+    """run(0) must not divide by a zero horizon."""
+    from repro.core.simulator import AsyncNetworkSim
+
+    rng = np.random.default_rng(0)
+    net = NetworkParams(p=jnp.full((3,), 1 / 3),
+                        mu_c=jnp.asarray(rng.uniform(0.5, 2.0, 3)),
+                        mu_d=jnp.asarray(rng.uniform(0.5, 2.0, 3)),
+                        mu_u=jnp.asarray(rng.uniform(0.5, 2.0, 3)))
+    stats = AsyncNetworkSim(net, 2, seed=0).run(0)
+    assert stats.throughput == 0.0
+    assert np.isfinite(stats.throughput)
+
+
+def test_eval_grid_uses_pre_update_snapshot():
+    """Grid times strictly before an update event must log the pre-update
+    parameters: with one eval point between update k and k+1, the logged
+    update counter at that grid time is k, not k+1."""
+    clients, test, net = _small_setup(seed=6)
+    model = mlp_classifier(28 * 28, 8, hidden=(16,))
+    tr = AsyncFLTrainer(model, clients, net, m=3,
+                        config=AsyncFLConfig(eta=0.05, batch_size=16,
+                                             eval_every_time=0.25, seed=3),
+                        test_data=test)
+    log = tr.run(horizon_time=30.0, max_updates=200)
+    sim = __import__("repro.core.simulator", fromlist=["AsyncNetworkSim"]) \
+        .AsyncNetworkSim(net, 3, seed=3)
+    # replay the event times: the update count logged at grid time t must be
+    # the number of updates with ev.time <= t
+    times = []
+    for _ in range(200):
+        ev = sim.next_update()
+        sim.dispatch_next()
+        times.append(ev.time)
+    times = np.asarray(times)
+    for t, k in zip(log.times[:-1], log.updates[:-1]):  # last entry is at horizon
+        assert k == int(np.sum(times <= t)), (t, k, int(np.sum(times <= t)))
 
 
 def test_cnn_forward():
