@@ -5,14 +5,13 @@ from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import LearningConstants
 from repro.data import (dirichlet_partition, make_synthetic_image_dataset,
                         train_test_split)
-from repro.fl import AsyncFLConfig, AsyncFLTrainer, make_strategies, \
-    mlp_classifier
+from repro.fl import (AsyncFLConfig, make_strategies, mlp_classifier,
+                      run_strategy_grid)
 from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
                                  build_power_profile)
 
@@ -40,20 +39,20 @@ def run(scale: int = 10, horizon: float = 240.0, target: float = 0.55,
 
     t0 = time.perf_counter()
     for dist in dists:
+        # both strategies x all seeds in ONE fused, vmapped device scan
+        cfg = AsyncFLConfig(eta=0.05, batch_size=32,
+                            eval_every_time=horizon / 60,
+                            distribution=dist, grad_clip=5.0)
+        model = mlp_classifier(28 * 28, 10, hidden=(64,))
+        grid = run_strategy_grid(
+            model, clients, net,
+            {k: strat[k] for k in ("asyncsgd", "joint")}, cfg,
+            horizon_time=horizon, seeds=seeds, etas=0.05,
+            test_data=test, power=power)
         res = {}
-        for name in ("asyncsgd", "joint"):
-            p, m = strat[name]
+        for name, logs in grid.logs.items():
             ts, es = [], []
-            for seed in seeds:
-                model = mlp_classifier(28 * 28, 10, hidden=(64,))
-                tr = AsyncFLTrainer(
-                    model, clients, net._replace(p=jnp.asarray(p)), m,
-                    config=AsyncFLConfig(eta=0.05, batch_size=32,
-                                         eval_every_time=horizon / 60,
-                                         distribution=dist, seed=seed,
-                                         grad_clip=5.0),
-                    test_data=test, power=power)
-                log = tr.run(horizon_time=horizon)
+            for log in logs:
                 t_hit = log.time_to_accuracy(target)
                 ts.append(t_hit)
                 # energy consumed up to the hit time (linear interpolation of

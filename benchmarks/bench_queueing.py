@@ -2,12 +2,14 @@
 Buzen variants (literal vs aggregated vs Pallas kernel), gradient paths."""
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (NetworkParams, delay_jacobian, expected_relative_delay,
-                        throughput)
+                        simulate_stats, throughput)
 from repro.core.buzen import log_normalizing_constants
 from repro.core.simulator import AsyncNetworkSim
 from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
@@ -37,12 +39,22 @@ def run() -> list[str]:
                    "interpret_mode(cpu)"))
 
     # --- Theorem 2: closed-form delay vs Monte-Carlo ------------------------
+    # the MC sweep runs on the jitted device event engine; the host heap
+    # simulator stays as the exact per-task-identity reference it is
+    # cross-checked against (one row records host-vs-device agreement)
     small = build_network_params(PAPER_CLUSTERS_TABLE1, scale=10)  # n = 11
     msml = 12
     d_th = np.asarray(expected_relative_delay(small, msml))
-    sim = AsyncNetworkSim(small, msml, seed=0)
-    stats = sim.run(60_000, warmup=8_000)
-    d_mc = np.asarray(small.p) * stats.mean_delay
+
+    t0 = time.perf_counter()
+    stats = simulate_stats(small, msml, 60_000, warmup=8_000, seed=0)
+    stats.throughput.block_until_ready()
+    dev_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    host = AsyncNetworkSim(small, msml, seed=0).run(60_000, warmup=8_000)
+    host_s = time.perf_counter() - t0
+
+    d_mc = np.asarray(small.p) * np.asarray(stats.mean_delay)
     rel = float(np.max(np.abs(d_mc - d_th) / np.maximum(d_th, 1e-3)))
     us = time_us(jax.jit(lambda p: expected_relative_delay(
         small._replace(p=p), msml)), small.p)
@@ -51,7 +63,11 @@ def run() -> list[str]:
 
     lam_th = float(throughput(small, msml))
     out.append(row("prop4_throughput_n11_m12", 0.0,
-                   f"sim={stats.throughput:.3f}_theory={lam_th:.3f}"))
+                   f"sim={float(stats.throughput):.3f}_theory={lam_th:.3f}"))
+    rel_host = abs(float(stats.throughput) - host.throughput) / host.throughput
+    out.append(row("event_engine_60k_updates_n11_m12", dev_s * 1e6,
+                   f"host_heap_s={host_s:.2f}_dev_s={dev_s:.2f}"
+                   f"_rel_thr_vs_host={rel_host:.4f}"))
 
     # --- Jacobian: closed form vs autodiff ----------------------------------
     us_cf = time_us(jax.jit(lambda p: delay_jacobian(

@@ -1,7 +1,14 @@
 """Table 3 analogue: wall-clock time reduction of the time-optimized
 configuration (p*_tau, m*_tau) vs AsyncSGD / Max-Throughput / Round-Opt on
 synthetic-EMNIST async FL training (Dirichlet non-IID), across service-time
-distributions.  Paper reports 29-46% reduction vs AsyncSGD (Table 3)."""
+distributions.  Paper reports 29-46% reduction vs AsyncSGD (Table 3).
+
+The comparison runs on the fused device engine (``repro.fl.engine``): the
+whole strategies x seeds grid is ONE jitted, vmapped scan.
+``run_engine_sweep`` additionally measures that hot path against the host
+event-loop reference (``backend="host"``) — the multi-seed speedup and the
+statistics agreement are the PR-over-PR tracked numbers in
+``BENCH_smoke.json``."""
 from __future__ import annotations
 
 import time
@@ -12,57 +19,44 @@ import numpy as np
 from repro.core import LearningConstants
 from repro.data import (dirichlet_partition, make_synthetic_image_dataset,
                         train_test_split)
-from repro.fl import (AsyncFLConfig, AsyncFLTrainer, make_strategies,
-                      mlp_classifier)
-from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
+from repro.fl import (AsyncFLConfig, AsyncFLTrainer, DeviceTrainer,
+                      make_strategies, mlp_classifier, run_strategy_grid)
+from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
+                                 default_etas, strategy_batch)
 
 from .common import row
 
 CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
 
 
-def time_to_acc(strategy, p, m, net, clients, test, dist, horizon, target,
-                eta, seed=0):
-    model = mlp_classifier(28 * 28, test[1].max() + 1, hidden=(64,))
-    tr = AsyncFLTrainer(
-        model, clients, net._replace(p=jnp.asarray(p)), m,
-        config=AsyncFLConfig(eta=eta, batch_size=32,
-                             eval_every_time=horizon / 60,
-                             distribution=dist, seed=seed, grad_clip=5.0),
-        test_data=test)
-    log = tr.run(horizon_time=horizon)
-    return log.time_to_accuracy(target), log
+def _problem(scale, seed_data=0):
+    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=scale)
+    full = make_synthetic_image_dataset(num_classes=10, samples_per_class=120,
+                                        seed=seed_data)
+    train, test_ds = train_test_split(full, 0.2, seed=seed_data + 1)
+    parts = dirichlet_partition(train.y, net.n, alpha=0.2, seed=seed_data)
+    clients = [(train.x[i], train.y[i]) for i in parts]
+    return net, clients, (test_ds.x, test_ds.y)
 
 
 def run(scale: int = 10, horizon: float = 240.0, target: float = 0.55,
         distributions=("exponential", "lognormal"), seeds=(0, 1)) -> list[str]:
     out = []
-    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=scale)
+    net, clients, test = _problem(scale)
     n = net.n
     strat = make_strategies(net, CONSTS, steps=200, m_max=n + 6)
 
-    full = make_synthetic_image_dataset(num_classes=10, samples_per_class=120,
-                                        seed=0)
-    train, test_ds = train_test_split(full, 0.2, seed=1)
-    parts = dirichlet_partition(train.y, n, alpha=0.2, seed=0)
-    clients = [(train.x[i], train.y[i]) for i in parts]
-    test = (test_ds.x, test_ds.y)
-
-    # max-throughput is unstable at the baseline lr (paper: needed 20x lower)
-    etas = {"asyncsgd": 0.05, "round_opt": 0.05, "time_opt": 0.05,
-            "max_throughput": 0.01}
-
     t0 = time.perf_counter()
     for dist in distributions:
-        times = {}
-        for name, (p, m) in strat.items():
-            ts = []
-            for seed in seeds:
-                t, _ = time_to_acc(name, p, m, net, clients, test, dist,
-                                   horizon, target, etas[name], seed)
-                ts.append(t)
-            times[name] = float(np.mean(ts))
-        base = times["asyncsgd"]
+        cfg = AsyncFLConfig(batch_size=32, eval_every_time=horizon / 60,
+                            distribution=dist, grad_clip=5.0)
+        model = mlp_classifier(28 * 28, int(test[1].max()) + 1, hidden=(64,))
+        grid = run_strategy_grid(model, clients, net, strat, cfg,
+                                 horizon_time=horizon, seeds=seeds,
+                                 etas=default_etas(strat), test_data=test)
+        times = {name: float(np.mean([log.time_to_accuracy(target)
+                                      for log in logs]))
+                 for name, logs in grid.logs.items()}
         summary = ";".join(f"{k}={v:.1f}" for k, v in times.items())
         out.append(row(f"table3_time_to_{target}_{dist}", 0.0, summary))
         for other in ("asyncsgd", "max_throughput", "round_opt"):
@@ -74,4 +68,77 @@ def run(scale: int = 10, horizon: float = 240.0, target: float = 0.55,
                            f"{red:.1f}%"))
     us = (time.perf_counter() - t0) * 1e6
     out.append(row("table3_total_bench", us, f"target={target}"))
+    return out
+
+
+def run_engine_sweep(scale: int = 20, horizon: float = 40.0,
+                     seeds=tuple(range(8))) -> list[str]:
+    """Multi-seed strategy comparison on the fused engine vs the host loop.
+
+    The acceptance workload of the event-engine PR: >= 8 seeds x the four
+    Table-3 strategies.  Records (a) wall-clock of the host event loop, of
+    the first fused call (incl. compile) and of a steady-state fused call;
+    (b) throughput / staleness / energy agreement between the engines."""
+    out = []
+    net, clients, test = _problem(scale)
+    n = net.n
+    strat = make_strategies(net, CONSTS, steps=150, m_max=n + 6)
+    names, p_mat, m_vec, eta_vec = strategy_batch(strat)
+    cfg = AsyncFLConfig(batch_size=32, eval_every_time=horizon / 20,
+                        eval_batch=256, grad_clip=5.0)
+    model = mlp_classifier(28 * 28, int(test[1].max()) + 1, hidden=(64,))
+    seeds = list(seeds)
+
+    # -- host reference loop (one python event loop per lane) ---------------
+    t0 = time.perf_counter()
+    host_stats = []
+    for name, p, m, eta in zip(names, p_mat, m_vec, eta_vec):
+        for seed in seeds:
+            tr = AsyncFLTrainer(
+                model, clients, net._replace(p=jnp.asarray(p)), int(m),
+                config=AsyncFLConfig(eta=float(eta), batch_size=32,
+                                     eval_every_time=horizon / 20,
+                                     eval_batch=256,
+                                     grad_clip=5.0, seed=seed,
+                                     backend="host"),
+                test_data=test)
+            log = tr.run(horizon_time=horizon)
+            host_stats.append((log.throughput,
+                               float(np.sum(p * log.mean_delay)), int(m)))
+    host_s = time.perf_counter() - t0
+
+    # -- fused device engine: whole grid in bucketed vmapped scans ----------
+    dev = DeviceTrainer(model, clients, net, cfg, test_data=test)
+    lanes_p = [p for p in p_mat for _ in seeds]
+    lanes_m = [int(m) for m in m_vec for _ in seeds]
+    lanes_eta = [float(e) for e in eta_vec for _ in seeds]
+    lanes_seed = [s for _ in names for s in seeds]
+    t0 = time.perf_counter()
+    logs, _ = dev.run_lanes(lanes_p, lanes_m, lanes_eta, lanes_seed, horizon)
+    dev_first_s = time.perf_counter() - t0
+    # steady state: best of two re-runs of the identical workload (compile
+    # cache fully warm; CI boxes with 2 cores are noisy, hence the min)
+    dev_s = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        logs, _ = dev.run_lanes(lanes_p, lanes_m, lanes_eta, lanes_seed,
+                                horizon)
+        dev_s = min(dev_s, time.perf_counter() - t0)
+
+    # -- agreement (seed-averaged, tolerances documented in ROADMAP) --------
+    thr_host = np.mean([t for t, _, _ in host_stats])
+    thr_dev = np.mean([log.throughput for log in logs])
+    stale_host = np.mean([s for _, s, _ in host_stats])
+    stale_dev = np.mean([float(np.sum(p * log.mean_delay))
+                         for p, log in zip(lanes_p, logs)])
+    rel_thr = abs(thr_dev - thr_host) / thr_host
+    rel_stale = abs(stale_dev - stale_host) / max(stale_host, 1e-9)
+    speed = host_s / dev_s
+    lanes = len(lanes_m)
+    out.append(row("event_engine_sweep", dev_s * 1e6,
+                   f"lanes={lanes}_seeds={len(seeds)}_host_s={host_s:.2f}"
+                   f"_dev_first_s={dev_first_s:.2f}_dev_s={dev_s:.2f}"
+                   f"_speedup={speed:.1f}x"))
+    out.append(row("event_engine_agreement", 0.0,
+                   f"rel_thr={rel_thr:.3f}_rel_staleness={rel_stale:.3f}"))
     return out

@@ -33,6 +33,12 @@ def build_suites(mode: str):
     if mode == "smoke":
         return [
             ("queueing", lambda: bench_queueing.run()),
+            # the event-engine hot path early in the suite: its wall-clock
+            # comparison vs the host loop is the PR-over-PR tracked number
+            # and should not inherit allocator/cache state from the heavier
+            # training benches
+            ("event_engine", lambda: bench_training_comparison.run_engine_sweep(
+                scale=20, horizon=40.0, seeds=tuple(range(8)))),
             ("routing_table", lambda: bench_routing_table.run(
                 scale=20, steps=30)),
             ("round_optimization", lambda: bench_round_optimization.run(
@@ -63,6 +69,9 @@ def build_suites(mode: str):
             distributions=("exponential",) if fast
             else ("exponential", "lognormal"),
             seeds=(0,) if fast else (0, 1))),
+        ("event_engine", lambda: bench_training_comparison.run_engine_sweep(
+            scale=20 if fast else 10, horizon=40.0 if fast else 80.0,
+            seeds=tuple(range(8)))),
         ("energy_joint", lambda: bench_energy_joint.run(
             horizon=120.0 if fast else 240.0, seeds=(0,) if fast else (0, 1))),
         ("kernels", lambda: bench_kernels.run()),

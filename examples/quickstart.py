@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (LearningConstants, expected_relative_delay,
-                        throughput, time_optimal, wallclock_time)
+                        simulate_stats, throughput, time_optimal,
+                        wallclock_time)
 from repro.core.simulator import AsyncNetworkSim
 from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
 
@@ -35,10 +36,13 @@ def main():
     print(f"  throughput lambda = {lam:.3f} updates/unit-time")
     print(f"  E0[tau_eps]      = {float(wallclock_time(net, m, consts)):.1f}")
 
-    # validate against the exact discrete-event simulator
+    # validate against both simulators: the jitted device event engine (the
+    # hot path) and the exact per-task-identity host reference
+    dev = simulate_stats(net, m, 40_000, warmup=5_000, seed=0)
     sim = AsyncNetworkSim(net, m, seed=0)
     stats = sim.run(40_000, warmup=5_000)
-    print(f"  simulator lambda = {stats.throughput:.3f}  "
+    print(f"  device-engine lambda = {float(dev.throughput):.3f}, "
+          f"host-reference lambda = {stats.throughput:.3f}  "
           f"(closed form {lam:.3f})")
 
     # jointly optimize routing + concurrency for wall-clock time (Section 5):

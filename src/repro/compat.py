@@ -1,0 +1,27 @@
+"""Compatibility shims across the jax versions this repo runs on.
+
+The container pins an older jax (0.4.x) than some of the sharding helpers
+were written against; everything version-dependent funnels through here so
+call sites stay clean:
+
+  * ``jax.sharding.AxisType`` and the ``axis_types=`` kwarg of
+    ``jax.make_mesh`` only exist in newer jax.  :func:`make_mesh` forwards
+    them when available and silently builds a plain mesh otherwise (older
+    jax meshes are implicitly all-auto, which is exactly what the
+    ``Auto``-typed call sites request).
+"""
+from __future__ import annotations
+
+import jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(shape, axis_names, *, auto_axes: bool = True):
+    """``jax.make_mesh`` with ``axis_types=(AxisType.Auto, ...)`` on jax
+    versions that support it, and a plain mesh on those that don't."""
+    if HAS_AXIS_TYPE and auto_axes:
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)

@@ -15,6 +15,7 @@ from .batched import (batch_log_normalizing_constants,
                       wallclock_time_padded)
 from .buzen import (NetworkParams, get_backend, log_normalizing_constants,
                     log_Z_ratio, set_backend)
+from .events import EventStats, simulate_stats
 from .complexity import (LearningConstants, eta_max, round_complexity,
                          round_complexity_unbounded, system_staleness_factor,
                          wallclock_time)
@@ -35,6 +36,7 @@ from .optimize import (OptResult, SweepResult, batched_concurrency_sweep,
 __all__ = [
     "NetworkParams", "log_normalizing_constants", "log_Z_ratio",
     "set_backend", "get_backend",
+    "EventStats", "simulate_stats",
     "batch_log_normalizing_constants", "expected_relative_delay_padded",
     "throughput_padded", "round_complexity_padded", "wallclock_time_padded",
     "energy_complexity_padded", "joint_objective_padded",

@@ -1,0 +1,420 @@
+"""Device-resident event engine for the Generalized AsyncSGD closed network.
+
+A fully-jitted JAX re-implementation of the Fig. 1 / Fig. 6 discrete-event
+dynamics: the simulation state is a **fixed-size in-flight task table** (one
+row per circulating task: station/phase, owning client, dispatch round,
+FIFO arrival sequence, absolute service-completion clock) advanced one event
+at a time by :func:`step_event` — a pure function suitable for
+``lax.scan`` / ``lax.while_loop`` and for ``jax.vmap`` over seeds and over
+padded ``(p, m)`` strategy batches (the padding conventions of
+``repro.core.batched``: the table is sized by a static ``m_max`` and slots
+``>= m`` are inactive).
+
+Exactness: service completions are *raced as absolute clocks* — a task
+entering service draws its full service time up front and the next event is
+the argmin over the table — which is exactly the semantics of the host
+reference simulator for **every** service law (exponential, deterministic,
+lognormal; Section 5.3.3), not just the memoryless case the old
+``jump_chain_throughput`` CTMC sampler handled (that sampler is now a thin
+wrapper over this engine).
+
+Contract with ``repro.core.simulator.AsyncNetworkSim``: the host heap
+simulator remains the *exact per-task-identity reference*.  The two engines
+consume randomness differently (numpy heap order vs. split JAX keys), so
+cross-checks are distributional: throughput, per-client mean relative delay,
+energy and occupancy statistics agree within Monte-Carlo tolerance on every
+service law (``tests/test_events.py``).
+
+State layout (all arrays ``[m_max]`` unless noted):
+
+  * ``client``      — owning client of the task in each slot;
+  * ``phase``       — station: DOWN(0) / COMP_WAIT(1) / COMP_SERV(2) /
+    UP(3) / CS_WAIT(4) / CS_SERV(5); INACTIVE(-1) marks padded slots;
+  * ``finish``      — absolute completion clock (``inf`` unless in service);
+  * ``seq``         — FIFO arrival order within the current queue;
+  * ``disp_round``  — round counter at dispatch (relative delay =
+    ``round - disp_round`` at completion, Section 2.4);
+  * statistics      — per-client delay sums/counts, energy integral
+    (Eq. 14), time-weighted occupancy ``[3n+1]``, measured over the
+    update-count window ``[warmup, cap)`` and time-capped by ``t_cap``.
+
+Model updates (uplink or CS completion) immediately re-dispatch a fresh
+task into the freed slot with routing ``p`` (Algorithm 1, lines 7-8) — the
+slot index is returned so a caller can attach a payload (the parameter
+snapshot ring of ``repro.fl.engine`` is indexed by slot).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import numerics  # noqa: F401  (enables x64)
+from .buzen import NetworkParams
+
+# task phases
+INACTIVE = -1
+DOWN = 0        # downlink in service (infinite-server)
+COMP_WAIT = 1   # waiting in the client's compute FIFO
+COMP_SERV = 2   # in service at the client's compute queue
+UP = 3          # uplink in service (infinite-server)
+CS_WAIT = 4     # waiting in the CS FIFO (Section 7)
+CS_SERV = 5     # in service at the CS single-server queue
+
+_BIG_SEQ = np.iinfo(np.int32).max
+_NO_CAP = np.iinfo(np.int32).max
+
+
+class EventState(NamedTuple):
+    """Carry of the event scan (one trajectory; vmap for batches)."""
+
+    t: jax.Array          # current wall-clock time
+    key: jax.Array        # PRNG carry
+    round: jax.Array      # updates completed so far (round counter k)
+    seq_ctr: jax.Array    # global FIFO arrival counter
+    client: jax.Array     # [m_max]
+    phase: jax.Array      # [m_max]
+    finish: jax.Array     # [m_max]
+    seq: jax.Array        # [m_max]
+    disp_round: jax.Array  # [m_max]
+    # statistics window: update-count window [warmup, cap), time cap t_cap
+    warmup: jax.Array
+    cap: jax.Array
+    t_cap: jax.Array
+    t0: jax.Array         # time of update #warmup (stats origin)
+    t1: jax.Array         # time of update #cap (stats end)
+    delay_sum: jax.Array  # [n]
+    delay_cnt: jax.Array  # [n]
+    energy: jax.Array     # scalar, Eq. 14 time integral
+    occ_int: jax.Array    # [3n+1] time-weighted station occupancy
+
+
+class EventOut(NamedTuple):
+    """Per-event emission of :func:`step_event`."""
+
+    is_update: jax.Array
+    time: jax.Array
+    slot: jax.Array    # task-table row of the completed task (payload key)
+    client: jax.Array  # C_k — client whose gradient would be applied
+    delay: jax.Array   # relative delay round - dispatch_round
+
+
+class UpdateOut(NamedTuple):
+    """Result of :func:`next_update` (one model update)."""
+
+    time: jax.Array
+    slot: jax.Array
+    client: jax.Array
+    delay: jax.Array
+    steps: jax.Array   # events consumed to reach this update
+
+
+class EventStats(NamedTuple):
+    """Device analogue of ``repro.core.simulator.SimStats``."""
+
+    updates: jax.Array
+    time: jax.Array
+    throughput: jax.Array
+    mean_delay: jax.Array        # [n] unscaled E0[R_i], 0 where no samples
+    delay_counts: jax.Array      # [n]
+    energy: jax.Array
+    mean_queue_counts: jax.Array  # [3n+1]
+
+
+_DISTRIBUTIONS = ("exponential", "deterministic", "lognormal")
+
+
+def _draw(key: jax.Array, rate: jax.Array, distribution: str,
+          shape=()) -> jax.Array:
+    """Service time with mean ``1/rate`` (Section 5.3.3 laws)."""
+    if distribution == "exponential":
+        return jax.random.exponential(key, shape) / rate
+    if distribution == "deterministic":
+        return jnp.broadcast_to(1.0 / rate, shape)
+    if distribution == "lognormal":
+        # underlying normal variance 1, mean of LN = 1/rate
+        return jnp.exp(jax.random.normal(key, shape)
+                       - jnp.log(rate) - 0.5)
+    raise ValueError(f"unknown service distribution: {distribution}")
+
+
+def init_state(params: NetworkParams, m, key: jax.Array, *,
+               m_max: Optional[int] = None,
+               distribution: str = "exponential",
+               warmup=0, cap=_NO_CAP, t_cap=jnp.inf) -> EventState:
+    """Initial out-of-equilibrium state: ``m`` tasks dispatched uniformly at
+    random into the downlink servers at ``t = 0`` (Section 5.3.3).
+
+    ``m`` may be a traced scalar; ``m_max`` (static) sizes the task table —
+    slots ``>= m`` are inactive, following the padded conventions of
+    ``repro.core.batched``.
+    """
+    n = params.n
+    if m_max is None:
+        m_max = int(m)
+    key, k_cli, k_svc = jax.random.split(key, 3)
+    clients = jax.random.randint(k_cli, (m_max,), 0, n)
+    active = jnp.arange(m_max) < m
+    svc = _draw(k_svc, params.mu_d[clients], distribution, (m_max,))
+    return EventState(
+        t=jnp.zeros((), jnp.float64),
+        key=key,
+        round=jnp.zeros((), jnp.int32),
+        seq_ctr=jnp.zeros((), jnp.int32),
+        client=clients.astype(jnp.int32),
+        phase=jnp.where(active, DOWN, INACTIVE).astype(jnp.int32),
+        finish=jnp.where(active, svc, jnp.inf),
+        seq=jnp.zeros((m_max,), jnp.int32),
+        disp_round=jnp.zeros((m_max,), jnp.int32),
+        warmup=jnp.asarray(warmup, jnp.int32),
+        cap=jnp.asarray(cap, jnp.int32),
+        t_cap=jnp.asarray(t_cap, jnp.float64),
+        t0=jnp.zeros((), jnp.float64),
+        t1=jnp.zeros((), jnp.float64),
+        delay_sum=jnp.zeros((n,), jnp.float64),
+        delay_cnt=jnp.zeros((n,), jnp.int32),
+        energy=jnp.zeros((), jnp.float64),
+        occ_int=jnp.zeros((3 * n + 1,), jnp.float64),
+    )
+
+
+def _station_counts(phase, client, n):
+    """Per-station occupancy: down[n], comp_total[n], comp_serving[n],
+    up[n], cs_total, cs_busy."""
+    def count(mask):
+        return jnp.zeros((n,), jnp.float64).at[client].add(
+            jnp.where(mask, 1.0, 0.0))
+
+    down = count(phase == DOWN)
+    comp_total = count((phase == COMP_WAIT) | (phase == COMP_SERV))
+    comp_serving = count(phase == COMP_SERV)
+    up = count(phase == UP)
+    cs_total = jnp.sum(
+        jnp.where((phase == CS_WAIT) | (phase == CS_SERV), 1.0, 0.0))
+    cs_busy = jnp.any(phase == CS_SERV)
+    return down, comp_total, comp_serving, up, cs_total, cs_busy
+
+
+def step_event(params: NetworkParams, state: EventState, *,
+               distribution: str = "exponential",
+               power=None) -> tuple[EventState, EventOut]:
+    """Advance the network by exactly one event (one service completion).
+
+    Pure and jit/vmap-safe.  ``params.mu_cs is None`` statically selects the
+    CS-free network; ``power`` (a ``PowerProfile`` or None) statically
+    enables phase-dependent energy accounting (Eq. 14).
+    """
+    n = params.n
+    m_max = state.phase.shape[0]
+    p_norm = params.p / jnp.sum(params.p)
+    has_cs = params.mu_cs is not None
+
+    j = jnp.argmin(state.finish)
+    t_new = state.finish[j]
+    dt = t_new - state.t
+
+    # -- statistics over the sojourn ending at this event (pre-event state) --
+    measure = (state.round >= state.warmup) & (state.round < state.cap)
+    dt_eff = jnp.where(
+        measure,
+        jnp.clip(jnp.minimum(t_new, state.t_cap)
+                 - jnp.minimum(state.t, state.t_cap), 0.0, None),
+        0.0)
+    down, comp_total, comp_serving, up, cs_total, cs_busy = _station_counts(
+        state.phase, state.client, n)
+    occ = jnp.concatenate([down, comp_total, up, cs_total[None]])
+    occ_int = state.occ_int + dt_eff * occ
+    energy = state.energy
+    if power is not None:
+        pwr = (jnp.sum(power.P_c * comp_serving)
+               + jnp.sum(power.P_u * up) + jnp.sum(power.P_d * down))
+        if power.P_cs is not None:
+            pwr = pwr + power.P_cs * cs_busy
+        energy = energy + dt_eff * pwr
+
+    # -- the event itself ---------------------------------------------------
+    c = state.client[j]
+    ph = state.phase[j]
+    key, k_up, k_disp_cli, k_disp_svc, k_comp, k_cs = jax.random.split(
+        state.key, 6)
+
+    is_down = ph == DOWN
+    is_comp = ph == COMP_SERV
+    is_up = ph == UP
+    is_cs = ph == CS_SERV
+    is_update = is_cs if has_cs else is_up
+
+    delay = state.round - state.disp_round[j]
+    new_round = state.round + jnp.where(is_update, 1, 0).astype(jnp.int32)
+
+    # update -> immediate re-dispatch of a fresh task into the freed slot
+    c_new = jax.random.categorical(k_disp_cli, jnp.log(p_norm)).astype(
+        jnp.int32)
+    svc_up = _draw(k_up, params.mu_u[c], distribution)
+    svc_down = _draw(k_disp_svc, params.mu_d[c_new], distribution)
+
+    phase_j = jnp.where(
+        is_down, COMP_WAIT,
+        jnp.where(is_comp, UP, jnp.where(is_update, DOWN, CS_WAIT)))
+    finish_j = jnp.where(
+        is_comp, t_new + svc_up,
+        jnp.where(is_update, t_new + svc_down, jnp.inf))
+    joins_fifo = is_down | (is_up & has_cs)
+    seq_j = jnp.where(joins_fifo, state.seq_ctr, state.seq[j])
+    seq_ctr = state.seq_ctr + joins_fifo.astype(jnp.int32)
+    client_j = jnp.where(is_update, c_new, c)
+    disp_j = jnp.where(is_update, new_round, state.disp_round[j])
+
+    onej = jnp.arange(m_max) == j
+    phase = jnp.where(onej, phase_j, state.phase).astype(jnp.int32)
+    finish = jnp.where(onej, finish_j, state.finish)
+    seq = jnp.where(onej, seq_j, state.seq).astype(jnp.int32)
+    client = jnp.where(onej, client_j, state.client).astype(jnp.int32)
+    disp_round = jnp.where(onej, disp_j, state.disp_round).astype(jnp.int32)
+
+    # -- FIFO promotions (post-transition table) ----------------------------
+    # compute station of client c: j joined its queue (is_down) or freed its
+    # server (is_comp)
+    promo_comp = is_down | is_comp
+    serving_c = jnp.any((phase == COMP_SERV) & (client == c))
+    waiting_c = (phase == COMP_WAIT) & (client == c)
+    pick = jnp.argmin(jnp.where(waiting_c, seq, _BIG_SEQ))
+    do_comp = promo_comp & ~serving_c & jnp.any(waiting_c)
+    svc_c = _draw(k_comp, params.mu_c[c], distribution)
+    onep = (jnp.arange(m_max) == pick) & do_comp
+    phase = jnp.where(onep, COMP_SERV, phase)
+    finish = jnp.where(onep, t_new + svc_c, finish)
+
+    if has_cs:
+        # CS station: j joined its queue (is_up) or freed its server (is_cs)
+        promo_cs = is_up | is_cs
+        cs_waiting = phase == CS_WAIT
+        pick_cs = jnp.argmin(jnp.where(cs_waiting, seq, _BIG_SEQ))
+        do_cs = promo_cs & ~jnp.any(phase == CS_SERV) & jnp.any(cs_waiting)
+        svc_cs = _draw(k_cs, params.mu_cs, distribution)
+        onec = (jnp.arange(m_max) == pick_cs) & do_cs
+        phase = jnp.where(onec, CS_SERV, phase)
+        finish = jnp.where(onec, t_new + svc_cs, finish)
+
+    # -- delay statistics and window marks ----------------------------------
+    upd_measured = is_update & measure
+    delay_sum = state.delay_sum.at[c].add(
+        jnp.where(upd_measured, delay.astype(jnp.float64), 0.0))
+    delay_cnt = state.delay_cnt.at[c].add(
+        jnp.where(upd_measured, 1, 0).astype(jnp.int32))
+    t0 = jnp.where(is_update & (new_round == state.warmup), t_new, state.t0)
+    t1 = jnp.where(is_update & (new_round == state.cap), t_new, state.t1)
+
+    new_state = EventState(
+        t=t_new, key=key, round=new_round, seq_ctr=seq_ctr,
+        client=client, phase=phase, finish=finish, seq=seq,
+        disp_round=disp_round,
+        warmup=state.warmup, cap=state.cap, t_cap=state.t_cap,
+        t0=t0, t1=t1, delay_sum=delay_sum, delay_cnt=delay_cnt,
+        energy=energy, occ_int=occ_int)
+    out = EventOut(is_update=is_update,
+                   time=t_new,
+                   slot=j.astype(jnp.int32),
+                   client=c,
+                   delay=delay.astype(jnp.int32))
+    return new_state, out
+
+
+def next_update(params: NetworkParams, state: EventState, *,
+                distribution: str = "exponential", power=None,
+                max_steps: Optional[int] = None
+                ) -> tuple[EventState, UpdateOut]:
+    """Run events until the next model update (uplink/CS completion).
+
+    A ``lax.while_loop`` bounded by ``max_steps`` (default ``3 m_max + 8``,
+    ``4 m_max + 8`` with the CS station — between two consecutive updates
+    each of the ``m`` tasks can complete at most its downlink, compute and
+    uplink (and CS) phases, and the last such completion *is* the update,
+    so the bound is never met in a valid state).
+    """
+    m_max = state.phase.shape[0]
+    if max_steps is None:
+        max_steps = (4 if params.mu_cs is not None else 3) * m_max + 8
+
+    dummy = EventOut(is_update=jnp.asarray(False),
+                     time=jnp.zeros((), jnp.float64),
+                     slot=jnp.zeros((), jnp.int32),
+                     client=jnp.zeros((), jnp.int32),
+                     delay=jnp.zeros((), jnp.int32))
+
+    def cond(carry):
+        _, out, steps = carry
+        return (~out.is_update) & (steps < max_steps)
+
+    def body(carry):
+        st, _, steps = carry
+        st, out = step_event(params, st, distribution=distribution,
+                             power=power)
+        return st, out, steps + 1
+
+    st, out, steps = jax.lax.while_loop(
+        cond, body, (state, dummy, jnp.zeros((), jnp.int32)))
+    return st, UpdateOut(time=out.time, slot=out.slot, client=out.client,
+                         delay=out.delay, steps=steps)
+
+
+# ---------------------------------------------------------------------------
+# stationary statistics (device analogue of AsyncNetworkSim.run)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_updates", "warmup", "distribution", "m_max"))
+def _simulate_stats(params, m, key, num_updates, warmup, distribution,
+                    m_max, power):
+    # every completed task cycle is down -> comp -> up (-> cs): exactly 3 (4)
+    # events per update, plus at most one incomplete cycle per task
+    mult = 4 if params.mu_cs is not None else 3
+    num_events = mult * (num_updates + warmup) + mult * m_max + 8
+    cap = warmup + num_updates
+    st = init_state(params, m, key, m_max=m_max, distribution=distribution,
+                    warmup=warmup, cap=cap)
+
+    def body(st, _):
+        st, _ = step_event(params, st, distribution=distribution, power=power)
+        return st, None
+
+    st, _ = jax.lax.scan(body, st, None, length=num_events)
+    updates = jnp.clip(st.round, 0, cap) - st.warmup
+    horizon = jnp.where(st.round >= st.cap, st.t1 - st.t0, st.t - st.t0)
+    mean_delay = jnp.where(st.delay_cnt > 0,
+                           st.delay_sum / jnp.maximum(st.delay_cnt, 1), 0.0)
+    return EventStats(
+        updates=updates,
+        time=horizon,
+        throughput=jnp.where(horizon > 0, updates / jnp.maximum(horizon, 1e-12),
+                             0.0),
+        mean_delay=mean_delay,
+        delay_counts=st.delay_cnt,
+        energy=st.energy,
+        mean_queue_counts=st.occ_int / jnp.maximum(horizon, 1e-12),
+    )
+
+
+def simulate_stats(params: NetworkParams, m, num_updates: int, *,
+                   warmup: int = 0, key: Optional[jax.Array] = None,
+                   seed: int = 0, distribution: str = "exponential",
+                   power=None, m_max: Optional[int] = None) -> EventStats:
+    """Stationary statistics over ``num_updates`` rounds, fully on device.
+
+    Mirrors :meth:`repro.core.simulator.AsyncNetworkSim.run`: statistics are
+    collected over the update-count window ``[warmup, warmup + num_updates)``
+    inside ONE jitted ``lax.scan`` over events.  ``m`` may be traced and the
+    whole function vmaps over seeds (``key``) and padded ``(p, m)`` batches
+    (pass a static ``m_max >= m``).
+    """
+    if distribution not in _DISTRIBUTIONS:
+        raise ValueError(f"unknown service distribution: {distribution}")
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    if m_max is None:
+        m_max = int(m)
+    return _simulate_stats(params, m, key, int(num_updates), int(warmup),
+                           distribution, m_max, power)

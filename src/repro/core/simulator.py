@@ -11,10 +11,19 @@ Two complementary implementations:
     (``repro.fl.trainer``): ``next_update()`` yields one model-update event
     at a time.
 
-  * ``jump_chain_throughput`` — a JAX ``lax.scan`` CTMC jump-chain sampler
-    over the count state space (exponential case only); a fast, fully
-    vectorizable cross-check of the product-form stationary distribution and
-    of the throughput formula (Prop. 4).
+  * ``jump_chain_throughput`` — historical CTMC jump-chain entry point, now
+    a thin wrapper over the jitted event engine (``repro.core.events``),
+    which races per-task service clocks exactly for *every* service law and
+    therefore subsumes the count-state sampler.
+
+Reference contract: ``AsyncNetworkSim`` is the exact per-task-identity
+reference implementation that the device engine ``repro.core.events`` (and
+the fused trainer ``repro.fl.engine``) are cross-checked against.  The two
+consume randomness differently (numpy heap order vs. split JAX keys), so
+the agreement is distributional — throughput, per-client mean relative
+delay, energy and occupancy match within Monte-Carlo tolerance on every
+service law (``tests/test_events.py``).  Behavioural changes here must be
+mirrored in ``repro.core.events``.
 """
 from __future__ import annotations
 
@@ -32,15 +41,25 @@ _DOWN, _COMP, _UP, _CS = 0, 1, 2, 3
 
 
 def make_sampler(kind: str, rng: np.random.Generator) -> Callable[[float], float]:
-    """Sample a service time with mean ``1/mu`` (Section 5.3.3 distributions)."""
+    """Sample a service time with mean ``1/mu`` (Section 5.3.3 distributions).
+
+    The returned sampler raises ``ValueError`` on a non-positive rate
+    instead of silently emitting ``inf``/NaN service times (a zero rate
+    would otherwise stall the event heap with infinite clocks).
+    """
+    def _check(mu: float) -> float:
+        if not mu > 0:
+            raise ValueError(f"service rate must be positive, got mu={mu}")
+        return mu
+
     if kind == "exponential":
-        return lambda mu: rng.exponential(1.0 / mu)
+        return lambda mu: rng.exponential(1.0 / _check(mu))
     if kind == "deterministic":
-        return lambda mu: 1.0 / mu
+        return lambda mu: 1.0 / _check(mu)
     if kind == "lognormal":
         # underlying normal variance sigma_N^2 = 1, mean of LN = 1/mu
         # mean = exp(mu_N + 1/2) = 1/mu  ->  mu_N = -log(mu) - 1/2
-        return lambda mu: rng.lognormal(-math.log(mu) - 0.5, 1.0)
+        return lambda mu: rng.lognormal(-math.log(_check(mu)) - 0.5, 1.0)
     raise ValueError(f"unknown service distribution: {kind}")
 
 
@@ -260,64 +279,28 @@ class AsyncNetworkSim:
 
 
 # ---------------------------------------------------------------------------
-# JAX jump-chain sampler (exponential case)
+# JAX sampler entry point (subsumed by repro.core.events)
 # ---------------------------------------------------------------------------
 
 def jump_chain_throughput(params: NetworkParams, m: int, steps: int,
                           seed: int = 0) -> tuple[float, np.ndarray]:
-    """CTMC jump-chain estimate of ``lambda`` and mean station counts.
+    """Monte-Carlo estimate of ``lambda`` and mean station counts on device.
 
-    Simulates the count-state Markov chain of Prop. 1 with ``jax.lax.scan``:
-    at each jump, transition rates are (per client i)
-    ``mu_d[i] * x_d[i]``, ``mu_c[i] * 1{x_c[i] > 0}``, ``mu_u[i] * x_u[i]``;
-    uplink completions route to a p-sampled client's downlink.  Sojourn times
-    are Exp(total rate); time-weighted averages estimate E[xi] and
-    ``lambda = E[sum_i mu_u[i] xi_u[i]]`` (Eq. 11).
+    Historically a CTMC jump-chain sampler over the count state space
+    (exponential case only); now delegates to the jitted event engine
+    (:mod:`repro.core.events`), which races per-task service clocks exactly
+    — distributionally identical in the memoryless case and exact for every
+    other service law.  ``steps`` is interpreted as an event budget, the
+    first third of which is discarded as warmup, matching the old contract.
+
+    Returns ``(lambda, mean_counts)`` with ``mean_counts`` of shape
+    ``[3n]`` (downlink / computation / uplink per client), summing to ``m``.
     """
-    import jax
-    import jax.numpy as jnp
+    from .events import simulate_stats
 
-    n = params.n
-    p = jnp.asarray(params.p) / jnp.sum(jnp.asarray(params.p))
-    mu_c = jnp.asarray(params.mu_c)
-    mu_d = jnp.asarray(params.mu_d)
-    mu_u = jnp.asarray(params.mu_u)
-
-    # initial state: m tasks spread over downlinks uniformly
-    key = jax.random.PRNGKey(seed)
-    key, k0 = jax.random.split(key)
-    init_clients = jax.random.randint(k0, (m,), 0, n)
-    x_d0 = jnp.zeros(n).at[init_clients].add(1.0)
-    state0 = (x_d0, jnp.zeros(n), jnp.zeros(n))
-
-    def step(carry, key):
-        x_d, x_c, x_u = carry
-        r_d = mu_d * x_d
-        r_c = mu_c * (x_c > 0)
-        r_u = mu_u * x_u
-        rates = jnp.concatenate([r_d, r_c, r_u])
-        total = jnp.sum(rates)
-        k1, k2, k3 = jax.random.split(key, 3)
-        dt = jax.random.exponential(k1) / total
-        occ_pre = jnp.concatenate([x_d, x_c, x_u])
-        ev = jax.random.categorical(k2, jnp.log(jnp.maximum(rates, 1e-300)))
-        i = ev % n
-        kind = ev // n
-        onei = jax.nn.one_hot(i, n)
-        # downlink completion: d -> c ; compute: c -> u ; uplink: u -> d_j
-        x_d = x_d - onei * (kind == 0)
-        x_c = x_c + onei * (kind == 0) - onei * (kind == 1)
-        x_u = x_u + onei * (kind == 1) - onei * (kind == 2)
-        j = jax.random.categorical(k3, jnp.log(p))
-        x_d = x_d + jax.nn.one_hot(j, n) * (kind == 2)
-        lam_inst = jnp.sum(r_u)
-        return (x_d, x_c, x_u), (dt, dt * lam_inst, dt * occ_pre)
-
-    keys = jax.random.split(key, steps)
-    _, (dts, lam_w, occ_w) = jax.lax.scan(step, state0, keys)
-    # discard first third as warmup
-    w = steps // 3
-    T = jnp.sum(dts[w:])
-    lam = jnp.sum(lam_w[w:]) / T
-    occ = jnp.sum(occ_w[w:], axis=0) / T
-    return float(lam), np.asarray(occ)
+    mult = 4 if params.mu_cs is not None else 3
+    total_updates = max(steps // mult, 1)
+    warmup = total_updates // 3
+    stats = simulate_stats(params, m, total_updates - warmup, warmup=warmup,
+                           seed=seed)
+    return float(stats.throughput), np.asarray(stats.mean_queue_counts[:-1])

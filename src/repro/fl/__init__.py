@@ -1,9 +1,13 @@
+from .engine import DeviceTrainer, pad_client_data, run_strategy_grid
 from .models import cnn_classifier, mlp_classifier
-from .strategies import ClusterSpec, build_network_params, make_strategies
+from .strategies import (ClusterSpec, build_network_params, make_strategies,
+                         strategy_batch)
 from .trainer import AsyncFLConfig, AsyncFLTrainer, TrainLog
 
 __all__ = [
     "AsyncFLTrainer", "AsyncFLConfig", "TrainLog",
+    "DeviceTrainer", "run_strategy_grid", "pad_client_data",
     "ClusterSpec", "build_network_params", "make_strategies",
+    "strategy_batch",
     "cnn_classifier", "mlp_classifier",
 ]

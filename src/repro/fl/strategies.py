@@ -151,3 +151,37 @@ def make_strategies(
         out["joint"] = (np.asarray(res.p), res.m)
 
     return out
+
+
+# The paper's step sizes for the Table-3 comparison: max-throughput needs a
+# 20x-reduced learning rate to stay stable (Section 5.3).  Single source of
+# truth for benchmarks and examples.
+DEFAULT_ETA = 0.05
+MAX_THROUGHPUT_ETA = 0.01
+
+
+def default_etas(strategies) -> dict:
+    """Per-strategy step sizes for a ``make_strategies`` result."""
+    return {name: MAX_THROUGHPUT_ETA if name == "max_throughput"
+            else DEFAULT_ETA for name in strategies}
+
+
+def strategy_batch(strategies: dict, etas=None
+                   ) -> tuple[list, np.ndarray, np.ndarray, np.ndarray]:
+    """Flatten a ``make_strategies`` result into padded lane arrays for the
+    fused device engine (``repro.fl.engine``): returns
+    ``(names, p_mat [S, n], m_vec [S], eta_vec [S])``.
+
+    ``etas`` is an optional ``{name: step size}`` override (scalar allowed);
+    defaults to :func:`default_etas`.
+    """
+    names = list(strategies)
+    if etas is None:
+        etas = {}
+    elif not isinstance(etas, dict):
+        etas = {name: float(etas) for name in names}
+    defaults = default_etas(names)
+    p_mat = np.stack([np.asarray(strategies[k][0], np.float64) for k in names])
+    m_vec = np.asarray([int(strategies[k][1]) for k in names])
+    eta_vec = np.asarray([float(etas.get(k, defaults[k])) for k in names])
+    return names, p_mat, m_vec, eta_vec

@@ -1,22 +1,31 @@
 """Generalized AsyncSGD as a runnable training system (Algorithms 1 + 2).
 
-The CS loop (Algorithm 1) is driven by the exact discrete-event network
-simulator (``repro.core.simulator.AsyncNetworkSim``), so the parameter
-staleness experienced during training is *exactly* the queueing process the
-theory analyzes: each dispatched task carries a snapshot of the global
-parameters; when its uplink (or CS-buffer service) completes, the gradient —
-computed at the stale snapshot on the owning client's local data — is applied
-with the bias-corrected step ``eta / (n p_C)`` (Algorithm 1, line 6).
+Two interchangeable execution backends behind one API:
 
-Client behaviour (Algorithm 2: FIFO queues, local mini-batch sampling) is
-implicit in the network simulator's queues; the actual gradient math runs as
-a single jitted function on the host accelerator, which is the standard way
-to *simulate* an FL deployment faithfully while using one machine.
+  * ``backend="device"`` (default) — the fused engine of
+    ``repro.fl.engine``: queueing dynamics (``repro.core.events``),
+    stale-gradient computation against the snapshot ring, the
+    bias-corrected ``eta / (n p_C)`` apply, energy accounting and eval-grid
+    logging all execute inside ONE jitted ``lax.scan``;
+    :meth:`AsyncFLTrainer.run_seeds` vmaps whole runs over seeds.
+
+  * ``backend="host"`` — the original event-at-a-time loop driven by the
+    exact per-task-identity reference simulator
+    (``repro.core.simulator.AsyncNetworkSim``).  This is the semantic
+    reference the device engine is cross-checked against
+    (``tests/test_events.py``); the two consume randomness differently, so
+    same-seed trajectories differ while all statistics agree in
+    distribution.
+
+In both backends each dispatched task carries a snapshot of the global
+parameters; when its uplink (or CS-buffer service) completes, the gradient —
+computed at the stale snapshot on the owning client's local data — is
+applied with the bias-corrected step ``eta / (n p_C)`` (Algorithm 1,
+line 6).
 """
 from __future__ import annotations
 
 import dataclasses
-import time as _time
 from typing import Callable, Optional
 
 import jax
@@ -37,6 +46,8 @@ class AsyncFLConfig:
     eval_every_time: float = 10.0     # evaluate on a wall-clock grid
     eval_batch: int = 512
     grad_clip: Optional[float] = None  # constrains G (Section 2.5)
+    backend: str = "device"           # "device" (fused scan) | "host" (ref)
+    use_fused_update: bool = False    # Pallas fused apply (device backend)
 
 
 @dataclasses.dataclass
@@ -52,9 +63,13 @@ class TrainLog:
     energy: float = 0.0
 
     def time_to_accuracy(self, target: float) -> float:
-        """First virtual time at which test accuracy reaches ``target``."""
+        """First virtual time at which test accuracy reaches ``target``.
+
+        Robust to empty logs and to NaN accuracy readings (e.g. a diverged
+        model): non-finite entries are skipped, no-hit returns ``inf``.
+        """
         for t, a in zip(self.times, self.accuracies):
-            if a >= target:
+            if np.isfinite(a) and a >= target:
                 return t
         return float("inf")
 
@@ -66,11 +81,11 @@ class AsyncFLTrainer:
     def __init__(
         self,
         model: Model,
-        client_data: list[tuple[np.ndarray, np.ndarray]],  # [(x_i, y_i)] per client
+        client_data: list,  # [(x_i, y_i)] per client
         net: NetworkParams,
         m: int,
         config: AsyncFLConfig = AsyncFLConfig(),
-        test_data: Optional[tuple[np.ndarray, np.ndarray]] = None,
+        test_data=None,
         power=None,
         loss_fn: Callable = cross_entropy_loss,
     ):
@@ -81,10 +96,12 @@ class AsyncFLTrainer:
         self.cfg = config
         self.test = test_data
         self.power = power
+        self.loss_fn = loss_fn
         self.n = net.n
         self.p = np.asarray(net.p, dtype=np.float64)
         self.p = self.p / self.p.sum()
         self.rng = np.random.default_rng(config.seed + 1)
+        self._device = None  # lazily built fused engine
 
         def loss(params, x, y):
             return loss_fn(model.apply(params, x), y)
@@ -111,13 +128,60 @@ class AsyncFLTrainer:
 
         self._evaluate = evaluate
 
+    # -- device backend -----------------------------------------------------
+
+    def _device_trainer(self):
+        if self._device is None:
+            from .engine import DeviceTrainer  # lazy: keeps import cheap
+
+            self._device = DeviceTrainer(
+                self.model, self.clients, self.net, self.cfg,
+                test_data=self.test, power=self.power, loss_fn=self.loss_fn)
+        return self._device
+
+    def run_seeds(self, horizon_time: float, seeds,
+                  max_updates: Optional[int] = None) -> list[TrainLog]:
+        """Fused multi-seed batch: every seed's full run executes inside one
+        jitted, vmapped scan (device backend regardless of ``cfg.backend``)."""
+        dev = self._device_trainer()
+        seeds = list(seeds)
+        L = len(seeds)
+        logs, _ = dev.run_lanes([self.p] * L, [self.m] * L,
+                                [self.cfg.eta] * L, seeds,
+                                horizon_time, max_updates=max_updates)
+        return logs
+
+    def _run_device(self, horizon_time: float, max_updates: Optional[int],
+                    rng_key=None) -> TrainLog:
+        dev = self._device_trainer()
+        init_keys = None if rng_key is None else jnp.stack([rng_key])
+        logs, final_params = dev.run_lanes(
+            [self.p], [self.m], [self.cfg.eta], [self.cfg.seed],
+            horizon_time, max_updates=max_updates, init_keys=init_keys)
+        self.final_params = jax.tree_util.tree_map(lambda a: a[0],
+                                                   final_params)
+        return logs[0]
+
+    # -- public -------------------------------------------------------------
+
+    def run(self, horizon_time: float, max_updates: int = 10**9,
+            rng_key=None) -> TrainLog:
+        if self.cfg.backend == "device":
+            cap = None if max_updates >= 10**9 else max_updates
+            return self._run_device(horizon_time, cap, rng_key)
+        if self.cfg.backend != "host":
+            raise ValueError(f"unknown backend: {self.cfg.backend!r}")
+        return self._run_host(horizon_time, max_updates, rng_key)
+
+    # -- host reference loop (exact per-task-identity semantics) ------------
+
     def _batch(self, client: int):
         x, y = self.clients[client]
         idx = self.rng.integers(0, len(y), size=min(self.cfg.batch_size, len(y)))
         return jnp.asarray(x[idx]), jnp.asarray(y[idx])
 
-    def run(self, horizon_time: float, max_updates: int = 10**9,
-            rng_key=None) -> TrainLog:
+    def _run_host(self, horizon_time: float, max_updates: int = 10**9,
+                  rng_key=None) -> TrainLog:
         rng_key = jax.random.PRNGKey(self.cfg.seed) if rng_key is None else rng_key
         params = self.model.init(rng_key)
         sim = AsyncNetworkSim(self.net, self.m,

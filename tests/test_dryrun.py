@@ -13,6 +13,9 @@ import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
+# 512-device lowering + compile in a child interpreter: minutes each
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch,shape", [
     ("internlm2-1.8b", "decode_32k"),

@@ -152,9 +152,13 @@ def test_trainer_delay_matches_simulator():
     clients, test, net = _small_setup(seed=5)
     model = mlp_classifier(28 * 28, 8, hidden=(16,))
     K = 400
+    # pinned to the host reference loop: the assertion replays the exact
+    # numpy RNG stream of AsyncNetworkSim (the device engine only agrees in
+    # distribution, see tests/test_events.py)
     tr = AsyncFLTrainer(model, clients, net, m=5,
                         config=AsyncFLConfig(eta=0.05, batch_size=16,
-                                             eval_every_time=1e9, seed=7))
+                                             eval_every_time=1e9, seed=7,
+                                             backend="host"))
     log = tr.run(horizon_time=1e9, max_updates=K)
     # the trainer's break happens after next_update() has applied one more
     # event to the sim statistics, hence K + 1 below
@@ -184,9 +188,12 @@ def test_eval_grid_uses_pre_update_snapshot():
     update counter at that grid time is k, not k+1."""
     clients, test, net = _small_setup(seed=6)
     model = mlp_classifier(28 * 28, 8, hidden=(16,))
+    # host backend: the grid check below replays the same-seed event times
+    # of AsyncNetworkSim
     tr = AsyncFLTrainer(model, clients, net, m=3,
                         config=AsyncFLConfig(eta=0.05, batch_size=16,
-                                             eval_every_time=0.25, seed=3),
+                                             eval_every_time=0.25, seed=3,
+                                             backend="host"),
                         test_data=test)
     log = tr.run(horizon_time=30.0, max_updates=200)
     sim = __import__("repro.core.simulator", fromlist=["AsyncNetworkSim"]) \

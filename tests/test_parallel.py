@@ -17,6 +17,9 @@ import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# 8-fake-device sharded execution in a child interpreter: slow compiles
+pytestmark = pytest.mark.slow
+
 
 def run_py(code: str, timeout=560) -> str:
     env = dict(os.environ, PYTHONPATH=SRC,
@@ -42,8 +45,8 @@ def test_moe_ep_matches_ragged(n_experts):
             cfg, moe=dataclasses.replace(cfg.moe, num_experts=N_EXPERTS,
                                          top_k=2, capacity_factor=8.0))""".replace(
         "N_EXPERTS", str(n_experts)) + """
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         ctx = ParallelContext(mesh=mesh)
         params = init_moe(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
@@ -72,8 +75,8 @@ def test_sharded_train_step_matches_unsharded():
         from repro.models.parallel import ParallelContext
 
         cfg = get_config("internlm2-1.8b").reduced()
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         b0 = build_model(cfg)
         b1 = build_model(cfg, ParallelContext(mesh=mesh))
         params = b0.init(jax.random.PRNGKey(0))
@@ -97,8 +100,8 @@ def test_moe_sharded_train_step_runs():
         from repro.models.parallel import ParallelContext
 
         cfg = get_config("qwen2-moe-a2.7b").reduced()
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         bundle = build_model(cfg, ParallelContext(mesh=mesh))
         params = bundle.init(jax.random.PRNGKey(0))
         batch = {"tokens": jnp.ones((4, 16), jnp.int32),
@@ -118,8 +121,8 @@ def test_jamba_sharded_decode_runs():
         from repro.models.parallel import ParallelContext
 
         cfg = get_config("jamba-v0.1-52b").reduced()
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         bundle = build_model(cfg, ParallelContext(mesh=mesh))
         params = bundle.init(jax.random.PRNGKey(0))
         cache = bundle.init_cache(4, 32)

@@ -22,6 +22,7 @@ def params_from(seed, n, with_cs=False):
     return params.with_cs(rng.uniform(0.5, 6.0)) if with_cs else params
 
 
+@pytest.mark.slow  # ~45 s: 15 Jacobian examples, each a fresh jit trace
 @settings(max_examples=15, deadline=None)
 @given(st.integers(2, 5), st.integers(2, 8), st.integers(0, 10_000),
        st.booleans())
