@@ -1,34 +1,36 @@
 """Table 5 analogue: relative time and energy reduction of (p*_rho, m*_rho)
 at rho = 0.1 vs AsyncSGD on simulated async FL training with the Table-4
-power profiles.  Paper reports 36-49% energy savings at comparable speed."""
+power profiles.  Paper reports 36-49% energy savings at comparable speed.
+
+Declarative: one energy-aware Scenario, two strategies resolved by the
+registry, the seeds x strategies grid trained through
+``ScenarioSuite.run(mode="train")`` on the fused device engine."""
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
-from repro.core import LearningConstants
 from repro.data import (dirichlet_partition, make_synthetic_image_dataset,
                         train_test_split)
-from repro.fl import (AsyncFLConfig, make_strategies, mlp_classifier,
-                      run_strategy_grid)
-from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
-                                 build_power_profile)
+from repro.fl import mlp_classifier
+from repro.scenario import ScenarioSuite
 
 from .common import row
-
-CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+from .scenarios import record, table1_scenario
 
 
 def run(scale: int = 10, horizon: float = 240.0, target: float = 0.55,
         dists=("exponential",), seeds=(0, 1)) -> list[str]:
     out = []
-    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=scale)
-    power = build_power_profile(PAPER_CLUSTERS_TABLE1, scale=scale)
-    n = net.n
-    strat = make_strategies(net, CONSTS, power=power, rho=0.1, steps=200,
-                            m_max=n + 6, which=("asyncsgd", "time_opt",
-                                                "joint"))
+    base = record("energy_joint",
+                  table1_scenario(scale, strategy="joint", with_power=True,
+                                  steps=200, eta=0.05, rho=0.1,
+                                  name=f"energy_joint_s{scale}"))
+    base = base.replace(strategy=dataclasses.replace(base.strategy,
+                                                     m_max=base.n + 6))
+    n = base.n
 
     full = make_synthetic_image_dataset(num_classes=10, samples_per_class=120,
                                         seed=2)
@@ -37,20 +39,29 @@ def run(scale: int = 10, horizon: float = 240.0, target: float = 0.55,
     clients = [(train.x[i], train.y[i]) for i in parts]
     test = (test_ds.x, test_ds.y)
 
+    # resolve once (closed forms are law-independent), pin as explicit
+    # strategies per service law — mirrors bench_training_comparison
+    res_suite = ScenarioSuite.strategy_grid(base, ("asyncsgd", "joint"))
+    strat = res_suite.resolve()
+
     t0 = time.perf_counter()
     for dist in dists:
         # both strategies x all seeds in ONE fused, vmapped device scan
-        cfg = AsyncFLConfig(eta=0.05, batch_size=32,
-                            eval_every_time=horizon / 60,
-                            distribution=dist, grad_clip=5.0)
+        net = dataclasses.replace(base.network, law=dist)
+        scns = {name: src.replace(
+                    network=net,
+                    strategy=dataclasses.replace(src.strategy,
+                                                 name="explicit",
+                                                 p=strat[name][0],
+                                                 m=strat[name][1]))
+                for name, src in res_suite.scenarios.items()}
+        suite = ScenarioSuite(scns, seeds=seeds)
         model = mlp_classifier(28 * 28, 10, hidden=(64,))
-        grid = run_strategy_grid(
-            model, clients, net,
-            {k: strat[k] for k in ("asyncsgd", "joint")}, cfg,
-            horizon_time=horizon, seeds=seeds, etas=0.05,
-            test_data=test, power=power)
+        grid = suite.run(mode="train", model=model, clients=clients,
+                         test_data=test, horizon_time=horizon,
+                         batch_size=32, eval_every_time=horizon / 60)
         res = {}
-        for name, logs in grid.logs.items():
+        for name, logs in grid.entries.items():
             ts, es = [], []
             for log in logs:
                 t_hit = log.time_to_accuracy(target)

@@ -12,25 +12,26 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LearningConstants, batched_concurrency_sweep,
+from repro.core import (batched_concurrency_sweep,
                         make_energy_objective_padded,
                         make_time_objective_padded, minimal_energy,
                         objective_surface, pareto_sweep)
-from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
-                                 build_power_profile, cluster_labels)
 
 from .common import row
-
-CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+from .scenarios import record, table1_scenario
 
 
 def run(scale: int = 10, steps: int = 150,
         rhos=(0.0, 0.1, 0.3, 0.5, 0.8, 1.0)) -> list[str]:
     out = []
-    params = build_network_params(PAPER_CLUSTERS_TABLE1, scale=scale)
-    power = build_power_profile(PAPER_CLUSTERS_TABLE1, scale=scale)
-    labels = cluster_labels(PAPER_CLUSTERS_TABLE1, scale=scale)
-    n = params.n
+    scn = record("pareto",
+                 table1_scenario(scale, strategy="joint", with_power=True,
+                                 steps=steps, name=f"pareto_s{scale}"))
+    params = scn.params()
+    power = scn.power()
+    labels = list(scn.network.labels)
+    CONSTS = scn.consts
+    n = scn.n
     m_max = n + 6
 
     t0 = time.perf_counter()

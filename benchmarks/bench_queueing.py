@@ -12,15 +12,15 @@ from repro.core import (NetworkParams, delay_jacobian, expected_relative_delay,
                         simulate_stats, throughput)
 from repro.core.buzen import log_normalizing_constants
 from repro.core.simulator import AsyncNetworkSim
-from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
 from repro.kernels import ops
 
 from .common import row, time_us
+from .scenarios import record, table1_scenario
 
 
 def run() -> list[str]:
     out = []
-    params = build_network_params(PAPER_CLUSTERS_TABLE1)  # n = 100
+    params = record("queueing", table1_scenario(1)).params()  # n = 100
     n, m = params.n, 100
 
     # --- Buzen variants (the optimizer inner loop) --------------------------
@@ -42,7 +42,7 @@ def run() -> list[str]:
     # the MC sweep runs on the jitted device event engine; the host heap
     # simulator stays as the exact per-task-identity reference it is
     # cross-checked against (one row records host-vs-device agreement)
-    small = build_network_params(PAPER_CLUSTERS_TABLE1, scale=10)  # n = 11
+    small = table1_scenario(10).params()  # n = 11
     msml = 12
     d_th = np.asarray(expected_relative_delay(small, msml))
 

@@ -1,5 +1,10 @@
 """Appendix H / Table 7 analogue: round-complexity-optimized routing on the
-Table-6 population — K_eps reduction and staleness-impact homogenization."""
+Table-6 population — K_eps reduction and staleness-impact homogenization.
+
+The uniform baseline and the round-optimized configuration are two
+scenarios of one suite: the strategy registry resolves ``round_opt`` (a
+B = 1 batched sweep through the shared engine) and ``run(mode="analyze")``
+reports K_eps / throughput for both in one jitted batch."""
 from __future__ import annotations
 
 import time
@@ -7,42 +12,39 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LearningConstants, batched_concurrency_sweep,
-                        expected_relative_delay, make_round_objective_padded,
-                        round_complexity, throughput)
-from repro.fl.strategies import (PAPER_CLUSTERS_TABLE6, build_network_params,
-                                 cluster_labels)
+from repro.core import expected_relative_delay, throughput
+from repro.scenario import ScenarioSuite
 
 from .common import row
-
-CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+from .scenarios import record, table6_scenario
 
 
 def run(scale: int = 5, steps: int = 300) -> list[str]:
     out = []
-    params = build_network_params(PAPER_CLUSTERS_TABLE6, scale=scale)
-    labels = np.array(cluster_labels(PAPER_CLUSTERS_TABLE6, scale=scale))
-    n = params.n
+    base = record("round_optimization",
+                  table6_scenario(scale, steps=steps,
+                                  name=f"round_optimization_s{scale}"))
+    params = base.params()
+    labels = np.array(base.network.labels)
+    n = base.n
     m = n  # full concurrency, as in Appendix H
 
     t0 = time.perf_counter()
-    # single-m sweep (B = 1) through the shared batched engine / Buzen batch
-    res = batched_concurrency_sweep(
-        make_round_objective_padded(params, CONSTS, m), params,
-        m_grid=jnp.asarray([m]), steps=steps).best
+    suite = ScenarioSuite.strategy_grid(base, ("asyncsgd", "round_opt"), m=m)
+    res = suite.run(mode="analyze")
     us = (time.perf_counter() - t0) * 1e6
 
-    uni = jnp.full((n,), 1.0 / n)
-    k_uni = float(round_complexity(params, m, CONSTS))
-    k_opt = res.value
-    p = np.asarray(res.p)
+    k_uni = res.entries["asyncsgd"]["K_eps"]
+    k_opt = res.entries["round_opt"]["K_eps"]
+    p = res.entries["round_opt"]["p"]
 
     def impact(pv):
         d = np.asarray(expected_relative_delay(
             params._replace(p=jnp.asarray(pv)), m))
         return d / np.maximum(np.asarray(pv), 1e-12) ** 2
 
-    i_uni, i_opt = impact(np.asarray(uni)), impact(p)
+    i_uni = impact(res.entries["asyncsgd"]["p"])
+    i_opt = impact(p)
     # paper: round-opt prioritizes stragglers (type D) and homogenizes impact
     pD = p[labels == "D"].mean()
     pE = p[labels == "E"].mean()
@@ -55,7 +57,7 @@ def run(scale: int = 5, steps: int = 300) -> list[str]:
                    f"max_impact_uni={i_uni.max():.1f}"
                    f"_max_impact_opt={i_opt.max():.1f}"
                    f"_improved={i_opt.max() < i_uni.max()}"))
-    lam_opt = float(throughput(params._replace(p=res.p), m))
+    lam_opt = res.entries["round_opt"]["throughput"]
     lam_uni = float(throughput(params, m))
     out.append(row("table7_throughput_cost", 0.0,
                    f"lambda_uni={lam_uni:.2f}_lambda_opt={lam_opt:.2f}"))

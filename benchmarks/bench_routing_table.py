@@ -1,40 +1,43 @@
 """Table 2 / Table 7 analogue: optimized routing probabilities and staleness
-impact factors per cluster, for the Table-1 population (scaled for CPU)."""
+impact factors per cluster, for the Table-1 population (scaled for CPU).
+
+Strategy resolution AND the closed-form reporting both run through the
+Scenario API: one ``ScenarioSuite.strategy_grid`` resolves the four
+configurations via the strategy registry, and ``run(mode="analyze")``
+evaluates throughput / delays for all of them in a single jitted batch."""
 from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LearningConstants, expected_relative_delay, throughput)
-from repro.fl import make_strategies
-from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
-                                 cluster_labels)
+from repro.scenario import ScenarioSuite
 
 from .common import row
+from .scenarios import record, table1_scenario
 
-CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+STRATEGIES = ("asyncsgd", "max_throughput", "round_opt", "time_opt")
 
 
 def run(scale: int = 5, steps: int = 250) -> list[str]:
     out = []
-    params = build_network_params(PAPER_CLUSTERS_TABLE1, scale=scale)
-    labels = cluster_labels(PAPER_CLUSTERS_TABLE1, scale=scale)
-    n = params.n
+    base = record("routing_table",
+                  table1_scenario(scale, strategy="time_opt", steps=steps,
+                                  name=f"routing_table_s{scale}"))
+    labels = np.array(base.network.labels)
+    n = base.n
 
     t0 = time.perf_counter()
-    strat = make_strategies(params, CONSTS, steps=steps, m_max=n + 8,
-                            which=("asyncsgd", "max_throughput", "round_opt",
-                                   "time_opt"))
+    suite = ScenarioSuite.strategy_grid(base, STRATEGIES, m_max=n + 8)
+    res = suite.run(mode="analyze")
     us = (time.perf_counter() - t0) * 1e6
 
     lam = {}
-    for name, (p, m) in strat.items():
-        pj = jnp.asarray(p)
-        lam[name] = float(throughput(params._replace(p=pj), m))
-        d = np.asarray(expected_relative_delay(params._replace(p=pj), m))
-        impact = d / np.maximum(p, 1e-12) ** 2
+    for name in STRATEGIES:
+        ent = res.entries[name]
+        p, m = ent["p"], ent["m"]
+        lam[name] = ent["throughput"]
+        impact = np.asarray(ent["delays"]) / np.maximum(p, 1e-12) ** 2
         per_cluster_p = {}
         per_cluster_i = {}
         for lab, pi, ii in zip(labels, p, impact):
@@ -52,4 +55,6 @@ def run(scale: int = 5, steps: int = 250) -> list[str]:
     ok = lam["max_throughput"] >= lam["asyncsgd"] >= lam["round_opt"]
     out.append(row("table2_throughput_ordering", 0.0,
                    f"max>=uni>=roundopt:{ok}"))
+    out.append(row("table2_analyze_programs", 0.0,
+                   f"scenarios={len(suite)}_programs={res.programs}"))
     return out

@@ -8,22 +8,18 @@ from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LearningConstants, NetworkParams
 from repro.core.batched import tau_surface
 
 from .common import row
-
-CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=5.0, G=14.0, eps=1.0)
+from .scenarios import record, two_client_scenario
 
 
 def surface(mu2: float):
-    params = NetworkParams(
-        p=jnp.asarray([0.5, 0.5]),
-        mu_c=jnp.asarray([1.0, mu2]), mu_d=jnp.asarray([1.0, mu2]),
-        mu_u=jnp.asarray([1.0, mu2]))
+    scn = record("tau_surface", two_client_scenario(mu2))
+    params = scn.params(p=[0.5, 0.5])
+    CONSTS = scn.consts
     p1s = np.linspace(0.1, 0.9, 17)
     ms = np.arange(1, 25)
     p_rows = np.stack([p1s, 1.0 - p1s], axis=-1)

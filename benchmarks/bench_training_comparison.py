@@ -3,60 +3,77 @@ configuration (p*_tau, m*_tau) vs AsyncSGD / Max-Throughput / Round-Opt on
 synthetic-EMNIST async FL training (Dirichlet non-IID), across service-time
 distributions.  Paper reports 29-46% reduction vs AsyncSGD (Table 3).
 
-The comparison runs on the fused device engine (``repro.fl.engine``): the
-whole strategies x seeds grid is ONE jitted, vmapped scan.
+The whole comparison is declarative: ``ScenarioSuite.strategy_grid``
+resolves the four strategies through the registry and
+``run(mode="train")`` executes the strategies x seeds grid on the fused
+device engine (``repro.fl.engine``) as bucketed jitted scans.
 ``run_engine_sweep`` additionally measures that hot path against the host
-event-loop reference (``backend="host"``) — the multi-seed speedup and the
-statistics agreement are the PR-over-PR tracked numbers in
-``BENCH_smoke.json``."""
+event-loop reference (``AsyncFLTrainer.from_scenario(backend="host")``) —
+the multi-seed speedup and the statistics agreement are the PR-over-PR
+tracked numbers in ``BENCH_smoke.json``."""
 from __future__ import annotations
 
+import dataclasses
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LearningConstants
 from repro.data import (dirichlet_partition, make_synthetic_image_dataset,
                         train_test_split)
-from repro.fl import (AsyncFLConfig, AsyncFLTrainer, DeviceTrainer,
-                      make_strategies, mlp_classifier, run_strategy_grid)
-from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
-                                 default_etas, strategy_batch)
+from repro.fl import AsyncFLTrainer, DeviceTrainer, mlp_classifier
+from repro.scenario import ScenarioSuite
 
 from .common import row
+from .scenarios import record, table1_scenario
 
-CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+STRATEGIES = ("asyncsgd", "max_throughput", "round_opt", "time_opt")
 
 
-def _problem(scale, seed_data=0):
-    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=scale)
+def _problem(base, seed_data=0):
     full = make_synthetic_image_dataset(num_classes=10, samples_per_class=120,
                                         seed=seed_data)
     train, test_ds = train_test_split(full, 0.2, seed=seed_data + 1)
-    parts = dirichlet_partition(train.y, net.n, alpha=0.2, seed=seed_data)
+    parts = dirichlet_partition(train.y, base.n, alpha=0.2, seed=seed_data)
     clients = [(train.x[i], train.y[i]) for i in parts]
-    return net, clients, (test_ds.x, test_ds.y)
+    return clients, (test_ds.x, test_ds.y)
 
 
 def run(scale: int = 10, horizon: float = 240.0, target: float = 0.55,
         distributions=("exponential", "lognormal"), seeds=(0, 1)) -> list[str]:
     out = []
-    net, clients, test = _problem(scale)
-    n = net.n
-    strat = make_strategies(net, CONSTS, steps=200, m_max=n + 6)
+    base = record("training_comparison",
+                  table1_scenario(scale, strategy="time_opt", steps=200,
+                                  m_max=None,
+                                  name=f"training_comparison_s{scale}"))
+    base = base.replace(strategy=dataclasses.replace(base.strategy,
+                                                     m_max=base.n + 6))
+    clients, test = _problem(base)
+
+    # resolve the strategies once (closed forms are law-independent), then
+    # re-run the same explicit (p, m, eta) grid under each service law
+    res_suite = ScenarioSuite.strategy_grid(base, STRATEGIES)
+    strat = res_suite.resolve()
 
     t0 = time.perf_counter()
     for dist in distributions:
-        cfg = AsyncFLConfig(batch_size=32, eval_every_time=horizon / 60,
-                            distribution=dist, grad_clip=5.0)
+        net = dataclasses.replace(base.network, law=dist)
+        scns = {}
+        for name in STRATEGIES:
+            src = res_suite.scenarios[name]
+            scns[name] = src.replace(
+                network=net,
+                learning=dataclasses.replace(src.learning, eta=src.eta()),
+                strategy=dataclasses.replace(src.strategy, name="explicit",
+                                             p=strat[name][0],
+                                             m=strat[name][1]))
+        suite = ScenarioSuite(scns, seeds=seeds)
         model = mlp_classifier(28 * 28, int(test[1].max()) + 1, hidden=(64,))
-        grid = run_strategy_grid(model, clients, net, strat, cfg,
-                                 horizon_time=horizon, seeds=seeds,
-                                 etas=default_etas(strat), test_data=test)
+        grid = suite.run(mode="train", model=model, clients=clients,
+                         test_data=test, horizon_time=horizon,
+                         batch_size=32, eval_every_time=horizon / 60)
         times = {name: float(np.mean([log.time_to_accuracy(target)
                                       for log in logs]))
-                 for name, logs in grid.logs.items()}
+                 for name, logs in grid.entries.items()}
         summary = ";".join(f"{k}={v:.1f}" for k, v in times.items())
         out.append(row(f"table3_time_to_{target}_{dist}", 0.0, summary))
         for other in ("asyncsgd", "max_throughput", "round_opt"):
@@ -80,39 +97,44 @@ def run_engine_sweep(scale: int = 20, horizon: float = 40.0,
     the first fused call (incl. compile) and of a steady-state fused call;
     (b) throughput / staleness / energy agreement between the engines."""
     out = []
-    net, clients, test = _problem(scale)
-    n = net.n
-    strat = make_strategies(net, CONSTS, steps=150, m_max=n + 6)
-    names, p_mat, m_vec, eta_vec = strategy_batch(strat)
-    cfg = AsyncFLConfig(batch_size=32, eval_every_time=horizon / 20,
-                        eval_batch=256, grad_clip=5.0)
-    model = mlp_classifier(28 * 28, int(test[1].max()) + 1, hidden=(64,))
+    base = record("event_engine",
+                  table1_scenario(scale, strategy="time_opt", steps=150,
+                                  name=f"event_engine_s{scale}"))
+    base = base.replace(strategy=dataclasses.replace(base.strategy,
+                                                     m_max=base.n + 6))
+    clients, test = _problem(base)
     seeds = list(seeds)
+
+    suite = ScenarioSuite.strategy_grid(base, STRATEGIES, seeds=seeds)
+    strat = suite.resolve()
+    model = mlp_classifier(28 * 28, int(test[1].max()) + 1, hidden=(64,))
+    eval_kw = dict(batch_size=32, eval_every_time=horizon / 20,
+                   eval_batch=256)
 
     # -- host reference loop (one python event loop per lane) ---------------
     t0 = time.perf_counter()
     host_stats = []
-    for name, p, m, eta in zip(names, p_mat, m_vec, eta_vec):
+    for name in STRATEGIES:
+        scn = suite.scenarios[name]
+        p, m = strat[name]
         for seed in seeds:
-            tr = AsyncFLTrainer(
-                model, clients, net._replace(p=jnp.asarray(p)), int(m),
-                config=AsyncFLConfig(eta=float(eta), batch_size=32,
-                                     eval_every_time=horizon / 20,
-                                     eval_batch=256,
-                                     grad_clip=5.0, seed=seed,
-                                     backend="host"),
-                test_data=test)
+            tr = AsyncFLTrainer.from_scenario(
+                scn.with_strategy("explicit", p=p, m=m), model, clients,
+                test_data=test,
+                eta=scn.eta(), seed=seed, backend="host", **eval_kw)
             log = tr.run(horizon_time=horizon)
             host_stats.append((log.throughput,
                                float(np.sum(p * log.mean_delay)), int(m)))
     host_s = time.perf_counter() - t0
 
     # -- fused device engine: whole grid in bucketed vmapped scans ----------
-    dev = DeviceTrainer(model, clients, net, cfg, test_data=test)
-    lanes_p = [p for p in p_mat for _ in seeds]
-    lanes_m = [int(m) for m in m_vec for _ in seeds]
-    lanes_eta = [float(e) for e in eta_vec for _ in seeds]
-    lanes_seed = [s for _ in names for s in seeds]
+    dev = DeviceTrainer.from_scenario(base, model, clients, test_data=test,
+                                      **eval_kw)
+    lanes_p = [strat[name][0] for name in STRATEGIES for _ in seeds]
+    lanes_m = [int(strat[name][1]) for name in STRATEGIES for _ in seeds]
+    lanes_eta = [suite.scenarios[name].eta() for name in STRATEGIES
+                 for _ in seeds]
+    lanes_seed = [s for _ in STRATEGIES for s in seeds]
     t0 = time.perf_counter()
     logs, _ = dev.run_lanes(lanes_p, lanes_m, lanes_eta, lanes_seed, horizon)
     dev_first_s = time.perf_counter() - t0

@@ -27,7 +27,8 @@ def build_suites(mode: str):
     from benchmarks import (bench_concurrency_sweep, bench_energy_joint,
                             bench_kernels, bench_pareto, bench_queueing,
                             bench_round_optimization, bench_routing_table,
-                            bench_tau_surface, bench_training_comparison)
+                            bench_scenario_suite, bench_tau_surface,
+                            bench_training_comparison)
 
     fast = mode == "fast"
     if mode == "smoke":
@@ -39,6 +40,8 @@ def build_suites(mode: str):
             # training benches
             ("event_engine", lambda: bench_training_comparison.run_engine_sweep(
                 scale=20, horizon=40.0, seeds=tuple(range(8)))),
+            ("scenario_suite", lambda: bench_scenario_suite.run(
+                scale=20, num_updates=2000, seeds=(0, 1, 2, 3))),
             ("routing_table", lambda: bench_routing_table.run(
                 scale=20, steps=30)),
             ("round_optimization", lambda: bench_round_optimization.run(
@@ -72,6 +75,9 @@ def build_suites(mode: str):
         ("event_engine", lambda: bench_training_comparison.run_engine_sweep(
             scale=20 if fast else 10, horizon=40.0 if fast else 80.0,
             seeds=tuple(range(8)))),
+        ("scenario_suite", lambda: bench_scenario_suite.run(
+            scale=20 if fast else 10,
+            num_updates=2000 if fast else 10000, seeds=tuple(range(4)))),
         ("energy_joint", lambda: bench_energy_joint.run(
             horizon=120.0 if fast else 240.0, seeds=(0,) if fast else (0, 1))),
         ("kernels", lambda: bench_kernels.run()),
@@ -118,12 +124,23 @@ def main(argv=None) -> None:
     if mode == "smoke":
         import jax
 
+        # key every row by the hash of the Scenario its suite actually ran
+        # (benchmarks/scenarios.py), so the perf trajectory stays joinable
+        # across API churn: rows are comparable iff their hashes match
+        from benchmarks import scenarios as bench_scenarios
+
+        hashes = bench_scenarios.recorded()
+        for r in results:
+            h = hashes.get(r["suite"])
+            if h is not None:
+                r["scenario"] = h
         payload = {
             "mode": mode,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "total_s": time.time() - t_start,
             "jax_version": jax.__version__,
             "backend": jax.default_backend(),
+            "scenarios": hashes,
             "failures": [list(f) for f in failures],
             "rows": results,
         }

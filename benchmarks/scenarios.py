@@ -1,0 +1,103 @@
+"""Declarative scenarios behind the benchmark suites.
+
+Every benchmark constructs its run through the Scenario API; the builders
+here are the single source of those specs, and ``BENCH_SCENARIOS`` holds
+one canonical (smoke-scale) scenario per suite.  Two consumers:
+
+  * ``benchmarks/run.py --smoke`` keys each ``BENCH_smoke.json`` row by the
+    serialized scenario hash (``Scenario.hash()`` — a canonical-JSON
+    digest), so the perf trajectory stays joinable across API churn: a row
+    is comparable with an older one iff the hashes match.  Benches that run
+    at non-default scales call :func:`record` with the spec they actually
+    executed.
+  * ``tests/test_scenario.py`` asserts every registered benchmark scenario
+    JSON-round-trips bitwise and builds its ``NetworkParams`` /
+    ``PowerProfile`` eagerly (no tracing).
+"""
+from __future__ import annotations
+
+from repro.core import LearningConstants
+from repro.scenario import (EnergySpec, LearningSpec, NetworkSpec,
+                            ObjectiveSpec, PAPER_CLUSTERS_TABLE1,
+                            PAPER_CLUSTERS_TABLE6, Scenario, StrategySpec)
+
+# The constants used across every benchmark (Assumptions A1-A5).
+CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+
+
+def table1_scenario(scale: int = 10, *, strategy: str = "asyncsgd",
+                    law: str = "exponential", with_power: bool = False,
+                    steps: int = 200, m_max=None, rho: float = 0.1,
+                    eta=None, grad_clip=5.0, search: str = "batched",
+                    name: str = "") -> Scenario:
+    """The paper's main population (Table 1 / Table 4), CPU-scaled."""
+    return Scenario(
+        network=NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE1, scale,
+                                          law=law),
+        learning=LearningSpec(consts=CONSTS, eta=eta, grad_clip=grad_clip),
+        energy=(EnergySpec.from_clusters(PAPER_CLUSTERS_TABLE1, scale)
+                if with_power else None),
+        strategy=StrategySpec(strategy, steps=steps, m_max=m_max,
+                              search=search),
+        objective=ObjectiveSpec("joint" if with_power else "time", rho=rho),
+        name=name or f"table1_s{scale}_{strategy}")
+
+
+def table6_scenario(scale: int = 5, *, strategy: str = "round_opt",
+                    steps: int = 300, name: str = "") -> Scenario:
+    """The Appendix-H round-complexity population (Table 6)."""
+    return Scenario(
+        network=NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE6, scale),
+        learning=LearningSpec(consts=CONSTS),
+        strategy=StrategySpec(strategy, steps=steps),
+        objective=ObjectiveSpec("round"),
+        name=name or f"table6_s{scale}_{strategy}")
+
+
+def two_client_scenario(mu2: float = 1.0) -> Scenario:
+    """The Figure-2 two-client system (client 2 = ``mu2``x faster)."""
+    return Scenario(
+        network=NetworkSpec(mu_c=[1.0, mu2], mu_d=[1.0, mu2],
+                            mu_u=[1.0, mu2]),
+        learning=LearningSpec(consts=LearningConstants(
+            L=1.0, delta=1.0, sigma=1.0, M=5.0, G=14.0, eps=1.0)),
+        name=f"fig2_mu2_{mu2:g}")
+
+
+# canonical smoke-scale spec per benchmark suite — the registered benchmark
+# scenarios (round-trip-tested in tests/test_scenario.py)
+BENCH_SCENARIOS: dict[str, Scenario] = {
+    "queueing": table1_scenario(1, name="queueing"),
+    "event_engine": table1_scenario(20, strategy="time_opt", steps=150,
+                                    name="event_engine"),
+    "routing_table": table1_scenario(20, strategy="time_opt", steps=30,
+                                     name="routing_table"),
+    "round_optimization": table6_scenario(20, steps=30,
+                                          name="round_optimization"),
+    "tau_surface": two_client_scenario(3.0),
+    "concurrency_sweep": table1_scenario(20, strategy="time_opt", steps=30,
+                                         name="concurrency_sweep"),
+    "pareto": table1_scenario(20, strategy="joint", with_power=True,
+                              steps=30, name="pareto"),
+    "training_comparison": table1_scenario(10, strategy="time_opt",
+                                           name="training_comparison"),
+    "energy_joint": table1_scenario(10, strategy="joint", with_power=True,
+                                    name="energy_joint"),
+    "scenario_suite": table1_scenario(20, strategy="time_opt", steps=60,
+                                      name="scenario_suite"),
+}
+
+# specs actually executed in this process (bench modules call record());
+# pre-seeded with the canonical smoke-scale specs
+_RUNS: dict[str, str] = {k: s.hash() for k, s in BENCH_SCENARIOS.items()}
+
+
+def record(suite_name: str, scenario: Scenario) -> Scenario:
+    """Note the scenario a bench actually ran (returned unchanged)."""
+    _RUNS[suite_name] = scenario.hash()
+    return scenario
+
+
+def recorded() -> dict[str, str]:
+    """``{suite name: scenario hash}`` for the rows of this process."""
+    return dict(_RUNS)

@@ -4,10 +4,12 @@ Reproduces the paper's Section 5.3 comparison (Figure 3 / Table 3): four
 scheduling strategies training the same CNN on a Dirichlet(0.2) non-IID
 heterogeneous client population, measured in *virtual wall-clock time*.
 
-By default the whole strategies x seeds grid runs on the fused device
-engine (``repro.fl.engine``) as ONE jitted, vmapped scan;
+The whole experiment is FIVE lines of declarative Scenario API (network
+spec -> strategy grid -> ``suite.run(mode="train")``) — the strategy
+registry resolves each (p, m), and the strategies x seeds grid runs on the
+fused device engine (``repro.fl.engine``) as bucketed jitted scans.
 ``--backend host`` restores the event-at-a-time reference loop driven by
-the exact per-task-identity simulator.
+the exact per-task-identity simulator (``AsyncFLTrainer.from_scenario``).
 
 Run:  PYTHONPATH=src python examples/async_fl_emnist.py [--horizon 240]
 """
@@ -17,16 +19,15 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LearningConstants
 from repro.data import (dirichlet_partition, make_synthetic_image_dataset,
                         train_test_split)
-from repro.fl import (AsyncFLConfig, AsyncFLTrainer, cnn_classifier,
-                      make_strategies, run_strategy_grid)
-from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1,
-                                 build_network_params, default_etas)
+from repro.fl import AsyncFLTrainer, cnn_classifier
+from repro.scenario import (LearningSpec, NetworkSpec,
+                            PAPER_CLUSTERS_TABLE1, Scenario, ScenarioSuite)
+
+STRATEGIES = ("asyncsgd", "max_throughput", "round_opt", "time_opt")
 
 
 def main():
@@ -40,10 +41,13 @@ def main():
     ap.add_argument("--backend", choices=("device", "host"), default="device")
     args = ap.parse_args()
 
-    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=args.scale)
-    consts = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
-    strategies = make_strategies(net, consts, steps=200, m_max=net.n + 6)
-    etas = default_etas(strategies)
+    # the 5-line declarative setup: one spec drives everything below
+    net = NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE1, args.scale,
+                                    law=args.distribution)
+    base = Scenario(network=net, learning=LearningSpec(grad_clip=5.0))
+    suite = ScenarioSuite.strategy_grid(base, STRATEGIES,
+                                        seeds=range(args.seeds),
+                                        steps=200, m_max=net.n + 6)
 
     full = make_synthetic_image_dataset(num_classes=10, samples_per_class=120)
     train, test = train_test_split(full, 0.2, seed=1)
@@ -52,45 +56,39 @@ def main():
 
     results = {}
     if args.backend == "device":
-        cfg = AsyncFLConfig(batch_size=32, eval_every_time=args.horizon / 40,
-                            distribution=args.distribution, grad_clip=5.0)
-        model = cnn_classifier(28, 10)
-        grid = run_strategy_grid(model, clients, net, strategies, cfg,
-                                 horizon_time=args.horizon,
-                                 seeds=tuple(range(args.seeds)), etas=etas,
-                                 test_data=(test.x, test.y))
-        print(f"[fused device engine: {grid.lanes} lanes x "
-              f"{grid.updates_per_lane} scan rounds in one compile]")
-        for name, logs in grid.logs.items():
+        grid = suite.run(mode="train", model=cnn_classifier(28, 10),
+                         clients=clients, test_data=(test.x, test.y),
+                         horizon_time=args.horizon, batch_size=32,
+                         eval_every_time=args.horizon / 40)
+        print(f"[fused device engine: {grid.lanes} lanes in "
+              f"{grid.programs} compiled programs]")
+        for name, logs in grid.entries.items():
             t_hit = float(np.mean([l.time_to_accuracy(args.target)
                                    for l in logs]))
             results[name] = t_hit
             acc = np.mean([l.accuracies[-1] for l in logs])
             upd = int(np.mean([l.updates[-1] for l in logs]))
-            m = strategies[name][1]
+            m = grid.strategies[name][1]
             print(f"{name:>15}: m={m:3d}  final_acc={acc:.3f}  "
                   f"updates={upd:6d}  t(acc>={args.target})={t_hit:.1f}")
     else:
-        for name, (p, m) in strategies.items():
-            model = cnn_classifier(28, 10)
-            tr = AsyncFLTrainer(
-                model, clients, net._replace(p=jnp.asarray(p)), m,
-                config=AsyncFLConfig(eta=etas[name], batch_size=32,
-                                     eval_every_time=args.horizon / 40,
-                                     distribution=args.distribution,
-                                     grad_clip=5.0, backend="host"),
-                test_data=(test.x, test.y))
+        for name, scn in suite.scenarios.items():
+            tr = AsyncFLTrainer.from_scenario(
+                scn, cnn_classifier(28, 10), clients,
+                test_data=(test.x, test.y), backend="host", batch_size=32,
+                eval_every_time=args.horizon / 40)
             log = tr.run(horizon_time=args.horizon)
             t_hit = log.time_to_accuracy(args.target)
             results[name] = t_hit
-            print(f"{name:>15}: m={m:3d}  final_acc={log.accuracies[-1]:.3f}  "
+            print(f"{name:>15}: m={tr.m:3d}  "
+                  f"final_acc={log.accuracies[-1]:.3f}  "
                   f"updates={log.updates[-1]:6d}  "
                   f"t(acc>={args.target})={t_hit:.1f}")
 
-    base = results.get("asyncsgd", float("inf"))
-    if np.isfinite(results.get("time_opt", np.inf)) and np.isfinite(base):
+    base_t = results.get("asyncsgd", float("inf"))
+    if np.isfinite(results.get("time_opt", np.inf)) and np.isfinite(base_t):
         print(f"\ntime-optimized reaches {args.target:.0%} "
-              f"{100 * (1 - results['time_opt'] / base):.1f}% faster than "
+              f"{100 * (1 - results['time_opt'] / base_t):.1f}% faster than "
               f"AsyncSGD (paper Table 3: 29-46%)")
 
 

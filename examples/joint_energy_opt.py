@@ -1,6 +1,11 @@
 """Energy-aware scheduling (Section 6): trace the time-energy Pareto
 frontier over rho and print the rho=0.1 operating point the paper recommends.
 
+Declarative setup: ONE energy-aware Scenario supplies the network, power
+profile and constants; the strategy registry resolves the time-optimal
+reference and the closed-form energy optimum, and the whole frontier —
+every (rho, m) pair — runs as ONE further batched sweep.
+
 Run:  PYTHONPATH=src python examples/joint_energy_opt.py
 """
 import os
@@ -11,33 +16,38 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LearningConstants, energy_complexity,
-                        energy_optimal_routing, minimal_energy, pareto_sweep,
-                        time_optimal, wallclock_time)
-from repro.fl.strategies import (PAPER_CLUSTERS_TABLE1, build_network_params,
-                                 build_power_profile, cluster_labels)
+from repro.core import (energy_complexity, minimal_energy, pareto_sweep,
+                        wallclock_time)
+from repro.scenario import (EnergySpec, NetworkSpec, PAPER_CLUSTERS_TABLE1,
+                            Scenario, ScenarioSuite, StrategySpec)
 
 
 def main():
-    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=10)
-    power = build_power_profile(PAPER_CLUSTERS_TABLE1, scale=10)
-    labels = np.array(cluster_labels(PAPER_CLUSTERS_TABLE1, scale=10))
-    consts = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
-    n = net.n
-    m_max = n + 6
+    scn = Scenario(
+        network=NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE1, 10),
+        energy=EnergySpec.from_clusters(PAPER_CLUSTERS_TABLE1, 10),
+        strategy=StrategySpec("time_opt", steps=200, m_max=None),
+        name="joint_energy")
+    net, power, consts = scn.params(), scn.power(), scn.consts
+    labels = np.array(scn.network.labels)
+    m_max = scn.n + 6
 
-    # one jitted sweep over m = 2..n+6 replaces the warm-started loop
-    tau_res = time_optimal(net, consts, m_max=m_max, steps=200)
+    # the registry resolves both reference points ((p*_tau, m*_tau) via one
+    # jitted sweep over m = 2..n+6; (p*_E, m=1) in closed form)
+    suite = ScenarioSuite.strategy_grid(scn, ("time_opt", "energy_opt"),
+                                        m_max=m_max)
+    ana = suite.run(mode="analyze")
+    tau_star = ana.entries["time_opt"]["tau"]
     e_star = float(minimal_energy(net, consts, power))
-    p_e = energy_optimal_routing(net, power)
-    print(f"time-optimal:   m*={tau_res.m} tau*={tau_res.value:.1f}")
+    print(f"time-optimal:   m*={ana.entries['time_opt']['m']} "
+          f"tau*={tau_star:.1f}")
     print(f"energy-optimal: m=1 E*={e_star:.1f} "
           f"(closed form p_i ∝ 1/sqrt(E_i), Eq. 16)")
 
     # the whole frontier — every (rho, m) pair — in ONE further sweep,
     # with rho entering as the batched objective context
     rhos = (0.0, 0.1, 0.3, 0.5, 0.8, 1.0)
-    _, per_rho = pareto_sweep(net, consts, power, rhos, tau_res.value, e_star,
+    _, per_rho = pareto_sweep(net, consts, power, rhos, tau_star, e_star,
                               m_max=m_max, steps=200)
 
     print("\nPareto frontier (Eq. 18):")

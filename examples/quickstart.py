@@ -14,18 +14,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LearningConstants, expected_relative_delay,
-                        simulate_stats, throughput, time_optimal,
-                        wallclock_time)
+from repro.core import (expected_relative_delay, simulate_stats, throughput,
+                        time_optimal, wallclock_time)
 from repro.core.simulator import AsyncNetworkSim
-from repro.fl.strategies import PAPER_CLUSTERS_TABLE1, build_network_params
+from repro.scenario import (NetworkSpec, PAPER_CLUSTERS_TABLE1, Scenario,
+                            StrategySpec)
 
 
 def main():
-    # the paper's heterogeneous population (Table 1), scaled to 11 clients
-    net = build_network_params(PAPER_CLUSTERS_TABLE1, scale=10)
-    n, m = net.n, net.n
-    consts = LearningConstants(L=1, delta=1, sigma=1, M=2, G=5, eps=1)
+    # the paper's heterogeneous population (Table 1), scaled to 11 clients,
+    # as ONE declarative spec (network + constants + strategy)
+    scn = Scenario(
+        network=NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE1, 10),
+        strategy=StrategySpec("time_opt", steps=200),
+        name="quickstart")
+    net, consts = scn.params(), scn.consts
+    n, m = scn.n, scn.n
 
     # closed-form stationary analysis (Theorem 2 / Proposition 4)
     delays = expected_relative_delay(net, m)

@@ -26,7 +26,7 @@ from .jackson import (analyze, delay_jacobian, expected_relative_delay,
                       mean_total_counts, second_moment_matrix, throughput,
                       throughput_grad)
 from .optimize import (OptResult, SweepResult, batched_concurrency_sweep,
-                       pareto_sweep,
+                       pareto_sweep, pruned_concurrency_sweep,
                        joint_optimal, make_energy_objective,
                        make_joint_objective, make_round_objective,
                        make_throughput_objective, make_time_objective,
@@ -44,6 +44,7 @@ __all__ = [
     "make_time_objective_padded", "make_energy_objective_padded",
     "make_joint_objective_padded", "objective_surface", "tau_surface",
     "SweepResult", "batched_concurrency_sweep", "pareto_sweep",
+    "pruned_concurrency_sweep",
     "LearningConstants", "round_complexity", "round_complexity_unbounded",
     "eta_max", "system_staleness_factor", "wallclock_time",
     "PowerProfile", "per_task_energy", "energy_per_round", "energy_complexity",

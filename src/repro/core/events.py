@@ -13,10 +13,11 @@ padded ``(p, m)`` strategy batches (the padding conventions of
 Exactness: service completions are *raced as absolute clocks* — a task
 entering service draws its full service time up front and the next event is
 the argmin over the table — which is exactly the semantics of the host
-reference simulator for **every** service law (exponential, deterministic,
-lognormal; Section 5.3.3), not just the memoryless case the old
-``jump_chain_throughput`` CTMC sampler handled (that sampler is now a thin
-wrapper over this engine).
+reference simulator for **every** service law registered in
+``repro.scenario.laws`` (the Section 5.3.3 built-ins exponential /
+deterministic / lognormal plus e.g. the hyperexponential H2 stress law),
+not just the memoryless case the old ``jump_chain_throughput`` CTMC sampler
+handled (that sampler is now a thin wrapper over this engine).
 
 Contract with ``repro.core.simulator.AsyncNetworkSim``: the host heap
 simulator remains the *exact per-task-identity reference*.  The two engines
@@ -53,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import numerics  # noqa: F401  (enables x64)
+from ..scenario.laws import get_law
 from .buzen import NetworkParams
 
 # task phases
@@ -124,21 +126,14 @@ class EventStats(NamedTuple):
     mean_queue_counts: jax.Array  # [3n+1]
 
 
-_DISTRIBUTIONS = ("exponential", "deterministic", "lognormal")
-
-
 def _draw(key: jax.Array, rate: jax.Array, distribution: str,
           shape=()) -> jax.Array:
-    """Service time with mean ``1/rate`` (Section 5.3.3 laws)."""
-    if distribution == "exponential":
-        return jax.random.exponential(key, shape) / rate
-    if distribution == "deterministic":
-        return jnp.broadcast_to(1.0 / rate, shape)
-    if distribution == "lognormal":
-        # underlying normal variance 1, mean of LN = 1/rate
-        return jnp.exp(jax.random.normal(key, shape)
-                       - jnp.log(rate) - 0.5)
-    raise ValueError(f"unknown service distribution: {distribution}")
+    """Service time with mean ``1/rate``: the device draw of the registered
+    timing law (``repro.scenario.laws``; Section 5.3.3 built-ins plus any
+    ``@timing_law``-registered extension).  Unknown names raise listing the
+    registry — and only at trace time; callers validate eagerly via
+    :func:`repro.scenario.laws.get_law`."""
+    return get_law(distribution).device_draw(key, rate, shape)
 
 
 def init_state(params: NetworkParams, m, key: jax.Array, *,
@@ -410,8 +405,7 @@ def simulate_stats(params: NetworkParams, m, num_updates: int, *,
     whole function vmaps over seeds (``key``) and padded ``(p, m)`` batches
     (pass a static ``m_max >= m``).
     """
-    if distribution not in _DISTRIBUTIONS:
-        raise ValueError(f"unknown service distribution: {distribution}")
+    get_law(distribution)  # eager: unknown laws fail here with the options
     if key is None:
         key = jax.random.PRNGKey(seed)
     if m_max is None:

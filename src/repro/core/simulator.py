@@ -3,8 +3,10 @@
 Two complementary implementations:
 
   * ``AsyncNetworkSim`` — an exact discrete-event simulation with per-task
-    identity (heap-based, host Python).  Supports exponential, deterministic
-    and lognormal service/communication times (Section 5.3.3), the optional
+    identity (heap-based, host Python).  Supports every service-time law in
+    the timing-law registry (``repro.scenario.laws``: the Section 5.3.3
+    exponential / deterministic / lognormal built-ins plus extensions such
+    as the hyperexponential H2), the optional
     CS-side FIFO buffer (Section 7), phase-dependent energy accounting
     (Eq. 14), and measures the *relative delay* exactly as defined in
     Section 2.4.  It doubles as the virtual-time engine of the FL trainer
@@ -29,11 +31,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import math
 from typing import Callable, Iterator, Optional
 
 import numpy as np
 
+from ..scenario.laws import get_law
 from .buzen import NetworkParams
 
 # event kinds
@@ -41,26 +43,18 @@ _DOWN, _COMP, _UP, _CS = 0, 1, 2, 3
 
 
 def make_sampler(kind: str, rng: np.random.Generator) -> Callable[[float], float]:
-    """Sample a service time with mean ``1/mu`` (Section 5.3.3 distributions).
+    """Host sampler for service times with mean ``1/mu``.
 
-    The returned sampler raises ``ValueError`` on a non-positive rate
-    instead of silently emitting ``inf``/NaN service times (a zero rate
-    would otherwise stall the event heap with infinite clocks).
+    ``kind`` names a law in the timing-law registry
+    (``repro.scenario.laws``: the Section 5.3.3 built-ins plus any
+    ``@timing_law``-registered extension such as ``"hyperexponential"``);
+    unknown names raise *eagerly* with the registered options.  The
+    returned sampler raises ``ValueError`` on a non-positive rate instead
+    of silently emitting ``inf``/NaN service times (a zero rate would
+    otherwise stall the event heap with infinite clocks).
     """
-    def _check(mu: float) -> float:
-        if not mu > 0:
-            raise ValueError(f"service rate must be positive, got mu={mu}")
-        return mu
-
-    if kind == "exponential":
-        return lambda mu: rng.exponential(1.0 / _check(mu))
-    if kind == "deterministic":
-        return lambda mu: 1.0 / _check(mu)
-    if kind == "lognormal":
-        # underlying normal variance sigma_N^2 = 1, mean of LN = 1/mu
-        # mean = exp(mu_N + 1/2) = 1/mu  ->  mu_N = -log(mu) - 1/2
-        return lambda mu: rng.lognormal(-math.log(_check(mu)) - 0.5, 1.0)
-    raise ValueError(f"unknown service distribution: {kind}")
+    law = get_law(kind)
+    return lambda mu: law.host_sample(mu, rng)
 
 
 @dataclasses.dataclass

@@ -1,9 +1,18 @@
-"""Client data partitioners (Section 5.3.1 / Appendix H.1)."""
+"""Client data partitioners (Section 5.3.1 / Appendix H.1).
+
+Each partitioner is registered in the ``PARTITIONS`` registry of the
+Scenario API (``repro.scenario``), so data layouts are selectable by name
+(``PARTITIONS.get("dirichlet")``) next to timing laws, strategies and
+objectives — and new ones plug in with ``@partition("name")``.
+"""
 from __future__ import annotations
 
 import numpy as np
 
+from ..scenario.registry import partition
 
+
+@partition("iid")
 def iid_partition(y: np.ndarray, n_clients: int, seed: int = 0) -> list[np.ndarray]:
     """Uniform shuffle-and-split: identical class mix per client."""
     rng = np.random.default_rng(seed)
@@ -11,6 +20,7 @@ def iid_partition(y: np.ndarray, n_clients: int, seed: int = 0) -> list[np.ndarr
     return [np.sort(part) for part in np.array_split(idx, n_clients)]
 
 
+@partition("dirichlet")
 def dirichlet_partition(y: np.ndarray, n_clients: int, alpha: float = 0.2,
                         seed: int = 0, min_size: int = 2) -> list[np.ndarray]:
     """Label-skew partition: per class k, client shares ~ Dir_n(alpha)
@@ -30,6 +40,7 @@ def dirichlet_partition(y: np.ndarray, n_clients: int, alpha: float = 0.2,
             return [np.sort(np.asarray(b)) for b in buckets]
 
 
+@partition("pathological")
 def pathological_partition(y: np.ndarray, n_clients: int,
                            classes_per_client: int = 3,
                            seed: int = 0) -> list[np.ndarray]:

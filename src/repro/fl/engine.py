@@ -159,6 +159,21 @@ class DeviceTrainer:
         self._jit_cache: dict = {}
         self._count_cache: dict = {}
 
+    @classmethod
+    def from_scenario(cls, scenario, model: Model, clients, *,
+                      test_data=None, loss_fn: Callable = cross_entropy_loss,
+                      **config_overrides) -> "DeviceTrainer":
+        """Build the fused trainer from a declarative
+        ``repro.scenario.Scenario`` (network rates/law, grad clip and power
+        profile come from the spec; ``config_overrides`` feed
+        ``AsyncFLConfig``).  Lane routing/concurrency still varies per
+        :meth:`run_lanes` call — resolve them with
+        ``repro.scenario.resolve_strategy`` or a ``ScenarioSuite``."""
+        return cls(model, clients, scenario.params(),
+                   scenario.fl_config(**config_overrides),
+                   test_data=test_data, power=scenario.power(),
+                   loss_fn=loss_fn)
+
     # -- static-shape planning ---------------------------------------------
 
     def _plan_one(self, p, m, horizon: float) -> int:

@@ -1,101 +1,59 @@
-"""The paper's client clusters and scheduling strategies (Sections 5.3/6.5).
+"""Deprecation shims: cluster tables and the strategy factory, pre-Scenario.
 
-``ClusterSpec`` encodes Table 1 (service rates) and Table 4 (power profiles);
-``make_strategies`` derives the five configurations compared in the paper:
+The declarative home of everything here is ``repro.scenario``:
 
-  * ``asyncsgd``        — uniform routing, m = n              [29, Alg. 2]
-  * ``max_throughput``  — p*_lambda, m = n
-  * ``round_opt``       — p*_K, m = n                         [31, 2]
-  * ``time_opt``        — (p*_tau, m*_tau)                    (proposed)
-  * ``energy_opt``      — (p*_E, m = 1), closed form Eq. 16
-  * ``joint(rho)``      — (p*_rho, m*_rho), Eq. 18
+  * :class:`ClusterSpec` and the paper's Table-1/Table-6 populations live in
+    ``repro.scenario.spec`` (re-exported below);
+  * network/power construction is ``NetworkSpec.from_clusters(...).params()``
+    / ``EnergySpec.from_clusters(...).profile(...)``;
+  * the five scheduling configurations (Sections 5.3/6.5) are entries in
+    the strategy registry (``repro.scenario.suite``):
+
+      - ``asyncsgd``        — uniform routing, m = n          [29, Alg. 2]
+      - ``max_throughput``  — p*_lambda, m = n
+      - ``round_opt``       — p*_K, m = n                     [31, 2]
+      - ``time_opt``        — (p*_tau, m*_tau)                (proposed)
+      - ``energy_opt``      — (p*_E, m = 1), closed form Eq. 16
+      - ``joint``           — (p*_rho, m*_rho), Eq. 18
+
+:func:`make_strategies` keeps its seed signature and output format
+(``{name: (p, m)}``) but dispatches through that registry, so
+``@strategy``-registered extensions are immediately available to every seed
+call site.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
-from ..core import (LearningConstants, NetworkParams, PowerProfile,
-                    energy_optimal_routing, joint_optimal, make_round_objective,
-                    make_throughput_objective, minimal_energy,
-                    optimize_routing, time_optimal)
-
-
-@dataclasses.dataclass
-class ClusterSpec:
-    """One client cluster row of Table 1 / Table 4."""
-
-    name: str
-    mu_c: float
-    mu_u: float
-    mu_d: float
-    count: int
-    kappa: float = 0.0   # DVFS energy coefficient (Table 4)
-    P_u: float = 0.0
-    P_d: float = 0.0
-
-
-# Table 1 — the paper's main experimental population (n = 100).
-PAPER_CLUSTERS_TABLE1 = [
-    ClusterSpec("A", 10.0, 2.0, 2.5, 15, kappa=0.08, P_u=5.0, P_d=3.0),
-    ClusterSpec("B", 0.3, 9.0, 10.0, 15, kappa=200.0, P_u=15.0, P_d=10.0),
-    ClusterSpec("C", 5.0, 6.0, 7.0, 20, kappa=0.25, P_u=4.0, P_d=3.0),
-    ClusterSpec("D", 0.15, 0.1, 0.12, 40, kappa=14400.0, P_u=0.5, P_d=0.2),
-    ClusterSpec("E", 12.0, 10.0, 11.0, 10, kappa=1.50, P_u=50.0, P_d=40.0),
-]
-
-# Table 6 — the round-complexity experiment population (Appendix H).
-PAPER_CLUSTERS_TABLE6 = [
-    ClusterSpec("A", 10.0, 2.0, 2.5, 15),
-    ClusterSpec("B", 2.5, 8.0, 9.0, 35),
-    ClusterSpec("C", 5.0, 5.0, 6.0, 30),
-    ClusterSpec("D", 0.5, 0.8, 1.1, 15),
-    ClusterSpec("E", 15.0, 10.0, 11.0, 5),
-]
+from ..core import LearningConstants, NetworkParams, PowerProfile
+# re-exports for seed call sites (the canonical home is repro.scenario.spec)
+from ..scenario.spec import (DEFAULT_ETA, MAX_THROUGHPUT_ETA,  # noqa: F401
+                             PAPER_CLUSTERS_TABLE1, PAPER_CLUSTERS_TABLE6,
+                             ClusterSpec, expand_clusters)
 
 
 def build_network_params(clusters: list[ClusterSpec],
                          scale: int = 1,
                          mu_cs: Optional[float] = None) -> NetworkParams:
-    """Expand cluster rows into per-client rate vectors (optionally scaling
-    the population down by ``scale`` for CPU-budget experiments)."""
-    mu_c, mu_d, mu_u = [], [], []
-    for c in clusters:
-        cnt = max(1, c.count // scale)
-        mu_c += [c.mu_c] * cnt
-        mu_d += [c.mu_d] * cnt
-        mu_u += [c.mu_u] * cnt
-    n = len(mu_c)
-    params = NetworkParams(
-        p=jnp.full((n,), 1.0 / n),
-        mu_c=jnp.asarray(mu_c), mu_d=jnp.asarray(mu_d), mu_u=jnp.asarray(mu_u))
-    if mu_cs is not None:
-        params = params.with_cs(mu_cs)
-    return params
+    """Shim: ``NetworkSpec.from_clusters(...).params()``."""
+    from ..scenario.spec import NetworkSpec
+
+    return NetworkSpec.from_clusters(clusters, scale, mu_cs=mu_cs).params()
 
 
 def build_power_profile(clusters: list[ClusterSpec], scale: int = 1,
                         P_cs: Optional[float] = None) -> PowerProfile:
-    kappa, P_u, P_d, mu_c = [], [], [], []
-    for c in clusters:
-        cnt = max(1, c.count // scale)
-        kappa += [c.kappa] * cnt
-        P_u += [c.P_u] * cnt
-        P_d += [c.P_d] * cnt
-        mu_c += [c.mu_c] * cnt
-    return PowerProfile.from_dvfs(
-        jnp.asarray(kappa), jnp.asarray(mu_c), jnp.asarray(P_u),
-        jnp.asarray(P_d), P_cs=None if P_cs is None else jnp.asarray(P_cs))
+    """Shim: ``EnergySpec.from_clusters(...).profile(network)``."""
+    from ..scenario.spec import EnergySpec, NetworkSpec
+
+    return EnergySpec.from_clusters(clusters, scale, P_cs=P_cs).profile(
+        NetworkSpec.from_clusters(clusters, scale))
 
 
 def cluster_labels(clusters: list[ClusterSpec], scale: int = 1) -> list[str]:
-    out = []
-    for c in clusters:
-        out += [c.name] * max(1, c.count // scale)
-    return out
+    return list(expand_clusters(clusters, scale)[0])
 
 
 def make_strategies(
@@ -107,57 +65,28 @@ def make_strategies(
     m_max: Optional[int] = None,
     steps: int = 300,
     which: tuple = ("asyncsgd", "max_throughput", "round_opt", "time_opt"),
+    search: str = "batched",
 ) -> dict[str, tuple[np.ndarray, int]]:
-    """Return {name: (p, m)} for the requested strategies."""
-    n = params.n
-    m_full = n
-    m_max = m_max or n + max(8, n // 4)
+    """Return ``{name: (p, m)}`` for the requested strategies.
+
+    Shim over the strategy registry: each name resolves through
+    ``repro.scenario.STRATEGIES`` with a shared cache, so ``joint`` reuses
+    ``time_opt``'s tau* exactly as the seed implementation did, and
+    ``search="pruned"`` selects the coarse-to-fine concurrency search.
+    """
+    from ..scenario.registry import STRATEGIES
+    from ..scenario.suite import ResolveContext, default_m_max
+
+    m_max = m_max or default_m_max(params.n)
     out: dict[str, tuple[np.ndarray, int]] = {}
-
-    if "asyncsgd" in which:
-        out["asyncsgd"] = (np.full(n, 1.0 / n), m_full)
-
-    if "max_throughput" in which:
-        res = optimize_routing(make_throughput_objective(params), n, m_full,
-                               steps=steps)
-        out["max_throughput"] = (np.asarray(res.p), m_full)
-
-    if "round_opt" in which:
-        res = optimize_routing(make_round_objective(params, consts), n, m_full,
-                               steps=steps)
-        out["round_opt"] = (np.asarray(res.p), m_full)
-
-    if "time_opt" in which:
-        res = time_optimal(params, consts, m_max=m_max, steps=steps)
-        out["time_opt"] = (np.asarray(res.p), res.m)
-
-    if "energy_opt" in which:
-        assert power is not None
-        out["energy_opt"] = (np.asarray(energy_optimal_routing(params, power)), 1)
-
-    if "joint" in which:
-        assert power is not None
-        if "time_opt" in out:
-            p_tau, m_tau = out["time_opt"]
-            from ..core import wallclock_time
-            tau_star = float(wallclock_time(params._replace(p=jnp.asarray(p_tau)),
-                                            m_tau, consts))
-        else:
-            tau_star = time_optimal(params, consts, m_max=m_max,
-                                    steps=steps).value
-        e_star = float(minimal_energy(params, consts, power))
-        res = joint_optimal(params, consts, power, rho, tau_star, e_star,
-                            m_max=m_max, steps=steps)
-        out["joint"] = (np.asarray(res.p), res.m)
-
+    cache: dict = {}
+    for name in which:
+        ctx = ResolveContext(
+            params=params, consts=consts, power=power, rho=rho, m=None,
+            m_max=m_max, steps=steps, search=search, resolved=out,
+            cache=cache)
+        out[name] = STRATEGIES.get(name)(ctx)
     return out
-
-
-# The paper's step sizes for the Table-3 comparison: max-throughput needs a
-# 20x-reduced learning rate to stay stable (Section 5.3).  Single source of
-# truth for benchmarks and examples.
-DEFAULT_ETA = 0.05
-MAX_THROUGHPUT_ETA = 0.01
 
 
 def default_etas(strategies) -> dict:

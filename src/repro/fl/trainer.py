@@ -41,13 +41,24 @@ from .models import Model, accuracy, cross_entropy_loss
 class AsyncFLConfig:
     eta: float = 0.05                 # base learning rate
     batch_size: int = 128
-    distribution: str = "exponential"  # service-time law (Section 5.3.3)
+    distribution: str = "exponential"  # registered timing law (Section 5.3.3)
     seed: int = 0
     eval_every_time: float = 10.0     # evaluate on a wall-clock grid
     eval_batch: int = 512
     grad_clip: Optional[float] = None  # constrains G (Section 2.5)
     backend: str = "device"           # "device" (fused scan) | "host" (ref)
     use_fused_update: bool = False    # Pallas fused apply (device backend)
+
+    def __post_init__(self):
+        # eager timing-law validation: an unknown law used to surface only
+        # deep inside the first jit trace — fail at construction instead,
+        # with the registered laws in the message
+        from ..scenario.laws import get_law
+
+        get_law(self.distribution)
+        if self.backend not in ("device", "host"):
+            raise ValueError(f"unknown backend: {self.backend!r}; "
+                             "expected 'device' or 'host'")
 
 
 @dataclasses.dataclass
@@ -127,6 +138,22 @@ class AsyncFLTrainer:
             return loss_fn(logits, y), accuracy(logits, y)
 
         self._evaluate = evaluate
+
+    @classmethod
+    def from_scenario(cls, scenario, model: Model, client_data: list, *,
+                      test_data=None, loss_fn: Callable = cross_entropy_loss,
+                      **config_overrides) -> "AsyncFLTrainer":
+        """Construct a trainer from a declarative ``repro.scenario.Scenario``
+        — the strategy registry resolves ``(p, m)``, the network spec the
+        rates/law, the learning spec eta/clipping; ``config_overrides`` feed
+        ``AsyncFLConfig`` (e.g. ``batch_size=32, backend="host"``)."""
+        from ..scenario.suite import resolve_strategy
+
+        p, m = resolve_strategy(scenario)
+        return cls(model, client_data, scenario.params(p), m,
+                   config=scenario.fl_config(**config_overrides),
+                   test_data=test_data, power=scenario.power(),
+                   loss_fn=loss_fn)
 
     # -- device backend -----------------------------------------------------
 

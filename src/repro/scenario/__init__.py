@@ -1,0 +1,68 @@
+"""repro.scenario — the unified declarative Scenario API.
+
+ONE pytree spec (:class:`Scenario`) describes an experiment — network,
+learning constants, energy model, strategy, objective — and drives all
+three execution paths through :class:`ScenarioSuite`:
+
+  * ``run(mode="analyze")``  — the closed forms (Thm 2/3, Prop 4/5);
+  * ``run(mode="simulate")`` — the device-resident event engine;
+  * ``run(mode="train")``    — the fused AsyncSGD trainer.
+
+The 5-line EMNIST strategy comparison (replacing the hand-threaded
+``NetworkParams`` + ``make_strategies`` + config wiring)::
+
+    net = NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE1, scale=10)
+    base = Scenario(network=net, learning=LearningSpec(grad_clip=5.0))
+    suite = ScenarioSuite.strategy_grid(
+        base, ("asyncsgd", "max_throughput", "round_opt", "time_opt"),
+        seeds=range(3))
+    res = suite.run(mode="train", model=cnn_classifier(28, 10),
+                    clients=clients, test_data=test, horizon_time=240.0,
+                    batch_size=32, eval_every_time=6.0)
+
+Extension points are decorator registries (``repro.scenario.registry``):
+``@timing_law`` (service distributions — see the built-in
+``hyperexponential`` for the host-sampler + device-draw pattern),
+``@strategy``, ``@objective`` and ``@partition``.
+
+Import structure: this ``__init__`` eagerly exposes only the
+dependency-free ``registry`` and ``laws`` modules (so the low-level engines
+in ``repro.core`` can import them without cycles); ``spec``/``suite`` —
+which import ``repro.core`` — load lazily on first attribute access.
+"""
+from __future__ import annotations
+
+from . import laws  # registers the built-in timing laws  # noqa: F401
+from .laws import TimingLaw, get_law, law_names
+from .registry import (OBJECTIVES, PARTITIONS, STRATEGIES, TIMING_LAWS,
+                       Registry, objective, partition, strategy, timing_law)
+
+_SPEC = ("Scenario", "NetworkSpec", "LearningSpec", "EnergySpec",
+         "StrategySpec", "ObjectiveSpec", "ClusterSpec",
+         "PAPER_CLUSTERS_TABLE1", "PAPER_CLUSTERS_TABLE6", "expand_clusters",
+         "DEFAULT_ETA", "MAX_THROUGHPUT_ETA", "EXPLICIT", "stack")
+_SUITE = ("ScenarioSuite", "SuiteResult", "ObjectiveDef", "ResolveContext",
+          "resolve_strategy", "get_objective", "default_m_max")
+
+__all__ = [
+    "Registry", "TIMING_LAWS", "STRATEGIES", "OBJECTIVES", "PARTITIONS",
+    "timing_law", "strategy", "objective", "partition",
+    "TimingLaw", "get_law", "law_names",
+    *_SPEC, *_SUITE,
+]
+
+
+def __getattr__(name: str):
+    if name in _SPEC:
+        from . import spec
+
+        return getattr(spec, name)
+    if name in _SUITE:
+        from . import suite
+
+        return getattr(suite, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,128 @@
+"""Service-time (timing) laws — one registry entry drives both engines.
+
+A :class:`TimingLaw` packages the two implementations every law needs:
+
+  * ``host_sample(mu, rng)`` — one draw with mean ``1/mu`` from a
+    ``numpy.random.Generator`` (the exact per-task-identity heap simulator,
+    ``repro.core.simulator.AsyncNetworkSim``);
+  * ``device_draw(key, rate, shape)`` — the same distribution as a pure JAX
+    function of a PRNG key (the jitted event engine,
+    ``repro.core.events``, where service completions race as absolute
+    clocks drawn at service start — exact for *any* law registered here).
+
+Built-ins are the paper's Section 5.3.3 laws (exponential, deterministic,
+lognormal) plus a **hyperexponential** (H2) law — the balanced-means
+two-phase mixture with squared coefficient of variation ``SCV = 4``,
+a standard high-variance stress test in the queueing literature: with
+probability ``q = (1 + sqrt(3/5)) / 2`` the task is a "fast" exponential of
+rate ``2 q mu``, otherwise a "slow" one of rate ``2 (1 - q) mu``; the mean
+is ``1/mu`` for every ``mu``.
+
+Register new laws with the decorator::
+
+    @timing_law("mylaw")
+    def _mylaw() -> TimingLaw:
+        return TimingLaw(host_sample=..., device_draw=...)
+
+(The registry stores the *factory*; :func:`get_law` calls and caches it, so
+registration stays import-cheap.)  Both implementations must produce mean
+``1/mu`` draws and raise/propagate on non-positive rates on the host side.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .registry import TIMING_LAWS, timing_law
+
+
+class TimingLaw(NamedTuple):
+    """Host and device implementations of one service-time distribution."""
+
+    host_sample: Callable  # (mu: float, rng: np.random.Generator) -> float
+    device_draw: Callable  # (key, rate: Array, shape) -> Array
+
+
+def _check(mu: float) -> float:
+    """Shared host-side guard: a zero/negative rate would stall the event
+    heap with infinite clocks — fail at the draw instead."""
+    if not mu > 0:
+        raise ValueError(f"service rate must be positive, got mu={mu}")
+    return mu
+
+
+_cache: dict[str, TimingLaw] = {}
+
+
+def get_law(name: str) -> TimingLaw:
+    """Resolve a registered law (building and caching it on first use).
+
+    Raises ``ValueError`` listing the registered laws on an unknown name —
+    the eager-validation entry point used by ``AsyncFLConfig``,
+    ``make_sampler`` and ``simulate_stats``.
+    """
+    hit = _cache.get(name)
+    if hit is None:
+        hit = _cache[name] = TIMING_LAWS.get(name)()
+    return hit
+
+
+def law_names() -> tuple[str, ...]:
+    return TIMING_LAWS.names()
+
+
+# ---------------------------------------------------------------------------
+# built-in laws (Section 5.3.3) — the device draws are bit-compatible with
+# the historical ``repro.core.events._draw`` (same primitives, same key use)
+# ---------------------------------------------------------------------------
+
+@timing_law("exponential")
+def _exponential() -> TimingLaw:
+    return TimingLaw(
+        host_sample=lambda mu, rng: rng.exponential(1.0 / _check(mu)),
+        device_draw=lambda key, rate, shape=():
+            jax.random.exponential(key, shape) / rate)
+
+
+@timing_law("deterministic")
+def _deterministic() -> TimingLaw:
+    return TimingLaw(
+        host_sample=lambda mu, rng: 1.0 / _check(mu),
+        device_draw=lambda key, rate, shape=():
+            jnp.broadcast_to(1.0 / rate, shape))
+
+
+@timing_law("lognormal")
+def _lognormal() -> TimingLaw:
+    # underlying normal variance sigma_N^2 = 1, mean of LN = 1/mu
+    # mean = exp(mu_N + 1/2) = 1/mu  ->  mu_N = -log(mu) - 1/2
+    return TimingLaw(
+        host_sample=lambda mu, rng:
+            rng.lognormal(-math.log(_check(mu)) - 0.5, 1.0),
+        device_draw=lambda key, rate, shape=():
+            jnp.exp(jax.random.normal(key, shape) - jnp.log(rate) - 0.5))
+
+
+# H2 balanced-means parameters for SCV = 4: q (1 - q) = 1 / (2 (SCV + 1))
+_H2_SCV = 4.0
+_H2_Q = 0.5 * (1.0 + math.sqrt((_H2_SCV - 1.0) / (_H2_SCV + 1.0)))
+
+
+@timing_law("hyperexponential")
+def _hyperexponential() -> TimingLaw:
+    q = _H2_Q
+
+    def host_sample(mu, rng):
+        rate = (2.0 * q if rng.random() < q else 2.0 * (1.0 - q)) * _check(mu)
+        return rng.exponential(1.0 / rate)
+
+    def device_draw(key, rate, shape=()):
+        k_branch, k_exp = jax.random.split(key)
+        fast = jax.random.uniform(k_branch, shape) < q
+        branch_rate = jnp.where(fast, 2.0 * q, 2.0 * (1.0 - q)) * rate
+        return jax.random.exponential(k_exp, shape) / branch_rate
+
+    return TimingLaw(host_sample=host_sample, device_draw=device_draw)

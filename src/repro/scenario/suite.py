@@ -1,0 +1,592 @@
+"""ScenarioSuite — plan and dispatch batches of Scenarios in few compiles.
+
+One entry point, three execution modes, all driven by the same spec::
+
+    suite = ScenarioSuite.strategy_grid(base, ("asyncsgd", "time_opt"),
+                                        seeds=range(4))
+    closed  = suite.run(mode="analyze")                    # closed forms
+    stats   = suite.run(mode="simulate", num_updates=2000) # event engine
+    logs    = suite.run(mode="train", model=m, clients=c,
+                        horizon_time=240.0)                # fused trainer
+
+Planning: scenarios x seeds flatten into *lanes*; lanes are bucketed by
+static structure (population size, timing law, CS buffer, energy
+accounting, padded ``m_max``) and each bucket executes as ONE jitted,
+vmapped program — a suite of S structurally-alike scenarios costs one
+compile, not S (``SuiteResult.programs`` records the count; the
+``scenario_suite`` smoke benchmark tracks it).  ``train`` mode delegates
+lane bucketing to the PR-2 planner of ``repro.fl.engine`` (scan lengths
+from an exact queueing-only pre-simulation).
+
+This module also hosts the **strategy** and **objective** registrations
+(the implementations live in ``repro.core``): the five paper strategies
+resolve through ``STRATEGIES``, the closed-form objectives through
+``OBJECTIVES`` — the registries that replaced the stringly-typed dispatch
+previously scattered across ``make_strategies`` and the ``make_*_objective``
+factories.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import events
+from ..core.buzen import NetworkParams, log_normalizing_constants
+from ..core.complexity import LearningConstants, wallclock_time
+from ..core.energy import (PowerProfile, energy_optimal_routing,
+                           minimal_energy)
+from ..core.batched import (energy_complexity_padded,
+                            expected_relative_delay_padded,
+                            make_energy_objective_padded,
+                            make_joint_objective_padded,
+                            make_round_objective_padded,
+                            make_throughput_objective_padded,
+                            make_time_objective_padded,
+                            round_complexity_padded, throughput_padded)
+from ..core.optimize import (joint_optimal, make_energy_objective,
+                             make_joint_objective, make_round_objective,
+                             make_throughput_objective, make_time_objective,
+                             optimize_routing, time_optimal)
+from .registry import OBJECTIVES, STRATEGIES, objective, strategy
+from .spec import EXPLICIT, Scenario
+
+MODES = ("analyze", "simulate", "train")
+
+
+# ---------------------------------------------------------------------------
+# objective registry — named closed-form objectives (static + padded forms)
+# ---------------------------------------------------------------------------
+
+class ObjectiveDef(NamedTuple):
+    """One optimizable/reportable closed form.
+
+    ``static(params, consts, power, refs)`` returns the classic
+    ``obj(p, m)`` callable; ``padded(params, consts, power, refs, m_max)``
+    the traced-``m`` ``obj(p, m, logZ[, rho])`` of ``repro.core.batched``.
+    ``refs`` carries the joint objective's normalizers
+    (``tau_star``/``e_star``); ``uses_ctx`` marks objectives whose padded
+    form takes the per-row sweep context (the Pareto weight ``rho``).
+    """
+
+    static: Callable
+    padded: Callable
+    needs_power: bool = False
+    needs_refs: bool = False
+    uses_ctx: bool = False
+
+
+@objective("time")
+def _obj_time() -> ObjectiveDef:
+    return ObjectiveDef(
+        static=lambda prm, c, pw, refs: make_time_objective(prm, c),
+        padded=lambda prm, c, pw, refs, mx:
+            make_time_objective_padded(prm, c, mx))
+
+
+@objective("round")
+def _obj_round() -> ObjectiveDef:
+    return ObjectiveDef(
+        static=lambda prm, c, pw, refs: make_round_objective(prm, c),
+        padded=lambda prm, c, pw, refs, mx:
+            make_round_objective_padded(prm, c, mx))
+
+
+@objective("throughput")
+def _obj_throughput() -> ObjectiveDef:
+    return ObjectiveDef(
+        static=lambda prm, c, pw, refs: make_throughput_objective(prm),
+        padded=lambda prm, c, pw, refs, mx:
+            make_throughput_objective_padded(prm, mx))
+
+
+@objective("energy")
+def _obj_energy() -> ObjectiveDef:
+    return ObjectiveDef(
+        static=lambda prm, c, pw, refs: make_energy_objective(prm, c, pw),
+        padded=lambda prm, c, pw, refs, mx:
+            make_energy_objective_padded(prm, c, pw, mx),
+        needs_power=True)
+
+
+@objective("joint")
+def _obj_joint() -> ObjectiveDef:
+    return ObjectiveDef(
+        static=lambda prm, c, pw, refs: make_joint_objective(
+            prm, c, pw, refs["rho"], refs["tau_star"], refs["e_star"]),
+        padded=lambda prm, c, pw, refs, mx: make_joint_objective_padded(
+            prm, c, pw, refs["tau_star"], refs["e_star"], mx),
+        needs_power=True, needs_refs=True, uses_ctx=True)
+
+
+def get_objective(name: str) -> ObjectiveDef:
+    return OBJECTIVES.get(name)()
+
+
+# ---------------------------------------------------------------------------
+# strategy registry — the paper's scheduling configurations (Section 5.3/6.5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ResolveContext:
+    """Inputs a strategy resolver sees (one scenario's worth)."""
+
+    params: NetworkParams             # base network (uniform/base routing)
+    consts: LearningConstants
+    power: Optional[PowerProfile]
+    rho: float                        # Pareto weight (objective spec)
+    m: Optional[int]                  # forced concurrency (None = strategy's)
+    m_max: int                        # concurrency search bound
+    steps: int                        # Adam steps
+    search: str                       # "batched" | "pruned" | "sequential"
+    resolved: dict                    # earlier (p, m) results in this batch
+    cache: dict                       # shared memo (e.g. tau_star / e_star)
+
+
+def _as_pm(p, m) -> tuple[np.ndarray, int]:
+    return np.asarray(p, dtype=np.float64), int(m)
+
+
+@strategy("asyncsgd")
+def _strat_asyncsgd(ctx: ResolveContext):
+    """Uniform routing, m = n (Alg. 2 of [29])."""
+    n = ctx.params.n
+    return _as_pm(np.full(n, 1.0 / n), ctx.m if ctx.m is not None else n)
+
+
+@strategy("max_throughput")
+def _strat_max_throughput(ctx: ResolveContext):
+    """p*_lambda at m = n."""
+    m = ctx.m if ctx.m is not None else ctx.params.n
+    obj = get_objective("throughput").static(ctx.params, ctx.consts,
+                                             ctx.power, None)
+    res = optimize_routing(obj, ctx.params.n, m, steps=ctx.steps)
+    return _as_pm(res.p, m)
+
+
+@strategy("round_opt")
+def _strat_round_opt(ctx: ResolveContext):
+    """p*_K at m = n ([31, 2])."""
+    m = ctx.m if ctx.m is not None else ctx.params.n
+    obj = get_objective("round").static(ctx.params, ctx.consts, ctx.power,
+                                        None)
+    res = optimize_routing(obj, ctx.params.n, m, steps=ctx.steps)
+    return _as_pm(res.p, m)
+
+
+@strategy("time_opt")
+def _strat_time_opt(ctx: ResolveContext):
+    """(p*_tau, m*_tau) — the paper's proposed strategy."""
+    if ctx.m is not None:
+        obj = get_objective("time").static(ctx.params, ctx.consts, ctx.power,
+                                           None)
+        res = optimize_routing(obj, ctx.params.n, ctx.m, steps=ctx.steps)
+        return _as_pm(res.p, ctx.m)
+    res = time_optimal(ctx.params, ctx.consts, m_max=ctx.m_max,
+                       steps=ctx.steps, search=ctx.search)
+    ctx.cache["tau_star"] = float(res.value)
+    return _as_pm(res.p, res.m)
+
+
+@strategy("energy_opt")
+def _strat_energy_opt(ctx: ResolveContext):
+    """Closed-form (p*_E, m = 1) — Eq. 16."""
+    if ctx.power is None:
+        raise ValueError("strategy 'energy_opt' needs a power profile "
+                         "(EnergySpec)")
+    return _as_pm(energy_optimal_routing(ctx.params, ctx.power),
+                  ctx.m if ctx.m is not None else 1)
+
+
+@strategy("joint")
+def _strat_joint(ctx: ResolveContext):
+    """(p*_rho, m*_rho) — the Eq. 18 scalarization at the scenario's rho."""
+    if ctx.power is None:
+        raise ValueError("strategy 'joint' needs a power profile "
+                         "(EnergySpec)")
+    tau_star = ctx.cache.get("tau_star")
+    if tau_star is None:
+        if "time_opt" in ctx.resolved:
+            p_tau, m_tau = ctx.resolved["time_opt"]
+            tau_star = float(wallclock_time(
+                ctx.params._replace(p=jnp.asarray(p_tau)), m_tau, ctx.consts))
+        else:
+            tau_star = time_optimal(ctx.params, ctx.consts, m_max=ctx.m_max,
+                                    steps=ctx.steps,
+                                    search=ctx.search).value
+        ctx.cache["tau_star"] = tau_star
+    e_star = ctx.cache.get("e_star")
+    if e_star is None:
+        e_star = ctx.cache["e_star"] = float(
+            minimal_energy(ctx.params, ctx.consts, ctx.power))
+    res = joint_optimal(ctx.params, ctx.consts, ctx.power, ctx.rho, tau_star,
+                        e_star, m_max=ctx.m_max, steps=ctx.steps,
+                        search=ctx.search)
+    return _as_pm(res.p, res.m)
+
+
+def default_m_max(n: int) -> int:
+    """The historical ``make_strategies`` search bound."""
+    return n + max(8, n // 4)
+
+
+def resolve_strategy(scenario: Scenario, *, resolved: Optional[dict] = None,
+                     cache: Optional[dict] = None
+                     ) -> tuple[np.ndarray, int]:
+    """One scenario's ``(p, m)``: explicit spec or registry resolver."""
+    spec = scenario.strategy
+    if spec.name == EXPLICIT:
+        return _as_pm(spec.p, spec.m)
+    n = scenario.n
+    ctx = ResolveContext(
+        params=scenario.params(), consts=scenario.consts,
+        power=scenario.power(), rho=scenario.objective.rho, m=spec.m,
+        m_max=spec.m_max if spec.m_max is not None else default_m_max(n),
+        steps=spec.steps, search=spec.search,
+        resolved={} if resolved is None else resolved,
+        cache={} if cache is None else cache)
+    return STRATEGIES.get(spec.name)(ctx)
+
+
+# ---------------------------------------------------------------------------
+# the suite
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SuiteResult:
+    """Result of one :meth:`ScenarioSuite.run` call.
+
+    ``entries[name]`` is mode-dependent: a closed-form dict (``analyze``),
+    a per-seed list of ``EventStats`` (``simulate``), or a per-seed list of
+    ``TrainLog`` (``train``).  ``programs`` counts the distinct compiled
+    programs (buckets) the call dispatched — the bucketing win is
+    ``programs < len(entries)`` for structurally-alike scenarios.
+    """
+
+    mode: str
+    entries: dict
+    seeds: tuple
+    lanes: int
+    programs: int
+    strategies: dict  # name -> (p, m) resolved routing/concurrency
+
+
+class ScenarioSuite:
+    """A keyed collection of Scenarios sharing a seed set."""
+
+    def __init__(self, scenarios, seeds=(0,)):
+        if isinstance(scenarios, Scenario):
+            scenarios = [scenarios]
+        if not isinstance(scenarios, dict):
+            scenarios = {
+                (s.name or f"scenario{i}"): s
+                for i, s in enumerate(scenarios)}
+        if not scenarios:
+            raise ValueError("need at least one scenario")
+        for k, s in scenarios.items():
+            if not isinstance(s, Scenario):
+                raise TypeError(f"suite entry {k!r} is not a Scenario: {s!r}")
+        self.scenarios: dict[str, Scenario] = dict(scenarios)
+        self.seeds = tuple(int(s) for s in seeds)
+        self._strategies: dict[str, tuple[np.ndarray, int]] = {}
+        self._jit_cache: dict = {}
+        self._trainers: dict = {}
+
+    @classmethod
+    def strategy_grid(cls, base: Scenario, strategies, seeds=(0,),
+                      **strategy_kw) -> "ScenarioSuite":
+        """One suite entry per strategy name, derived from ``base``."""
+        return cls({name: base.with_strategy(name, **strategy_kw)
+                    for name in strategies}, seeds=seeds)
+
+    def __len__(self) -> int:
+        return len(self.scenarios)
+
+    def to_dict(self) -> dict:
+        return {"seeds": list(self.seeds),
+                "scenarios": {k: s.to_dict()
+                              for k, s in self.scenarios.items()}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioSuite":
+        return cls({k: Scenario.from_dict(v)
+                    for k, v in d["scenarios"].items()},
+                   seeds=tuple(d.get("seeds", (0,))))
+
+    # -- strategy resolution (cached) ---------------------------------------
+
+    def resolve(self) -> dict[str, tuple[np.ndarray, int]]:
+        """Resolved ``{name: (p, m)}`` for every scenario (cached; shared
+        normalizers like tau*/E* are computed once per network).
+
+        The sharing key covers everything the cached values depend on —
+        network, constants, energy spec AND the strategy search settings
+        (``m_max``/``steps``/``search``) — so a suite sweeping power
+        profiles or optimizer budgets never reuses a stale tau*/E*.
+        """
+        caches: dict = {}
+        for name, scn in self.scenarios.items():
+            if name in self._strategies:
+                continue
+            net_key = (str(scn.network.to_dict()),
+                       str(scn.learning.to_dict()),
+                       str(None if scn.energy is None
+                           else scn.energy.to_dict()),
+                       scn.strategy.m_max, scn.strategy.steps,
+                       scn.strategy.search)
+            shared = caches.setdefault(net_key, {"cache": {}, "resolved": {}})
+            pm = resolve_strategy(scn, resolved=shared["resolved"],
+                                  cache=shared["cache"])
+            shared["resolved"][scn.strategy.name] = pm
+            self._strategies[name] = pm
+        return {name: self._strategies[name] for name in self.scenarios}
+
+    # -- dispatch ------------------------------------------------------------
+
+    def run(self, mode: str = "analyze", **kw) -> SuiteResult:
+        if mode == "analyze":
+            return self._run_analyze(**kw)
+        if mode == "simulate":
+            return self._run_simulate(**kw)
+        if mode == "train":
+            return self._run_train(**kw)
+        raise ValueError(f"unknown mode: {mode!r}; expected one of {MODES}")
+
+    # -- analyze: closed forms, one jit per structure bucket -----------------
+
+    def _run_analyze(self) -> SuiteResult:
+        strategies = self.resolve()
+        names = list(self.scenarios)
+        buckets: dict = {}
+        for name in names:
+            scn = self.scenarios[name]
+            key = (scn.n, scn.network.mu_cs is not None,
+                   _power_sig(scn))
+            buckets.setdefault(key, []).append(name)
+
+        entries: dict = {}
+        programs = 0
+        for (n, has_cs, power_sig), members in buckets.items():
+            has_power = power_sig is not None
+            m_max = max(strategies[name][1] for name in members)
+            prm = _stack_params([self.scenarios[n_].params(strategies[n_][0])
+                                 for n_ in members])
+            consts = _stack_consts([self.scenarios[n_].consts
+                                    for n_ in members])
+            power = (_stack_power([self.scenarios[n_].power()
+                                   for n_ in members]) if has_power else None)
+            m_vec = jnp.asarray([strategies[n_][1] for n_ in members],
+                                jnp.int64)
+            rho = jnp.asarray([self.scenarios[n_].objective.rho
+                               for n_ in members])
+            sig = ("analyze", n, has_cs, power_sig, m_max)
+            fn = self._jit_cache.get(sig)
+            if fn is None:
+                fn = self._jit_cache[sig] = _build_analyze(m_max, has_power)
+                programs += 1
+            out = fn(prm, m_vec, consts, power, rho)
+            for i, name in enumerate(members):
+                row = {k: np.asarray(v[i]) for k, v in out.items()}
+                p, m = strategies[name]
+                obj_name = self.scenarios[name].objective.name
+                # None (not a mislabeled tau) for objectives analyze cannot
+                # evaluate: registered extensions without an analyze column
+                val_key = _ANALYZE_KEY.get(obj_name)
+                entries[name] = {
+                    "p": p, "m": m, "eta": self.scenarios[name].eta(),
+                    "throughput": float(row["throughput"]),
+                    "K_eps": float(row["K_eps"]),
+                    "tau": float(row["tau"]),
+                    "delays": row["delays"],  # E0[D_i] (Thm 2)
+                    "energy": (float(row["energy"]) if has_power else None),
+                    "objective": obj_name,
+                    "value": (float(row[val_key])
+                              if val_key is not None and val_key in row
+                              else None),
+                }
+        return SuiteResult(mode="analyze", entries=entries, seeds=self.seeds,
+                           lanes=len(names), programs=programs,
+                           strategies=strategies)
+
+    # -- simulate: device event engine, one jit per structure bucket ---------
+
+    def _run_simulate(self, num_updates: int, *, warmup: int = 0,
+                      m_max: Optional[int] = None) -> SuiteResult:
+        strategies = self.resolve()
+        names = list(self.scenarios)
+        buckets: dict = {}
+        for name in names:
+            scn = self.scenarios[name]
+            key = (scn.n, scn.network.law, scn.network.mu_cs is not None,
+                   _power_sig(scn))
+            buckets.setdefault(key, []).append(name)
+
+        entries: dict = {name: [] for name in names}
+        programs = 0
+        S = len(self.seeds)
+        for (n, law, has_cs, power_sig), members in buckets.items():
+            has_power = power_sig is not None
+            m_top = max(strategies[name][1] for name in members)
+            mx = m_max or m_top
+            if mx < m_top:
+                # jit'd gathers clamp silently — a task table smaller than
+                # a lane's m would return plausible-but-wrong statistics
+                raise ValueError(
+                    f"m_max={mx} is smaller than the largest resolved "
+                    f"concurrency m={m_top} in this suite")
+            lane_params = _stack_params(
+                [self.scenarios[n_].params(strategies[n_][0])
+                 for n_ in members for _ in self.seeds])
+            power = (_stack_power([self.scenarios[n_].power()
+                                   for n_ in members for _ in self.seeds])
+                     if has_power else None)
+            m_vec = jnp.asarray([strategies[n_][1]
+                                 for n_ in members for _ in self.seeds],
+                                jnp.int32)
+            keys = jnp.stack([jax.random.PRNGKey(s)
+                              for _ in members for s in self.seeds])
+            sig = ("simulate", n, law, has_cs, power_sig, mx,
+                   int(num_updates), int(warmup))
+            fn = self._jit_cache.get(sig)
+            if fn is None:
+                fn = self._jit_cache[sig] = _build_simulate(
+                    int(num_updates), int(warmup), law, mx, has_power)
+                programs += 1
+            stats = fn(lane_params, m_vec, keys, power)
+            for i, name in enumerate(members):
+                entries[name] = [
+                    jax.tree_util.tree_map(lambda a: a[i * S + j], stats)
+                    for j in range(S)]
+        return SuiteResult(mode="simulate", entries=entries, seeds=self.seeds,
+                           lanes=len(names) * S, programs=programs,
+                           strategies=strategies)
+
+    # -- train: fused device trainer (PR-2 lane planner) ---------------------
+
+    def _run_train(self, *, model, clients, horizon_time: float,
+                   test_data=None, max_updates: Optional[int] = None,
+                   loss_fn=None, **config_overrides) -> SuiteResult:
+        from ..fl.engine import DeviceTrainer  # local: fl imports scenario
+        from ..fl.models import cross_entropy_loss
+
+        strategies = self.resolve()
+        names = list(self.scenarios)
+        buckets: dict = {}
+        for name in names:
+            scn = self.scenarios[name]
+            key = (str(scn.network.to_dict()), scn.learning.grad_clip,
+                   str(None if scn.energy is None else scn.energy.to_dict()),
+                   tuple(sorted(config_overrides.items())))
+            buckets.setdefault(key, []).append(name)
+
+        entries: dict = {}
+        programs = 0
+        for key, members in buckets.items():
+            scn0 = self.scenarios[members[0]]
+            cfg = scn0.fl_config(**config_overrides)
+            # identity-checked memo: the cached trainer holds strong refs
+            # to its model/clients, and a hit requires the SAME objects —
+            # never a stale trainer for a new model at a recycled address
+            cached = self._trainers.get(key)
+            trainer = None
+            if cached is not None and cached[0] is model \
+                    and cached[1] is clients:
+                trainer = cached[2]
+            if trainer is None:
+                trainer = DeviceTrainer(
+                    model, clients, scn0.params(), cfg, test_data=test_data,
+                    power=scn0.power(),
+                    loss_fn=loss_fn or cross_entropy_loss)
+                self._trainers[key] = (model, clients, trainer)
+            ps, ms, etas, seeds = [], [], [], []
+            for name in members:
+                p, m = strategies[name]
+                for s in self.seeds:
+                    ps.append(p)
+                    ms.append(m)
+                    etas.append(self.scenarios[name].eta())
+                    seeds.append(s)
+            before = len(trainer._jit_cache)
+            logs, _ = trainer.run_lanes(ps, ms, etas, seeds,
+                                        float(horizon_time),
+                                        max_updates=max_updates)
+            programs += max(len(trainer._jit_cache) - before, 0)
+            S = len(self.seeds)
+            for i, name in enumerate(members):
+                entries[name] = logs[i * S:(i + 1) * S]
+        return SuiteResult(mode="train", entries=entries, seeds=self.seeds,
+                           lanes=len(names) * len(self.seeds),
+                           programs=programs, strategies=strategies)
+
+
+_ANALYZE_KEY = {"time": "tau", "round": "K_eps", "throughput": "throughput",
+                "energy": "energy", "joint": "joint"}
+
+
+# ---------------------------------------------------------------------------
+# lane stacking / bucket program builders
+# ---------------------------------------------------------------------------
+
+def _power_sig(scn) -> Optional[bool]:
+    """Structural signature of a scenario's power profile for bucketing:
+    ``None`` (no energy spec) or whether the CS power term is present —
+    both change the stacked-pytree structure and the compiled program."""
+    if scn.energy is None:
+        return None
+    return scn.energy.P_cs is not None
+
+
+def _stack_params(params_list) -> NetworkParams:
+    """Stack per-lane NetworkParams leaf-wise ([L, n] / [L] arrays)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def _stack_consts(consts_list) -> LearningConstants:
+    return LearningConstants(*[jnp.asarray([float(getattr(c, f))
+                                            for c in consts_list])
+                               for f in LearningConstants._fields])
+
+
+def _stack_power(power_list) -> PowerProfile:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *power_list)
+
+
+def _build_analyze(m_max: int, has_power: bool):
+    """One jitted, vmapped closed-form evaluation over scenario lanes."""
+
+    def one(prm, m, consts, power, rho):
+        logZ = log_normalizing_constants(prm, m_max)
+        thr = throughput_padded(logZ, m)
+        delays = expected_relative_delay_padded(prm, m, logZ, m_max)
+        k_eps = round_complexity_padded(prm, m, consts, logZ, m_max)
+        tau = k_eps / thr
+        out = {"throughput": thr, "K_eps": k_eps, "tau": tau,
+               "delays": delays}
+        if has_power:
+            en = energy_complexity_padded(prm, m, consts, power, logZ, m_max)
+            out["energy"] = en
+            out["joint"] = rho * en + (1.0 - rho) * tau
+        return out
+
+    if has_power:
+        return jax.jit(jax.vmap(one))
+    return jax.jit(jax.vmap(lambda prm, m, consts, _pw, rho:
+                            one(prm, m, consts, None, rho),
+                            in_axes=(0, 0, 0, None, 0)))
+
+
+def _build_simulate(num_updates: int, warmup: int, law: str, m_max: int,
+                    has_power: bool):
+    """One jitted, vmapped event-engine run over scenario x seed lanes."""
+
+    def one(prm, m, key, power):
+        return events._simulate_stats(prm, m, key, num_updates, warmup, law,
+                                      m_max, power)
+
+    if has_power:
+        return jax.jit(jax.vmap(one))
+    return jax.jit(jax.vmap(lambda prm, m, key, _pw: one(prm, m, key, None),
+                            in_axes=(0, 0, 0, None)))

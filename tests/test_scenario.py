@@ -1,0 +1,514 @@
+"""The unified declarative Scenario API (spec -> registries -> suite).
+
+Covers the acceptance criteria of the Scenario redesign:
+  * registries: decorator registration, duplicate guard, unknown keys raise
+    listing the registered options (incl. eager ``AsyncFLConfig`` /
+    ``make_sampler`` / ``simulate_stats`` validation);
+  * serialization: ``from_dict(to_dict(s))`` round-trips **bitwise** for
+    every registered law x strategy x objective, JSON-safely;
+  * the hyperexponential timing law: correct mean/SCV on both engines and
+    host-vs-device distributional agreement end-to-end;
+  * ``pruned_concurrency_sweep`` == full batched sweep on small grids with
+    fewer evaluated rows;
+  * ``ScenarioSuite``: ``simulate`` runs S scenarios x R seeds in fewer
+    compiled programs than scenarios AND bitwise-matches per-lane
+    ``simulate_stats``; ``analyze`` matches the static closed forms;
+    ``train`` matches ``run_strategy_grid`` on the same lanes;
+  * every registered benchmark scenario (``benchmarks/scenarios.py``)
+    round-trips and builds its spec without any jax dispatch.
+"""
+import json
+import logging
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
+
+from repro.core import (LearningConstants, NetworkParams,
+                        batched_concurrency_sweep, expected_relative_delay,
+                        make_time_objective_padded, pruned_concurrency_sweep,
+                        round_complexity, simulate_stats, throughput,
+                        wallclock_time)
+from repro.core.simulator import AsyncNetworkSim, make_sampler
+from repro.scenario import (EXPLICIT, EnergySpec, LearningSpec, NetworkSpec,
+                            OBJECTIVES, ObjectiveSpec, Registry, Scenario,
+                            ScenarioSuite, StrategySpec, TIMING_LAWS,
+                            get_law, law_names)
+
+CONSTS = LearningConstants(M=2.0, G=5.0)
+
+
+def small_network(n=4, seed=0, *, law="exponential", with_cs=False,
+                  with_p=False):
+    rng = np.random.default_rng(seed)
+    return NetworkSpec(
+        mu_c=rng.uniform(0.5, 6.0, n), mu_d=rng.uniform(0.5, 6.0, n),
+        mu_u=rng.uniform(0.5, 6.0, n),
+        p=rng.dirichlet(np.ones(n)) if with_p else None,
+        mu_cs=float(rng.uniform(1.0, 4.0)) if with_cs else None, law=law)
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_registry_unknown_key_lists_options():
+    r = Registry("widget")
+    r.register("alpha")(object())
+    r.register("beta")(object())
+    with pytest.raises(ValueError, match="alpha.*beta") as e:
+        r.get("gamma")
+    assert "widget" in str(e.value)
+
+
+def test_registry_duplicate_registration_raises():
+    r = Registry("thing")
+    r.register("x")(object())
+    with pytest.raises(ValueError, match="already registered"):
+        r.register("x")(object())
+
+
+def test_partitions_registered_by_name():
+    from repro.data import dirichlet_partition  # triggers registration
+    from repro.scenario import PARTITIONS
+
+    assert {"iid", "dirichlet", "pathological"} <= set(PARTITIONS.names())
+    assert PARTITIONS.get("dirichlet") is dirichlet_partition
+
+
+def test_eager_validation_everywhere():
+    # spec construction
+    with pytest.raises(ValueError, match="hyperexponential"):
+        small_network(law="weibull")
+    with pytest.raises(ValueError, match="time_opt"):
+        StrategySpec("frobnicate")
+    with pytest.raises(ValueError, match="joint"):
+        ObjectiveSpec("frobnicate")
+    # trainer config (used to fail only inside the first jit trace)
+    from repro.fl import AsyncFLConfig
+
+    with pytest.raises(ValueError, match="registered service distributions"):
+        AsyncFLConfig(distribution="weibull")
+    # host sampler + device engine entry points
+    with pytest.raises(ValueError, match="distribution"):
+        make_sampler("weibull", np.random.default_rng(0))
+    with pytest.raises(ValueError, match="distribution"):
+        simulate_stats(small_network(3).params(), 3, 10,
+                       distribution="weibull")
+
+
+def test_explicit_strategy_requires_p_and_m():
+    with pytest.raises(ValueError, match="explicit"):
+        StrategySpec(EXPLICIT, m=3)
+
+
+# ---------------------------------------------------------------------------
+# serialization: bitwise round-trip over the full registry cross-product
+# ---------------------------------------------------------------------------
+
+def _scenario_for(law, strat_name, obj_name, seed):
+    rng = np.random.default_rng(seed)
+    n = 4
+    net = small_network(n, seed, law=law, with_cs=bool(seed % 2),
+                       with_p=True)
+    energy = EnergySpec(kappa=rng.uniform(0.1, 2.0, n),
+                        P_u=rng.uniform(0.5, 3.0, n),
+                        P_d=rng.uniform(0.5, 3.0, n))
+    if strat_name == EXPLICIT:
+        strat = StrategySpec(EXPLICIT, p=rng.dirichlet(np.ones(n)), m=3)
+    else:
+        strat = StrategySpec(strat_name, steps=17, m_max=n + 3,
+                             search="pruned")
+    return Scenario(
+        network=net,
+        learning=LearningSpec(consts=LearningConstants(
+            *rng.uniform(0.5, 3.0, 6)), eta=float(rng.uniform(0.01, 0.1)),
+            grad_clip=5.0),
+        energy=energy, strategy=strat,
+        objective=ObjectiveSpec(obj_name, rho=float(rng.uniform())),
+        name=f"rt_{law}_{strat_name}_{obj_name}")
+
+
+def test_roundtrip_bitwise_all_laws_strategies_objectives():
+    from repro.scenario import STRATEGIES
+
+    seed = 0
+    for law in law_names():
+        for strat_name in tuple(STRATEGIES.names()) + (EXPLICIT,):
+            for obj_name in OBJECTIVES.names():
+                seed += 1
+                s = _scenario_for(law, strat_name, obj_name, seed)
+                s2 = Scenario.from_json(s.to_json())
+                assert s2 == s, (law, strat_name, obj_name)
+                assert s2.hash() == s.hash()
+                # bitwise, not approximate: JSON floats are repr-exact
+                np.testing.assert_array_equal(s2.network.mu_c,
+                                              s.network.mu_c)
+                np.testing.assert_array_equal(
+                    np.asarray(s2.params().p), np.asarray(s.params().p))
+
+
+def test_from_dict_unknown_registry_keys_raise_with_options():
+    s = _scenario_for("exponential", "time_opt", "time", 99)
+    d = json.loads(s.to_json())
+    bad = json.loads(json.dumps(d))
+    bad["network"]["law"] = "weibull"
+    with pytest.raises(ValueError, match="registered service distributions"):
+        Scenario.from_dict(bad)
+    bad = json.loads(json.dumps(d))
+    bad["strategy"]["name"] = "nope"
+    with pytest.raises(ValueError, match="registered strategies"):
+        Scenario.from_dict(bad)
+    bad = json.loads(json.dumps(d))
+    bad["objective"]["name"] = "nope"
+    with pytest.raises(ValueError, match="registered objectives"):
+        Scenario.from_dict(bad)
+
+
+def test_hash_ignores_cosmetic_name():
+    """Identical physics must hash equal regardless of the display name —
+    renames must not sever the BENCH_smoke.json trajectory."""
+    a = _scenario_for("exponential", "time_opt", "time", 7)
+    b = a.replace(name="totally-different-label")
+    assert a.hash() == b.hash()
+    c = a.replace(strategy=StrategySpec("time_opt", steps=18, m_max=7,
+                                        search="pruned"))
+    assert c.hash() != a.hash()  # physical fields still count
+
+
+def test_eta_defaults_follow_strategy():
+    net = small_network(3)
+    assert Scenario(network=net, strategy=StrategySpec(
+        "max_throughput")).eta() == pytest.approx(0.01)
+    assert Scenario(network=net).eta() == pytest.approx(0.05)
+    s = Scenario(network=net, learning=LearningSpec(eta=0.123),
+                 strategy=StrategySpec("max_throughput"))
+    assert s.eta() == pytest.approx(0.123)
+
+
+# ---------------------------------------------------------------------------
+# hyperexponential law: moments + host-vs-device end-to-end
+# ---------------------------------------------------------------------------
+
+def test_hyperexponential_moments_host_and_device():
+    mu = 2.5
+    N = 60_000
+    # host sampler
+    sampler = make_sampler("hyperexponential", np.random.default_rng(0))
+    xs = np.array([sampler(mu) for _ in range(N)])
+    assert xs.mean() == pytest.approx(1.0 / mu, rel=0.05)
+    scv = xs.var() / xs.mean() ** 2
+    assert scv == pytest.approx(4.0, rel=0.15)
+    # device draw
+    law = get_law("hyperexponential")
+    ys = np.asarray(law.device_draw(jax.random.PRNGKey(1),
+                                    jnp.asarray(mu), (N,)))
+    assert ys.mean() == pytest.approx(1.0 / mu, rel=0.05)
+    assert ys.var() / ys.mean() ** 2 == pytest.approx(4.0, rel=0.15)
+    # positive-rate guard matches the other laws
+    with pytest.raises(ValueError, match="positive"):
+        sampler(0.0)
+
+
+def test_hyperexponential_agrees_with_host_reference():
+    """Same tolerances as the det/lognormal cross-checks in test_events."""
+    net = small_network(3, seed=10, law="hyperexponential")
+    params = net.params()
+    m = 4
+    st = simulate_stats(params, m, 10_000, warmup=1_000, seed=0,
+                        distribution="hyperexponential")
+    host = AsyncNetworkSim(params, m, distribution="hyperexponential",
+                           seed=0).run(10_000, warmup=1_000)
+    np.testing.assert_allclose(float(st.throughput), host.throughput,
+                               rtol=0.06)
+    np.testing.assert_allclose(np.asarray(st.mean_delay), host.mean_delay,
+                               rtol=0.15, atol=0.1)
+    assert np.isfinite(np.asarray(st.mean_delay)).all()
+
+
+# ---------------------------------------------------------------------------
+# pruned concurrency search vs the full batched sweep
+# ---------------------------------------------------------------------------
+
+def test_pruned_sweep_matches_full_on_small_grid():
+    net = small_network(6, seed=3)
+    params = net.params()
+    m_max = 20
+    obj = make_time_objective_padded(params, CONSTS, m_max)
+    grid = jnp.arange(2, m_max + 1)
+    full = batched_concurrency_sweep(obj, params, m_grid=grid, m_max=m_max,
+                                     steps=250)
+    pruned = pruned_concurrency_sweep(obj, params, m_grid=grid, m_max=m_max,
+                                      steps=250)
+    assert pruned.best.m == full.best.m
+    np.testing.assert_allclose(pruned.best.value, full.best.value, rtol=1e-6)
+    assert len(pruned.values) < len(full.values)  # actually pruned
+    # tiny grids fall back to the full sweep
+    tiny = pruned_concurrency_sweep(obj, params, m_grid=jnp.arange(2, 7),
+                                    m_max=m_max, steps=50)
+    assert len(tiny.values) == 5
+
+
+def test_pruned_sweep_defaults_m_max_from_objective():
+    """Regression: the refine window's smaller grid max must not trip the
+    padding guard when the caller omits m_max."""
+    net = small_network(4, seed=6)
+    params = net.params()
+    obj = make_time_objective_padded(params, CONSTS, 20)
+    res = pruned_concurrency_sweep(obj, params, m_grid=jnp.arange(2, 21),
+                                   steps=30)
+    assert 2 <= res.best.m <= 20
+
+
+def test_pruned_search_through_time_optimal_and_strategy_spec():
+    from repro.core import time_optimal
+    from repro.scenario import resolve_strategy
+
+    net = small_network(5, seed=4)
+    params = net.params()
+    full = time_optimal(params, CONSTS, m_max=14, steps=200)
+    pruned = time_optimal(params, CONSTS, m_max=14, steps=200,
+                          search="pruned")
+    assert pruned.m == full.m
+    np.testing.assert_allclose(pruned.value, full.value, rtol=1e-6)
+    # and via the declarative spec
+    scn = Scenario(network=net, learning=LearningSpec(consts=CONSTS),
+                   strategy=StrategySpec("time_opt", steps=200, m_max=14,
+                                         search="pruned"))
+    p, m = resolve_strategy(scn)
+    assert m == full.m
+    # warm-started refinement: same optimum to optimizer tolerance
+    np.testing.assert_allclose(p, np.asarray(full.p), atol=1e-4)
+    np.testing.assert_allclose(
+        float(wallclock_time(params._replace(p=jnp.asarray(p)), m, CONSTS)),
+        full.value, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSuite: bucketed dispatch
+# ---------------------------------------------------------------------------
+
+def _explicit_suite(seeds=(0, 1)):
+    """Three structurally-alike scenarios (explicit strategies: no
+    optimizer cost) differing in routing and concurrency."""
+    rng = np.random.default_rng(5)
+    net = small_network(4, seed=5)
+    scns = {}
+    for i, m in enumerate((3, 5, 4)):
+        scns[f"s{i}"] = Scenario(
+            network=net, learning=LearningSpec(consts=CONSTS),
+            strategy=StrategySpec(EXPLICIT, p=rng.dirichlet(np.ones(4)),
+                                  m=m))
+    return ScenarioSuite(scns, seeds=seeds)
+
+
+def test_suite_simulate_fewer_programs_and_bitwise_vs_singles():
+    suite = _explicit_suite(seeds=(0, 3))
+    res = suite.run(mode="simulate", num_updates=300, warmup=50)
+    assert res.programs < len(suite) == 3
+    assert res.lanes == 6
+    m_max = max(m for _, m in suite.resolve().values())
+    for name, (p, m) in suite.resolve().items():
+        for seed, got in zip(suite.seeds, res.entries[name]):
+            want = simulate_stats(
+                suite.scenarios[name].params(p), m, 300, warmup=50,
+                key=jax.random.PRNGKey(seed), m_max=m_max)
+            for field in ("throughput", "mean_delay", "energy", "time",
+                          "mean_queue_counts"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got, field)),
+                    np.asarray(getattr(want, field)),
+                    err_msg=f"{name}/{seed}/{field}")
+
+
+def test_suite_simulate_buckets_mixed_laws_separately():
+    suite = _explicit_suite(seeds=(0,))
+    import dataclasses
+
+    mixed = dict(suite.scenarios)
+    mixed["hyper"] = mixed["s0"].replace(network=dataclasses.replace(
+        mixed["s0"].network, law="hyperexponential"))
+    suite2 = ScenarioSuite(mixed, seeds=(0,))
+    res = suite2.run(mode="simulate", num_updates=120)
+    assert res.programs == 2  # one per law bucket, still < 4 scenarios
+    assert set(res.entries) == set(mixed)
+
+
+def test_suite_simulate_rejects_undersized_m_max():
+    suite = _explicit_suite(seeds=(0,))  # largest resolved m is 5
+    with pytest.raises(ValueError, match="m_max"):
+        suite.run(mode="simulate", num_updates=50, m_max=3)
+
+
+def test_with_strategy_explicit_freezes_resolved_eta():
+    """Regression: pinning max_throughput's resolved (p, m) as an explicit
+    strategy must keep its 20x-reduced step size."""
+    net = small_network(3, seed=9)
+    scn = Scenario(network=net, strategy=StrategySpec("max_throughput"))
+    pinned = scn.with_strategy(EXPLICIT, p=np.full(3, 1 / 3), m=2)
+    assert pinned.eta() == pytest.approx(0.01)
+    # an explicit learning-spec eta still wins
+    scn2 = Scenario(network=net, learning=LearningSpec(eta=0.2),
+                    strategy=StrategySpec("max_throughput"))
+    assert scn2.with_strategy(EXPLICIT, p=np.full(3, 1 / 3),
+                              m=2).eta() == pytest.approx(0.2)
+
+
+def test_analyze_value_none_when_objective_lacks_power():
+    """An energy objective without an EnergySpec must not report tau as
+    its 'value'."""
+    net = small_network(3, seed=12)
+    scn = Scenario(network=net, learning=LearningSpec(consts=CONSTS),
+                   strategy=StrategySpec(EXPLICIT, p=np.full(3, 1 / 3),
+                                         m=2),
+                   objective=ObjectiveSpec("energy"))
+    res = ScenarioSuite({"e": scn}).run(mode="analyze")
+    assert res.entries["e"]["value"] is None
+    assert res.entries["e"]["energy"] is None
+    assert np.isfinite(res.entries["e"]["tau"])
+
+
+def test_resolve_cache_not_shared_across_energy_specs():
+    """Regression: two joint scenarios on the same network but different
+    power profiles must not reuse each other's e_star normalizer."""
+    rng = np.random.default_rng(13)
+    net = small_network(3, seed=13)
+    e1 = EnergySpec(kappa=rng.uniform(0.1, 1.0, 3),
+                    P_u=rng.uniform(1, 3, 3), P_d=rng.uniform(1, 3, 3))
+    e2 = EnergySpec(kappa=e1.kappa * 40.0, P_u=e1.P_u, P_d=e1.P_d)
+    mk = lambda e: Scenario(
+        network=net, learning=LearningSpec(consts=CONSTS), energy=e,
+        strategy=StrategySpec("joint", steps=60, m_max=5),
+        objective=ObjectiveSpec("joint", rho=0.9))
+    suite = ScenarioSuite({"cheap": mk(e1), "hot": mk(e2)})
+    strat = suite.resolve()
+    alone = ScenarioSuite({"hot": mk(e2)}).resolve()["hot"]
+    assert strat["hot"][1] == alone[1]
+    np.testing.assert_allclose(strat["hot"][0], alone[0], atol=1e-12)
+
+
+def test_suite_analyze_matches_static_closed_forms():
+    suite = _explicit_suite(seeds=(0,))
+    res = suite.run(mode="analyze")
+    assert res.programs == 1
+    for name, (p, m) in suite.resolve().items():
+        ent = res.entries[name]
+        params = suite.scenarios[name].params(p)
+        np.testing.assert_allclose(ent["throughput"],
+                                   float(throughput(params, m)), rtol=1e-10)
+        np.testing.assert_allclose(ent["K_eps"],
+                                   float(round_complexity(params, m, CONSTS)),
+                                   rtol=1e-10)
+        np.testing.assert_allclose(ent["tau"],
+                                   float(wallclock_time(params, m, CONSTS)),
+                                   rtol=1e-10)
+        np.testing.assert_allclose(
+            ent["delays"], np.asarray(expected_relative_delay(params, m)),
+            rtol=1e-10, atol=1e-12)
+
+
+def test_suite_train_matches_run_strategy_grid():
+    """The suite's train mode is the same fused engine as
+    run_strategy_grid: identical lanes -> identical logs."""
+    from repro.data import make_synthetic_image_dataset, iid_partition
+    from repro.fl import mlp_classifier, run_strategy_grid
+
+    rng = np.random.default_rng(8)
+    net = small_network(3, seed=8)
+    full = make_synthetic_image_dataset(num_classes=4, samples_per_class=24,
+                                        image_size=8, seed=8)
+    parts = iid_partition(full.y, 3, seed=8)
+    clients = [(full.x[i], full.y[i]) for i in parts]
+    model = mlp_classifier(8 * 8, 4, hidden=(8,))
+    strategies = {"a": (np.full(3, 1 / 3), 3),
+                  "b": (rng.dirichlet(np.ones(3)), 2)}
+
+    scns = {name: Scenario(network=net,
+                           learning=LearningSpec(consts=CONSTS, eta=0.05),
+                           strategy=StrategySpec(EXPLICIT, p=p, m=m))
+            for name, (p, m) in strategies.items()}
+    suite = ScenarioSuite(scns, seeds=(0, 1))
+    res = suite.run(mode="train", model=model, clients=clients,
+                    test_data=(full.x, full.y), horizon_time=6.0,
+                    batch_size=8, eval_every_time=2.0)
+
+    from repro.fl import AsyncFLConfig
+
+    cfg = AsyncFLConfig(eta=0.05, batch_size=8, eval_every_time=2.0)
+    grid = run_strategy_grid(model, clients, net.params(), strategies, cfg,
+                             horizon_time=6.0, seeds=(0, 1), etas=0.05,
+                             test_data=(full.x, full.y))
+    for name in strategies:
+        for got, want in zip(res.entries[name], grid.logs[name]):
+            assert got.times == want.times
+            assert got.losses == want.losses
+            np.testing.assert_array_equal(got.mean_delay, want.mean_delay)
+            assert got.throughput == want.throughput
+
+
+# ---------------------------------------------------------------------------
+# benchmark scenarios: registered specs round-trip and build trace-free
+# ---------------------------------------------------------------------------
+
+def test_bench_scenarios_roundtrip_and_build_without_tracing(caplog):
+    from benchmarks.scenarios import BENCH_SCENARIOS
+
+    assert len(BENCH_SCENARIOS) >= 8
+    dispatch_logger = logging.getLogger("jax._src.dispatch")
+    with jax.log_compiles(True):
+        with caplog.at_level(logging.WARNING, logger="jax._src.dispatch"):
+            rebuilt = {}
+            for name, scn in BENCH_SCENARIOS.items():
+                s2 = Scenario.from_json(scn.to_json())
+                assert s2 == scn, name
+                assert s2.hash() == scn.hash()
+                rebuilt[name] = s2
+    traced = [r for r in caplog.records if "tracing" in r.getMessage()]
+    assert not traced, f"spec round-trip traced jax code: {traced[:3]}"
+    # materialization is eager and well-formed (tiny convert ops only)
+    for name, scn in rebuilt.items():
+        params = scn.params()
+        assert params.p.shape == (scn.n,)
+        assert float(jnp.sum(params.p)) == pytest.approx(1.0)
+        if scn.energy is not None:
+            prof = scn.power()
+            assert prof.P_c.shape == (scn.n,)
+
+
+def test_stack_structurally_identical_scenarios():
+    """Alike scenarios stack leaf-wise into one vmap-ready pytree; mixed
+    static structure is rejected (that's the suite's bucketing job)."""
+    from repro.scenario import stack
+
+    rng = np.random.default_rng(11)
+    base = small_network(4, seed=11)
+    scns = [Scenario(network=dataclasses_replace_p(base, rng.dirichlet(
+        np.ones(4))), learning=LearningSpec(consts=CONSTS))
+        for _ in range(3)]
+    batched = stack(scns)
+    assert batched.network.mu_c.shape == (3, 4)
+    assert batched.network.p.shape == (3, 4)
+    with pytest.raises(ValueError, match="mixed static structure"):
+        stack([scns[0], scns[0].replace(network=small_network(
+            4, seed=11, law="lognormal"))])
+
+
+def dataclasses_replace_p(net, p):
+    import dataclasses
+
+    return dataclasses.replace(net, p=p)
+
+
+def test_suite_serialization_roundtrip():
+    suite = _explicit_suite(seeds=(0, 2))
+    d = json.loads(json.dumps(suite.to_dict()))
+    back = ScenarioSuite.from_dict(d)
+    assert back.seeds == suite.seeds
+    assert set(back.scenarios) == set(suite.scenarios)
+    for k in suite.scenarios:
+        assert back.scenarios[k] == suite.scenarios[k]
