@@ -1,0 +1,116 @@
+"""Paper-scale event-engine backend sweep (n = 100, m_max = 132).
+
+The ROADMAP's paper-scale open item: simulate the Section-6 EMNIST
+population (Table 1 at full scale, m = 132 in-flight tasks) compiled,
+multi-lane, through every ``repro.sim`` backend:
+
+  * ``reference`` — lane-at-a-time single-lane scans (the baseline);
+  * ``batched``   — all lanes per scan step in ONE vmapped program (the
+    row's ``speedup_vs_reference`` is the PR-over-PR tracked number);
+  * ``pallas``    — the per-event table transition in the
+    ``repro.kernels.events`` TPU kernel (interpret mode on CPU; the row
+    asserts bitwise agreement with ``reference`` on its lanes — the
+    exponential unit-draw rescale is exact).
+
+Fidelity columns per row: relative throughput error vs the closed form
+(Prop. 4) and relative staleness-identity error (Eq. 7:
+``sum_i p_i E0[R_i] = m - 1``), both within the tolerances documented in
+``tests/test_events.py`` at the default window (600 updates after a
+400-update warmup).  A final row reruns the sweep through
+``ScenarioSuite`` to record the suite-level result cache
+(``cache_hits``/``programs``).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import jackson
+from repro.scenario import ScenarioSuite
+from repro.sim import simulate_stats_lanes
+
+from .common import row
+from .scenarios import events_scale_scenario, record
+
+DEFAULT_BACKENDS = ("reference", "batched", "pallas")
+
+
+def _fidelity(params, m, stats):
+    p = np.asarray(params.p)
+    p = p / p.sum()
+    lam = float(jackson.throughput(params, m))
+    thr = float(np.mean(np.asarray(stats.throughput)))
+    stale = float(np.mean([
+        np.sum(p * np.asarray(stats.mean_delay[i]))
+        for i in range(stats.throughput.shape[0])]))
+    return (abs(thr - lam) / lam, abs(stale - (m - 1)) / (m - 1))
+
+
+def run(scale: int = 1, m: int = 132, lanes: int = 6,
+        num_updates: int = 600, warmup: int = 400,
+        backends=DEFAULT_BACKENDS, pallas_lanes: int = 2) -> list[str]:
+    out = []
+    # canonical order: reference first, so the batched speedup and pallas
+    # bitwise comparison columns exist regardless of how --backends was
+    # spelled; unknown names were already rejected by the CLI
+    backends = [b for b in DEFAULT_BACKENDS if b in backends]
+    scn = record("events_scale", events_scale_scenario(scale, m))
+    params = scn.params(scn.strategy.p)
+    n = scn.n
+
+    def sweep(backend, L):
+        def go():
+            st = simulate_stats_lanes([params] * L, [m] * L, num_updates,
+                                      warmup=warmup, m_max=m,
+                                      backend=backend, seeds=range(L))
+            jax.block_until_ready(st.throughput)
+            return st
+
+        go()  # compile
+        t0 = time.perf_counter()
+        st = go()
+        return st, (time.perf_counter() - t0) * 1e6
+
+    ref_us = None
+    ref_small = None
+    for backend in backends:
+        L = pallas_lanes if backend == "pallas" else lanes
+        st, us = sweep(backend, L)
+        thr_err, stale_err = _fidelity(params, m, st)
+        derived = (f"n={n}_m={m}_lanes={L}_updates={num_updates}"
+                   f"_thr_err={thr_err:.3f}_stale_err={stale_err:.3f}")
+        if backend == "reference":
+            ref_us = us
+            if "pallas" in backends:
+                # reference stats on the pallas lane subset, bitwise check
+                ref_small, _ = sweep("reference", pallas_lanes)
+        elif ref_us is not None and backend == "batched":
+            derived += f"_speedup_vs_reference={ref_us / us:.2f}x"
+        elif backend == "pallas":
+            derived += f"_interpret={jax.default_backend() != 'tpu'}"
+            if ref_small is not None:
+                bitwise = all(
+                    np.array_equal(np.asarray(getattr(ref_small, f)),
+                                   np.asarray(getattr(st, f)))
+                    for f in st._fields)
+                derived += f"_bitwise_vs_reference={bitwise}"
+        out.append(row(f"events_scale_{backend}", us, derived))
+
+    # the same workload through the Scenario layer: one bucketed program,
+    # then a re-run served entirely from the suite-level result cache
+    suite = ScenarioSuite(scn, seeds=tuple(range(lanes)))
+    t0 = time.perf_counter()
+    res = suite.run(mode="simulate", num_updates=num_updates, warmup=warmup,
+                    m_max=m, backend="batched")
+    us_first = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    res2 = suite.run(mode="simulate", num_updates=num_updates,
+                     warmup=warmup, m_max=m, backend="batched")
+    us_cached = (time.perf_counter() - t0) * 1e6
+    out.append(row(
+        "events_scale_suite", us_first,
+        f"programs={res.programs}_rerun_cache_hits={res2.cache_hits}"
+        f"_rerun_us={us_cached:.0f}"))
+    return out

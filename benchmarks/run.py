@@ -23,13 +23,14 @@ sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 sys.path.insert(0, _REPO_ROOT)  # `import benchmarks` when run as a script
 
 
-def build_suites(mode: str):
+def build_suites(mode: str, backends=None):
     from benchmarks import (bench_concurrency_sweep, bench_energy_joint,
-                            bench_kernels, bench_pareto, bench_queueing,
-                            bench_round_optimization, bench_routing_table,
-                            bench_scenario_suite, bench_tau_surface,
-                            bench_training_comparison)
+                            bench_events_scale, bench_kernels, bench_pareto,
+                            bench_queueing, bench_round_optimization,
+                            bench_routing_table, bench_scenario_suite,
+                            bench_tau_surface, bench_training_comparison)
 
+    backends = backends or bench_events_scale.DEFAULT_BACKENDS
     fast = mode == "fast"
     if mode == "smoke":
         return [
@@ -40,6 +41,9 @@ def build_suites(mode: str):
             # training benches
             ("event_engine", lambda: bench_training_comparison.run_engine_sweep(
                 scale=20, horizon=40.0, seeds=tuple(range(8)))),
+            # paper-scale (n=100, m_max=132) sim-backend sweep
+            ("events_scale", lambda: bench_events_scale.run(
+                backends=backends)),
             ("scenario_suite", lambda: bench_scenario_suite.run(
                 scale=20, num_updates=2000, seeds=(0, 1, 2, 3))),
             ("routing_table", lambda: bench_routing_table.run(
@@ -75,6 +79,8 @@ def build_suites(mode: str):
         ("event_engine", lambda: bench_training_comparison.run_engine_sweep(
             scale=20 if fast else 10, horizon=40.0 if fast else 80.0,
             seeds=tuple(range(8)))),
+        ("events_scale", lambda: bench_events_scale.run(
+            lanes=6 if fast else 16, backends=backends)),
         ("scenario_suite", lambda: bench_scenario_suite.run(
             scale=20 if fast else 10,
             num_updates=2000 if fast else 10000, seeds=tuple(range(4)))),
@@ -91,7 +97,18 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default=None,
                     help="JSON output path (smoke mode only); default "
                          "<repo>/BENCH_smoke.json")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated repro.sim backends the "
+                         "events_scale sweep records per-backend rows for "
+                         "(default: reference,batched,pallas)")
     args = ap.parse_args(argv)
+
+    backends = None
+    if args.backends:
+        from repro.sim import resolve_backend
+
+        backends = tuple(resolve_backend(b.strip())
+                         for b in args.backends.split(",") if b.strip())
 
     if args.smoke:
         mode = "smoke"
@@ -99,7 +116,7 @@ def main(argv=None) -> None:
         mode = "fast"
     else:
         mode = "full"
-    suites = build_suites(mode)
+    suites = build_suites(mode, backends=backends)
 
     print("name,us_per_call,derived")
     results = []

@@ -16,6 +16,8 @@ one canonical (smoke-scale) scenario per suite.  Two consumers:
 """
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core import LearningConstants
 from repro.scenario import (EnergySpec, LearningSpec, NetworkSpec,
                             ObjectiveSpec, PAPER_CLUSTERS_TABLE1,
@@ -54,6 +56,20 @@ def table6_scenario(scale: int = 5, *, strategy: str = "round_opt",
         name=name or f"table6_s{scale}_{strategy}")
 
 
+def events_scale_scenario(scale: int = 1, m: int = 132,
+                          name: str = "events_scale") -> Scenario:
+    """The paper-scale event-engine workload (Section 6 population at full
+    n = 100, concurrency m = 132) with pinned uniform routing — no
+    optimizer in the loop, the bench measures the simulation backends."""
+    net = NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE1, scale)
+    return Scenario(
+        network=net,
+        learning=LearningSpec(consts=CONSTS),
+        strategy=StrategySpec("explicit", p=np.full(net.n, 1.0 / net.n),
+                              m=m, m_max=m),
+        name=name)
+
+
 def two_client_scenario(mu2: float = 1.0) -> Scenario:
     """The Figure-2 two-client system (client 2 = ``mu2``x faster)."""
     return Scenario(
@@ -85,6 +101,7 @@ BENCH_SCENARIOS: dict[str, Scenario] = {
                                     name="energy_joint"),
     "scenario_suite": table1_scenario(20, strategy="time_opt", steps=60,
                                       name="scenario_suite"),
+    "events_scale": events_scale_scenario(),
 }
 
 # specs actually executed in this process (bench modules call record());

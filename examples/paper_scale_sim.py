@@ -1,0 +1,76 @@
+"""Paper-scale simulation: the full n = 100 population, m = 132 tasks,
+through the ``repro.sim`` backend subsystem.
+
+The Section-6 experiments need stationary statistics of the Fig. 1 closed
+network at its real size.  One lane is inherently sequential (one event at
+a time), so the sweep batches lanes — seeds here — into one compiled
+program (``backend="batched"``); the ``reference`` backend runs the same
+lanes one by one and is the semantic (bitwise) baseline, and ``pallas``
+moves the per-event table transition into the TPU kernel
+(``repro.kernels.events``; interpret mode off-TPU).
+
+Select the backend per scenario (``SimSpec``), per call (``backend=``), or
+process-wide::
+
+    REPRO_SIM_BACKEND=batched PYTHONPATH=src python examples/paper_scale_sim.py
+
+Run:  PYTHONPATH=src python examples/paper_scale_sim.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import jackson
+from repro.scenario import (NetworkSpec, PAPER_CLUSTERS_TABLE1, Scenario,
+                            ScenarioSuite, SimSpec, StrategySpec)
+
+N_SEEDS = 6
+M = 132
+UPDATES, WARMUP = 600, 400
+
+
+def main():
+    net = NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE1, scale=1)
+    scn = Scenario(
+        network=net,
+        strategy=StrategySpec("explicit", p=np.full(net.n, 1.0 / net.n),
+                              m=M),
+        sim=SimSpec(backend="batched"),   # pinned: survives to_dict()/hash()
+        name="paper_scale")
+    print(f"n={scn.n} clients, m={M} in-flight tasks, "
+          f"{N_SEEDS} seed lanes, backend={scn.sim.backend!r}")
+
+    suite = ScenarioSuite(scn, seeds=range(N_SEEDS))
+    t0 = time.time()
+    res = suite.run(mode="simulate", num_updates=UPDATES, warmup=WARMUP,
+                    m_max=M)
+    stats = res.entries["paper_scale"]
+    jax.block_until_ready(stats[-1].throughput)
+    print(f"  {res.lanes} lanes in {res.programs} compiled program(s), "
+          f"{time.time() - t0:.1f}s")
+
+    lam = float(jackson.throughput(scn.params(scn.strategy.p), M))
+    thr = np.mean([float(s.throughput) for s in stats])
+    p = np.asarray(scn.strategy.p)
+    stale = np.mean([float(np.sum(p / p.sum() * np.asarray(s.mean_delay)))
+                     for s in stats])
+    print(f"  throughput {thr:.3f} vs closed form {lam:.3f} "
+          f"({abs(thr - lam) / lam:.1%})")
+    print(f"  staleness sum p_i E0[R_i] = {stale:.1f} vs m-1 = {M - 1} "
+          f"({abs(stale - (M - 1)) / (M - 1):.1%})")
+
+    # identical re-run: served from the suite-level result cache
+    t0 = time.time()
+    res2 = suite.run(mode="simulate", num_updates=UPDATES, warmup=WARMUP,
+                     m_max=M)
+    print(f"  re-run: {res2.cache_hits} cache hit(s) in "
+          f"{time.time() - t0:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,6 +92,13 @@ class EventState(NamedTuple):
     delay_cnt: jax.Array  # [n]
     energy: jax.Array     # scalar, Eq. 14 time integral
     occ_int: jax.Array    # [3n+1] time-weighted station occupancy
+    # incrementally-maintained occupancy (each event moves exactly one task
+    # between stations, so these are O(1)-update carries rather than O(m+n)
+    # per-event recounts — the difference between the event scan being
+    # bandwidth-bound and scatter-bound, especially under lane vmap):
+    occ: jax.Array        # [3n+1] current station occupancy
+    serving: jax.Array    # [n] busy indicator of each compute server
+    cs_busy: jax.Array    # bool: CS server busy
 
 
 class EventOut(NamedTuple):
@@ -154,13 +161,16 @@ def init_state(params: NetworkParams, m, key: jax.Array, *,
     clients = jax.random.randint(k_cli, (m_max,), 0, n)
     active = jnp.arange(m_max) < m
     svc = _draw(k_svc, params.mu_d[clients], distribution, (m_max,))
+    phase0 = jnp.where(active, DOWN, INACTIVE).astype(jnp.int32)
+    down, comp_total, comp_serving, up, cs_total, cs_busy = _station_counts(
+        phase0, clients.astype(jnp.int32), n)
     return EventState(
         t=jnp.zeros((), jnp.float64),
         key=key,
         round=jnp.zeros((), jnp.int32),
         seq_ctr=jnp.zeros((), jnp.int32),
         client=clients.astype(jnp.int32),
-        phase=jnp.where(active, DOWN, INACTIVE).astype(jnp.int32),
+        phase=phase0,
         finish=jnp.where(active, svc, jnp.inf),
         seq=jnp.zeros((m_max,), jnp.int32),
         disp_round=jnp.zeros((m_max,), jnp.int32),
@@ -173,12 +183,21 @@ def init_state(params: NetworkParams, m, key: jax.Array, *,
         delay_cnt=jnp.zeros((n,), jnp.int32),
         energy=jnp.zeros((), jnp.float64),
         occ_int=jnp.zeros((3 * n + 1,), jnp.float64),
+        occ=jnp.concatenate([down, comp_total, up, cs_total[None]]),
+        serving=comp_serving,
+        cs_busy=cs_busy,
     )
 
 
 def _station_counts(phase, client, n):
     """Per-station occupancy: down[n], comp_total[n], comp_serving[n],
-    up[n], cs_total, cs_busy."""
+    up[n], cs_total, cs_busy.
+
+    Full recount from the task table — used to seed the O(1)-update
+    occupancy carries of :class:`EventState` at :func:`init_state` and as
+    the consistency oracle in the tests; the event step itself maintains
+    the carries incrementally.
+    """
     def count(mask):
         return jnp.zeros((n,), jnp.float64).at[client].add(
             jnp.where(mask, 1.0, 0.0))
@@ -191,6 +210,16 @@ def _station_counts(phase, client, n):
         jnp.where((phase == CS_WAIT) | (phase == CS_SERV), 1.0, 0.0))
     cs_busy = jnp.any(phase == CS_SERV)
     return down, comp_total, comp_serving, up, cs_total, cs_busy
+
+
+def _station_index(phase, client, n):
+    """Row of the ``[3n+1]`` occupancy vector a task in ``(phase, client)``
+    occupies: down_i / comp_i (WAIT and SERV share the station) / up_i /
+    CS."""
+    return jnp.where(
+        phase == DOWN, client,
+        jnp.where((phase == COMP_WAIT) | (phase == COMP_SERV), n + client,
+                  jnp.where(phase == UP, 2 * n + client, 3 * n)))
 
 
 def step_event(params: NetworkParams, state: EventState, *,
@@ -212,22 +241,23 @@ def step_event(params: NetworkParams, state: EventState, *,
     dt = t_new - state.t
 
     # -- statistics over the sojourn ending at this event (pre-event state) --
+    # the occupancy vector / busy indicators are O(1)-update carries of the
+    # state (exact small-integer f64 arithmetic: bit-identical to a full
+    # per-event recount, without its O(m + n) scatter cost)
     measure = (state.round >= state.warmup) & (state.round < state.cap)
     dt_eff = jnp.where(
         measure,
         jnp.clip(jnp.minimum(t_new, state.t_cap)
                  - jnp.minimum(state.t, state.t_cap), 0.0, None),
         0.0)
-    down, comp_total, comp_serving, up, cs_total, cs_busy = _station_counts(
-        state.phase, state.client, n)
-    occ = jnp.concatenate([down, comp_total, up, cs_total[None]])
-    occ_int = state.occ_int + dt_eff * occ
+    occ_int = state.occ_int + dt_eff * state.occ
     energy = state.energy
     if power is not None:
-        pwr = (jnp.sum(power.P_c * comp_serving)
-               + jnp.sum(power.P_u * up) + jnp.sum(power.P_d * down))
+        pwr = (jnp.sum(power.P_c * state.serving)
+               + jnp.sum(power.P_u * state.occ[2 * n:3 * n])
+               + jnp.sum(power.P_d * state.occ[:n]))
         if power.P_cs is not None:
-            pwr = pwr + power.P_cs * cs_busy
+            pwr = pwr + power.P_cs * state.cs_busy
         energy = energy + dt_eff * pwr
 
     # -- the event itself ---------------------------------------------------
@@ -294,6 +324,21 @@ def step_event(params: NetworkParams, state: EventState, *,
         phase = jnp.where(onec, CS_SERV, phase)
         finish = jnp.where(onec, t_new + svc_cs, finish)
 
+    # -- O(1) maintenance of the occupancy carries: slot j moved stations;
+    # FIFO promotions stay within theirs (WAIT and SERV share a station),
+    # so they only touch the busy indicators -------------------------------
+    stations = jnp.arange(3 * n + 1)
+    occ_new = (state.occ
+               + jnp.where(stations == _station_index(phase_j, client_j, n),
+                           1.0, 0.0)
+               - jnp.where(stations == _station_index(ph, c, n), 1.0, 0.0))
+    delta_srv = (jnp.where(do_comp, 1.0, 0.0)
+                 - jnp.where(is_comp, 1.0, 0.0))
+    serving_new = state.serving + jnp.where(jnp.arange(n) == c,
+                                            delta_srv, 0.0)
+    cs_busy_new = ((state.cs_busy & ~is_cs) | do_cs if has_cs
+                   else state.cs_busy)
+
     # -- delay statistics and window marks ----------------------------------
     upd_measured = is_update & measure
     delay_sum = state.delay_sum.at[c].add(
@@ -309,7 +354,8 @@ def step_event(params: NetworkParams, state: EventState, *,
         disp_round=disp_round,
         warmup=state.warmup, cap=state.cap, t_cap=state.t_cap,
         t0=t0, t1=t1, delay_sum=delay_sum, delay_cnt=delay_cnt,
-        energy=energy, occ_int=occ_int)
+        energy=energy, occ_int=occ_int,
+        occ=occ_new, serving=serving_new, cs_busy=cs_busy_new)
     out = EventOut(is_update=is_update,
                    time=t_new,
                    slot=j.astype(jnp.int32),
@@ -320,7 +366,9 @@ def step_event(params: NetworkParams, state: EventState, *,
 
 def next_update(params: NetworkParams, state: EventState, *,
                 distribution: str = "exponential", power=None,
-                max_steps: Optional[int] = None
+                max_steps: Optional[int] = None,
+                backend: Optional[str] = None,
+                interpret: Optional[bool] = None
                 ) -> tuple[EventState, UpdateOut]:
     """Run events until the next model update (uplink/CS completion).
 
@@ -329,7 +377,22 @@ def next_update(params: NetworkParams, state: EventState, *,
     each of the ``m`` tasks can complete at most its downlink, compute and
     uplink (and CS) phases, and the last such completion *is* the update,
     so the bound is never met in a valid state).
+
+    ``backend`` selects the per-event step implementation
+    (``repro.sim.backend``): under ``"pallas"`` the table transition runs
+    in the ``repro.kernels.events`` TPU kernel — compiled on TPU unless
+    ``interpret`` overrides — while ``"reference"``/``"batched"`` share
+    the single-lane jnp step (lane batching happens in the caller's
+    ``vmap``).
     """
+    from ..sim.backend import resolve_backend  # dependency-free
+
+    if resolve_backend(backend) == "pallas":
+        from ..kernels.events import step_event_pallas1
+
+        step_fn = functools.partial(step_event_pallas1, interpret=interpret)
+    else:
+        step_fn = step_event
     m_max = state.phase.shape[0]
     if max_steps is None:
         max_steps = (4 if params.mu_cs is not None else 3) * m_max + 8
@@ -346,8 +409,8 @@ def next_update(params: NetworkParams, state: EventState, *,
 
     def body(carry):
         st, _, steps = carry
-        st, out = step_event(params, st, distribution=distribution,
-                             power=power)
+        st, out = step_fn(params, st, distribution=distribution,
+                          power=power)
         return st, out, steps + 1
 
     st, out, steps = jax.lax.while_loop(
@@ -359,6 +422,29 @@ def next_update(params: NetworkParams, state: EventState, *,
 # ---------------------------------------------------------------------------
 # stationary statistics (device analogue of AsyncNetworkSim.run)
 # ---------------------------------------------------------------------------
+
+def finalize_stats(st: EventState) -> EventStats:
+    """Stationary statistics from a final event-scan state (one lane).
+
+    The single definition every ``repro.sim`` backend assembles its
+    :class:`EventStats` through — reference, batched and pallas sweeps
+    stay bitwise aligned by construction.
+    """
+    updates = jnp.clip(st.round, 0, st.cap) - st.warmup
+    horizon = jnp.where(st.round >= st.cap, st.t1 - st.t0, st.t - st.t0)
+    mean_delay = jnp.where(st.delay_cnt > 0,
+                           st.delay_sum / jnp.maximum(st.delay_cnt, 1), 0.0)
+    return EventStats(
+        updates=updates,
+        time=horizon,
+        throughput=jnp.where(horizon > 0, updates / jnp.maximum(horizon, 1e-12),
+                             0.0),
+        mean_delay=mean_delay,
+        delay_counts=st.delay_cnt,
+        energy=st.energy,
+        mean_queue_counts=st.occ_int / jnp.maximum(horizon, 1e-12),
+    )
+
 
 @functools.partial(jax.jit, static_argnames=(
     "num_updates", "warmup", "distribution", "m_max"))
@@ -377,26 +463,15 @@ def _simulate_stats(params, m, key, num_updates, warmup, distribution,
         return st, None
 
     st, _ = jax.lax.scan(body, st, None, length=num_events)
-    updates = jnp.clip(st.round, 0, cap) - st.warmup
-    horizon = jnp.where(st.round >= st.cap, st.t1 - st.t0, st.t - st.t0)
-    mean_delay = jnp.where(st.delay_cnt > 0,
-                           st.delay_sum / jnp.maximum(st.delay_cnt, 1), 0.0)
-    return EventStats(
-        updates=updates,
-        time=horizon,
-        throughput=jnp.where(horizon > 0, updates / jnp.maximum(horizon, 1e-12),
-                             0.0),
-        mean_delay=mean_delay,
-        delay_counts=st.delay_cnt,
-        energy=st.energy,
-        mean_queue_counts=st.occ_int / jnp.maximum(horizon, 1e-12),
-    )
+    return finalize_stats(st)
 
 
 def simulate_stats(params: NetworkParams, m, num_updates: int, *,
                    warmup: int = 0, key: Optional[jax.Array] = None,
                    seed: int = 0, distribution: str = "exponential",
-                   power=None, m_max: Optional[int] = None) -> EventStats:
+                   power=None, m_max: Optional[int] = None,
+                   backend: Optional[str] = None,
+                   interpret: Optional[bool] = None) -> EventStats:
     """Stationary statistics over ``num_updates`` rounds, fully on device.
 
     Mirrors :meth:`repro.core.simulator.AsyncNetworkSim.run`: statistics are
@@ -404,11 +479,29 @@ def simulate_stats(params: NetworkParams, m, num_updates: int, *,
     inside ONE jitted ``lax.scan`` over events.  ``m`` may be traced and the
     whole function vmaps over seeds (``key``) and padded ``(p, m)`` batches
     (pass a static ``m_max >= m``).
+
+    ``backend`` (default: the ``repro.sim`` process flag) picks the step
+    implementation; multi-lane sweeps belong in
+    :func:`repro.sim.simulate_stats_lanes`, where ``"batched"`` vs
+    ``"reference"`` actually differ.
     """
+    from ..sim.backend import resolve_backend  # dependency-free
+
     get_law(distribution)  # eager: unknown laws fail here with the options
     if key is None:
         key = jax.random.PRNGKey(seed)
     if m_max is None:
         m_max = int(m)
+    if resolve_backend(backend) == "pallas":
+        from ..sim.batched_events import simulate_stats_lanes
+
+        stats = simulate_stats_lanes(
+            jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], params),
+            jnp.asarray(m)[None], int(num_updates), warmup=int(warmup),
+            keys=key[None], distribution=distribution,
+            power=None if power is None else jax.tree_util.tree_map(
+                lambda x: jnp.asarray(x)[None], power),
+            m_max=m_max, backend="pallas", interpret=interpret)
+        return jax.tree_util.tree_map(lambda x: x[0], stats)
     return _simulate_stats(params, m, key, int(num_updates), int(warmup),
                            distribution, m_max, power)

@@ -54,6 +54,7 @@ import numpy as np
 from ..core import jackson
 from ..core import events
 from ..core.buzen import NetworkParams
+from ..sim.backend import resolve_backend
 from .models import Model, accuracy, cross_entropy_loss
 
 _GRID_CAP = 20_000  # static eval-grid safety bound
@@ -134,11 +135,18 @@ class DeviceTrainer:
 
     def __init__(self, model: Model, clients, net: NetworkParams,
                  config, test_data=None, power=None,
-                 loss_fn: Callable = cross_entropy_loss):
+                 loss_fn: Callable = cross_entropy_loss,
+                 sim_backend: Optional[str] = None,
+                 sim_interpret: Optional[bool] = None):
         self.model = model
         self.net = net
         self.cfg = config
         self.power = power
+        # event-engine backend for the queueing scans (repro.sim); None
+        # defers to the process-wide REPRO_SIM_BACKEND at build time;
+        # sim_interpret overrides the pallas kernel's compile/interpret auto
+        self.sim_backend = sim_backend
+        self.sim_interpret = sim_interpret
         self.n = net.n
         self.data = pad_client_data(clients)
         self.has_test = test_data is not None
@@ -169,10 +177,13 @@ class DeviceTrainer:
         ``AsyncFLConfig``).  Lane routing/concurrency still varies per
         :meth:`run_lanes` call — resolve them with
         ``repro.scenario.resolve_strategy`` or a ``ScenarioSuite``."""
+        sim = getattr(scenario, "sim", None)
         return cls(model, clients, scenario.params(),
                    scenario.fl_config(**config_overrides),
                    test_data=test_data, power=scenario.power(),
-                   loss_fn=loss_fn)
+                   loss_fn=loss_fn,
+                   sim_backend=None if sim is None else sim.backend,
+                   sim_interpret=None if sim is None else sim.interpret)
 
     # -- static-shape planning ---------------------------------------------
 
@@ -198,10 +209,12 @@ class DeviceTrainer:
         queueing-only scan (no gradients, no snapshots — a fraction of the
         fused scan's cost) reproduces exactly the event stream the training
         scan will see; its count sizes that scan with zero padding margin."""
+        backend = resolve_backend(self.sim_backend)
+        interp = self.sim_interpret
         cache_key = (tuple(np.asarray(p, np.float64).tobytes() for p in ps),
                      tuple(int(m) for m in ms),
                      np.asarray(sim_keys).tobytes(), round(horizon, 9),
-                     max_updates)
+                     max_updates, backend, interp)
         hit = self._count_cache.get(cache_key)
         if hit is not None:
             return hit
@@ -210,7 +223,8 @@ class DeviceTrainer:
             K_bound = min(K_bound, int(max_updates))
         K_bound = max(K_bound, 1)
         m_max = int(max(ms))
-        key_stat = ("count", K_bound, m_max, round(horizon, 9))
+        key_stat = ("count", K_bound, m_max, round(horizon, 9), backend,
+                    interp)
         if key_stat not in self._jit_cache:
             net0, dist = self.net, self.cfg.distribution
 
@@ -220,7 +234,9 @@ class DeviceTrainer:
                                        distribution=dist)
 
                 def body(st, _):
-                    st, upd = events.next_update(net, st, distribution=dist)
+                    st, upd = events.next_update(net, st, distribution=dist,
+                                                 backend=backend,
+                                                 interpret=interp)
                     return st, upd.time
 
                 _, times = jax.lax.scan(body, st, None, length=K_bound)
@@ -245,7 +261,8 @@ class DeviceTrainer:
 
     # -- the fused run ------------------------------------------------------
 
-    def _build(self, K: int, G: int, m_max: int, horizon: float):
+    def _build(self, K: int, G: int, m_max: int, horizon: float,
+               backend: str, interp: Optional[bool]):
         cfg = self.cfg
         n = self.n
         data = self.data
@@ -320,7 +337,8 @@ class DeviceTrainer:
             def body(carry, _):
                 st, params, snaps, grid_snaps, prev_t, dkey = carry
                 st, upd = events.next_update(net, st, distribution=dist,
-                                             power=power)
+                                             power=power, backend=backend,
+                                             interpret=interp)
                 live = upd.time <= horizon
                 j, c = upd.slot, upd.client
                 stale = jax.tree_util.tree_map(lambda s: s[j], snaps)
@@ -404,9 +422,12 @@ class DeviceTrainer:
                 f"eval grid of {G} points exceeds the device cap "
                 f"{_GRID_CAP}; coarsen eval_every_time or use the host "
                 f"backend")
-        key_stat = (K, G, m_max, round(horizon, 9))
+        backend = resolve_backend(self.sim_backend)
+        interp = self.sim_interpret
+        key_stat = (K, G, m_max, round(horizon, 9), backend, interp)
         if key_stat not in self._jit_cache:
-            self._jit_cache[key_stat] = self._build(K, G, m_max, horizon)
+            self._jit_cache[key_stat] = self._build(K, G, m_max, horizon,
+                                                    backend, interp)
         fn = self._jit_cache[key_stat]
 
         params0 = jax.vmap(self.model.init)(init_keys)

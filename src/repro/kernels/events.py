@@ -1,0 +1,358 @@
+"""Pallas TPU kernel for the closed-network event-engine hot path.
+
+One event of the Fig. 1 / Fig. 6 dynamics = one call of
+:func:`repro.core.events.step_event`: an argmin over the ``[m_max]``
+finish-clock table, a masked phase/routing transition of the completed
+slot, and up to two FIFO promotions (compute queue, CS queue).  All of it
+is vectorizable over the table axis and embarrassingly parallel over
+simulation *lanes* (seeds x strategy lanes x scenarios), which is exactly
+the TPU layout of this kernel:
+
+  * grid ``(K,)`` — one program per lane, ``parallel`` semantics;
+  * the lane's five table rows (``finish``/``phase``/``client``/``seq``/
+    ``disp_round``, each ``[m_max]``) live in VMEM blocks; the argmin and
+    both FIFO picks are first-index reductions over ``broadcasted_iota``
+    masks (no sequential scan over slots);
+  * the phase promotion / routing / FIFO transition is fused into the same
+    kernel as vectorized masked writes (one-hot ``where`` updates).
+
+Randomness stays OUTSIDE the kernel: per-event service variates are drawn
+by the registered timing law (``repro.scenario.laws.device_draw``) at unit
+rate and the kernel rescales them by the completing client's rate
+(``e / mu[c]``) — exact (bitwise) for the scale-family laws whose unit
+draw is ``rate``-free (exponential, deterministic) and equal up to one
+floating-point rescale otherwise (lognormal, hyperexponential).  The
+dispatch-routing draw (``C ~ p``) and the draws whose rate is known before
+the argmin (downlink of the re-dispatched task, CS service) are computed
+entirely outside, bit-identical to the reference engine.
+
+Like the Buzen kernel, the compiled path targets TPU and everything is
+validated in ``interpret=True`` mode on CPU (``tests/test_sim_backends.py``)
+against the jnp oracle (``repro.kernels.ref.event_step_oracle``) and the
+reference engine; statistics accumulation (occupancy, energy, delay sums)
+remains regular jnp around the kernel call (see
+``repro.sim.batched_events``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import events as E
+from ..core.buzen import NetworkParams
+from ..scenario.laws import get_law
+
+_BIG_SEQ = E._BIG_SEQ
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _first_index_min(values, idx, size: int):
+    """First index attaining ``min(values)`` — the TPU-friendly argmin."""
+    v_min = jnp.min(values)
+    return v_min, jnp.min(jnp.where(values == v_min, idx, size))
+
+
+def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
+                  mu_c_ref, mu_u_ref, fscal_ref, iscal_ref,
+                  o_finish_ref, o_phase_ref, o_client_ref, o_seq_ref,
+                  o_disp_ref, o_t_ref, o_int_ref, *,
+                  has_cs: bool, m_max: int, n: int):
+    finish = finish_ref[...]   # (1, m_max) float
+    phase = phase_ref[...]     # (1, m_max) int32
+    client = client_ref[...]
+    seq = seq_ref[...]
+    disp = disp_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m_max), 1)
+    cli = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+
+    e_up = fscal_ref[0, 0]     # unit-rate service variates (see module doc)
+    e_comp = fscal_ref[0, 1]
+    svc_down = fscal_ref[0, 2]  # fully drawn outside (rate known pre-argmin)
+    svc_cs = fscal_ref[0, 3]
+    c_new = iscal_ref[0, 0]
+    seq_ctr = iscal_ref[0, 1]
+    rnd = iscal_ref[0, 2]
+
+    def gather_i(table, j):
+        # x64 mode promotes integer sums to int64: pin the gather to i32
+        return jnp.sum(jnp.where(idx == j, table, 0)).astype(jnp.int32)
+
+    def gather_rate(row_ref, c):
+        return jnp.sum(jnp.where(cli == c, row_ref[...], 0.0))
+
+    # -- the completing slot (parallel argmin over the clock table) ---------
+    t_new, j = _first_index_min(finish, idx, m_max)
+    onej = idx == j
+    c = gather_i(client, j)
+    ph = gather_i(phase, j)
+    delay = rnd - gather_i(disp, j)
+
+    is_down = ph == E.DOWN
+    is_comp = ph == E.COMP_SERV
+    is_up = ph == E.UP
+    is_cs = ph == E.CS_SERV
+    is_update = is_cs if has_cs else is_up
+    new_round = rnd + jnp.where(is_update, 1, 0).astype(jnp.int32)
+
+    svc_up = e_up / gather_rate(mu_u_ref, c)
+    svc_c = e_comp / gather_rate(mu_c_ref, c)
+
+    # -- fused phase promotion / routing of slot j --------------------------
+    phase_j = jnp.where(
+        is_down, E.COMP_WAIT,
+        jnp.where(is_comp, E.UP, jnp.where(is_update, E.DOWN, E.CS_WAIT)))
+    finish_j = jnp.where(
+        is_comp, t_new + svc_up,
+        jnp.where(is_update, t_new + svc_down, jnp.inf))
+    joins_fifo = is_down | (is_up & has_cs)
+    seq_j = jnp.where(joins_fifo, seq_ctr, gather_i(seq, j))
+    new_seq_ctr = seq_ctr + joins_fifo.astype(jnp.int32)
+    client_j = jnp.where(is_update, c_new, c)
+    disp_j = jnp.where(is_update, new_round, gather_i(disp, j))
+
+    phase = jnp.where(onej, phase_j, phase).astype(jnp.int32)
+    finish = jnp.where(onej, finish_j, finish)
+    seq = jnp.where(onej, seq_j, seq).astype(jnp.int32)
+    client = jnp.where(onej, client_j, client).astype(jnp.int32)
+    disp = jnp.where(onej, disp_j, disp).astype(jnp.int32)
+
+    # -- FIFO promotion at the compute station of client c ------------------
+    promo_comp = is_down | is_comp
+    serving_c = jnp.sum(((phase == E.COMP_SERV) & (client == c))
+                        .astype(jnp.int32)) > 0
+    waiting_c = (phase == E.COMP_WAIT) & (client == c)
+    vals = jnp.where(waiting_c, seq, _BIG_SEQ)
+    _, pick = _first_index_min(vals, idx, m_max)
+    any_wait = jnp.sum(waiting_c.astype(jnp.int32)) > 0
+    do_comp = promo_comp & ~serving_c & any_wait
+    onep = (idx == pick) & do_comp
+    phase = jnp.where(onep, E.COMP_SERV, phase)
+    finish = jnp.where(onep, t_new + svc_c, finish)
+
+    if has_cs:
+        # -- FIFO promotion at the CS single-server queue -------------------
+        promo_cs = is_up | is_cs
+        cs_waiting = phase == E.CS_WAIT
+        vals_cs = jnp.where(cs_waiting, seq, _BIG_SEQ)
+        _, pick_cs = _first_index_min(vals_cs, idx, m_max)
+        cs_busy = jnp.sum((phase == E.CS_SERV).astype(jnp.int32)) > 0
+        any_cs_wait = jnp.sum(cs_waiting.astype(jnp.int32)) > 0
+        do_cs = promo_cs & ~cs_busy & any_cs_wait
+        onec = (idx == pick_cs) & do_cs
+        phase = jnp.where(onec, E.CS_SERV, phase)
+        finish = jnp.where(onec, t_new + svc_cs, finish)
+
+    o_finish_ref[...] = finish
+    o_phase_ref[...] = phase
+    o_client_ref[...] = client
+    o_seq_ref[...] = seq
+    o_disp_ref[...] = disp
+    o_t_ref[0, 0] = t_new
+    o_int_ref[0, 0] = j
+    o_int_ref[0, 1] = c
+    o_int_ref[0, 2] = jnp.where(is_update, 1, 0).astype(jnp.int32)
+    o_int_ref[0, 3] = delay
+    o_int_ref[0, 4] = new_seq_ctr
+    o_int_ref[0, 5] = new_round
+    # transition descriptors for the caller's O(1) occupancy maintenance
+    o_int_ref[0, 6] = ph
+    o_int_ref[0, 7] = jnp.where(do_comp, 1, 0).astype(jnp.int32)
+    o_int_ref[0, 8] = (jnp.where(do_cs, 1, 0).astype(jnp.int32) if has_cs
+                       else jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("has_cs", "interpret"))
+def event_step_tables(finish, phase, client, seq, disp_round, mu_c, mu_u,
+                      fscal, iscal, *, has_cs: bool,
+                      interpret: Optional[bool] = None):
+    """One event per lane on ``K`` stacked task tables.
+
+    Tables are ``[K, m_max]`` (``finish`` float, the rest int32), rates
+    ``[K, n]``; ``fscal = [e_up, e_comp, svc_down, svc_cs]`` float ``[K, 4]``
+    and ``iscal = [c_new, seq_ctr, round]`` int32 ``[K, 3]`` carry the
+    per-lane outside-drawn randomness and counters.  Returns the five
+    updated tables plus ``t_new [K, 1]`` and
+    ``[j, c, is_update, delay, seq_ctr', round', ph_pre, do_comp, do_cs]``
+    ``[K, 9]``.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    K, m_max = finish.shape
+    n = mu_c.shape[1]
+    kernel = functools.partial(_event_kernel, has_cs=has_cs, m_max=m_max,
+                               n=n)
+    row = lambda w: pl.BlockSpec((1, w), lambda k: (k, 0))  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=(K,),
+        in_specs=[row(m_max)] * 5 + [row(n)] * 2 + [row(4), row(3)],
+        out_specs=[row(m_max)] * 5 + [row(1), row(9)],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, m_max), finish.dtype),
+            jax.ShapeDtypeStruct((K, m_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, m_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, m_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, m_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, 1), finish.dtype),
+            jax.ShapeDtypeStruct((K, 9), jnp.int32),
+        ],
+        interpret=interp,
+    )(finish, phase, client, seq, disp_round, mu_c, mu_u, fscal, iscal)
+
+
+# ---------------------------------------------------------------------------
+# EventState-level wrapper: statistics in jnp around the kernel transition
+# ---------------------------------------------------------------------------
+
+def _lane_randomness(params: NetworkParams, state, distribution: str,
+                     has_cs: bool):
+    """Per-lane key split + outside draws, bit-matching the reference
+    engine's stream (same split arity, same key roles)."""
+    law = get_law(distribution)
+    dtype = state.finish.dtype
+
+    def one(key, p_row, mu_d_row, mu_cs_i):
+        key, k_up, k_disp_cli, k_disp_svc, k_comp, k_cs = jax.random.split(
+            key, 6)
+        p_norm = p_row / jnp.sum(p_row)
+        c_new = jax.random.categorical(
+            k_disp_cli, jnp.log(p_norm)).astype(jnp.int32)
+        one_rate = jnp.ones((), dtype)
+        e_up = law.device_draw(k_up, one_rate)
+        e_comp = law.device_draw(k_comp, one_rate)
+        svc_down = law.device_draw(k_disp_svc, mu_d_row[c_new])
+        svc_cs = (law.device_draw(k_cs, mu_cs_i) if has_cs
+                  else jnp.zeros((), dtype))
+        fscal = jnp.stack([e_up, e_comp, svc_down, svc_cs]).astype(dtype)
+        return key, c_new, fscal
+
+    mu_cs = params.mu_cs if has_cs else jnp.zeros_like(params.p[..., 0])
+    return jax.vmap(one)(state.key, params.p, params.mu_d, mu_cs)
+
+
+def step_event_pallas(params: NetworkParams, state, *,
+                      distribution: str = "exponential", power=None,
+                      interpret: Optional[bool] = None):
+    """Batched-lane analogue of :func:`repro.core.events.step_event`.
+
+    ``state`` leaves carry a leading lane axis ``[K, ...]`` and ``params``
+    (and ``power``) leaves ``[K, n]``; the statistics window accumulation
+    is plain (vmapped) jnp, the table transition runs in the Pallas kernel.
+    Returns the batched ``(EventState, EventOut)``.
+    """
+    n = params.p.shape[-1]
+    has_cs = params.mu_cs is not None
+
+    keys, c_new, fscal = _lane_randomness(params, state, distribution,
+                                          has_cs)
+    iscal = jnp.stack(
+        [c_new, state.seq_ctr, state.round], axis=-1).astype(jnp.int32)
+    finish, phase, client, seq, disp, t_col, int_col = event_step_tables(
+        state.finish, state.phase, state.client, state.seq, state.disp_round,
+        params.mu_c, params.mu_u, fscal, iscal, has_cs=has_cs,
+        interpret=interpret)
+    t_new = t_col[:, 0]
+    c = int_col[:, 1]
+    is_update = int_col[:, 2] > 0
+    delay = int_col[:, 3]
+    seq_ctr = int_col[:, 4]
+    new_round = int_col[:, 5]
+    ph_pre = int_col[:, 6]
+    do_comp = int_col[:, 7] > 0
+    do_cs = int_col[:, 8] > 0
+
+    # -- statistics over the sojourn ending at this event (pre-event state),
+    # line-for-line the reference engine's accumulation, vmapped over lanes
+    def lane_stats(st, t_new, c, is_update, delay, pw):
+        measure = (st.round >= st.warmup) & (st.round < st.cap)
+        dt_eff = jnp.where(
+            measure,
+            jnp.clip(jnp.minimum(t_new, st.t_cap)
+                     - jnp.minimum(st.t, st.t_cap), 0.0, None),
+            0.0)
+        occ_int = st.occ_int + dt_eff * st.occ
+        energy = st.energy
+        if pw is not None:
+            p_w = (jnp.sum(pw.P_c * st.serving)
+                   + jnp.sum(pw.P_u * st.occ[2 * n:3 * n])
+                   + jnp.sum(pw.P_d * st.occ[:n]))
+            if pw.P_cs is not None:
+                p_w = p_w + pw.P_cs * st.cs_busy
+            energy = energy + dt_eff * p_w
+        upd_measured = is_update & measure
+        delay_sum = st.delay_sum.at[c].add(
+            jnp.where(upd_measured, delay.astype(st.delay_sum.dtype), 0.0))
+        delay_cnt = st.delay_cnt.at[c].add(
+            jnp.where(upd_measured, 1, 0).astype(jnp.int32))
+        return occ_int, energy, delay_sum, delay_cnt
+
+    if power is None:
+        occ_int, energy, delay_sum, delay_cnt = jax.vmap(
+            lambda st, t, c, u, d: lane_stats(st, t, c, u, d, None))(
+                state, t_new, c, is_update, delay)
+    else:
+        occ_int, energy, delay_sum, delay_cnt = jax.vmap(lane_stats)(
+            state, t_new, c, is_update, delay, power)
+
+    # -- O(1) maintenance of the occupancy carries, mirroring step_event
+    # (the kernel reports the slot-j transition; promotions stay within
+    # their station and only flip the busy indicators)
+    is_comp = ph_pre == E.COMP_SERV
+    is_down = ph_pre == E.DOWN
+    is_cs = ph_pre == E.CS_SERV
+    phase_j = jnp.where(
+        is_down, E.COMP_WAIT,
+        jnp.where(is_comp, E.UP, jnp.where(is_update, E.DOWN, E.CS_WAIT)))
+    client_j = jnp.where(is_update, c_new, c)
+    stations = jnp.arange(3 * n + 1)
+    occ_new = (state.occ
+               + jnp.where(stations[None, :]
+                           == E._station_index(phase_j, client_j, n)[:, None],
+                           1.0, 0.0)
+               - jnp.where(stations[None, :]
+                           == E._station_index(ph_pre, c, n)[:, None],
+                           1.0, 0.0))
+    delta_srv = (jnp.where(do_comp, 1.0, 0.0)
+                 - jnp.where(is_comp, 1.0, 0.0))
+    serving_new = state.serving + jnp.where(
+        jnp.arange(n)[None, :] == c[:, None], delta_srv[:, None], 0.0)
+    cs_busy_new = ((state.cs_busy & ~is_cs) | do_cs if has_cs
+                   else state.cs_busy)
+
+    t0 = jnp.where(is_update & (new_round == state.warmup), t_new, state.t0)
+    t1 = jnp.where(is_update & (new_round == state.cap), t_new, state.t1)
+
+    new_state = E.EventState(
+        t=t_new, key=keys, round=new_round, seq_ctr=seq_ctr,
+        client=client, phase=phase, finish=finish, seq=seq,
+        disp_round=disp,
+        warmup=state.warmup, cap=state.cap, t_cap=state.t_cap,
+        t0=t0, t1=t1, delay_sum=delay_sum, delay_cnt=delay_cnt,
+        energy=energy, occ_int=occ_int,
+        occ=occ_new, serving=serving_new, cs_busy=cs_busy_new)
+    out = E.EventOut(is_update=is_update, time=t_new,
+                     slot=int_col[:, 0], client=c, delay=delay)
+    return new_state, out
+
+
+def step_event_pallas1(params: NetworkParams, state, *,
+                       distribution: str = "exponential", power=None,
+                       interpret: Optional[bool] = None):
+    """Single-lane signature-compatible drop-in for ``events.step_event``
+    (adds/strips a K=1 lane axis; batches further via vmap's pallas rule)."""
+    up = lambda x: x[None]  # noqa: E731
+    st, out = step_event_pallas(
+        jax.tree_util.tree_map(up, params),
+        jax.tree_util.tree_map(up, state),
+        distribution=distribution,
+        power=None if power is None else jax.tree_util.tree_map(up, power),
+        interpret=interpret)
+    down = lambda x: x[0]  # noqa: E731
+    return (jax.tree_util.tree_map(down, st),
+            jax.tree_util.tree_map(down, out))

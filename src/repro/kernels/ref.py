@@ -29,6 +29,84 @@ def buzen_oracle(log_rho, log_gamma_total, m_max):
     return logZ
 
 
+def event_step_oracle(finish, phase, client, seq, disp_round, mu_c, mu_u,
+                      fscal, iscal, *, has_cs: bool):
+    """Pure-jnp mirror of ``repro.kernels.events.event_step_tables``
+    (same ``[K, ...]`` tables-level contract, ``jnp.argmin`` instead of the
+    masked-iota first-index reductions)."""
+    from ..core import events as E
+
+    def one(finish, phase, client, seq, disp, mu_c, mu_u, fscal, iscal):
+        e_up, e_comp, svc_down, svc_cs = fscal
+        c_new, seq_ctr, rnd = iscal
+        m_max = finish.shape[0]
+
+        j = jnp.argmin(finish)
+        t_new = finish[j]
+        c = client[j]
+        ph = phase[j]
+        delay = rnd - disp[j]
+        is_down = ph == E.DOWN
+        is_comp = ph == E.COMP_SERV
+        is_up = ph == E.UP
+        is_cs = ph == E.CS_SERV
+        is_update = is_cs if has_cs else is_up
+        new_round = rnd + jnp.where(is_update, 1, 0).astype(jnp.int32)
+        svc_up = e_up / mu_u[c]
+        svc_c = e_comp / mu_c[c]
+
+        phase_j = jnp.where(
+            is_down, E.COMP_WAIT,
+            jnp.where(is_comp, E.UP,
+                      jnp.where(is_update, E.DOWN, E.CS_WAIT)))
+        finish_j = jnp.where(
+            is_comp, t_new + svc_up,
+            jnp.where(is_update, t_new + svc_down, jnp.inf))
+        joins_fifo = is_down | (is_up & has_cs)
+        seq_j = jnp.where(joins_fifo, seq_ctr, seq[j])
+        new_seq_ctr = seq_ctr + joins_fifo.astype(jnp.int32)
+        client_j = jnp.where(is_update, c_new, c)
+        disp_j = jnp.where(is_update, new_round, disp[j])
+
+        onej = jnp.arange(m_max) == j
+        phase = jnp.where(onej, phase_j, phase).astype(jnp.int32)
+        finish = jnp.where(onej, finish_j, finish)
+        seq = jnp.where(onej, seq_j, seq).astype(jnp.int32)
+        client = jnp.where(onej, client_j, client).astype(jnp.int32)
+        disp = jnp.where(onej, disp_j, disp).astype(jnp.int32)
+
+        promo_comp = is_down | is_comp
+        serving_c = jnp.any((phase == E.COMP_SERV) & (client == c))
+        waiting_c = (phase == E.COMP_WAIT) & (client == c)
+        pick = jnp.argmin(jnp.where(waiting_c, seq, E._BIG_SEQ))
+        do_comp = promo_comp & ~serving_c & jnp.any(waiting_c)
+        onep = (jnp.arange(m_max) == pick) & do_comp
+        phase = jnp.where(onep, E.COMP_SERV, phase)
+        finish = jnp.where(onep, t_new + svc_c, finish)
+
+        do_cs = jnp.zeros((), bool)
+        if has_cs:
+            promo_cs = is_up | is_cs
+            cs_waiting = phase == E.CS_WAIT
+            pick_cs = jnp.argmin(jnp.where(cs_waiting, seq, E._BIG_SEQ))
+            do_cs = (promo_cs & ~jnp.any(phase == E.CS_SERV)
+                     & jnp.any(cs_waiting))
+            onec = (jnp.arange(m_max) == pick_cs) & do_cs
+            phase = jnp.where(onec, E.CS_SERV, phase)
+            finish = jnp.where(onec, t_new + svc_cs, finish)
+
+        t_col = t_new[None]
+        int_col = jnp.stack([j.astype(jnp.int32), c,
+                             jnp.where(is_update, 1, 0).astype(jnp.int32),
+                             delay, new_seq_ctr, new_round, ph,
+                             jnp.where(do_comp, 1, 0).astype(jnp.int32),
+                             jnp.where(do_cs, 1, 0).astype(jnp.int32)])
+        return finish, phase, client, seq, disp, t_col, int_col
+
+    return jax.vmap(one)(finish, phase, client, seq, disp_round, mu_c, mu_u,
+                         fscal, iscal)
+
+
 def fused_async_update_oracle(params, grads, scale):
     new = jax.tree_util.tree_map(
         lambda w, g: (w.astype(jnp.float32)

@@ -38,7 +38,8 @@ from .registry import (OBJECTIVES, PARTITIONS, STRATEGIES, TIMING_LAWS,
                        Registry, objective, partition, strategy, timing_law)
 
 _SPEC = ("Scenario", "NetworkSpec", "LearningSpec", "EnergySpec",
-         "StrategySpec", "ObjectiveSpec", "ClusterSpec",
+         "StrategySpec", "ObjectiveSpec", "SimSpec", "DataSpec",
+         "ClusterSpec",
          "PAPER_CLUSTERS_TABLE1", "PAPER_CLUSTERS_TABLE6", "expand_clusters",
          "DEFAULT_ETA", "MAX_THROUGHPUT_ETA", "EXPLICIT", "stack")
 _SUITE = ("ScenarioSuite", "SuiteResult", "ObjectiveDef", "ResolveContext",

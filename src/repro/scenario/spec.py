@@ -47,7 +47,7 @@ import numpy as np
 from ..core.complexity import LearningConstants
 from ..core.buzen import NetworkParams
 from ..core.energy import PowerProfile
-from .registry import OBJECTIVES, STRATEGIES, TIMING_LAWS
+from .registry import OBJECTIVES, PARTITIONS, STRATEGIES, TIMING_LAWS
 
 # The paper's step sizes for the Table-3 comparison: max-throughput needs a
 # 20x-reduced learning rate to stay stable (Section 5.3).  Single source of
@@ -413,16 +413,113 @@ class ObjectiveSpec:
         return cls(**d)
 
 
+@_pytree_dataclass(data_fields=())
+@dataclasses.dataclass(frozen=True, eq=False)
+class SimSpec:
+    """Event-engine execution knobs: which ``repro.sim`` backend runs this
+    scenario's trajectories (``None`` = the process-wide
+    ``REPRO_SIM_BACKEND`` default) and, for the Pallas backend, an
+    ``interpret``-mode override (``None`` = auto: compiled on TPU,
+    interpreted elsewhere)."""
+
+    backend: Optional[str] = None     # "reference" | "batched" | "pallas"
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if _SKIP_VALIDATION:
+            return
+        if self.backend is not None:
+            from ..sim.backend import _check  # dependency-free
+
+            object.__setattr__(self, "backend", _check(str(self.backend)))
+        if self.interpret is not None:
+            object.__setattr__(self, "interpret", bool(self.interpret))
+
+    def to_dict(self) -> dict:
+        return {"backend": self.backend, "interpret": self.interpret}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SimSpec":
+        return cls(**d)
+
+
+_DATASETS = ("synthetic",)
+
+
+@_pytree_dataclass(data_fields=())
+@dataclasses.dataclass(frozen=True, eq=False)
+class DataSpec:
+    """Declarative training data: a dataset builder plus an ``@partition``
+    registry key (and its dirichlet ``alpha``), so
+    ``ScenarioSuite.run(mode="train")`` can build the per-client datasets
+    from the spec instead of requiring an explicit ``clients=``."""
+
+    dataset: str = "synthetic"        # dataset builder name
+    partition: str = "iid"            # @partition registry key
+    alpha: float = 0.2                # dirichlet concentration (if used)
+    num_classes: int = 4
+    samples_per_class: int = 40
+    test_fraction: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        if _SKIP_VALIDATION:
+            return
+        if self.dataset not in _DATASETS:
+            raise ValueError(f"unknown dataset: {self.dataset!r}; "
+                             f"registered datasets: {sorted(_DATASETS)}")
+        from .. import data  # noqa: F401  (registers the partitioners)
+
+        PARTITIONS.get(self.partition)
+        object.__setattr__(self, "alpha", float(self.alpha))
+        for f in ("num_classes", "samples_per_class", "seed"):
+            object.__setattr__(self, f, int(getattr(self, f)))
+        object.__setattr__(self, "test_fraction", float(self.test_fraction))
+
+    def build(self, n: int):
+        """Materialize ``(clients, test_data)`` for an ``n``-client network:
+        ``clients[i] = (x_i, y_i)`` per the registered partitioner."""
+        import inspect
+
+        from ..data import make_synthetic_image_dataset, train_test_split
+
+        full = make_synthetic_image_dataset(
+            num_classes=self.num_classes,
+            samples_per_class=self.samples_per_class, seed=self.seed)
+        ds, test = train_test_split(full, self.test_fraction,
+                                    seed=self.seed + 1)
+        part = PARTITIONS.get(self.partition)
+        kw = {"seed": self.seed}
+        if "alpha" in inspect.signature(part).parameters:
+            kw["alpha"] = self.alpha
+        parts = part(ds.y, n, **kw)
+        clients = [(ds.x[i], ds.y[i]) for i in parts]
+        return clients, (test.x, test.y)
+
+    def to_dict(self) -> dict:
+        return {"dataset": self.dataset, "partition": self.partition,
+                "alpha": float(self.alpha),
+                "num_classes": int(self.num_classes),
+                "samples_per_class": int(self.samples_per_class),
+                "test_fraction": float(self.test_fraction),
+                "seed": int(self.seed)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DataSpec":
+        return cls(**d)
+
+
 # ---------------------------------------------------------------------------
 # the Scenario
 # ---------------------------------------------------------------------------
 
 @_pytree_dataclass(data_fields=("network", "learning", "energy", "strategy",
-                                "objective"))
+                                "objective", "sim", "data"))
 @dataclasses.dataclass(frozen=True, eq=False)
 class Scenario:
     """One complete experiment: network x learning x energy x strategy x
-    objective.  See the module docstring for the 5-line EMNIST example."""
+    objective (x optional sim backend and data layout).  See the module
+    docstring for the 5-line EMNIST example."""
 
     network: NetworkSpec
     learning: LearningSpec = dataclasses.field(default_factory=LearningSpec)
@@ -430,6 +527,8 @@ class Scenario:
     strategy: StrategySpec = dataclasses.field(default_factory=StrategySpec)
     objective: ObjectiveSpec = dataclasses.field(
         default_factory=ObjectiveSpec)
+    sim: Optional[SimSpec] = None     # None = process-default backend
+    data: Optional[DataSpec] = None   # None = explicit clients= required
     name: str = ""
 
     def __post_init__(self):
@@ -462,6 +561,11 @@ class Scenario:
 
     def eta(self) -> float:
         return self.learning.eta_for(self.strategy.name)
+
+    @property
+    def sim_backend(self) -> Optional[str]:
+        """The pinned ``repro.sim`` backend (None = process default)."""
+        return None if self.sim is None else self.sim.backend
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -503,7 +607,7 @@ class Scenario:
     # -- serialization -------------------------------------------------------
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "version": 1,
             "kind": "Scenario",
             "name": self.name,
@@ -513,6 +617,14 @@ class Scenario:
             "strategy": self.strategy.to_dict(),
             "objective": self.objective.to_dict(),
         }
+        # absent (not null) when unset: scenarios predating SimSpec/DataSpec
+        # keep their canonical JSON — and hence their hash() — unchanged,
+        # so the BENCH_smoke.json perf trajectory stays joinable
+        if self.sim is not None:
+            d["sim"] = self.sim.to_dict()
+        if self.data is not None:
+            d["data"] = self.data.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":
@@ -525,6 +637,10 @@ class Scenario:
             else EnergySpec.from_dict(d["energy"]),
             strategy=StrategySpec.from_dict(d["strategy"]),
             objective=ObjectiveSpec.from_dict(d["objective"]),
+            sim=None if d.get("sim") is None
+            else SimSpec.from_dict(d["sim"]),
+            data=None if d.get("data") is None
+            else DataSpec.from_dict(d["data"]),
             name=d.get("name", ""),
         )
 

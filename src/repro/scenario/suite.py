@@ -34,7 +34,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import events
 from ..core.buzen import NetworkParams, log_normalizing_constants
 from ..core.complexity import LearningConstants, wallclock_time
 from ..core.energy import (PowerProfile, energy_optimal_routing,
@@ -264,6 +263,9 @@ class SuiteResult:
     ``TrainLog`` (``train``).  ``programs`` counts the distinct compiled
     programs (buckets) the call dispatched — the bucketing win is
     ``programs < len(entries)`` for structurally-alike scenarios.
+    ``cache_hits`` counts entries served from the suite-level result cache
+    (keyed by ``Scenario.hash()`` x seeds x mode x run settings): re-running
+    an unchanged scenario costs nothing.
     """
 
     mode: str
@@ -272,6 +274,7 @@ class SuiteResult:
     lanes: int
     programs: int
     strategies: dict  # name -> (p, m) resolved routing/concurrency
+    cache_hits: int = 0
 
 
 class ScenarioSuite:
@@ -294,6 +297,8 @@ class ScenarioSuite:
         self._strategies: dict[str, tuple[np.ndarray, int]] = {}
         self._jit_cache: dict = {}
         self._trainers: dict = {}
+        self._result_cache: dict = {}  # per-entry results, Scenario.hash keys
+        self._data_cache: dict = {}    # DataSpec-built (clients, test_data)
 
     @classmethod
     def strategy_grid(cls, base: Scenario, strategies, seeds=(0,),
@@ -360,14 +365,21 @@ class ScenarioSuite:
     def _run_analyze(self) -> SuiteResult:
         strategies = self.resolve()
         names = list(self.scenarios)
+        entries: dict = {}
+        cache_hits = 0
         buckets: dict = {}
         for name in names:
             scn = self.scenarios[name]
+            ckey = ("analyze", scn.hash())
+            hit = self._result_cache.get(ckey)
+            if hit is not None:
+                entries[name] = hit
+                cache_hits += 1
+                continue
             key = (scn.n, scn.network.mu_cs is not None,
                    _power_sig(scn))
             buckets.setdefault(key, []).append(name)
 
-        entries: dict = {}
         programs = 0
         for (n, has_cs, power_sig), members in buckets.items():
             has_power = power_sig is not None
@@ -407,28 +419,52 @@ class ScenarioSuite:
                               if val_key is not None and val_key in row
                               else None),
                 }
+                self._result_cache[
+                    ("analyze", self.scenarios[name].hash())] = entries[name]
         return SuiteResult(mode="analyze", entries=entries, seeds=self.seeds,
                            lanes=len(names), programs=programs,
-                           strategies=strategies)
+                           strategies=strategies, cache_hits=cache_hits)
 
     # -- simulate: device event engine, one jit per structure bucket ---------
 
     def _run_simulate(self, num_updates: int, *, warmup: int = 0,
-                      m_max: Optional[int] = None) -> SuiteResult:
+                      m_max: Optional[int] = None,
+                      backend: Optional[str] = None) -> SuiteResult:
+        """Device event engine through the ``repro.sim`` backend dispatch.
+
+        Backend precedence: the ``backend=`` kwarg, else each scenario's
+        ``SimSpec``, else the process-wide ``REPRO_SIM_BACKEND``; lanes are
+        bucketed by structure AND backend, so pinned scenarios coexist.
+        ``"reference"`` and ``"batched"`` are bitwise identical on alike
+        lanes (``tests/test_sim_backends.py``).
+        """
+        from ..sim.backend import resolve_backend
+        from ..sim.batched_events import build_lanes_fn
+
         strategies = self.resolve()
         names = list(self.scenarios)
+        entries: dict = {}
+        cache_hits = 0
         buckets: dict = {}
         for name in names:
             scn = self.scenarios[name]
+            bk = resolve_backend(backend if backend is not None
+                                 else scn.sim_backend)
+            interp = None if scn.sim is None else scn.sim.interpret
             key = (scn.n, scn.network.law, scn.network.mu_cs is not None,
-                   _power_sig(scn))
+                   _power_sig(scn), bk, interp)
             buckets.setdefault(key, []).append(name)
 
-        entries: dict = {name: [] for name in names}
         programs = 0
         S = len(self.seeds)
-        for (n, law, has_cs, power_sig), members in buckets.items():
+        for (n, law, has_cs, power_sig, bk, interp), members in \
+                buckets.items():
             has_power = power_sig is not None
+            # the table size comes from ALL bucket members (trajectories
+            # depend on it: init_state draws per-slot), so the *effective*
+            # size — not the raw kwarg — keys the result cache: a hit is
+            # bitwise identical to what this bucket would compute fresh,
+            # regardless of which members happen to be cached already
             m_top = max(strategies[name][1] for name in members)
             mx = m_max or m_top
             if mx < m_top:
@@ -437,36 +473,64 @@ class ScenarioSuite:
                 raise ValueError(
                     f"m_max={mx} is smaller than the largest resolved "
                     f"concurrency m={m_top} in this suite")
+            todo = []
+            for name in members:
+                ckey = ("simulate", self.scenarios[name].hash(), self.seeds,
+                        int(num_updates), int(warmup), mx, bk, interp)
+                hit = self._result_cache.get(ckey)
+                if hit is not None:
+                    entries[name] = hit
+                    cache_hits += 1
+                else:
+                    todo.append((name, ckey))
+            if not todo:
+                continue
             lane_params = _stack_params(
                 [self.scenarios[n_].params(strategies[n_][0])
-                 for n_ in members for _ in self.seeds])
+                 for n_, _ in todo for _ in self.seeds])
             power = (_stack_power([self.scenarios[n_].power()
-                                   for n_ in members for _ in self.seeds])
+                                   for n_, _ in todo for _ in self.seeds])
                      if has_power else None)
             m_vec = jnp.asarray([strategies[n_][1]
-                                 for n_ in members for _ in self.seeds],
+                                 for n_, _ in todo for _ in self.seeds],
                                 jnp.int32)
             keys = jnp.stack([jax.random.PRNGKey(s)
-                              for _ in members for s in self.seeds])
+                              for _ in todo for s in self.seeds])
             sig = ("simulate", n, law, has_cs, power_sig, mx,
-                   int(num_updates), int(warmup))
+                   int(num_updates), int(warmup), bk, interp)
             fn = self._jit_cache.get(sig)
             if fn is None:
-                fn = self._jit_cache[sig] = _build_simulate(
-                    int(num_updates), int(warmup), law, mx, has_power)
+                fn = self._jit_cache[sig] = build_lanes_fn(
+                    bk, int(num_updates), int(warmup), law, mx, has_power,
+                    interpret=interp)
                 programs += 1
             stats = fn(lane_params, m_vec, keys, power)
-            for i, name in enumerate(members):
+            for i, (name, ckey) in enumerate(todo):
                 entries[name] = [
                     jax.tree_util.tree_map(lambda a: a[i * S + j], stats)
                     for j in range(S)]
+                self._result_cache[ckey] = entries[name]
         return SuiteResult(mode="simulate", entries=entries, seeds=self.seeds,
                            lanes=len(names) * S, programs=programs,
-                           strategies=strategies)
+                           strategies=strategies, cache_hits=cache_hits)
 
     # -- train: fused device trainer (PR-2 lane planner) ---------------------
 
-    def _run_train(self, *, model, clients, horizon_time: float,
+    def _client_data(self, scn: Scenario, name: str):
+        """``(clients, test_data)`` for a scenario's ``DataSpec`` (memoized
+        by spec content x population, so alike scenarios share the arrays
+        and the trainer memo keeps hitting)."""
+        if scn.data is None:
+            raise ValueError(
+                f"mode='train' for scenario {name!r} needs either an "
+                "explicit clients= argument or a DataSpec on the scenario")
+        key = (str(scn.data.to_dict()), scn.n)
+        hit = self._data_cache.get(key)
+        if hit is None:
+            hit = self._data_cache[key] = scn.data.build(scn.n)
+        return hit
+
+    def _run_train(self, *, model, clients=None, horizon_time: float,
                    test_data=None, max_updates: Optional[int] = None,
                    loss_fn=None, **config_overrides) -> SuiteResult:
         from ..fl.engine import DeviceTrainer  # local: fl imports scenario
@@ -474,35 +538,63 @@ class ScenarioSuite:
 
         strategies = self.resolve()
         names = list(self.scenarios)
+        run_sig = (float(horizon_time), max_updates,
+                   tuple(sorted(config_overrides.items())))
+        entries: dict = {}
+        cache_hits = 0
         buckets: dict = {}
         for name in names:
             scn = self.scenarios[name]
+            ckey = ("train", scn.hash(), self.seeds, run_sig)
+            hit = self._result_cache.get(ckey)
+            # identity-checked: a hit requires the SAME model/clients/
+            # test_data objects the cached logs were trained with
+            if hit is not None and hit[0] is model and hit[1] is clients \
+                    and hit[2] is test_data and hit[3] is loss_fn:
+                entries[name] = hit[4]
+                cache_hits += 1
+                continue
             key = (str(scn.network.to_dict()), scn.learning.grad_clip,
                    str(None if scn.energy is None else scn.energy.to_dict()),
+                   str(None if scn.data is None else scn.data.to_dict()),
+                   scn.sim_backend,
+                   None if scn.sim is None else scn.sim.interpret,
                    tuple(sorted(config_overrides.items())))
-            buckets.setdefault(key, []).append(name)
+            buckets.setdefault(key, []).append((name, ckey))
 
-        entries: dict = {}
         programs = 0
         for key, members in buckets.items():
-            scn0 = self.scenarios[members[0]]
+            scn0 = self.scenarios[members[0][0]]
             cfg = scn0.fl_config(**config_overrides)
+            if clients is None:
+                bucket_clients, built_test = self._client_data(
+                    scn0, members[0][0])
+                bucket_test = test_data if test_data is not None \
+                    else built_test
+            else:
+                bucket_clients, bucket_test = clients, test_data
             # identity-checked memo: the cached trainer holds strong refs
-            # to its model/clients, and a hit requires the SAME objects —
-            # never a stale trainer for a new model at a recycled address
+            # to everything it was built from, and a hit requires the SAME
+            # objects (model, clients, test data, loss) — never a stale
+            # trainer evaluating against a superseded test set
             cached = self._trainers.get(key)
             trainer = None
             if cached is not None and cached[0] is model \
-                    and cached[1] is clients:
-                trainer = cached[2]
+                    and cached[1] is bucket_clients \
+                    and cached[2] is bucket_test and cached[3] is loss_fn:
+                trainer = cached[4]
             if trainer is None:
                 trainer = DeviceTrainer(
-                    model, clients, scn0.params(), cfg, test_data=test_data,
-                    power=scn0.power(),
-                    loss_fn=loss_fn or cross_entropy_loss)
-                self._trainers[key] = (model, clients, trainer)
+                    model, bucket_clients, scn0.params(), cfg,
+                    test_data=bucket_test, power=scn0.power(),
+                    loss_fn=loss_fn or cross_entropy_loss,
+                    sim_backend=scn0.sim_backend,
+                    sim_interpret=None if scn0.sim is None
+                    else scn0.sim.interpret)
+                self._trainers[key] = (model, bucket_clients, bucket_test,
+                                       loss_fn, trainer)
             ps, ms, etas, seeds = [], [], [], []
-            for name in members:
+            for name, _ in members:
                 p, m = strategies[name]
                 for s in self.seeds:
                     ps.append(p)
@@ -515,11 +607,14 @@ class ScenarioSuite:
                                         max_updates=max_updates)
             programs += max(len(trainer._jit_cache) - before, 0)
             S = len(self.seeds)
-            for i, name in enumerate(members):
+            for i, (name, ckey) in enumerate(members):
                 entries[name] = logs[i * S:(i + 1) * S]
+                self._result_cache[ckey] = (model, clients, test_data,
+                                            loss_fn, entries[name])
         return SuiteResult(mode="train", entries=entries, seeds=self.seeds,
                            lanes=len(names) * len(self.seeds),
-                           programs=programs, strategies=strategies)
+                           programs=programs, strategies=strategies,
+                           cache_hits=cache_hits)
 
 
 _ANALYZE_KEY = {"time": "tau", "round": "K_eps", "throughput": "throughput",
@@ -578,15 +673,3 @@ def _build_analyze(m_max: int, has_power: bool):
                             in_axes=(0, 0, 0, None, 0)))
 
 
-def _build_simulate(num_updates: int, warmup: int, law: str, m_max: int,
-                    has_power: bool):
-    """One jitted, vmapped event-engine run over scenario x seed lanes."""
-
-    def one(prm, m, key, power):
-        return events._simulate_stats(prm, m, key, num_updates, warmup, law,
-                                      m_max, power)
-
-    if has_power:
-        return jax.jit(jax.vmap(one))
-    return jax.jit(jax.vmap(lambda prm, m, key, _pw: one(prm, m, key, None),
-                            in_axes=(0, 0, 0, None)))

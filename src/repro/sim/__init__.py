@@ -1,0 +1,43 @@
+"""repro.sim — the simulation-backend subsystem of the event engine.
+
+One flag (``REPRO_SIM_BACKEND`` / :func:`set_backend`, per-call
+``backend=...``) selects how closed-network trajectories execute:
+
+  * ``"reference"`` — lane-at-a-time single-lane scans (semantic baseline);
+  * ``"batched"``   — K lanes per scan step in ONE vmapped program
+    (bitwise identical to the reference; the default);
+  * ``"pallas"``    — the lock-step scan with the per-event table
+    transition in the Pallas TPU kernel ``repro.kernels.events``
+    (compiled on TPU, ``interpret=True`` fallback elsewhere).
+
+Routed through this dispatch: ``repro.core.events.simulate_stats`` /
+``next_update``, the fused trainer (``repro.fl.engine``), and
+``ScenarioSuite.run(mode="simulate"|"train")``; a
+``repro.scenario.SimSpec`` pins the backend per scenario.  The paper-scale
+(n = 100, m_max = 132) sweep is benchmarked in
+``benchmarks/bench_events_scale.py``.
+
+Import structure mirrors ``repro.scenario``: ``backend`` (dependency-free)
+loads eagerly; ``batched_events`` — which imports ``repro.core`` — loads
+lazily on first attribute access.
+"""
+from __future__ import annotations
+
+from .backend import BACKENDS, get_backend, resolve_backend, set_backend
+
+_LANES = ("simulate_stats_lanes", "build_lanes_fn", "stack_lanes")
+
+__all__ = ["BACKENDS", "set_backend", "get_backend", "resolve_backend",
+           *_LANES]
+
+
+def __getattr__(name: str):
+    if name in _LANES:
+        from . import batched_events
+
+        return getattr(batched_events, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,62 @@
+"""Process-wide simulation-backend flag for the event engine.
+
+Mirrors ``repro.core.buzen.set_backend``: the closed-network event engine
+dispatches behind a named backend —
+
+  * ``"reference"`` — one lane at a time: each lane runs the single-lane
+    jitted event scan of ``repro.core.events`` and results are stacked on
+    the host.  The semantic baseline (and the bitwise contract for the
+    other backends on structurally-alike lanes).
+  * ``"batched"``  — all lanes advance together: ONE jitted ``vmap`` over
+    the lane axis, one event per lane per scan step, so a multi-lane sweep
+    (seeds x strategies x scenarios) saturates the device even though each
+    lane is sequential.  Bitwise identical to ``"reference"`` (vmap of the
+    same pure step function).
+  * ``"pallas"``   — like ``"batched"``, but the per-event hot path (the
+    parallel argmin over the ``[m_max]`` finish-clock table and the fused
+    phase-promotion / routing / FIFO-pick table transition) runs in the
+    Pallas TPU kernel ``repro.kernels.events`` (compiled on TPU,
+    ``interpret=True`` fallback elsewhere).
+
+Select per call with ``backend=...``, process-wide with
+:func:`set_backend`, or via the ``REPRO_SIM_BACKEND`` environment variable.
+This module is dependency-free so ``repro.core.events`` and the Scenario
+spec can import it without cycles.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+BACKENDS = ("reference", "batched", "pallas")
+
+_backend: Optional[str] = None  # resolved lazily so a bad env var reports late
+
+
+def _check(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown sim backend: {name!r}; registered backends: "
+            f"{sorted(BACKENDS)}")
+    return name
+
+
+def set_backend(name: str) -> None:
+    """Set the process-wide default event-engine backend."""
+    global _backend
+    _backend = _check(name)
+
+
+def get_backend() -> str:
+    """The process-wide default backend (``REPRO_SIM_BACKEND`` or
+    ``"batched"``)."""
+    global _backend
+    if _backend is None:
+        _backend = _check(os.environ.get("REPRO_SIM_BACKEND", "batched"))
+    return _backend
+
+
+def resolve_backend(name: Optional[str] = None) -> str:
+    """Per-call override resolution: ``name`` if given (validated), else the
+    process-wide default."""
+    return get_backend() if name is None else _check(name)

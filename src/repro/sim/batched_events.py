@@ -1,0 +1,168 @@
+"""Event-batched simulation: K independent lanes per ``lax.scan`` step.
+
+The device event engine (``repro.core.events``) is sequential per
+trajectory — one event per scan step — so a single lane cannot saturate a
+device.  This module advances **K lanes in lock-step** (one event per lane
+per step): seeds x strategy lanes x scenarios stack into ``[K, ...]``
+tables and ONE jitted program sweeps them all, which is how the paper-scale
+(n = 100, m = 132) populations of Section 6 run compiled next to the Buzen
+kernel (``benchmarks/bench_events_scale.py``).
+
+Three backends (see ``repro.sim.backend``), all returning identical
+statistics on structurally-alike lanes:
+
+  * ``"reference"`` — host loop over lanes, each a single-lane
+    ``events._simulate_stats`` scan (one compile, L sequential executions);
+  * ``"batched"``   — ``jax.vmap`` of the same scan: bitwise identical to
+    ``"reference"`` lane-by-lane (asserted in
+    ``tests/test_sim_backends.py``), one program for all lanes;
+  * ``"pallas"``    — the lock-step scan with the per-event table
+    transition in the Pallas kernel (``repro.kernels.events``); bitwise
+    for the rate-free unit-draw laws (exponential / deterministic), equal
+    to one floating-point rescale otherwise.
+
+Entry points: :func:`simulate_stats_lanes` (list-of-params convenience)
+and :func:`build_lanes_fn` (the cached-program form ``ScenarioSuite``
+dispatches through).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import events
+from ..core.buzen import NetworkParams
+from ..core.events import EventStats, finalize_stats
+from .backend import resolve_backend
+
+
+def stack_lanes(trees):
+    """Leaf-wise stack of per-lane pytrees (``NetworkParams``,
+    ``PowerProfile``, ...) onto a leading lane axis."""
+    trees = list(trees)
+    if not trees:
+        raise ValueError("need at least one lane")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _make_pallas_fn(num_updates: int, warmup: int, distribution: str,
+                    m_max: int, interpret: Optional[bool]):
+    def fn(lane_params, m_vec, keys, power):
+        mult = 4 if lane_params.mu_cs is not None else 3
+        num_events = mult * (num_updates + warmup) + mult * m_max + 8
+        cap = warmup + num_updates
+        st = jax.vmap(lambda prm, m, key: events.init_state(
+            prm, m, key, m_max=m_max, distribution=distribution,
+            warmup=warmup, cap=cap))(lane_params, m_vec, keys)
+
+        def body(st, _):
+            from ..kernels.events import step_event_pallas
+
+            st, _ = step_event_pallas(lane_params, st,
+                                      distribution=distribution,
+                                      power=power, interpret=interpret)
+            return st, None
+
+        st, _ = jax.lax.scan(body, st, None, length=num_events)
+        return jax.vmap(finalize_stats)(st)
+
+    return jax.jit(fn)
+
+
+def build_lanes_fn(backend: str, num_updates: int, warmup: int,
+                   distribution: str, m_max: int, has_power: bool,
+                   interpret: Optional[bool] = None):
+    """The compiled lane-sweep program for one static signature.
+
+    Returns ``fn(lane_params, m_vec, keys, power) -> EventStats`` with a
+    leading lane axis on every field; ``power`` is ``None`` when
+    ``has_power`` is false, else a lane-stacked ``PowerProfile``.
+    Programs are memoized per signature — repeated sweeps (and every
+    :func:`simulate_stats_lanes` call) reuse the compiled jit entry
+    instead of retracing a fresh closure.
+    """
+    return _build_lanes_fn(resolve_backend(backend), int(num_updates),
+                           int(warmup), distribution, int(m_max),
+                           bool(has_power), interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
+                    m_max: int, has_power: bool,
+                    interpret: Optional[bool]):
+    if backend == "reference":
+        def fn(lane_params, m_vec, keys, power):
+            outs = []
+            for i in range(int(m_vec.shape[0])):
+                prm = jax.tree_util.tree_map(lambda x: x[i], lane_params)
+                pw = (None if power is None
+                      else jax.tree_util.tree_map(lambda x: x[i], power))
+                outs.append(events._simulate_stats(
+                    prm, m_vec[i], keys[i], nu, wu, distribution, m_max, pw))
+            return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+        return fn
+
+    if backend == "pallas":
+        return _make_pallas_fn(nu, wu, distribution, m_max, interpret)
+
+    # "batched": one jitted vmap of the single-lane scan
+    def one(prm, m, key, power):
+        return events._simulate_stats(prm, m, key, nu, wu, distribution,
+                                      m_max, power)
+
+    if has_power:
+        return jax.jit(jax.vmap(one))
+    return jax.jit(jax.vmap(lambda prm, m, key, _pw: one(prm, m, key, None),
+                            in_axes=(0, 0, 0, None)))
+
+
+def simulate_stats_lanes(params, ms, num_updates: int, *, warmup: int = 0,
+                         keys=None, seeds=None,
+                         distribution: str = "exponential", power=None,
+                         m_max: Optional[int] = None,
+                         backend: Optional[str] = None,
+                         interpret: Optional[bool] = None) -> EventStats:
+    """Stationary statistics for ``L`` lanes through the selected backend.
+
+    ``params`` is a list of per-lane :class:`NetworkParams` (or one
+    pre-stacked with ``[L, n]`` leaves); ``ms`` the per-lane concurrencies;
+    ``keys``/``seeds`` the per-lane PRNG streams (default
+    ``PRNGKey(0..L-1)``); ``power`` ``None``, one shared profile, or a
+    per-lane list.  Returns :class:`EventStats` with a leading ``[L]``
+    lane axis.  Backends agree bitwise on alike lanes ("reference" vs
+    "batched") — see the module docstring.
+    """
+    from ..scenario.laws import get_law
+
+    get_law(distribution)  # eager: unknown laws fail listing the options
+    backend = resolve_backend(backend)
+    if isinstance(params, NetworkParams):  # NamedTuple: check before tuple
+        lane_params = params
+    elif isinstance(params, (list, tuple)):
+        lane_params = stack_lanes(params)
+    else:
+        lane_params = params
+    L = lane_params.p.shape[0]
+    m_vec = jnp.asarray(ms, jnp.int32)
+    if m_vec.shape != (L,):
+        raise ValueError(f"ms has shape {m_vec.shape}, expected ({L},)")
+    if keys is None:
+        if seeds is None:
+            seeds = range(L)
+        keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    if m_max is None:
+        m_max = int(jnp.max(m_vec))
+    if power is not None:
+        if not hasattr(power, "P_c"):  # list of per-lane profiles
+            power = stack_lanes(power)
+        elif power.P_c.ndim == 1:      # one shared profile -> broadcast
+            power = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(jnp.asarray(x), (L,) + jnp.asarray(x).shape),
+                power)
+    fn = build_lanes_fn(backend, num_updates, warmup, distribution,
+                        int(m_max), power is not None, interpret=interpret)
+    return fn(lane_params, m_vec, keys, power)

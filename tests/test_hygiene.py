@@ -1,0 +1,17 @@
+"""Tier-1 wrapper around ``tools/check_hygiene.py``: no tracked bytecode."""
+import os
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO_ROOT, "tools"))
+
+import check_hygiene  # noqa: E402
+
+
+def test_no_tracked_bytecode_or_caches():
+    tracked = check_hygiene.tracked_files()
+    if not tracked:
+        pytest.skip("git unavailable or not a repository")
+    assert check_hygiene.tracked_junk() == []

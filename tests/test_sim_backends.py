@@ -1,0 +1,372 @@
+"""The repro.sim backend subsystem: reference / batched / pallas.
+
+Contracts under test:
+
+  * ``"reference"`` and ``"batched"`` are **bitwise identical** on
+    structurally-alike lanes (vmap of the same pure step function);
+  * ``"pallas"`` (interpret mode on CPU) reproduces the reference engine's
+    per-event trajectories — bitwise for the rate-free unit-draw laws
+    (exponential / deterministic), to float-rescale accuracy (1e-12) for
+    lognormal / hyperexponential;
+  * the maintained occupancy carries equal a full table recount;
+  * distributional agreement vs the host ``AsyncNetworkSim`` at the
+    tolerances documented in ``tests/test_events.py``;
+  * vmapped lanes == stacked singles through the public lanes API;
+  * unknown backends fail listing the registered options, everywhere;
+  * ``SimSpec`` / ``DataSpec`` round-trip bitwise through JSON and drive
+    ``ScenarioSuite`` (backend routing, result cache, spec-built clients).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NetworkParams, throughput
+from repro.core import events as E
+from repro.core.simulator import AsyncNetworkSim
+from repro.kernels.events import event_step_tables, step_event_pallas1
+from repro.kernels.ref import event_step_oracle
+from repro.sim import (BACKENDS, get_backend, resolve_backend, set_backend,
+                       simulate_stats_lanes)
+
+
+def random_params(seed, n, with_cs=False):
+    rng = np.random.default_rng(seed)
+    params = NetworkParams(
+        p=jnp.asarray(rng.dirichlet(np.ones(n) * 2.0)),
+        mu_c=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.5, 4.0, n)))
+    return params.with_cs(1.5) if with_cs else params
+
+
+def assert_stats_equal(a, b, *, exact=True, err=""):
+    for f in a._fields:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        if exact:
+            np.testing.assert_array_equal(x, y, err_msg=f"{err}{f}")
+        else:
+            np.testing.assert_allclose(x, y, rtol=1e-10, atol=1e-12,
+                                       err_msg=f"{err}{f}")
+
+
+# ---------------------------------------------------------------------------
+# backend flag
+# ---------------------------------------------------------------------------
+
+def test_backend_flag_roundtrip_and_unknown_listed():
+    prev = get_backend()
+    try:
+        for name in BACKENDS:
+            set_backend(name)
+            assert get_backend() == name
+            assert resolve_backend(None) == name
+        assert resolve_backend("reference") == "reference"
+        with pytest.raises(ValueError,
+                           match="batched.*pallas.*reference"):
+            set_backend("cuda")
+        with pytest.raises(ValueError, match="sim backend"):
+            resolve_backend("jnp")
+    finally:
+        set_backend(prev)
+
+
+def test_simulate_stats_lanes_rejects_unknown_backend():
+    params = random_params(0, 3)
+    with pytest.raises(ValueError, match="registered backends"):
+        simulate_stats_lanes([params], [3], 10, backend="weibull")
+
+
+# ---------------------------------------------------------------------------
+# reference == batched (bitwise), vmapped lanes == stacked singles
+# ---------------------------------------------------------------------------
+
+def test_reference_equals_batched_bitwise_on_alike_lanes():
+    rng = np.random.default_rng(3)
+    base = random_params(1, 4)
+    lanes = [base._replace(p=jnp.asarray(rng.dirichlet(np.ones(4))))
+             for _ in range(3)]
+    ms = [3, 6, 5]
+    kw = dict(warmup=100, m_max=6, seeds=(0, 1, 2))
+    ref = simulate_stats_lanes(lanes, ms, 800, backend="reference", **kw)
+    bat = simulate_stats_lanes(lanes, ms, 800, backend="batched", **kw)
+    assert_stats_equal(ref, bat, err="reference vs batched: ")
+
+
+def test_batched_lanes_equal_stacked_singles():
+    params = random_params(5, 3)
+    keys = jax.random.split(jax.random.PRNGKey(42), 4)
+    bat = simulate_stats_lanes([params] * 4, [5] * 4, 600, warmup=100,
+                               keys=keys, m_max=5, backend="batched")
+    for i, key in enumerate(keys):
+        single = E.simulate_stats(params, 5, 600, warmup=100, key=key,
+                                  m_max=5)
+        one = jax.tree_util.tree_map(lambda a: a[i], bat)
+        assert_stats_equal(one, single, err=f"lane {i}: ")
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel: oracle contract + per-event trajectories vs reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("with_cs", [False, True])
+def test_event_kernel_matches_jnp_oracle(with_cs):
+    """Raw tables-level contract: kernel == jnp oracle, bitwise."""
+    rng = np.random.default_rng(7)
+    K, m_max, n = 3, 5, 4
+    params = random_params(11, n, with_cs)
+    st = jax.vmap(lambda k: E.init_state(params, 4, k, m_max=m_max))(
+        jax.random.split(jax.random.PRNGKey(0), K))
+    # drive a few reference steps so tables hold a nontrivial mix of phases
+    for _ in range(7):
+        st, _ = jax.vmap(lambda s: E.step_event(params, s))(st)
+    fscal = jnp.asarray(rng.uniform(0.2, 2.0, (K, 4)))
+    iscal = jnp.stack([jnp.asarray(rng.integers(0, n, K), jnp.int32),
+                       st.seq_ctr, st.round], axis=-1).astype(jnp.int32)
+    mu_c = jnp.broadcast_to(params.mu_c, (K, n))
+    mu_u = jnp.broadcast_to(params.mu_u, (K, n))
+    args = (st.finish, st.phase, st.client, st.seq, st.disp_round,
+            mu_c, mu_u, fscal, iscal)
+    got = event_step_tables(*args, has_cs=with_cs)
+    want = event_step_oracle(*args, has_cs=with_cs)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("dist,exact", [
+    ("exponential", True), ("deterministic", True),
+    ("lognormal", False), ("hyperexponential", False)])
+def test_pallas_step_tracks_reference_trajectory(dist, exact):
+    """Lock-step state comparison over 60 events at small n/m: bitwise for
+    the scale-free unit draws, 1e-12 otherwise (one extra f64 rescale)."""
+    params = random_params(0, 3)
+    st_r = E.init_state(params, 4, jax.random.PRNGKey(1), m_max=4,
+                        distribution=dist, warmup=2, cap=40)
+    st_p = st_r
+    for step in range(60):
+        st_r, out_r = E.step_event(params, st_r, distribution=dist)
+        st_p, out_p = step_event_pallas1(params, st_p, distribution=dist)
+        for f in st_r._fields:
+            a = np.asarray(getattr(st_r, f))
+            b = np.asarray(getattr(st_p, f))
+            if exact or not np.issubdtype(a.dtype, np.floating):
+                assert np.array_equal(a, b), (dist, step, f)
+            else:
+                np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12,
+                                           err_msg=f"{dist} step {step} {f}")
+        assert int(out_r.slot) == int(out_p.slot)
+        assert bool(out_r.is_update) == bool(out_p.is_update)
+
+
+def test_pallas_simulate_stats_bitwise_cs_power():
+    """End-to-end simulate_stats through the kernel (CS buffer + energy
+    accounting): bitwise vs the reference backend on the exponential law."""
+    from repro.core import PowerProfile
+
+    rng = np.random.default_rng(2)
+    params = random_params(8, 4, with_cs=True)
+    power = PowerProfile(P_c=jnp.asarray(rng.uniform(1, 5, 4)),
+                         P_u=jnp.asarray(rng.uniform(0.5, 2, 4)),
+                         P_d=jnp.asarray(rng.uniform(0.2, 1, 4)))
+    kw = dict(warmup=50, m_max=6, power=power, seeds=(0, 1))
+    ref = simulate_stats_lanes([params] * 2, [6, 4], 400,
+                               backend="reference", **kw)
+    pal = simulate_stats_lanes([params] * 2, [6, 4], 400,
+                               backend="pallas", **kw)
+    assert_stats_equal(ref, pal, err="reference vs pallas: ")
+
+
+# ---------------------------------------------------------------------------
+# occupancy carries (the O(1)-update refactor behind the batched speedup)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("with_cs", [False, True])
+def test_occupancy_carries_match_full_recount(with_cs):
+    params = random_params(4, 3, with_cs)
+    st = E.init_state(params, 3, jax.random.PRNGKey(9), m_max=5)
+    for _ in range(150):
+        st, _ = E.step_event(params, st)
+    down, comp_total, serving, up, cs_total, cs_busy = E._station_counts(
+        st.phase, st.client, params.n)
+    np.testing.assert_array_equal(
+        np.asarray(st.occ),
+        np.asarray(jnp.concatenate([down, comp_total, up, cs_total[None]])))
+    np.testing.assert_array_equal(np.asarray(st.serving),
+                                  np.asarray(serving))
+    assert bool(st.cs_busy) == bool(cs_busy)
+
+
+# ---------------------------------------------------------------------------
+# distributional agreement vs the host reference simulator
+# ---------------------------------------------------------------------------
+
+def test_batched_lanes_agree_with_host_distributionally():
+    """tests/test_events.py tolerances: throughput ~5-6%, staleness
+    identity ~3%, through the multi-lane batched program."""
+    params = random_params(8, 4)
+    m = 6
+    st = simulate_stats_lanes([params] * 2, [m, m], 20_000, warmup=3_000,
+                              seeds=(0, 1), m_max=m, backend="batched")
+    lam_th = float(throughput(params, m))
+    p = np.asarray(params.p)
+    for i in range(2):
+        np.testing.assert_allclose(float(st.throughput[i]), lam_th,
+                                   rtol=0.05)
+        stale = float(np.sum(p * np.asarray(st.mean_delay[i])))
+        np.testing.assert_allclose(stale, m - 1, rtol=0.03)
+    host = AsyncNetworkSim(params, m, seed=0).run(20_000, warmup=3_000)
+    np.testing.assert_allclose(float(st.throughput[0]), host.throughput,
+                               rtol=0.06)
+
+
+# ---------------------------------------------------------------------------
+# Scenario integration: SimSpec / DataSpec / suite routing + result cache
+# ---------------------------------------------------------------------------
+
+def _scenario(**kw):
+    from repro.scenario import NetworkSpec, Scenario, StrategySpec
+
+    net = NetworkSpec(mu_c=[1.0, 2.0, 1.5], mu_d=[2.0] * 3, mu_u=[2.0] * 3)
+    return Scenario(network=net, strategy=StrategySpec("asyncsgd"), **kw)
+
+
+def test_simspec_dataspec_roundtrip_bitwise():
+    from repro.scenario import DataSpec, Scenario, SimSpec
+
+    scn = _scenario(sim=SimSpec(backend="pallas", interpret=True),
+                    data=DataSpec(partition="dirichlet", alpha=0.35,
+                                  num_classes=3, samples_per_class=17,
+                                  test_fraction=0.2, seed=5))
+    back = Scenario.from_json(scn.to_json())
+    assert back == scn
+    assert back.hash() == scn.hash()
+    assert back.sim.backend == "pallas" and back.data.alpha == 0.35
+    # scenarios without the new specs keep their canonical JSON (and hash)
+    plain = _scenario()
+    assert "sim" not in plain.to_dict() and "data" not in plain.to_dict()
+
+
+def test_simspec_validates_backend_eagerly():
+    from repro.scenario import SimSpec
+
+    with pytest.raises(ValueError, match="registered backends"):
+        SimSpec(backend="gpu")
+
+
+def test_dataspec_validates_eagerly():
+    from repro.scenario import DataSpec
+
+    with pytest.raises(ValueError, match="registered partitions"):
+        DataSpec(partition="by_vibes")
+    with pytest.raises(ValueError, match="datasets"):
+        DataSpec(dataset="imagenet")
+
+
+def test_suite_simulate_backends_bitwise_and_cached():
+    from repro.scenario import ScenarioSuite, SimSpec
+
+    def make():
+        return ScenarioSuite(
+            {"a": _scenario(), "b": _scenario()}, seeds=(0, 1))
+
+    kw = dict(num_updates=300, warmup=50)
+    res_b = make().run(mode="simulate", backend="batched", **kw)
+    res_r = make().run(mode="simulate", backend="reference", **kw)
+    assert res_b.cache_hits == 0
+    for name in res_b.entries:
+        for sb, sr in zip(res_b.entries[name], res_r.entries[name]):
+            assert_stats_equal(sb, sr, err=f"{name}: ")
+
+    # result cache: identical re-run is served entirely from cache
+    suite = make()
+    first = suite.run(mode="simulate", **kw)
+    again = suite.run(mode="simulate", **kw)
+    assert first.cache_hits == 0
+    assert again.cache_hits == len(suite.scenarios)
+    for name in first.entries:
+        for sa, sb in zip(first.entries[name], again.entries[name]):
+            assert_stats_equal(sa, sb)
+    # changed settings miss the cache
+    other = suite.run(mode="simulate", num_updates=301, warmup=50)
+    assert other.cache_hits == 0
+
+    # a SimSpec pins the backend per scenario (bitwise same stats here)
+    pinned = ScenarioSuite(
+        {"a": _scenario(sim=SimSpec(backend="reference")),
+         "b": _scenario()}, seeds=(0, 1))
+    res_p = pinned.run(mode="simulate", **kw)
+    assert res_p.programs == 2  # one per backend bucket
+    for name in res_p.entries:
+        for sp, sb in zip(res_p.entries[name], first.entries[name]):
+            assert_stats_equal(sp, sb, err=f"pinned {name}: ")
+
+
+def test_simulate_cache_key_tracks_effective_table_size():
+    """Review regression: the result-cache key must carry the *effective*
+    m_max (the bucket's max m), not the raw kwarg — otherwise a cached
+    entry computed under one bucket composition is served where a fresh
+    run would have used a larger table (different trajectories)."""
+    from repro.scenario import ScenarioSuite, SimSpec, StrategySpec
+
+    def explicit(m, **kw):
+        return _scenario(**kw).replace(strategy=StrategySpec(
+            "explicit", p=np.full(3, 1.0 / 3), m=m))
+
+    scns = {"a": explicit(5, sim=SimSpec(backend="reference")),
+            "b": explicit(3)}
+    suite = ScenarioSuite(dict(scns), seeds=(0,))
+    suite.run(mode="simulate", num_updates=200)  # a@mx=5, b@mx=3 buckets
+    # forcing one backend merges the buckets: b now shares a's mx=5 table
+    merged = suite.run(mode="simulate", num_updates=200,
+                       backend="reference")
+    fresh = ScenarioSuite(dict(scns), seeds=(0,)).run(
+        mode="simulate", num_updates=200, backend="reference")
+    for name in scns:
+        assert_stats_equal(merged.entries[name][0], fresh.entries[name][0],
+                           err=f"{name}: ")
+
+
+def test_train_trainer_memo_not_stale_across_test_data():
+    """Review regression: same model/clients but a new test_data object
+    must rebuild the trainer (not evaluate against the superseded set)."""
+    from repro.fl import mlp_classifier
+    from repro.scenario import DataSpec, ScenarioSuite
+
+    scn = _scenario(data=DataSpec(num_classes=4, samples_per_class=20))
+    suite = ScenarioSuite(scn, seeds=(0,))
+    clients, (tx, ty) = scn.data.build(scn.n)
+    model = mlp_classifier(28 * 28, 4, hidden=(8,))
+    rng = np.random.default_rng(0)
+    kw = dict(model=model, clients=clients, horizon_time=20.0,
+              batch_size=8, eval_every_time=10.0)
+    r1 = suite.run(mode="train", test_data=(tx, ty), **kw)
+    # same arrays, labels shuffled: accuracies must reflect the NEW set
+    r2 = suite.run(mode="train",
+                   test_data=(tx, np.asarray(ty)[rng.permutation(len(ty))]),
+                   **kw)
+    name = list(r1.entries)[0]
+    acc1 = r1.entries[name][0].accuracies
+    acc2 = r2.entries[name][0].accuracies
+    assert r2.cache_hits == 0
+    assert acc1 != acc2
+
+
+def test_suite_train_builds_clients_from_dataspec():
+    from repro.fl import mlp_classifier
+    from repro.scenario import DataSpec, ScenarioSuite
+
+    scn = _scenario(data=DataSpec(num_classes=4, samples_per_class=20))
+    suite = ScenarioSuite(scn, seeds=(0,))
+    model = mlp_classifier(28 * 28, 4, hidden=(8,))
+    res = suite.run(mode="train", model=model, horizon_time=25.0,
+                    batch_size=8, eval_every_time=12.5)
+    log = res.entries[list(res.entries)[0]][0]
+    assert log.updates[-1] > 0 and np.isfinite(log.losses).all()
+    # identical re-run hits the result cache (same model object)
+    res2 = suite.run(mode="train", model=model, horizon_time=25.0,
+                     batch_size=8, eval_every_time=12.5)
+    assert res2.cache_hits == 1
+    # a scenario without DataSpec still requires explicit clients
+    bare = ScenarioSuite(_scenario(), seeds=(0,))
+    with pytest.raises(ValueError, match="DataSpec"):
+        bare.run(mode="train", model=model, horizon_time=5.0)
