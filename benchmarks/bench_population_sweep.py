@@ -1,0 +1,74 @@
+"""Mixed-population ScenarioSuite: one compiled program across distinct n.
+
+The acceptance workload of the padded traced-``n`` PR: scenarios at three
+population scales of the Table-1 clusters (n = 9 / 32 / 100) run
+``analyze`` and ``simulate`` as ONE suite — lanes are padded to the shared
+``n_max`` (``repro.core.buzen.pad_network``) so ``SuiteResult.programs``
+is 1 per mode where the pre-PR planner compiled one program per distinct
+``n``.  The baseline (each scenario in its own suite — exactly the
+per-``n`` compile count the old equal-``n`` bucketing forced) is timed
+alongside, and the analyze columns are cross-checked: ``n``-padding is
+bitwise invisible at a shared ``m_max`` (``tests/test_padded_n.py``); the
+mixed-vs-solo comparison here also changes the per-bucket ``logZ`` padding
+``m_max``, so the recorded agreement is float64 round-off.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.scenario import ScenarioSuite
+
+from .common import row
+from .scenarios import population_scenario as _scenario, record
+
+
+def run(scales=(10, 3, 1), num_updates: int = 400, warmup: int = 80,
+        seeds=(0, 1)) -> list[str]:
+    out = []
+    scns = {s.name: s for s in (_scenario(sc) for sc in scales)}
+    ns = [s.n for s in scns.values()]
+    # key the BENCH row by the largest-population member (the paper-scale
+    # lane that dominates the program's cost)
+    record("population_sweep", max(scns.values(), key=lambda s: s.n))
+
+    # -- mixed suite: every population in one plan --------------------------
+    mixed = ScenarioSuite(dict(scns), seeds=seeds)
+    t0 = time.perf_counter()
+    ana = mixed.run(mode="analyze")
+    us_ana = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    sim = mixed.run(mode="simulate", num_updates=num_updates, warmup=warmup)
+    us_sim = (time.perf_counter() - t0) * 1e6
+
+    # -- baseline: one suite per population (the pre-padding compile count)
+    t0 = time.perf_counter()
+    solo_ana = {k: ScenarioSuite({k: s}, seeds=seeds).run(mode="analyze")
+                for k, s in scns.items()}
+    us_solo_ana = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    solo_programs = 0
+    for k, s in scns.items():
+        r = ScenarioSuite({k: s}, seeds=seeds).run(
+            mode="simulate", num_updates=num_updates, warmup=warmup)
+        solo_programs += r.programs
+    us_solo_sim = (time.perf_counter() - t0) * 1e6
+
+    # n-padding is invisible; the differing per-bucket m_max padding keeps
+    # this at float64 round-off rather than exactly zero (see docstring)
+    rel = max(
+        abs(ana.entries[k]["throughput"]
+            - solo_ana[k].entries[k]["throughput"])
+        / solo_ana[k].entries[k]["throughput"] for k in scns)
+
+    pops = "-".join(str(n) for n in ns)
+    out.append(row(
+        "population_sweep_analyze", us_ana,
+        f"n={pops}_programs={ana.programs}_vs_per_n="
+        f"{sum(r.programs for r in solo_ana.values())}"
+        f"_solo_us={us_solo_ana:.0f}_max_rel_diff={rel:.1e}"))
+    out.append(row(
+        "population_sweep_simulate", us_sim,
+        f"lanes={sim.lanes}_programs={sim.programs}"
+        f"_vs_per_n={solo_programs}_solo_us={us_solo_sim:.0f}"
+        f"_speedup={us_solo_sim / max(us_sim, 1.0):.2f}x"))
+    return out

@@ -1,0 +1,53 @@
+"""Paper-scale pruned vs full concurrency sweep (ROADMAP: "a paper-scale
+(n=100, m_max=132) timing comparison ... is still worth recording").
+
+Times the one-compile full-grid ``batched_concurrency_sweep`` against the
+coarse-to-fine ``pruned_concurrency_sweep`` on the Table-1 population at
+full scale (n = 100, m grid 2..132) and records the speedup plus the
+winner agreement — the pruning contract is that both land on the same
+(or a value-equivalent) concurrency.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched_concurrency_sweep, pruned_concurrency_sweep
+from repro.core.batched import make_time_objective_padded
+
+from .common import row
+from .scenarios import CONSTS, record, table1_scenario
+
+
+def run(scale: int = 1, m_max: int = 132, steps: int = 8) -> list[str]:
+    scn = record("pruned_sweep",
+                 table1_scenario(scale, strategy="time_opt", steps=steps,
+                                 m_max=m_max, search="pruned",
+                                 name=f"pruned_sweep_s{scale}"))
+    params = scn.params()
+    obj = make_time_objective_padded(params, CONSTS, m_max)
+    m_grid = np.arange(2, m_max + 1)
+
+    t0 = time.perf_counter()
+    full = batched_concurrency_sweep(obj, params, m_grid=jnp.asarray(m_grid),
+                                     m_max=m_max, steps=steps)
+    us_full = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    pruned = pruned_concurrency_sweep(obj, params, m_grid=m_grid,
+                                      m_max=m_max, steps=steps)
+    us_pruned = (time.perf_counter() - t0) * 1e6
+
+    rel = abs(pruned.best.value - full.best.value) / abs(full.best.value)
+    rows_full = len(m_grid)
+    rows_pruned = len(pruned.best.history)
+    return [
+        row("pruned_sweep_full", us_full,
+            f"n={params.n}_rows={rows_full}_best_m={full.best.m}"),
+        row("pruned_sweep_pruned", us_pruned,
+            f"rows={rows_pruned}_best_m={pruned.best.m}"
+            f"_speedup={us_full / max(us_pruned, 1.0):.2f}x"
+            f"_rel_value_err={rel:.2e}"),
+    ]

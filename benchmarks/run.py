@@ -26,6 +26,7 @@ sys.path.insert(0, _REPO_ROOT)  # `import benchmarks` when run as a script
 def build_suites(mode: str, backends=None):
     from benchmarks import (bench_concurrency_sweep, bench_energy_joint,
                             bench_events_scale, bench_kernels, bench_pareto,
+                            bench_population_sweep, bench_pruned_sweep,
                             bench_queueing, bench_round_optimization,
                             bench_routing_table, bench_scenario_suite,
                             bench_tau_surface, bench_training_comparison)
@@ -46,6 +47,12 @@ def build_suites(mode: str, backends=None):
                 backends=backends)),
             ("scenario_suite", lambda: bench_scenario_suite.run(
                 scale=20, num_updates=2000, seeds=(0, 1, 2, 3))),
+            # mixed-population (n = 9/32/100) suite as ONE program vs the
+            # one-program-per-n baseline (the padded traced-n planner win)
+            ("population_sweep", lambda: bench_population_sweep.run(
+                num_updates=400, seeds=(0, 1))),
+            # paper-scale pruned vs full concurrency sweep (ROADMAP item)
+            ("pruned_sweep", lambda: bench_pruned_sweep.run(steps=8)),
             ("routing_table", lambda: bench_routing_table.run(
                 scale=20, steps=30)),
             ("round_optimization", lambda: bench_round_optimization.run(
@@ -84,6 +91,10 @@ def build_suites(mode: str, backends=None):
         ("scenario_suite", lambda: bench_scenario_suite.run(
             scale=20 if fast else 10,
             num_updates=2000 if fast else 10000, seeds=tuple(range(4)))),
+        ("population_sweep", lambda: bench_population_sweep.run(
+            num_updates=1000 if fast else 4000, seeds=tuple(range(4)))),
+        ("pruned_sweep", lambda: bench_pruned_sweep.run(
+            steps=30 if fast else 120)),
         ("energy_joint", lambda: bench_energy_joint.run(
             horizon=120.0 if fast else 240.0, seeds=(0,) if fast else (0, 1))),
         ("kernels", lambda: bench_kernels.run()),

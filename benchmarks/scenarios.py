@@ -70,6 +70,17 @@ def events_scale_scenario(scale: int = 1, m: int = 132,
         name=name)
 
 
+def population_scenario(scale: int = 1) -> Scenario:
+    """Table-1 population at ``scale`` with pinned uniform routing and
+    ``m = n`` — a member of the mixed-``n`` ``population_sweep`` suite."""
+    net = NetworkSpec.from_clusters(PAPER_CLUSTERS_TABLE1, scale)
+    return Scenario(
+        network=net,
+        strategy=StrategySpec("explicit", p=np.full(net.n, 1.0 / net.n),
+                              m=net.n, m_max=net.n),
+        name=f"population_n{net.n}")
+
+
 def two_client_scenario(mu2: float = 1.0) -> Scenario:
     """The Figure-2 two-client system (client 2 = ``mu2``x faster)."""
     return Scenario(
@@ -102,6 +113,10 @@ BENCH_SCENARIOS: dict[str, Scenario] = {
     "scenario_suite": table1_scenario(20, strategy="time_opt", steps=60,
                                       name="scenario_suite"),
     "events_scale": events_scale_scenario(),
+    "population_sweep": population_scenario(1),
+    "pruned_sweep": table1_scenario(1, strategy="time_opt", steps=8,
+                                    m_max=132, search="pruned",
+                                    name="pruned_sweep_s1"),
 }
 
 # specs actually executed in this process (bench modules call record());

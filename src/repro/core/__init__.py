@@ -5,17 +5,19 @@ bounds, energy model, and routing/concurrency optimization.
 closed forms that power :func:`batched_concurrency_sweep` — the one-compile
 sweep over the whole ``(p, m)`` grid."""
 from .batched import (batch_log_normalizing_constants,
+                      delay_jacobian_padded,
                       energy_complexity_padded,
                       expected_relative_delay_padded,
                       joint_objective_padded, make_energy_objective_padded,
                       make_joint_objective_padded, make_round_objective_padded,
                       make_throughput_objective_padded,
                       make_time_objective_padded, objective_surface,
-                      round_complexity_padded, tau_surface, throughput_padded,
+                      round_complexity_padded, second_moment_matrix_padded,
+                      tau_surface, throughput_padded,
                       wallclock_time_padded)
 from .buzen import (NetworkParams, get_backend, log_normalizing_constants,
-                    log_Z_ratio, set_backend)
-from .events import EventStats, simulate_stats
+                    log_Z_ratio, pad_network, set_backend)
+from .events import EventStats, simulate_stats, unpad_stats
 from .complexity import (LearningConstants, eta_max, round_complexity,
                          round_complexity_unbounded, system_staleness_factor,
                          wallclock_time)
@@ -35,11 +37,12 @@ from .optimize import (OptResult, SweepResult, batched_concurrency_sweep,
 
 __all__ = [
     "NetworkParams", "log_normalizing_constants", "log_Z_ratio",
-    "set_backend", "get_backend",
-    "EventStats", "simulate_stats",
+    "pad_network", "set_backend", "get_backend",
+    "EventStats", "simulate_stats", "unpad_stats",
     "batch_log_normalizing_constants", "expected_relative_delay_padded",
     "throughput_padded", "round_complexity_padded", "wallclock_time_padded",
     "energy_complexity_padded", "joint_objective_padded",
+    "second_moment_matrix_padded", "delay_jacobian_padded",
     "make_round_objective_padded", "make_throughput_objective_padded",
     "make_time_objective_padded", "make_energy_objective_padded",
     "make_joint_objective_padded", "objective_surface", "tau_surface",

@@ -38,8 +38,8 @@ from . import numerics  # noqa: F401  (enables x64)
 from .buzen import NetworkParams, get_backend, log_normalizing_constants
 from .complexity import LearningConstants
 from .energy import PowerProfile, energy_per_round
-from .jackson import _lz  # log Z[idx] with Z[idx < 0] = 0, traced-idx safe
-from .numerics import NEG_INF
+from .jackson import _log_geom_sum, _lz  # traced-idx/K safe helpers
+from .numerics import NEG_INF, seqsum
 from .optimize import _with_p  # shared routing-replace helper
 
 
@@ -68,10 +68,10 @@ def batch_log_normalizing_constants(
 
         log_rho = jnp.log(p_batch) - jnp.log(params.mu_c)[None, :]
         gamma = p_batch * (1.0 / params.mu_d + 1.0 / params.mu_u)[None, :]
-        log_gamma_total = jnp.log(jnp.sum(gamma, axis=-1))
+        log_gamma_total = jnp.log(seqsum(gamma, axis=-1))
         if params.mu_cs is not None:
             # the CS single-server station folds in as one extra column
-            log_load_cs = (jnp.log(jnp.sum(p_batch, axis=-1))
+            log_load_cs = (jnp.log(seqsum(p_batch, axis=-1))
                            - jnp.log(params.mu_cs))
             log_rho = jnp.concatenate([log_rho, log_load_cs[:, None]], axis=-1)
         return buzen_log_Z_batched(log_rho, log_gamma_total, m_max)
@@ -83,16 +83,21 @@ def batch_log_normalizing_constants(
 
 
 def _padded_series_vs_Z(log_load: jax.Array, logZ: jax.Array, pop: jax.Array,
-                        shift: int, m_max: int) -> jax.Array:
+                        shift: int, m_max: int,
+                        weights_log: Optional[jax.Array] = None) -> jax.Array:
     """Padded analogue of ``jackson._series_vs_Z`` for traced ``pop``.
 
-    ``log sum_{k=1}^{pop-shift+1} load^k Z[pop-shift+1-k] / Z[pop]`` with the
-    series padded to the static length ``m_max`` and masked by ``pop``.
+    ``log sum_{k=1}^{pop-shift+1} w_k load^k Z[pop-shift+1-k] / Z[pop]``
+    with the series padded to the static length ``m_max`` and masked by
+    ``pop``; ``weights_log[k-1]`` optionally adds ``log w_k`` (e.g.
+    ``log(2k-1)`` for the second-moment diagonal).
     """
     k = jnp.arange(1, m_max + 1)
     idx = pop - shift + 1 - k
     zterm = _lz(logZ, idx) - _lz(logZ, pop)
     terms = jnp.asarray(log_load)[..., None] * k + zterm
+    if weights_log is not None:
+        terms = terms + weights_log
     return logsumexp(jnp.where(idx >= 0, terms, NEG_INF), axis=-1)
 
 
@@ -112,10 +117,10 @@ def mean_total_counts_padded(params: NetworkParams, logZ: jax.Array,
     is_part = params.gamma * jnp.exp(_lz(logZ, pop - 1) - _lz(logZ, pop))
     total = comp + is_part
     if params.mu_cs is not None:
-        log_load_cs = jnp.log(jnp.sum(params.p)) - jnp.log(params.mu_cs)
+        log_load_cs = jnp.log(seqsum(params.p)) - jnp.log(params.mu_cs)
         cs_total = jnp.exp(_padded_series_vs_Z(log_load_cs, logZ, pop, 1,
                                                m_max))
-        total = total + params.p / jnp.sum(params.p) * cs_total
+        total = total + params.p / seqsum(params.p) * cs_total
     return total
 
 
@@ -138,13 +143,31 @@ def round_complexity_padded(params: NetworkParams, m: jax.Array,
     The staleness term vanishes identically at ``m = 1``; the double
     ``where`` keeps both the value and the gradient finite there (a naive
     ``sqrt(where(...))`` has a NaN cotangent at 0).
+
+    Under the traced-``n`` convention (``params.n_active`` set) the
+    per-client sums are masked to the real population — padded rows have
+    ``p = 0``, whose ``1/p`` terms must not poison the sums; for real rows
+    the masking is bitwise-neutral (trailing exact zeros).  The division
+    runs on a pinned-safe ``p`` (padded entries replaced by 1) so the
+    padded rows stay inf/NaN-free in the *primal* too — a ``where`` after
+    an inf would leak a NaN cotangent into every ``p`` entry under
+    ``jax.grad`` (the same trap the ``m = 1`` double-``where`` below
+    guards).
     """
-    n = params.n
+    n = params.active_count
     p = params.p
+    mask = params.active_mask
     eps = consts.eps
-    first = (4.0 + consts.B / eps) * jnp.sum(1.0 / (n * p))
     delays = expected_relative_delay_padded(params, m, logZ, m_max)
-    staleness = jnp.sum(delays / p**2)
+    if mask is not None:
+        p_safe = jnp.where(mask, p, 1.0)
+        inv_np = jnp.where(mask, 1.0 / (n * p_safe), 0.0)
+        stale_terms = jnp.where(mask, delays / p_safe**2, 0.0)
+    else:
+        inv_np = 1.0 / (n * p)
+        stale_terms = delays / p**2
+    first = (4.0 + consts.B / eps) * seqsum(inv_np)
+    staleness = seqsum(stale_terms)
     raw = consts.C * (m - 1.0) / eps * staleness
     safe = jnp.where(m > 1, raw, 1.0)
     second = jnp.where(m > 1, jnp.sqrt(safe), 0.0)
@@ -177,6 +200,135 @@ def joint_objective_padded(params: NetworkParams, m: jax.Array,
     tau = k_eps / throughput_padded(logZ, m)
     en = k_eps * energy_per_round(params, power)
     return rho * en / e_star + (1.0 - rho) * tau / tau_star
+
+
+# ---------------------------------------------------------------------------
+# padded second moments / delay Jacobian (Thm 2 Eq 6/4; Thm 7 Eq 24/22)
+# ---------------------------------------------------------------------------
+
+def second_moment_matrix_padded(params: NetworkParams, m: jax.Array,
+                                logZ: jax.Array, m_max: int) -> jax.Array:
+    """``E[S_i S_j]`` at population ``m - 1`` for traced ``m`` (and, under
+    the traced-``n`` convention, per-row real populations).
+
+    The padded analogue of :func:`repro.core.jackson.second_moment_matrix`:
+    every series runs to the static bound ``m_max`` and is masked by the
+    traced population, so a whole ``(p, m)`` batch evaluates (and
+    differentiates) in one trace — closing the "batched second moments /
+    delay Jacobians" ROADMAP item.  Values agree bitwise with the static
+    form for real clients; padded rows/columns are exactly zero.
+    """
+    n = params.n
+    log_rho = params.log_rho
+    gamma = params.gamma
+    mask = params.active_mask
+    lr_safe = log_rho if mask is None else jnp.where(mask, log_rho, 0.0)
+    pop = m - 1
+    pop_c = jnp.clip(pop, 1)  # guard: at pop <= 0 everything masks to zero
+
+    # ---- alpha (queue-queue) ----------------------------------------------
+    # i == j: sum_k (2k-1) rho_i^k Z[pop-k]/Z[pop]
+    wlog = jnp.log(2.0 * jnp.arange(1, m_max + 1) - 1.0)
+    alpha_diag = jnp.exp(_padded_series_vs_Z(log_rho, logZ, pop_c, 1, m_max,
+                                             weights_log=wlog))
+
+    # i != j: sum_{s=2}^{pop} Z[pop-s]/Z[pop] c_ij(s),
+    # c_ij(s) = exp(s lr_j) * geom_sum(lr_i - lr_j, s - 1)
+    if m_max >= 2:
+        s = jnp.arange(2, m_max + 1)  # [S] static; masked by s <= pop
+        d = lr_safe[:, None] - lr_safe[None, :]  # [n, n]; -inf-free
+        lgs = jax.vmap(lambda K: _log_geom_sum(d, K))(s - 1)  # [S, n, n]
+        log_c = s[:, None, None] * lr_safe[None, None, :] + lgs
+        zlog = (_lz(logZ, pop_c - s) - _lz(logZ, pop_c))[:, None, None]
+        valid = (s <= pop_c)[:, None, None]
+        if mask is not None:
+            valid = valid & (mask[:, None] & mask[None, :])[None]
+        alpha_off = jnp.exp(logsumexp(
+            jnp.where(valid, log_c + zlog, NEG_INF), axis=0))
+    else:
+        alpha_off = jnp.zeros((n, n))
+    eye = jnp.eye(n, dtype=bool)
+    alpha = jnp.where(eye, alpha_diag[:, None], alpha_off)
+
+    # ---- beta_{i,2} (queue-IS cross terms) --------------------------------
+    beta2 = jnp.exp(_padded_series_vs_Z(log_rho, logZ, pop_c, 2, m_max))
+
+    # ---- psi (IS-IS) -------------------------------------------------------
+    z3 = jnp.exp(_lz(logZ, pop_c - 2) - _lz(logZ, pop_c))
+    z2 = jnp.exp(_lz(logZ, pop_c - 1) - _lz(logZ, pop_c))
+    psi = gamma[:, None] * gamma[None, :] * z3 + jnp.diag(gamma) * z2
+
+    second = (alpha + beta2[:, None] * gamma[None, :]
+              + beta2[None, :] * gamma[:, None] + psi)
+
+    if params.mu_cs is not None:
+        second = second + _cs_second_moment_terms_padded(params, logZ, pop_c,
+                                                         m_max)
+    return jnp.where(pop > 0, second, 0.0)
+
+
+def _cs_second_moment_terms_padded(params: NetworkParams, logZ: jax.Array,
+                                   pop: jax.Array, m_max: int) -> jax.Array:
+    """Padded Theorem 7 Eq (24) CS terms (``pop`` traced, ``>= 1``)."""
+    n = params.n
+    p = params.p
+    psum = seqsum(p)
+    gamma = params.gamma
+    log_rho = params.log_rho
+    log_load_cs = jnp.log(psum) - jnp.log(params.mu_cs)
+
+    beta_cs2 = jnp.exp(_padded_series_vs_Z(log_load_cs, logZ, pop, 2, m_max))
+
+    k = jnp.arange(1, m_max + 1)
+    base = jnp.where(k <= pop,
+                     k * log_load_cs + _lz(logZ, pop - k) - _lz(logZ, pop),
+                     NEG_INF)
+    s0 = jnp.exp(logsumexp(base))
+    s1_terms = jnp.where(k > 1,
+                         base + jnp.log(jnp.maximum(k - 1.0, 1e-300)),
+                         NEG_INF)
+    s1 = jnp.exp(logsumexp(s1_terms))
+    pi = p / psum
+    alpha_cs = (pi[:, None] * pi[None, :]) * 2.0 * s1 * psum * psum
+    alpha_cs = alpha_cs + jnp.diag(pi * psum) * s0
+
+    # alpha_{CS,i} = sum_{k,l >= 1, k+l <= pop} load_cs^k rho_i^l
+    #                Z[pop-k-l]/Z[pop]
+    if m_max >= 2:
+        kk = jnp.arange(1, m_max)
+        ll = jnp.arange(1, m_max)
+        # padded clients have log_rho = -inf: their alpha_{CS,i} is 0
+        grid = (kk[:, None] * log_load_cs
+                + ll[None, :] * log_rho[:, None, None]
+                + _lz(logZ, pop - kk[:, None] - ll[None, :]) - _lz(logZ, pop))
+        valid = (kk[:, None] + ll[None, :]) <= pop
+        grid = jnp.where(valid[None, :, :], grid, NEG_INF)
+        alpha_cs_i = jnp.exp(logsumexp(grid, axis=(1, 2)))
+    else:
+        alpha_cs_i = jnp.zeros(n)
+
+    extra = (alpha_cs
+             + beta_cs2 * (pi[:, None] * gamma[None, :]
+                           + pi[None, :] * gamma[:, None]) * psum
+             + pi[:, None] * alpha_cs_i[None, :] * psum
+             + pi[None, :] * alpha_cs_i[:, None] * psum)
+    return extra
+
+
+def delay_jacobian_padded(params: NetworkParams, m: jax.Array,
+                          logZ: jax.Array, m_max: int) -> jax.Array:
+    """``J[i, j] = d E0[D_i] / d p_j`` for traced ``m`` (covariance
+    identity, Thm 2 Eq 4 / Thm 7 Eq 22); padded columns (``p_j = 0``) are
+    masked to zero instead of dividing by zero."""
+    mean = mean_total_counts_padded(params, logZ, m - 1, m_max)
+    second = second_moment_matrix_padded(params, m, logZ, m_max)
+    cov = second - mean[:, None] * mean[None, :]
+    mask = params.active_mask
+    if mask is None:
+        return cov / params.p[None, :]
+    p_safe = jnp.where(mask, params.p, 1.0)  # keep padded 0/0 out of the primal
+    return jnp.where(mask[None, :] & mask[:, None],
+                     cov / p_safe[None, :], 0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -48,7 +48,7 @@ import jax.numpy as jnp
 from jax.scipy.special import gammaln, logsumexp
 
 from . import numerics  # noqa: F401  (enables x64)
-from .numerics import NEG_INF
+from .numerics import NEG_INF, seqsum
 
 _BACKENDS = ("jnp", "pallas")
 _backend = os.environ.get("REPRO_BUZEN_BACKEND", "jnp")
@@ -67,17 +67,39 @@ def get_backend() -> str:
 
 
 class NetworkParams(NamedTuple):
-    """Rates of the closed queueing network (Section 2.6 / 7.1)."""
+    """Rates of the closed queueing network (Section 2.6 / 7.1).
+
+    Padded-``n`` convention: arrays may be padded to a static ``n_max``
+    (zero routing mass, unit rates beyond the real population) with
+    ``n_active`` holding the traced count of *real* clients — see
+    :func:`pad_network`.  ``n_active is None`` means every row is real
+    (the historical static-``n`` layout).  All closed forms and both event
+    engines treat padded clients as structurally absent, bitwise.
+    """
 
     p: jax.Array  # [n] routing probabilities (positive; need not sum to 1 for raw partials)
     mu_c: jax.Array  # [n] computation rates (single-server queues)
     mu_d: jax.Array  # [n] downlink rates (infinite-server queues)
     mu_u: jax.Array  # [n] uplink rates (infinite-server queues)
     mu_cs: Optional[jax.Array] = None  # scalar CS processing rate (None = infinite)
+    n_active: Optional[jax.Array] = None  # traced real-client count (None = n)
 
     @property
     def n(self) -> int:
         return self.p.shape[0]
+
+    @property
+    def active_count(self):
+        """Real-client count: the traced ``n_active`` if padded, else the
+        static array length ``n``."""
+        return self.n if self.n_active is None else self.n_active
+
+    @property
+    def active_mask(self) -> Optional[jax.Array]:
+        """``[n] bool`` mask of real clients, or ``None`` when unpadded."""
+        if self.n_active is None:
+            return None
+        return jnp.arange(self.n) < self.n_active
 
     @property
     def log_rho(self) -> jax.Array:
@@ -91,10 +113,42 @@ class NetworkParams(NamedTuple):
 
     @property
     def log_gamma_total(self) -> jax.Array:
-        return jnp.log(jnp.sum(self.gamma))
+        # sequential sum: padded clients (gamma = 0) must be bitwise
+        # invisible, which XLA's reassociating reduce does not guarantee
+        return jnp.log(seqsum(self.gamma))
 
     def with_cs(self, mu_cs) -> "NetworkParams":
         return self._replace(mu_cs=jnp.asarray(mu_cs, dtype=self.p.dtype))
+
+
+def pad_network(params: NetworkParams, n_max: int) -> NetworkParams:
+    """Pad a network to ``n_max`` client rows (the traced-``n`` convention).
+
+    Padded rows carry zero routing mass and unit service rates, and
+    ``n_active`` records the real population — so padded stations are
+    load-0/visit-0 in the Buzen DP (the geometric factor of a load-0
+    station is the convolution identity), padded clients receive zero
+    dispatch probability in the event engines, and every downstream
+    quantity is **bitwise** what the unpadded network produces (asserted in
+    ``tests/test_padded_n.py``).  Mirrors the ``m_max`` convention of
+    ``repro.core.batched``: one compiled program covers a whole
+    mixed-population scenario batch.
+    """
+    n = params.n
+    if n_max < n:
+        raise ValueError(f"n_max={n_max} is smaller than the network's "
+                         f"population n={n}")
+    n_act = params.active_count  # re-padding keeps the original real count
+
+    def pad(x, fill):
+        x = jnp.asarray(x)
+        return jnp.concatenate(
+            [x, jnp.full((n_max - n,), fill, dtype=x.dtype)])
+
+    return params._replace(
+        p=pad(params.p, 0.0), mu_c=pad(params.mu_c, 1.0),
+        mu_d=pad(params.mu_d, 1.0), mu_u=pad(params.mu_u, 1.0),
+        n_active=jnp.asarray(n_act, jnp.int64))
 
 
 def _log_conv(log_a: jax.Array, log_b: jax.Array) -> jax.Array:
@@ -114,14 +168,23 @@ def _log_conv(log_a: jax.Array, log_b: jax.Array) -> jax.Array:
 
 
 def _geometric_series(log_rho: jax.Array, m_max: int) -> jax.Array:
-    """``[k * log_rho for k in 0..m_max]`` — generating series of a single-server station."""
-    return jnp.arange(m_max + 1) * log_rho
+    """``[k * log_rho for k in 0..m_max]`` — generating series of a single-server station.
+
+    The ``k = 0`` term is pinned to exactly ``0`` so a load-0 station
+    (``log_rho = -inf``, e.g. a padded client under the traced-``n``
+    convention) yields ``[0, -inf, ...]`` — the log-convolution identity —
+    instead of a ``0 * inf`` NaN; for finite loads the ``where`` is
+    bitwise-neutral.
+    """
+    k = jnp.arange(m_max + 1)
+    return jnp.where(k == 0, 0.0, k * log_rho)
 
 
 def _poisson_series(log_load: jax.Array, m_max: int) -> jax.Array:
-    """``[k log_load - log k! for k in 0..m_max]`` — series of an IS station."""
+    """``[k log_load - log k! for k in 0..m_max]`` — series of an IS station
+    (``k = 0`` pinned as in :func:`_geometric_series`)."""
     k = jnp.arange(m_max + 1)
-    return k * log_load - gammaln(k + 1.0)
+    return jnp.where(k == 0, 0.0, k * log_load - gammaln(k + 1.0))
 
 
 def log_normalizing_constants(
@@ -182,7 +245,7 @@ def log_normalizing_constants(
         # sums out to a geometric factor with load sum_j p_j / mu_cs (= 1/mu_cs
         # on the simplex).  Keeping the explicit sum_j p_j lets raw partials
         # d/dp_j flow through the CS station, matching Theorem 7's CS terms.
-        log_load_cs = jnp.log(jnp.sum(params.p)) - jnp.log(params.mu_cs)
+        log_load_cs = jnp.log(seqsum(params.p)) - jnp.log(params.mu_cs)
         logZ = _log_conv(logZ, _geometric_series(log_load_cs, m_max))
     return logZ
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from . import numerics  # noqa: F401
 from .buzen import NetworkParams, log_normalizing_constants
 from .complexity import LearningConstants, round_complexity, wallclock_time
+from .numerics import seqsum
 
 
 class PowerProfile(NamedTuple):
@@ -44,8 +45,13 @@ def per_task_energy(params: NetworkParams, power: PowerProfile) -> jax.Array:
 
 
 def energy_per_round(params: NetworkParams, power: PowerProfile) -> jax.Array:
-    """``E[P(0)] / lambda`` — mean energy per round (Prop. 5 / Prop. 9)."""
-    e = jnp.sum(params.p / jnp.sum(params.p) * per_task_energy(params, power))
+    """``E[P(0)] / lambda`` — mean energy per round (Prop. 5 / Prop. 9).
+
+    Client-axis sums are sequential (``numerics.seqsum``) so padded rows
+    (zero routing, zero power) are bitwise invisible — part of the
+    traced-``n`` contract.
+    """
+    e = seqsum(params.p / seqsum(params.p) * per_task_energy(params, power))
     if power.P_cs is not None:
         if params.mu_cs is None:
             raise ValueError("P_cs given but params.mu_cs is None")

@@ -56,6 +56,7 @@ import numpy as np
 from . import numerics  # noqa: F401  (enables x64)
 from ..scenario.laws import get_law
 from .buzen import NetworkParams
+from .numerics import seqcumsum, seqsum
 
 # task phases
 INACTIVE = -1
@@ -143,6 +144,28 @@ def _draw(key: jax.Array, rate: jax.Array, distribution: str,
     return get_law(distribution).device_draw(key, rate, shape)
 
 
+def _route_client(p: jax.Array, key: jax.Array, n_act) -> jax.Array:
+    """Dispatch-routing draw ``C ~ p/sum(p)`` by inverse-CDF on one uniform.
+
+    Deliberately *not* ``jax.random.categorical``: the Gumbel trick draws
+    noise of the logits' shape, so the sampled client would depend on the
+    static padded length ``n_max``.  A single scalar uniform against the
+    routing prefix sums consumes shape-independent randomness, making
+    event trajectories **bitwise invariant** to trailing zero-mass padding
+    — the traced-``n`` analogue of the ``m_max`` slot-padding contract.
+    The prefix is the strictly-sequential :func:`numerics.seqcumsum`
+    (``jnp.cumsum`` may reassociate with length on parallel backends), its
+    last element doubles as the padding-stable total mass (no separate
+    normalization pass), padded entries repeat that total so
+    ``searchsorted`` never lands on them, and the clip covers the
+    measure-zero ``u * total >= total`` edge.
+    """
+    prefix = seqcumsum(p)
+    u = jax.random.uniform(key, dtype=p.dtype) * prefix[-1]
+    idx = jnp.searchsorted(prefix, u, side="right")
+    return jnp.minimum(idx, n_act - 1).astype(jnp.int32)
+
+
 def init_state(params: NetworkParams, m, key: jax.Array, *,
                m_max: Optional[int] = None,
                distribution: str = "exponential",
@@ -152,13 +175,17 @@ def init_state(params: NetworkParams, m, key: jax.Array, *,
 
     ``m`` may be a traced scalar; ``m_max`` (static) sizes the task table —
     slots ``>= m`` are inactive, following the padded conventions of
-    ``repro.core.batched``.
+    ``repro.core.batched``.  Under the traced-``n`` convention
+    (``params.n_active`` set, see :func:`repro.core.buzen.pad_network`) the
+    statistics arrays are sized by the static ``n_max = params.n`` while
+    the initial dispatch draws only real clients — bitwise the same draws
+    as the unpadded network.
     """
     n = params.n
     if m_max is None:
         m_max = int(m)
     key, k_cli, k_svc = jax.random.split(key, 3)
-    clients = jax.random.randint(k_cli, (m_max,), 0, n)
+    clients = jax.random.randint(k_cli, (m_max,), 0, params.active_count)
     active = jnp.arange(m_max) < m
     svc = _draw(k_svc, params.mu_d[clients], distribution, (m_max,))
     phase0 = jnp.where(active, DOWN, INACTIVE).astype(jnp.int32)
@@ -233,7 +260,6 @@ def step_event(params: NetworkParams, state: EventState, *,
     """
     n = params.n
     m_max = state.phase.shape[0]
-    p_norm = params.p / jnp.sum(params.p)
     has_cs = params.mu_cs is not None
 
     j = jnp.argmin(state.finish)
@@ -253,9 +279,11 @@ def step_event(params: NetworkParams, state: EventState, *,
     occ_int = state.occ_int + dt_eff * state.occ
     energy = state.energy
     if power is not None:
-        pwr = (jnp.sum(power.P_c * state.serving)
-               + jnp.sum(power.P_u * state.occ[2 * n:3 * n])
-               + jnp.sum(power.P_d * state.occ[:n]))
+        # one sequential sum over the fused per-client power terms: the
+        # energy statistic is on the padded-n bitwise contract
+        pwr = seqsum(power.P_c * state.serving
+                     + power.P_u * state.occ[2 * n:3 * n]
+                     + power.P_d * state.occ[:n])
         if power.P_cs is not None:
             pwr = pwr + power.P_cs * state.cs_busy
         energy = energy + dt_eff * pwr
@@ -276,8 +304,7 @@ def step_event(params: NetworkParams, state: EventState, *,
     new_round = state.round + jnp.where(is_update, 1, 0).astype(jnp.int32)
 
     # update -> immediate re-dispatch of a fresh task into the freed slot
-    c_new = jax.random.categorical(k_disp_cli, jnp.log(p_norm)).astype(
-        jnp.int32)
+    c_new = _route_client(params.p, k_disp_cli, params.active_count)
     svc_up = _draw(k_up, params.mu_u[c], distribution)
     svc_down = _draw(k_disp_svc, params.mu_d[c_new], distribution)
 
@@ -444,6 +471,26 @@ def finalize_stats(st: EventState) -> EventStats:
         energy=st.energy,
         mean_queue_counts=st.occ_int / jnp.maximum(horizon, 1e-12),
     )
+
+
+def unpad_stats(stats: EventStats, n: int) -> EventStats:
+    """Strip the traced-``n`` padding from an :class:`EventStats`.
+
+    Per-client arrays are truncated to the real population ``n`` and the
+    ``[3 n_max + 1]`` occupancy vector is re-packed segment-wise into the
+    unpadded ``[3n + 1]`` station layout (down / comp / up / CS).  Works on
+    any number of leading lane axes.  Because trajectories are bitwise
+    invariant to the padding (see :func:`_route_client`), the result equals
+    the unpadded run's statistics exactly.
+    """
+    nm = (stats.mean_queue_counts.shape[-1] - 1) // 3
+    occ = stats.mean_queue_counts
+    return stats._replace(
+        mean_delay=stats.mean_delay[..., :n],
+        delay_counts=stats.delay_counts[..., :n],
+        mean_queue_counts=jnp.concatenate(
+            [occ[..., 0:n], occ[..., nm:nm + n],
+             occ[..., 2 * nm:2 * nm + n], occ[..., 3 * nm:]], axis=-1))
 
 
 @functools.partial(jax.jit, static_argnames=(

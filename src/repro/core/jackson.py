@@ -11,7 +11,11 @@ Implements, in log space:
 
 Population arguments ``m`` are static Python ints; everything else is
 traceable, so all quantities may also be differentiated with ``jax.grad``
-(used in tests to cross-validate the closed-form Jacobians).
+(used in tests to cross-validate the closed-form Jacobians).  The padded
+traced-``m`` (and traced-``n``) forms of every quantity here — including
+the second moments and the delay Jacobian — live in ``repro.core.batched``
+(``*_padded``); this module stays the static reference they are
+cross-checked against.
 
 Conventions: ``Z[k] = 0`` for ``k < 0``; the embedded chain ``X_k`` lives at
 population ``m - 1`` (Prop. 1), hence most ratios are against ``Z_{n,m-1}``.

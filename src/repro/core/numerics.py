@@ -21,3 +21,46 @@ def safe_log(x):
     import jax.numpy as jnp
 
     return jnp.log(jnp.maximum(x, 1e-300))
+
+
+def seqsum(x, axis: int = -1):
+    """Strictly left-to-right float sum along ``axis`` (a ``lax.scan``).
+
+    ``jnp.sum`` lowers to an XLA reduce whose association may change with
+    the array *length* (vectorized/unrolled reduction trees), so summing a
+    zero-padded array is not guaranteed to reproduce the unpadded sum
+    bitwise.  A sequential scan is: appended zeros satisfy ``carry + 0 ==
+    carry`` exactly and the real elements keep their left-to-right
+    association regardless of padding.  Used for every client-axis
+    reduction on the padded traced-``n`` bitwise contract
+    (``pad_network`` / ``tests/test_padded_n.py``); differentiable and
+    vmap-compatible like any scan.
+    """
+    import jax.numpy as jnp
+
+    x = jnp.moveaxis(jnp.asarray(x), axis, 0)
+    carry, _ = jax.lax.scan(lambda c, v: (c + v, None),
+                            jnp.zeros(x.shape[1:], x.dtype), x)
+    return carry
+
+
+def seqcumsum(x, axis: int = -1):
+    """Strictly left-to-right inclusive prefix sum along ``axis``.
+
+    The prefix analogue of :func:`seqsum`: ``jnp.cumsum`` may lower to a
+    parallel (tree) scan whose association changes with array length, so a
+    zero-padded prefix is not guaranteed bitwise equal to the unpadded one
+    on every backend.  A sequential scan is — real entries keep their
+    left-to-right association and trailing zeros repeat the running total
+    exactly (so the last element doubles as a padding-stable ``seqsum``).
+    """
+    import jax.numpy as jnp
+
+    x = jnp.moveaxis(jnp.asarray(x), axis, 0)
+
+    def step(c, v):
+        c = c + v
+        return c, c
+
+    _, out = jax.lax.scan(step, jnp.zeros(x.shape[1:], x.dtype), x)
+    return jnp.moveaxis(out, 0, axis)

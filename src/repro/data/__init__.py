@@ -1,9 +1,35 @@
+from .emnist import emnist_cache_path, load_emnist
 from .partition import dirichlet_partition, iid_partition, pathological_partition
 from .synthetic import (make_language_modeling_dataset,
                         make_synthetic_image_dataset, train_test_split)
 
+# dataset builders by DataSpec name: (num_classes, samples_per_class, seed)
+# -> ImageDataset.  Registered beside the partitioners so a Scenario's
+# DataSpec can name any of them declaratively.
+DATASETS = {
+    "synthetic": lambda num_classes, samples_per_class, seed:
+        make_synthetic_image_dataset(num_classes=num_classes,
+                                     samples_per_class=samples_per_class,
+                                     seed=seed),
+    "emnist": lambda num_classes, samples_per_class, seed:
+        load_emnist(num_classes=num_classes,
+                    samples_per_class=samples_per_class, seed=seed),
+}
+
+
+def get_dataset(name: str, *, num_classes: int, samples_per_class: int,
+                seed: int):
+    """Build a registered dataset; unknown names list the options."""
+    builder = DATASETS.get(name)
+    if builder is None:
+        raise ValueError(f"unknown dataset: {name!r}; registered datasets: "
+                         f"{sorted(DATASETS)}")
+    return builder(num_classes, samples_per_class, seed)
+
+
 __all__ = [
     "make_synthetic_image_dataset", "make_language_modeling_dataset",
-    "train_test_split",
+    "train_test_split", "load_emnist", "emnist_cache_path",
+    "DATASETS", "get_dataset",
     "dirichlet_partition", "iid_partition", "pathological_partition",
 ]

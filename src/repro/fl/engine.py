@@ -54,6 +54,7 @@ import numpy as np
 from ..core import jackson
 from ..core import events
 from ..core.buzen import NetworkParams
+from ..core.numerics import seqsum
 from ..sim.backend import resolve_backend
 from .models import Model, accuracy, cross_entropy_loss
 
@@ -78,18 +79,31 @@ class PaddedClientData(NamedTuple):
     sizes: jax.Array  # [n] int32
 
 
-def pad_client_data(clients) -> PaddedClientData:
-    """Stack per-client ``(x_i, y_i)`` datasets into padded device arrays."""
+def pad_client_data(clients, n_total: Optional[int] = None
+                    ) -> PaddedClientData:
+    """Stack per-client ``(x_i, y_i)`` datasets into padded device arrays.
+
+    ``n_total`` (the traced-``n`` convention: the network's static
+    ``n_max``) appends empty placeholder rows beyond the real clients —
+    padded clients carry zero routing mass, are never dispatched, and so
+    never have a minibatch sampled from their (single zero) row.
+    """
     sizes = np.array([len(y) for _, y in clients], dtype=np.int32)
     if (sizes <= 0).any():
         raise ValueError("every client needs at least one sample")
+    n_rows = len(clients) if n_total is None else int(n_total)
+    if n_rows < len(clients):
+        raise ValueError(f"n_total={n_rows} is smaller than the "
+                         f"{len(clients)} provided clients")
     s_max = int(sizes.max())
     x0 = np.asarray(clients[0][0])
-    xs = np.zeros((len(clients), s_max) + x0.shape[1:], dtype=np.float32)
-    ys = np.zeros((len(clients), s_max), dtype=np.int32)
+    xs = np.zeros((n_rows, s_max) + x0.shape[1:], dtype=np.float32)
+    ys = np.zeros((n_rows, s_max), dtype=np.int32)
     for i, (x, y) in enumerate(clients):
         xs[i, :len(y)] = x
         ys[i, :len(y)] = y
+    sizes = np.concatenate(
+        [sizes, np.ones(n_rows - len(clients), dtype=np.int32)])
     return PaddedClientData(x=jnp.asarray(xs), y=jnp.asarray(ys),
                             sizes=jnp.asarray(sizes))
 
@@ -147,8 +161,17 @@ class DeviceTrainer:
         # sim_interpret overrides the pallas kernel's compile/interpret auto
         self.sim_backend = sim_backend
         self.sim_interpret = sim_interpret
-        self.n = net.n
-        self.data = pad_client_data(clients)
+        self.n = net.n              # static row count (n_max when padded)
+        # real population: the bias correction eta/(n p_C) and the reported
+        # per-client statistics use the *active* count under the traced-n
+        # convention (padded clients contribute no updates)
+        self.n_act = (net.n if net.n_active is None
+                      else int(np.asarray(net.n_active)))
+        if len(clients) not in (self.n, self.n_act):
+            raise ValueError(
+                f"{len(clients)} clients for a network with "
+                f"{self.n_act} active of {self.n} rows")
+        self.data = pad_client_data(clients, n_total=self.n)
         self.has_test = test_data is not None
         if self.has_test:
             x, y = test_data
@@ -265,6 +288,7 @@ class DeviceTrainer:
                backend: str, interp: Optional[bool]):
         cfg = self.cfg
         n = self.n
+        n_act = self.n_act
         data = self.data
         # flat views: one row-gather per minibatch instead of slicing the
         # whole client dataset out first
@@ -317,7 +341,8 @@ class DeviceTrainer:
 
         def single(params0, p, m, eta, key_sim, key_data):
             net = net0._replace(p=p)
-            p_norm = p / jnp.sum(p)
+            # sequential sum: bitwise invariant to padded zero-mass clients
+            p_norm = p / seqsum(p)
             st = events.init_state(net, m, key_sim, m_max=m_max,
                                    distribution=dist, t_cap=horizon)
             snaps = jax.tree_util.tree_map(
@@ -346,7 +371,9 @@ class DeviceTrainer:
                 idx = (c * s_max
                        + jax.random.randint(kb, (batch,), 0, data.sizes[c]))
                 xb, yb = data_x_flat[idx], data_y_flat[idx]
-                scale = eta / (n * p_norm[c])
+                # bias correction over the REAL population (Algorithm 2):
+                # padded rows have p = 0 and are never drawn as C_k
+                scale = eta / (n_act * p_norm[c])
                 g = grad_fn(stale, xb, yb)
                 new_params = apply_update(params, g, scale)
                 new_params = jax.tree_util.tree_map(
@@ -513,7 +540,7 @@ class DeviceTrainer:
                 times = losses = accs = upds = []
             logs.append(TrainLog(
                 times=times, accuracies=accs, losses=losses, updates=upds,
-                mean_delay=np.asarray(dlog.mean_delay),
+                mean_delay=np.asarray(dlog.mean_delay)[:self.n_act],
                 throughput=float(dlog.throughput),
                 energy=float(dlog.energy)))
         return logs, final_params

@@ -97,7 +97,12 @@ def buzen_pallas_batched(log_rho: jax.Array, log_gamma_total: jax.Array,
     from jax.scipy.special import gammaln
     init_rows = (k[None, :] * log_gamma_total[:, None].astype(jnp.float32)
                  - gammaln(k + 1.0)[None, :]).astype(jnp.float32)
-    rho32 = log_rho.astype(jnp.float32)
+    # load-0 stations (padded clients under the traced-n convention) arrive
+    # as log_rho = -inf; clamp to the finite mask value so the kernel's
+    # k * log_rho products stay NaN-free — the k >= 1 terms then underflow
+    # to exactly 0 in the row logsumexp, making the station a convolution
+    # identity, matching the jnp reference's masked geometric series
+    rho32 = jnp.maximum(log_rho.astype(jnp.float32), NEG_INF)
 
     kernel = functools.partial(_buzen_kernel, n_stations=n, m_pad=m_pad)
     return pl.pallas_call(
@@ -158,7 +163,12 @@ def _buzen_log_Z_bwd(m_max, residuals, g):
     _, vjp = jax.vjp(
         lambda lr, lg: _reference_log_Z(lr, lg, m_max), log_rho,
         log_gamma_total)
-    return vjp(g.astype(log_rho.dtype))
+    g_lr, g_lg = vjp(g.astype(log_rho.dtype))
+    # padded (load-0) stations enter as log_rho = -inf: the forward value
+    # does not depend on them (their geometric factor is the convolution
+    # identity), so pin their partials to exactly 0 rather than whatever
+    # the -inf arithmetic of the masked series propagated
+    return jnp.where(jnp.isfinite(log_rho), g_lr, 0.0), g_lg
 
 
 buzen_log_Z_batched.defvjp(_buzen_log_Z_fwd, _buzen_log_Z_bwd)

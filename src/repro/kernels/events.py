@@ -44,6 +44,7 @@ from jax.experimental import pallas as pl
 
 from ..core import events as E
 from ..core.buzen import NetworkParams
+from ..core.numerics import seqsum
 from ..scenario.laws import get_law
 
 _BIG_SEQ = E._BIG_SEQ
@@ -213,16 +214,19 @@ def event_step_tables(finish, phase, client, seq, disp_round, mu_c, mu_u,
 def _lane_randomness(params: NetworkParams, state, distribution: str,
                      has_cs: bool):
     """Per-lane key split + outside draws, bit-matching the reference
-    engine's stream (same split arity, same key roles)."""
+    engine's stream (same split arity, same key roles — including the
+    padding-invariant inverse-CDF routing draw of
+    ``repro.core.events._route_client``)."""
     law = get_law(distribution)
     dtype = state.finish.dtype
+    K, n = params.p.shape
+    n_acts = (params.n_active if params.n_active is not None
+              else jnp.full((K,), n))
 
-    def one(key, p_row, mu_d_row, mu_cs_i):
+    def one(key, p_row, mu_d_row, mu_cs_i, n_act):
         key, k_up, k_disp_cli, k_disp_svc, k_comp, k_cs = jax.random.split(
             key, 6)
-        p_norm = p_row / jnp.sum(p_row)
-        c_new = jax.random.categorical(
-            k_disp_cli, jnp.log(p_norm)).astype(jnp.int32)
+        c_new = E._route_client(p_row, k_disp_cli, n_act)
         one_rate = jnp.ones((), dtype)
         e_up = law.device_draw(k_up, one_rate)
         e_comp = law.device_draw(k_comp, one_rate)
@@ -233,7 +237,7 @@ def _lane_randomness(params: NetworkParams, state, distribution: str,
         return key, c_new, fscal
 
     mu_cs = params.mu_cs if has_cs else jnp.zeros_like(params.p[..., 0])
-    return jax.vmap(one)(state.key, params.p, params.mu_d, mu_cs)
+    return jax.vmap(one)(state.key, params.p, params.mu_d, mu_cs, n_acts)
 
 
 def step_event_pallas(params: NetworkParams, state, *,
@@ -279,9 +283,9 @@ def step_event_pallas(params: NetworkParams, state, *,
         occ_int = st.occ_int + dt_eff * st.occ
         energy = st.energy
         if pw is not None:
-            p_w = (jnp.sum(pw.P_c * st.serving)
-                   + jnp.sum(pw.P_u * st.occ[2 * n:3 * n])
-                   + jnp.sum(pw.P_d * st.occ[:n]))
+            p_w = seqsum(pw.P_c * st.serving
+                         + pw.P_u * st.occ[2 * n:3 * n]
+                         + pw.P_d * st.occ[:n])
             if pw.P_cs is not None:
                 p_w = p_w + pw.P_cs * st.cs_busy
             energy = energy + dt_eff * p_w

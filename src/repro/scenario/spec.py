@@ -443,16 +443,20 @@ class SimSpec:
         return cls(**d)
 
 
-_DATASETS = ("synthetic",)
-
-
 @_pytree_dataclass(data_fields=())
 @dataclasses.dataclass(frozen=True, eq=False)
 class DataSpec:
     """Declarative training data: a dataset builder plus an ``@partition``
     registry key (and its dirichlet ``alpha``), so
     ``ScenarioSuite.run(mode="train")`` can build the per-client datasets
-    from the spec instead of requiring an explicit ``clients=``."""
+    from the spec instead of requiring an explicit ``clients=``.
+
+    Registered datasets (``repro.data.DATASETS``): ``"synthetic"`` (the
+    procedural class-glyph images) and ``"emnist"`` — a download-free
+    EMNIST-style loader that reads a local ``.npz`` cache
+    (``$REPRO_EMNIST_PATH`` / ``~/.cache/repro/emnist.npz``) when present
+    and otherwise falls back to a deterministic synthetic stand-in with
+    the same 28x28 tensor format (``repro.data.emnist``)."""
 
     dataset: str = "synthetic"        # dataset builder name
     partition: str = "iid"            # @partition registry key
@@ -465,11 +469,12 @@ class DataSpec:
     def __post_init__(self):
         if _SKIP_VALIDATION:
             return
-        if self.dataset not in _DATASETS:
-            raise ValueError(f"unknown dataset: {self.dataset!r}; "
-                             f"registered datasets: {sorted(_DATASETS)}")
-        from .. import data  # noqa: F401  (registers the partitioners)
+        from .. import data  # registers the partitioners + dataset builders
 
+        if self.dataset not in data.DATASETS:
+            raise ValueError(f"unknown dataset: {self.dataset!r}; "
+                             f"registered datasets: "
+                             f"{sorted(data.DATASETS)}")
         PARTITIONS.get(self.partition)
         object.__setattr__(self, "alpha", float(self.alpha))
         for f in ("num_classes", "samples_per_class", "seed"):
@@ -481,10 +486,10 @@ class DataSpec:
         ``clients[i] = (x_i, y_i)`` per the registered partitioner."""
         import inspect
 
-        from ..data import make_synthetic_image_dataset, train_test_split
+        from ..data import get_dataset, train_test_split
 
-        full = make_synthetic_image_dataset(
-            num_classes=self.num_classes,
+        full = get_dataset(
+            self.dataset, num_classes=self.num_classes,
             samples_per_class=self.samples_per_class, seed=self.seed)
         ds, test = train_test_split(full, self.test_fraction,
                                     seed=self.seed + 1)

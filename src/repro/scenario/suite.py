@@ -34,7 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.buzen import NetworkParams, log_normalizing_constants
+from ..core.buzen import (NetworkParams, log_normalizing_constants,
+                          pad_network)
+from ..core.events import unpad_stats
 from ..core.complexity import LearningConstants, wallclock_time
 from ..core.energy import (PowerProfile, energy_optimal_routing,
                            minimal_energy)
@@ -363,8 +365,19 @@ class ScenarioSuite:
     # -- analyze: closed forms, one jit per structure bucket -----------------
 
     def _run_analyze(self) -> SuiteResult:
+        """Closed forms for every scenario, bucketed by static structure.
+
+        Populations are padded to the suite-wide ``n_max`` under the
+        traced-``n`` convention (``repro.core.buzen.pad_network``), so a
+        mixed-population suite plans into buckets keyed only by
+        ``(CS buffer, power structure)`` — one compiled program where the
+        pre-padding planner compiled one per distinct ``n`` — and the
+        padded rows reproduce the unpadded per-scenario closed forms
+        bitwise (``tests/test_padded_n.py``).
+        """
         strategies = self.resolve()
         names = list(self.scenarios)
+        n_max = max(s.n for s in self.scenarios.values())
         entries: dict = {}
         cache_hits = 0
         buckets: dict = {}
@@ -376,32 +389,35 @@ class ScenarioSuite:
                 entries[name] = hit
                 cache_hits += 1
                 continue
-            key = (scn.n, scn.network.mu_cs is not None,
-                   _power_sig(scn))
+            key = (scn.network.mu_cs is not None, _power_sig(scn))
             buckets.setdefault(key, []).append(name)
 
         programs = 0
-        for (n, has_cs, power_sig), members in buckets.items():
+        for (has_cs, power_sig), members in buckets.items():
             has_power = power_sig is not None
             m_max = max(strategies[name][1] for name in members)
-            prm = _stack_params([self.scenarios[n_].params(strategies[n_][0])
-                                 for n_ in members])
+            prm = _stack_params(
+                [pad_network(self.scenarios[n_].params(strategies[n_][0]),
+                             n_max) for n_ in members])
             consts = _stack_consts([self.scenarios[n_].consts
                                     for n_ in members])
-            power = (_stack_power([self.scenarios[n_].power()
-                                   for n_ in members]) if has_power else None)
+            power = (_stack_power([_pad_power(self.scenarios[n_].power(),
+                                              n_max) for n_ in members])
+                     if has_power else None)
             m_vec = jnp.asarray([strategies[n_][1] for n_ in members],
                                 jnp.int64)
             rho = jnp.asarray([self.scenarios[n_].objective.rho
                                for n_ in members])
-            sig = ("analyze", n, has_cs, power_sig, m_max)
+            sig = ("analyze", n_max, has_cs, power_sig, m_max)
             fn = self._jit_cache.get(sig)
             if fn is None:
                 fn = self._jit_cache[sig] = _build_analyze(m_max, has_power)
                 programs += 1
             out = fn(prm, m_vec, consts, power, rho)
             for i, name in enumerate(members):
+                n_i = self.scenarios[name].n
                 row = {k: np.asarray(v[i]) for k, v in out.items()}
+                row["delays"] = row["delays"][:n_i]
                 p, m = strategies[name]
                 obj_name = self.scenarios[name].objective.name
                 # None (not a mislabeled tau) for objectives analyze cannot
@@ -437,12 +453,20 @@ class ScenarioSuite:
         bucketed by structure AND backend, so pinned scenarios coexist.
         ``"reference"`` and ``"batched"`` are bitwise identical on alike
         lanes (``tests/test_sim_backends.py``).
+
+        Mixed populations share one program: lanes are padded to the
+        suite-wide ``n_max`` (clients ``>= n`` carry zero routing mass and
+        never receive tasks), and because trajectories are bitwise
+        invariant to that padding (``events._route_client``), each lane's
+        statistics — unpadded before they are returned/cached — equal the
+        per-scenario unpadded run at the same table size exactly.
         """
         from ..sim.backend import resolve_backend
         from ..sim.batched_events import build_lanes_fn
 
         strategies = self.resolve()
         names = list(self.scenarios)
+        n_max = max(s.n for s in self.scenarios.values())
         entries: dict = {}
         cache_hits = 0
         buckets: dict = {}
@@ -451,13 +475,13 @@ class ScenarioSuite:
             bk = resolve_backend(backend if backend is not None
                                  else scn.sim_backend)
             interp = None if scn.sim is None else scn.sim.interpret
-            key = (scn.n, scn.network.law, scn.network.mu_cs is not None,
+            key = (scn.network.law, scn.network.mu_cs is not None,
                    _power_sig(scn), bk, interp)
             buckets.setdefault(key, []).append(name)
 
         programs = 0
         S = len(self.seeds)
-        for (n, law, has_cs, power_sig, bk, interp), members in \
+        for (law, has_cs, power_sig, bk, interp), members in \
                 buckets.items():
             has_power = power_sig is not None
             # the table size comes from ALL bucket members (trajectories
@@ -486,9 +510,11 @@ class ScenarioSuite:
             if not todo:
                 continue
             lane_params = _stack_params(
-                [self.scenarios[n_].params(strategies[n_][0])
+                [pad_network(self.scenarios[n_].params(strategies[n_][0]),
+                             n_max)
                  for n_, _ in todo for _ in self.seeds])
-            power = (_stack_power([self.scenarios[n_].power()
+            power = (_stack_power([_pad_power(self.scenarios[n_].power(),
+                                              n_max)
                                    for n_, _ in todo for _ in self.seeds])
                      if has_power else None)
             m_vec = jnp.asarray([strategies[n_][1]
@@ -496,7 +522,7 @@ class ScenarioSuite:
                                 jnp.int32)
             keys = jnp.stack([jax.random.PRNGKey(s)
                               for _ in todo for s in self.seeds])
-            sig = ("simulate", n, law, has_cs, power_sig, mx,
+            sig = ("simulate", n_max, law, has_cs, power_sig, mx,
                    int(num_updates), int(warmup), bk, interp)
             fn = self._jit_cache.get(sig)
             if fn is None:
@@ -506,8 +532,10 @@ class ScenarioSuite:
                 programs += 1
             stats = fn(lane_params, m_vec, keys, power)
             for i, (name, ckey) in enumerate(todo):
+                n_i = self.scenarios[name].n
                 entries[name] = [
-                    jax.tree_util.tree_map(lambda a: a[i * S + j], stats)
+                    unpad_stats(jax.tree_util.tree_map(
+                        lambda a: a[i * S + j], stats), n_i)
                     for j in range(S)]
                 self._result_cache[ckey] = entries[name]
         return SuiteResult(mode="simulate", entries=entries, seeds=self.seeds,
@@ -637,6 +665,18 @@ def _power_sig(scn) -> Optional[bool]:
 def _stack_params(params_list) -> NetworkParams:
     """Stack per-lane NetworkParams leaf-wise ([L, n] / [L] arrays)."""
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def _pad_power(power: PowerProfile, n_max: int) -> PowerProfile:
+    """Pad a power profile to ``n_max`` client rows with zero powers —
+    padded clients are never busy, so they contribute exactly 0 energy."""
+    def pad(x):
+        x = jnp.asarray(x)
+        return jnp.concatenate(
+            [x, jnp.zeros((n_max - x.shape[0],), dtype=x.dtype)])
+
+    return power._replace(P_c=pad(power.P_c), P_u=pad(power.P_u),
+                          P_d=pad(power.P_d))
 
 
 def _stack_consts(consts_list) -> LearningConstants:

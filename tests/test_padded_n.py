@@ -1,0 +1,457 @@
+"""The padded traced-``n`` convention (mirror of the ``m_max`` contract).
+
+Contracts under test:
+
+  * :func:`repro.core.buzen.pad_network` pads a network to ``n_max`` rows
+    (zero routing mass, unit rates, ``n_active`` = real count) such that
+    every downstream quantity is **bitwise** what the unpadded network
+    produces:
+
+      - closed forms (Buzen DP, throughput, delays, K_eps, tau, energy,
+        second moments, delay Jacobian) — property-tested over random
+        ``(n, n_max, m, m_max)`` and both CS variants;
+      - event trajectories — the routing draw is a shape-independent
+        inverse-CDF (``events._route_client``), so ``simulate_stats`` on
+        the padded network, unpadded via ``events.unpad_stats``, equals
+        the unpadded run exactly, for every registered timing law;
+      - the fused trainer (``repro.fl.engine``): the ``eta/(n p_C)`` bias
+        correction uses the real population and padded clients contribute
+        no updates.
+
+  * ``ScenarioSuite`` buckets mixed-population scenarios by the shared
+    ``(n_max, m_max)`` padding — ONE compiled program per structure where
+    the pre-padding planner compiled one per distinct ``n`` — and its
+    entries reproduce the per-scenario unpadded runs.
+
+  * The ``"emnist"`` dataset rides ``DataSpec`` beside ``"synthetic"``
+    (download-free: local cache or deterministic fallback).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (LearningConstants, NetworkParams, PowerProfile,
+                        pad_network, unpad_stats)
+from repro.core import events as E
+from repro.core import jackson
+from repro.core.batched import (delay_jacobian_padded,
+                                energy_complexity_padded,
+                                expected_relative_delay_padded,
+                                round_complexity_padded,
+                                second_moment_matrix_padded,
+                                throughput_padded)
+from repro.core.buzen import log_normalizing_constants
+from repro.scenario.laws import law_names
+
+CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
+
+
+def params_from(seed, n, with_cs=False):
+    rng = np.random.default_rng(seed)
+    params = NetworkParams(
+        p=jnp.asarray(rng.dirichlet(np.ones(n) * 2.0)),
+        mu_c=jnp.asarray(rng.uniform(0.3, 5.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.3, 5.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.3, 5.0, n)))
+    return params.with_cs(rng.uniform(0.5, 4.0)) if with_cs else params
+
+
+def power_from(seed, n):
+    rng = np.random.default_rng(seed + 100)
+    return PowerProfile(P_c=jnp.asarray(rng.uniform(1, 5, n)),
+                        P_u=jnp.asarray(rng.uniform(0.5, 2, n)),
+                        P_d=jnp.asarray(rng.uniform(0.2, 1, n)))
+
+
+# ---------------------------------------------------------------------------
+# pad_network basics
+# ---------------------------------------------------------------------------
+
+def test_pad_network_layout_and_validation():
+    params = params_from(0, 3, with_cs=True)
+    padded = pad_network(params, 5)
+    assert padded.n == 5 and int(padded.n_active) == 3
+    assert params.n_active is None and params.active_mask is None
+    np.testing.assert_array_equal(np.asarray(padded.p[3:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(padded.mu_c[3:]), 1.0)
+    np.testing.assert_array_equal(np.asarray(padded.p[:3]),
+                                  np.asarray(params.p))
+    np.testing.assert_array_equal(np.asarray(padded.active_mask),
+                                  [True, True, True, False, False])
+    # re-padding keeps the original real count
+    again = pad_network(padded, 7)
+    assert again.n == 7 and int(again.n_active) == 3
+    with pytest.raises(ValueError, match="n_max=2"):
+        pad_network(params, 2)
+
+
+# ---------------------------------------------------------------------------
+# closed forms: padded-n bitwise vs unpadded, static cross-check
+# ---------------------------------------------------------------------------
+
+def _closed_forms(prm, m, m_max, power):
+    logZ = log_normalizing_constants(prm, m_max)
+    return (throughput_padded(logZ, m),
+            expected_relative_delay_padded(prm, m, logZ, m_max),
+            round_complexity_padded(prm, m, CONSTS, logZ, m_max),
+            energy_complexity_padded(prm, m, CONSTS, power, logZ, m_max),
+            second_moment_matrix_padded(prm, m, logZ, m_max),
+            delay_jacobian_padded(prm, m, logZ, m_max))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 4), st.integers(2, 6),
+       st.integers(0, 3), st.integers(0, 10_000), st.booleans())
+def test_padded_closed_forms_bitwise_and_match_static(n, extra_n, m, extra_m,
+                                                      seed, with_cs):
+    params = params_from(seed, n, with_cs)
+    power = power_from(seed, n)
+    n_max = n + extra_n
+    m_max = m + extra_m
+    padded = pad_network(params, n_max)
+    power_pad = power._replace(
+        P_c=jnp.concatenate([power.P_c, jnp.zeros(extra_n)]),
+        P_u=jnp.concatenate([power.P_u, jnp.zeros(extra_n)]),
+        P_d=jnp.concatenate([power.P_d, jnp.zeros(extra_n)]))
+
+    fn = jax.jit(_closed_forms, static_argnames=("m_max",))
+    thr, d, k, en, sm, jac = fn(params, m, m_max, power)
+    thr2, d2, k2, en2, sm2, jac2 = fn(padded, m, m_max, power_pad)
+
+    # bitwise: padding is invisible
+    assert float(thr) == float(thr2)
+    assert float(k) == float(k2)
+    assert float(en) == float(en2)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d2)[:n])
+    np.testing.assert_array_equal(np.asarray(d2)[n:], 0.0)
+    np.testing.assert_array_equal(np.asarray(sm), np.asarray(sm2)[:n, :n])
+    np.testing.assert_array_equal(np.asarray(sm2)[n:, :], 0.0)
+    np.testing.assert_array_equal(np.asarray(jac), np.asarray(jac2)[:n, :n])
+    np.testing.assert_array_equal(np.asarray(jac2)[:, n:], 0.0)
+
+    # cross-check vs the static closed forms (float64 round-off, the same
+    # tolerance class as every other padded-vs-static contract)
+    np.testing.assert_allclose(
+        np.asarray(sm), np.asarray(jackson.second_moment_matrix(params, m)),
+        rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(
+        np.asarray(jac), np.asarray(jackson.delay_jacobian(params, m)),
+        rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(float(thr),
+                               float(jackson.throughput(params, m)),
+                               rtol=1e-12)
+
+
+def test_padded_round_complexity_grad_finite():
+    """Review regression: grad w.r.t. p of the padded closed forms on a
+    padded network must be finite (the 1/p divisions run on a pinned-safe
+    p; a where() after an inf primal would leak NaN cotangents)."""
+    params = params_from(4, 3, with_cs=True)
+    padded = pad_network(params, 6)
+    m, m_max = 3, 5
+
+    def k_eps(p):
+        prm = padded._replace(p=p)
+        logZ = log_normalizing_constants(prm, m_max)
+        return round_complexity_padded(prm, m, CONSTS, logZ, m_max)
+
+    g = np.asarray(jax.grad(k_eps)(padded.p))
+    assert np.isfinite(g[:3]).all()
+    assert np.isfinite(float(k_eps(padded.p)))
+
+
+def test_padded_jacobian_columns_sum_to_zero():
+    """Conservation of total staleness (Eq. 7) survives the padding: the
+    active block's columns sum to zero, padded columns are exactly zero."""
+    params = params_from(3, 4, with_cs=True)
+    padded = pad_network(params, 7)
+    m, m_max = 5, 6
+    logZ = log_normalizing_constants(padded, m_max)
+    J = np.asarray(delay_jacobian_padded(padded, m, logZ, m_max))
+    np.testing.assert_allclose(J.sum(axis=0), 0.0, atol=1e-7)
+
+
+def test_buzen_pallas_padded_forward_and_masked_vjp():
+    """The Pallas DP treats load-0 (padded) stations as convolution
+    identities and the custom VJP returns exactly-zero cotangents for
+    them."""
+    from repro.kernels.buzen import buzen_log_Z_batched
+
+    params = params_from(1, 4)
+    padded = pad_network(params, 6)
+    m_max = 5
+
+    def rows(prm):
+        log_rho = jnp.log(prm.p)[None, :] - jnp.log(prm.mu_c)[None, :]
+        return log_rho, jnp.log(jnp.sum(prm.gamma))[None]
+
+    lr, lg = rows(params)
+    lrp, lgp = rows(padded)
+    z = buzen_log_Z_batched(lr, lg, m_max)
+    zp = buzen_log_Z_batched(lrp, lgp, m_max)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(zp))
+
+    g = jax.grad(lambda a, b: jnp.sum(buzen_log_Z_batched(a, b, m_max)))(
+        lrp, lgp)
+    assert np.isfinite(np.asarray(g)).all()
+    np.testing.assert_array_equal(np.asarray(g)[:, 4:], 0.0)
+    g_ref = jax.grad(lambda a, b: jnp.sum(buzen_log_Z_batched(a, b, m_max)))(
+        lr, lg)
+    np.testing.assert_allclose(np.asarray(g)[:, :4], np.asarray(g_ref),
+                               rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# event trajectories: bitwise invariant to n-padding, every registered law
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(0, 3),
+       st.integers(0, 10_000), st.booleans())
+def test_event_trajectories_bitwise_under_n_padding(n, m, law_i, seed,
+                                                    with_cs):
+    """``simulate_stats`` on the padded network == the unpadded run,
+    bitwise, across random ``(n, n_max, m, m_max)`` and every registered
+    timing law (``m_max``/``n_max`` pinned to shared bounds so the compile
+    cache is reused across examples; trajectories ARE ``m_max``-dependent,
+    hence the shared table size on both sides)."""
+    law = sorted(law_names())[law_i % len(law_names())]
+    n_max, m_max = 6, 6
+    params = params_from(seed, n, with_cs)
+    padded = pad_network(params, n_max)
+    kw = dict(warmup=10, seed=seed % 7, distribution=law, m_max=m_max)
+    want = E.simulate_stats(params, m, 80, **kw)
+    got = unpad_stats(E.simulate_stats(padded, m, 80, **kw), n)
+    for f in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(want, f)), np.asarray(getattr(got, f)),
+            err_msg=f"{law} cs={with_cs} {f}")
+
+
+def test_event_stats_energy_bitwise_under_n_padding():
+    params = params_from(5, 4, with_cs=True)
+    power = power_from(5, 4)
+    padded = pad_network(params, 7)
+    power_pad = power._replace(
+        P_c=jnp.concatenate([power.P_c, jnp.zeros(3)]),
+        P_u=jnp.concatenate([power.P_u, jnp.zeros(3)]),
+        P_d=jnp.concatenate([power.P_d, jnp.zeros(3)]))
+    kw = dict(warmup=20, seed=1, m_max=5)
+    want = E.simulate_stats(params, 4, 150, power=power, **kw)
+    got = unpad_stats(E.simulate_stats(padded, 4, 150, power=power_pad,
+                                       **kw), 4)
+    assert float(want.energy) == float(got.energy)
+    np.testing.assert_array_equal(np.asarray(want.mean_queue_counts),
+                                  np.asarray(got.mean_queue_counts))
+
+
+def test_pallas_backend_bitwise_under_n_padding():
+    """The events kernel path consumes the same padding-invariant
+    randomness: padded pallas lanes == unpadded reference lanes."""
+    from repro.sim import simulate_stats_lanes
+
+    params = params_from(2, 3)
+    padded = pad_network(params, 5)
+    ref = simulate_stats_lanes([params] * 2, [3, 4], 200, warmup=40,
+                               seeds=(0, 1), m_max=4, backend="reference")
+    pal = simulate_stats_lanes([padded] * 2, [3, 4], 200, warmup=40,
+                               seeds=(0, 1), m_max=4, backend="pallas")
+    pal = unpad_stats(pal, 3)
+    for f in ref._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(pal, f)),
+            err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# mixed-population ScenarioSuite: 1-2 programs, per-scenario bitwise
+# ---------------------------------------------------------------------------
+
+def _mixed_suite(seeds=(0, 1)):
+    from repro.scenario import (LearningSpec, NetworkSpec, Scenario,
+                                ScenarioSuite, StrategySpec)
+
+    rng = np.random.default_rng(11)
+    scns = {}
+    for i, n in enumerate((3, 4, 6)):
+        scns[f"n{n}"] = Scenario(
+            network=NetworkSpec(mu_c=rng.uniform(0.5, 3, n),
+                                mu_d=rng.uniform(0.5, 3, n),
+                                mu_u=rng.uniform(0.5, 3, n)),
+            learning=LearningSpec(consts=CONSTS),
+            strategy=StrategySpec("explicit",
+                                  p=rng.dirichlet(np.ones(n)), m=2 + i))
+    return ScenarioSuite(scns, seeds=seeds)
+
+
+def test_mixed_population_suite_plans_one_program():
+    """The acceptance regression: a mixed-n suite compiles ONE program per
+    mode (the pre-padding planner compiled one per distinct n)."""
+    suite = _mixed_suite()
+    ana = suite.run(mode="analyze")
+    assert ana.programs == 1
+    sim = suite.run(mode="simulate", num_updates=150, warmup=20)
+    assert sim.programs == 1
+    assert set(sim.entries) == set(suite.scenarios)
+    # a structurally-different member (CS buffer) still only adds a bucket
+    import dataclasses
+
+    from repro.scenario import ScenarioSuite
+
+    mixed = dict(suite.scenarios)
+    mixed["cs"] = mixed["n3"].replace(network=dataclasses.replace(
+        mixed["n3"].network, mu_cs=1.5))
+    both = ScenarioSuite(mixed, seeds=(0,)).run(mode="analyze")
+    assert both.programs == 2
+
+
+def test_mixed_population_suite_matches_unpadded_runs_bitwise():
+    """Mixed-n suite entries == per-scenario unpadded runs: closed forms
+    and lane-for-lane event trajectories (same shared table size)."""
+    suite = _mixed_suite(seeds=(0, 2))
+    strategies = suite.resolve()
+    m_shared = max(m for _, m in strategies.values())
+
+    ana = suite.run(mode="analyze")
+    for name, (p, m) in strategies.items():
+        params = suite.scenarios[name].params(p)
+        ent = ana.entries[name]
+        assert ent["delays"].shape == (suite.scenarios[name].n,)
+        np.testing.assert_allclose(
+            ent["throughput"], float(jackson.throughput(params, m)),
+            rtol=1e-10)
+        np.testing.assert_allclose(
+            ent["delays"], np.asarray(jackson.expected_relative_delay(
+                params, m)), rtol=1e-10, atol=1e-12)
+
+    sim = suite.run(mode="simulate", num_updates=150, warmup=20)
+    for name, (p, m) in strategies.items():
+        scn = suite.scenarios[name]
+        for seed, got in zip(suite.seeds, sim.entries[name]):
+            want = E.simulate_stats(scn.params(p), m, 150, warmup=20,
+                                    key=jax.random.PRNGKey(seed),
+                                    m_max=m_shared)
+            for f in want._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(want, f)),
+                    np.asarray(getattr(got, f)),
+                    err_msg=f"{name}/{seed}/{f}")
+
+
+# ---------------------------------------------------------------------------
+# fused trainer under the traced-n convention
+# ---------------------------------------------------------------------------
+
+def test_device_trainer_bitwise_under_n_padding():
+    from repro.data import iid_partition, make_synthetic_image_dataset
+    from repro.fl import AsyncFLConfig, mlp_classifier
+    from repro.fl.engine import DeviceTrainer
+
+    n, n_max = 3, 5
+    params = params_from(7, n)
+    padded = pad_network(params, n_max)
+    full = make_synthetic_image_dataset(num_classes=4, samples_per_class=18,
+                                        image_size=8, seed=7)
+    parts = iid_partition(full.y, n, seed=7)
+    clients = [(full.x[i], full.y[i]) for i in parts]
+    model = mlp_classifier(8 * 8, 4, hidden=(8,))
+    cfg = AsyncFLConfig(eta=0.05, batch_size=8, eval_every_time=2.0)
+
+    rng = np.random.default_rng(7)
+    ps = [np.asarray(params.p), rng.dirichlet(np.ones(n))]
+    ps_pad = [np.concatenate([p, np.zeros(n_max - n)]) for p in ps]
+    kw = dict(ms=[2, 3], etas=[0.05, 0.05], seeds=[0, 1], horizon_time=6.0)
+
+    t1 = DeviceTrainer(model, clients, params, cfg,
+                       test_data=(full.x, full.y))
+    logs1, fin1 = t1.run_lanes(ps=ps, **kw)
+    t2 = DeviceTrainer(model, clients, padded, cfg,
+                       test_data=(full.x, full.y))
+    assert t2.n == n_max and t2.n_act == n
+    logs2, fin2 = t2.run_lanes(ps=ps_pad, **kw)
+
+    for a, b in zip(logs1, logs2):
+        assert a.times == b.times
+        assert a.losses == b.losses
+        assert a.accuracies == b.accuracies
+        assert a.throughput == b.throughput
+        assert a.energy == b.energy
+        np.testing.assert_array_equal(a.mean_delay, b.mean_delay)
+        assert a.mean_delay.shape == (n,) and b.mean_delay.shape == (n,)
+    for la, lb in zip(jax.tree_util.tree_leaves(fin1),
+                      jax.tree_util.tree_leaves(fin2)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_device_trainer_rejects_client_count_mismatch():
+    from repro.fl import AsyncFLConfig, mlp_classifier
+    from repro.fl.engine import DeviceTrainer
+
+    padded = pad_network(params_from(7, 3), 5)
+    model = mlp_classifier(4, 2, hidden=(4,))
+    clients = [(np.zeros((2, 4), np.float32), np.zeros(2, np.int32))] * 4
+    with pytest.raises(ValueError, match="active"):
+        DeviceTrainer(model, clients, padded, AsyncFLConfig())
+
+
+# ---------------------------------------------------------------------------
+# the emnist DataSpec dataset
+# ---------------------------------------------------------------------------
+
+def test_emnist_loader_fallback_shapes_and_determinism(tmp_path):
+    from repro.data import load_emnist
+
+    ds1 = load_emnist(num_classes=3, samples_per_class=5, seed=2,
+                      path=str(tmp_path / "missing.npz"))
+    ds2 = load_emnist(num_classes=3, samples_per_class=5, seed=2,
+                      path=str(tmp_path / "missing.npz"))
+    assert ds1.x.shape == (15, 28, 28, 1) and ds1.x.dtype == np.float32
+    assert ds1.y.shape == (15,) and set(np.unique(ds1.y)) == {0, 1, 2}
+    np.testing.assert_array_equal(ds1.x, ds2.x)
+    # distinct from the plain synthetic dataset at the same settings
+    from repro.data import make_synthetic_image_dataset
+
+    syn = make_synthetic_image_dataset(num_classes=3, samples_per_class=5,
+                                       seed=2)
+    assert not np.array_equal(ds1.x, syn.x)
+
+
+def test_emnist_loader_reads_local_cache(tmp_path):
+    from repro.data import load_emnist
+
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 256, (40, 28, 28)).astype(np.uint8)
+    y = np.repeat(np.arange(4), 10).astype(np.int64)
+    path = tmp_path / "emnist.npz"
+    np.savez(path, x=x, y=y)
+    ds = load_emnist(num_classes=2, samples_per_class=6, seed=0,
+                     path=str(path))
+    assert ds.x.shape == (12, 28, 28, 1)
+    assert float(ds.x.max()) <= 1.0  # uint8 cache rescaled
+    with pytest.raises(ValueError, match="classes"):
+        load_emnist(num_classes=10, samples_per_class=6, path=str(path))
+
+
+def test_emnist_dataspec_train_end_to_end():
+    from repro.fl import mlp_classifier
+    from repro.scenario import (DataSpec, LearningSpec, NetworkSpec,
+                                Scenario, ScenarioSuite, StrategySpec)
+
+    scn = Scenario(
+        network=NetworkSpec(mu_c=[1.0, 2.0, 1.5], mu_d=[2.0] * 3,
+                            mu_u=[2.0] * 3),
+        learning=LearningSpec(consts=CONSTS),
+        strategy=StrategySpec("asyncsgd"),
+        data=DataSpec(dataset="emnist", num_classes=4,
+                      samples_per_class=12))
+    back = Scenario.from_json(scn.to_json())
+    assert back == scn and back.data.dataset == "emnist"
+    model = mlp_classifier(28 * 28, 4, hidden=(8,))
+    res = ScenarioSuite(scn, seeds=(0,)).run(
+        mode="train", model=model, horizon_time=12.0, batch_size=8,
+        eval_every_time=6.0)
+    log = res.entries[list(res.entries)[0]][0]
+    assert log.updates[-1] > 0 and np.isfinite(log.losses).all()
