@@ -129,6 +129,8 @@ def main(argv=None) -> None:
         mode = "full"
     suites = build_suites(mode, backends=backends)
 
+    from repro.analysis import tracecheck
+
     print("name,us_per_call,derived")
     results = []
     failures = []
@@ -136,18 +138,23 @@ def main(argv=None) -> None:
     for name, fn in suites:
         t0 = time.time()
         try:
-            for line in fn():
-                print(line, flush=True)
-                rname, us, derived = line.split(",", 2)
-                results.append({"suite": name, "name": rname,
-                                "us_per_call": float(us), "derived": derived})
+            with tracecheck.watch() as w:
+                for line in fn():
+                    print(line, flush=True)
+                    rname, us, derived = line.split(",", 2)
+                    results.append({"suite": name, "name": rname,
+                                    "us_per_call": float(us),
+                                    "derived": derived})
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             traceback.print_exc()
             print(f"{name},nan,FAILED:{e!r}", flush=True)
+        # compile pressure rides next to the wall time: regressions in the
+        # suite planner show up here PR-over-PR, not just in latency
         results.append({"suite": name, "name": f"{name}.__suite_s",
                         "us_per_call": (time.time() - t0) * 1e6,
-                        "derived": "suite_wall_time"})
+                        "derived": "suite_wall_time",
+                        "traces": w.traces, "compiles": w.compiles})
 
     if mode == "smoke":
         import jax

@@ -1,0 +1,26 @@
+"""Static analysis for the padded-``n`` bitwise contract and TPU readiness.
+
+Three cooperating tools, wired into tier-1 and CI (``python -m
+repro.analysis``):
+
+  * :mod:`repro.analysis.lint` — AST contract linter: named rules over
+    ``src/`` (no raw ``jnp.sum``/``.sum()`` in contract-marked modules, no
+    ``jax.random.categorical`` routing, no stringly-typed law/strategy
+    dispatch, no host ``numpy``/Python branching/``os.environ`` inside
+    traced code) with ``# contract: allow(<rule>): <why>`` suppressions;
+  * :mod:`repro.analysis.audit` — jaxpr auditor: builds the jaxpr of every
+    resident program (suite analyze/simulate buckets, the trainer scan,
+    both Pallas kernels in interpret mode) and reports f64 primitives,
+    clock downcasts, host callbacks and op/flop counts as the JSON
+    worklist for the real-TPU compiled pass;
+  * :mod:`repro.analysis.tracecheck` — recompile sentinel: counts XLA
+    compilations/retraces per program name so the suite planner's
+    "mixed-``n`` suite == 1-2 programs" is a machine-checked budget.
+
+This package imports jax lazily — ``lint`` and ``hygiene`` run without it.
+"""
+from __future__ import annotations
+
+from .lint import Violation, lint_file, lint_source, lint_tree  # noqa: F401
+
+__all__ = ["Violation", "lint_file", "lint_source", "lint_tree"]

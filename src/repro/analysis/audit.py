@@ -1,0 +1,415 @@
+"""Jaxpr auditor — the TPU-compilability worklist as a JSON report.
+
+The ROADMAP's real-TPU open item starts with an audit: which resident
+programs carry f64 primitives (TPU-hostile — the event engine's clocks
+are deliberately f64 on CPU), where clock values get downcast
+(``convert_element_type`` f64 -> f32), and whether anything escapes to
+the host (callbacks).  This module builds the jaxpr of every resident
+program at tiny static sizes and walks it recursively (scan/while/cond
+branch jaxprs included, scan bodies weighted by their trip count) to
+report, per program:
+
+  * op counts per primitive and a rough flop estimate;
+  * f64 primitive count + example source locations;
+  * f64 -> f32/bf16 ``convert_element_type`` downcasts (clock truncation
+    candidates) + examples;
+  * host callbacks (``pure_callback``/``io_callback``/...);
+  * unbounded loops (``while_loop`` — trip count unknown, flops undercounted);
+  * a ``tpu_compilable`` verdict with the blocking findings named.
+
+``python -m repro.analysis audit --out AUDIT_jaxpr.json`` emits the
+report CI uploads next to ``BENCH_smoke.json``; the schema is pinned by
+``tests/data/audit_schema.json``.
+"""
+from __future__ import annotations
+
+import json
+from typing import Callable, Optional
+
+SCHEMA_VERSION = 1
+
+_HOST_CALLBACK_PRIMS = frozenset(
+    {"pure_callback", "io_callback", "debug_callback", "outside_call",
+     "host_callback_call", "python_callback"})
+
+# elementwise primitives: flops ~= output size
+_ELEMENTWISE = frozenset(
+    {"add", "sub", "mul", "div", "rem", "pow", "integer_pow", "neg", "abs",
+     "sign", "floor", "ceil", "round", "exp", "log", "log1p", "expm1",
+     "sqrt", "rsqrt", "cbrt", "tanh", "logistic", "erf", "erf_inv", "sin",
+     "cos", "tan", "atan2", "max", "min", "and", "or", "xor", "not",
+     "select_n", "clamp", "nextafter", "square"})
+_REDUCE = frozenset(
+    {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+     "reduce_or", "argmax", "argmin", "cumsum", "cumlogsumexp", "cummax",
+     "cummin", "cumprod"})
+
+
+def _subjaxprs(params: dict):
+    """(jaxpr, trip_multiplier) pairs nested in one eqn's params —
+    duck-typed so pjit/scan/while/cond/custom-vjp/pallas all walk."""
+    length = params.get("length", 1) if "length" in params else 1
+    for key, val in params.items():
+        items = val if isinstance(val, (list, tuple)) else [val]
+        for item in items:
+            inner = getattr(item, "jaxpr", item)
+            if hasattr(inner, "eqns"):
+                yield inner, (length if key == "jaxpr" else 1)
+
+
+def _aval_size(aval) -> int:
+    size = 1
+    for d in getattr(aval, "shape", ()) or ():
+        try:
+            size *= int(d)
+        except (TypeError, ValueError):  # symbolic dim
+            size *= 1
+    return size
+
+
+def _eqn_flops(eqn) -> float:
+    name = eqn.primitive.name
+    out_size = sum(_aval_size(v.aval) for v in eqn.outvars)
+    if name == "dot_general":
+        dnums = eqn.params.get("dimension_numbers")
+        lhs = eqn.invars[0].aval
+        contract = 1
+        if dnums is not None:
+            for d in dnums[0][0]:
+                try:
+                    contract *= int(lhs.shape[d])
+                except (TypeError, ValueError, IndexError):
+                    pass
+        return 2.0 * out_size * contract
+    if name in _REDUCE:
+        return float(sum(_aval_size(v.aval) for v in eqn.invars))
+    if name in _ELEMENTWISE:
+        return float(out_size)
+    return 0.0
+
+
+def _source_line(eqn) -> Optional[str]:
+    try:
+        from jax._src import source_info_util
+
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:  # noqa: BLE001 — examples are best-effort
+        return None
+
+
+def analyze_jaxpr(closed) -> dict:
+    """Walk one (Closed)Jaxpr recursively; return the findings dict."""
+    import numpy as np
+
+    op_counts: dict[str, int] = {}
+    f64_counts: dict[str, int] = {}
+    f64_examples: list[str] = []
+    downcasts = 0
+    downcast_examples: list[str] = []
+    callbacks: dict[str, int] = {}
+    unbounded_loops = 0
+    flops = 0.0
+    total = 0
+
+    def is_f64(dtype) -> bool:
+        if dtype is None:
+            return False
+        try:  # extended dtypes (PRNG key<fry>) are not np dtypes
+            return np.dtype(dtype) == np.float64
+        except TypeError:
+            return False
+
+    def walk(jaxpr, mult: int):
+        nonlocal downcasts, unbounded_loops, flops, total
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            op_counts[name] = op_counts.get(name, 0) + mult
+            total += mult
+            flops += mult * _eqn_flops(eqn)
+            if name == "while":
+                unbounded_loops += 1
+            if name in _HOST_CALLBACK_PRIMS:
+                callbacks[name] = callbacks.get(name, 0) + mult
+            out_dtypes = [getattr(v.aval, "dtype", None)
+                          for v in eqn.outvars]
+            if any(is_f64(dt) for dt in out_dtypes):
+                f64_counts[name] = f64_counts.get(name, 0) + mult
+                if len(f64_examples) < 8:
+                    src = _source_line(eqn)
+                    f64_examples.append(
+                        f"{name} @ {src}" if src else name)
+            if name == "convert_element_type":
+                in_dt = getattr(eqn.invars[0].aval, "dtype", None)
+                out_dt = out_dtypes[0] if out_dtypes else None
+                if is_f64(in_dt) and out_dt is not None and \
+                        np.dtype(out_dt).kind == "f" and \
+                        np.dtype(out_dt).itemsize < 8:
+                    downcasts += mult
+                    if len(downcast_examples) < 8:
+                        src = _source_line(eqn)
+                        downcast_examples.append(
+                            f"f64->{np.dtype(out_dt).name} @ {src}"
+                            if src else f"f64->{np.dtype(out_dt).name}")
+            for sub, sub_mult in _subjaxprs(eqn.params):
+                walk(sub, mult * sub_mult)
+
+    walk(getattr(closed, "jaxpr", closed), 1)
+    f64_total = sum(f64_counts.values())
+    cb_total = sum(callbacks.values())
+    blockers = []
+    if f64_total:
+        blockers.append("f64-primitives")
+    if cb_total:
+        blockers.append("host-callbacks")
+    return {
+        "total_primitives": total,
+        "op_counts": dict(sorted(op_counts.items())),
+        "flops_estimate": flops,
+        "f64": {"count": f64_total,
+                "op_counts": dict(sorted(f64_counts.items())),
+                "examples": f64_examples},
+        "downcasts_f64_to_f32": {"count": downcasts,
+                                 "examples": downcast_examples},
+        "host_callbacks": {"count": cb_total,
+                           "ops": dict(sorted(callbacks.items()))},
+        "unbounded_loops": unbounded_loops,
+        "tpu_compilable": not blockers,
+        "tpu_blockers": blockers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# resident programs, built at tiny static sizes
+# ---------------------------------------------------------------------------
+
+def _tiny_nets(L: int = 2, n_max: int = 3, cs: bool = False):
+    import numpy as np
+
+    from ..core.buzen import NetworkParams, pad_network
+    from ..scenario.suite import _stack_params
+
+    rng = np.random.default_rng(7)
+    nets = []
+    for i in range(L):
+        n = n_max - (i % 2)  # mixed populations exercise the padding path
+        net = NetworkParams(
+            p=rng.dirichlet(np.ones(n)),
+            mu_c=rng.uniform(0.5, 4.0, n),
+            mu_d=rng.uniform(0.5, 4.0, n),
+            mu_u=rng.uniform(0.5, 4.0, n))
+        if cs:
+            net = net.with_cs(rng.uniform(0.5, 4.0))
+        nets.append(pad_network(net, n_max))
+    return _stack_params(nets)
+
+
+def resident_programs() -> dict[str, tuple[str, Callable]]:
+    """name -> (description, thunk); each thunk returns a ClosedJaxpr.
+
+    Every resident program of the pipeline: the suite's analyze and
+    simulate bucket programs (batched / pallas-interpret / the per-lane
+    reference scan), the fused trainer scan, and both Pallas kernels'
+    interpret paths.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    L, n_max, m_max = 2, 3, 3
+
+    def suite_analyze():
+        from ..core.complexity import LearningConstants
+        from ..core.energy import PowerProfile
+        from ..scenario.suite import (_build_analyze, _pad_power,
+                                      _stack_consts, _stack_power)
+
+        prm = _tiny_nets(L, n_max)
+        consts = _stack_consts([LearningConstants(M=2.0, G=5.0)] * L)
+        power = _stack_power([
+            _pad_power(PowerProfile(
+                P_c=np.full(n_max - (i % 2), 1.5),
+                P_u=np.full(n_max - (i % 2), 1.0),
+                P_d=np.full(n_max - (i % 2), 0.5)), n_max)
+            for i in range(L)])
+        m_vec = jnp.asarray([2, 3], jnp.int64)
+        rho = jnp.asarray([0.3, 0.5])
+        fn = _build_analyze(m_max, has_power=True)
+        return jax.make_jaxpr(fn)(prm, m_vec, consts, power, rho)
+
+    def _sim_args():
+        prm = _tiny_nets(L, n_max)
+        m_vec = jnp.asarray([2, 3], jnp.int32)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(L)])
+        return prm, m_vec, keys
+
+    def suite_simulate_batched():
+        from ..sim.batched_events import build_lanes_fn
+
+        fn = build_lanes_fn("batched", 6, 2, "exponential", m_max, False)
+        prm, m_vec, keys = _sim_args()
+        return jax.make_jaxpr(lambda p, m, k: fn(p, m, k, None))(
+            prm, m_vec, keys)
+
+    def suite_simulate_pallas():
+        from ..sim.batched_events import build_lanes_fn
+
+        fn = build_lanes_fn("pallas", 6, 2, "exponential", m_max, False,
+                            interpret=True)
+        prm, m_vec, keys = _sim_args()
+        return jax.make_jaxpr(lambda p, m, k: fn(p, m, k, None))(
+            prm, m_vec, keys)
+
+    def simulate_reference_lane():
+        from ..core import events
+
+        prm, m_vec, keys = _sim_args()
+        one = jax.tree_util.tree_map(lambda x: x[0], prm)
+        return jax.make_jaxpr(
+            lambda p, m, k: events._simulate_stats(
+                p, m, k, 6, 2, "exponential", m_max, None))(
+            one, m_vec[0], keys[0])
+
+    def trainer_scan():
+        from ..fl.engine import DeviceTrainer
+        from ..fl.models import mlp_classifier
+        from ..fl.trainer import AsyncFLConfig
+        from ..core.buzen import NetworkParams
+
+        rng = np.random.default_rng(9)
+        n = 3
+        net = NetworkParams(
+            p=jnp.asarray(rng.dirichlet(np.ones(n))),
+            mu_c=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+            mu_d=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+            mu_u=jnp.asarray(rng.uniform(0.5, 4.0, n)))
+        clients = [(rng.normal(size=(4, 4)).astype(np.float32),
+                    rng.integers(0, 2, size=4).astype(np.int32))
+                   for _ in range(n)]
+        test = (rng.normal(size=(6, 4)).astype(np.float32),
+                rng.integers(0, 2, size=6).astype(np.int32))
+        model = mlp_classifier(4, 2, hidden=(4,))
+        trainer = DeviceTrainer(
+            model, clients, net,
+            AsyncFLConfig(eta=0.05, batch_size=2, eval_every_time=2.0),
+            test_data=test)
+        K, G = 4, 2
+        fn = trainer._build(K, G, m_max, 6.0, "batched", None)
+        params0 = jax.vmap(model.init)(
+            jnp.stack([jax.random.PRNGKey(s) for s in range(L)]))
+        p_mat = jnp.asarray(np.stack([np.asarray(net.p)] * L))
+        ms = jnp.asarray([2] * L, jnp.int32)
+        etas = jnp.asarray([0.05] * L)
+        sim_keys = jnp.stack([jax.random.PRNGKey(10 + s) for s in range(L)])
+        data_keys = jnp.stack([jax.random.PRNGKey(20 + s) for s in range(L)])
+        return jax.make_jaxpr(fn)(params0, p_mat, ms, etas, sim_keys,
+                                  data_keys)
+
+    def kernel_buzen():
+        from ..kernels.buzen import buzen_pallas_batched
+
+        rng = np.random.default_rng(3)
+        log_rho = jnp.asarray(rng.normal(size=(L, 3 * n_max)), jnp.float32)
+        log_gamma = jnp.asarray(rng.normal(size=(L,)), jnp.float32)
+        return jax.make_jaxpr(
+            lambda lr, lg: buzen_pallas_batched(lr, lg, m_max,
+                                                interpret=True))(
+            log_rho, log_gamma)
+
+    def kernel_events():
+        from ..core import events
+        from ..kernels.events import step_event_pallas
+
+        prm, m_vec, keys = _sim_args()
+        st = jax.vmap(lambda p, m, k: events.init_state(
+            p, m, k, m_max=m_max, distribution="exponential", warmup=0,
+            cap=8))(prm, m_vec, keys)
+        return jax.make_jaxpr(
+            lambda p, s: step_event_pallas(
+                p, s, distribution="exponential", power=None,
+                interpret=True)[0])(prm, st)
+
+    return {
+        "suite_analyze": (
+            "ScenarioSuite analyze bucket: jit(vmap) of the padded closed "
+            "forms (energy column on)", suite_analyze),
+        "suite_simulate_batched": (
+            "ScenarioSuite simulate bucket, batched backend: jit(vmap) of "
+            "the single-lane event scan", suite_simulate_batched),
+        "suite_simulate_pallas": (
+            "ScenarioSuite simulate bucket, pallas backend (interpret): "
+            "lock-step lane scan around the event kernel",
+            suite_simulate_pallas),
+        "simulate_reference_lane": (
+            "reference backend per-lane program: events._simulate_stats "
+            "bounded scan", simulate_reference_lane),
+        "trainer_scan": (
+            "DeviceTrainer fused training scan (suite train bucket): "
+            "jit(vmap) over lanes", trainer_scan),
+        "kernel_buzen": (
+            "Pallas Buzen DP kernel, interpret path "
+            "(kernels.buzen.buzen_pallas_batched)", kernel_buzen),
+        "kernel_events": (
+            "Pallas event-step kernel, interpret path "
+            "(kernels.events.step_event_pallas)", kernel_events),
+    }
+
+
+def build_report(names=None) -> dict:
+    """The full audit report (optionally restricted to ``names``)."""
+    import jax
+
+    programs = {}
+    registry = resident_programs()
+    if names:
+        registry = {k: registry[k] for k in names}
+    for name, (description, thunk) in registry.items():
+        entry = {"description": description}
+        entry.update(analyze_jaxpr(thunk()))
+        programs[name] = entry
+    return {
+        "schema": {"name": "repro.analysis.audit",
+                   "version": SCHEMA_VERSION},
+        "jax_version": jax.__version__,
+        "default_backend": jax.default_backend(),
+        "x64_enabled": bool(jax.config.jax_enable_x64),
+        "programs": programs,
+        "summary": {
+            "programs": len(programs),
+            "tpu_ready": sorted(k for k, v in programs.items()
+                                if v["tpu_compilable"]),
+            "tpu_blocked": sorted(k for k, v in programs.items()
+                                  if not v["tpu_compilable"]),
+        },
+    }
+
+
+def main(argv=None) -> int:
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis audit", description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here (default: stdout)")
+    ap.add_argument("--programs", default=None,
+                    help="comma-separated subset of resident programs")
+    args = ap.parse_args(argv)
+    names = ([s.strip() for s in args.programs.split(",") if s.strip()]
+             if args.programs else None)
+    report = build_report(names)
+    text = json.dumps(report, indent=1)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text + "\n")
+        blocked = report["summary"]["tpu_blocked"]
+        print(f"audit: {report['summary']['programs']} programs -> "
+              f"{args.out} ({len(blocked)} TPU-blocked: {blocked})")
+    else:
+        print(text)
+    return 0 if report["programs"] else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

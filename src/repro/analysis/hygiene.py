@@ -1,0 +1,59 @@
+"""Repo-hygiene check: fail when generated files are tracked by git.
+
+Bytecode has been accidentally committed before (27 ``__pycache__/*.pyc``
+files rode along in a PR); ``.gitignore`` prevents *new* additions, but
+only a check that runs in CI/tier-1 keeps already-tracked junk from
+coming back.  Lives here so ``python -m repro.analysis`` runs it next to
+the contract linter; ``tools/check_hygiene.py`` remains as a thin shim.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+# src/repro/analysis/hygiene.py -> repo root is four levels up
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+# path fragments that must never be tracked
+FORBIDDEN = ("__pycache__/", ".pytest_cache/")
+FORBIDDEN_SUFFIXES = (".pyc", ".pyo")
+
+
+def tracked_files(repo_root: str = REPO_ROOT) -> list[str]:
+    """``git ls-files`` of the repo (empty if git is unavailable)."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files"], cwd=repo_root, check=True,
+            capture_output=True, text=True)
+    except (OSError, subprocess.CalledProcessError):
+        return []
+    return [line for line in out.stdout.splitlines() if line]
+
+
+def tracked_junk(repo_root: str = REPO_ROOT) -> list[str]:
+    """Tracked paths violating repo hygiene (bytecode, tool caches)."""
+    bad = []
+    for path in tracked_files(repo_root):
+        if (path.endswith(FORBIDDEN_SUFFIXES)
+                or any(frag in path for frag in FORBIDDEN)):
+            bad.append(path)
+    return bad
+
+
+def main() -> int:
+    bad = tracked_junk()
+    if bad:
+        print("tracked files violating repo hygiene:", file=sys.stderr)
+        for path in bad:
+            print(f"  {path}", file=sys.stderr)
+        print(f"fix with: git rm --cached {' '.join(bad[:5])} ...",
+              file=sys.stderr)
+        return 1
+    print(f"hygiene OK ({len(tracked_files())} tracked files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,394 @@
+"""Contract linter — the bitwise padding contract as named AST rules.
+
+The mixed-population performance story (padded run == unpadded run
+**bitwise**) holds only while a handful of coding rules hold; this module
+turns them from ROADMAP prose into checked-in static analysis:
+
+``raw-reduction``
+    ``jnp.sum``/``jnp.cumsum`` (or ``np.``, or the ``.sum()``/``.cumsum()``
+    methods) in a contract-marked module.  Client-axis reductions must use
+    ``numerics.seqsum``/``seqcumsum`` — XLA reduces reassociate with array
+    *length*, so a raw sum over a zero-padded axis is not bitwise stable.
+``categorical-routing``
+    ``jax.random.categorical`` anywhere under ``src/``.  The Gumbel trick
+    draws noise with the logits' shape, so routing through it depends on
+    the padded length; routing must stay inverse-CDF on ONE scalar uniform
+    (``repro.core.events._route_client``).
+``stringly-dispatch``
+    ``if``/``elif`` chains or callable dict-dispatch keyed by two or more
+    registered law/strategy names.  Law and strategy lookups go through
+    the ``repro.scenario.registry`` decorators so extensions and error
+    messages stay in one place.
+``numpy-in-jit``
+    host ``numpy`` calls inside a traced function — silent host sync at
+    best, a tracer leak at worst.
+``traced-branch``
+    Python ``if``/``while`` on a ``jnp`` expression inside a traced
+    function (must be ``lax.cond``/``jnp.where``/``lax.while_loop``).
+``env-read``
+    ``os.environ``/``os.getenv`` inside a traced function: the value is
+    frozen at trace time, invisibly keyed into no cache.
+``bad-suppression``
+    a ``# contract: allow(...)`` comment without a justification, or
+    naming an unknown rule.
+
+A module opts into the marked-module rules with a ``# contract: padded-n``
+comment line.  A violation is suppressed by ``# contract:
+allow(<rule>): <justification>`` on the violating line or the line above;
+the justification is mandatory.
+
+Pure stdlib (``ast``) — runs without jax installed.  The registered
+law/strategy names are HARDCODED here so linting stays import-light;
+``tests/test_analysis.py`` cross-checks them against the live registries.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+import sys
+from typing import Iterable, Optional
+
+# Cross-checked against repro.scenario.registry in tests/test_analysis.py.
+LAW_NAMES = frozenset(
+    {"exponential", "deterministic", "lognormal", "hyperexponential"})
+STRATEGY_NAMES = frozenset(
+    {"asyncsgd", "max_throughput", "round_opt", "time_opt", "energy_opt",
+     "joint"})
+DISPATCH_NAMES = LAW_NAMES | STRATEGY_NAMES
+
+RULES = {
+    "raw-reduction":
+        "raw sum/cumsum in a contract-marked module; client-axis "
+        "reductions must use numerics.seqsum/seqcumsum",
+    "categorical-routing":
+        "jax.random.categorical draws Gumbel noise with the logits' "
+        "shape; routing must be inverse-CDF on one scalar uniform",
+    "stringly-dispatch":
+        "law/strategy dispatch on string literals; route through the "
+        "repro.scenario.registry decorators",
+    "numpy-in-jit":
+        "host numpy call inside a traced function",
+    "traced-branch":
+        "Python if/while on a traced (jnp) value inside a traced "
+        "function; use lax.cond/jnp.where",
+    "env-read":
+        "os.environ read inside a traced function; resolve flags before "
+        "tracing",
+    "bad-suppression":
+        "contract: allow(...) without a justification or naming an "
+        "unknown rule",
+}
+
+_MARK_RE = re.compile(r"#\s*contract:\s*padded-n\b")
+_ALLOW_RE = re.compile(
+    r"#\s*contract:\s*allow\(([A-Za-z0-9_-]+)\)\s*(?::\s*(\S.*?))?\s*$")
+
+# names whose positional function arguments get traced
+_TRANSFORMS = frozenset(
+    {"jit", "pjit", "vmap", "pmap", "grad", "value_and_grad", "jacfwd",
+     "jacrev", "hessian", "scan", "while_loop", "fori_loop", "cond",
+     "checkpoint", "remat", "custom_jvp", "custom_vjp", "make_jaxpr"})
+_JNP_BASES = ("jnp", "jax.numpy")
+_NP_BASES = ("np", "numpy")
+# numpy attributes that are metadata, not array computation
+_NP_META = frozenset(
+    {"dtype", "iinfo", "finfo", "ndarray", "newaxis", "float32", "float64",
+     "int32", "int64", "uint32", "bool_", "pi", "inf", "nan"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+    suppressed: bool = False
+    justification: Optional[str] = None
+
+    def format(self) -> str:
+        tag = " [suppressed]" if self.suppressed else ""
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}{tag}"
+
+
+def _dotted(node) -> str:
+    """``a.b.c`` for an Attribute/Name chain, else ``""``."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _suppressions(text: str):
+    """line -> (rule, justification|None) for every allow() comment."""
+    out = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            out[i] = (m.group(1), m.group(2))
+    return out
+
+
+def _traced_nodes(tree: ast.AST):
+    """AST nodes (FunctionDef/Lambda) whose bodies run under a trace.
+
+    Over-approximate on purpose: a function is traced if it is decorated
+    with (or wrapped by ``functools.partial`` around) a jit, or passed by
+    name/lambda to any jax transform or ``lax`` control-flow combinator.
+    """
+    traced_names: set[str] = set()
+    lambda_nodes: list[ast.Lambda] = []
+
+    def transform_call(call: ast.Call) -> bool:
+        name = _dotted(call.func)
+        return bool(name) and name.split(".")[-1] in _TRANSFORMS
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not transform_call(node):
+            continue
+        for arg in node.args:
+            cand = arg
+            # functools.partial(fn, ...) / jax.vmap(fn) as the payload
+            if (isinstance(cand, ast.Call)
+                    and _dotted(cand.func).split(".")[-1]
+                    in _TRANSFORMS | {"partial"} and cand.args):
+                cand = cand.args[0]
+            if isinstance(cand, ast.Name):
+                traced_names.add(cand.id)
+            elif isinstance(cand, ast.Lambda):
+                lambda_nodes.append(cand)
+
+    nodes: list[ast.AST] = list(lambda_nodes)
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name in traced_names:
+            nodes.append(node)
+            continue
+        for deco in node.decorator_list:
+            base = deco.func if isinstance(deco, ast.Call) else deco
+            name = _dotted(base)
+            leaf = name.split(".")[-1] if name else ""
+            if leaf in ("jit", "pjit"):
+                nodes.append(node)
+                break
+            if leaf == "partial" and isinstance(deco, ast.Call) and deco.args:
+                inner = _dotted(deco.args[0]).split(".")[-1]
+                if inner in ("jit", "pjit"):
+                    nodes.append(node)
+                    break
+    return nodes
+
+
+def _is_reduction_call(node: ast.Call) -> Optional[str]:
+    """Describe a raw sum/cumsum call, else None."""
+    if not isinstance(node.func, ast.Attribute):
+        return None
+    attr = node.func.attr
+    if attr not in ("sum", "cumsum"):
+        return None
+    base = _dotted(node.func.value)
+    if base in _JNP_BASES or base in _NP_BASES:
+        return f"{base}.{attr}(...)"
+    # any .sum()/.cumsum() method: static analysis cannot prove the
+    # receiver is not a padded-axis device array, so flag conservatively
+    return f".{attr}() method call"
+
+
+def _jnp_valued(node: ast.AST) -> bool:
+    """Does the expression subtree call into jnp/jax.numpy?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            base = _dotted(sub.func)
+            if any(base == b or base.startswith(b + ".")
+                   for b in _JNP_BASES):
+                return True
+    return False
+
+
+def _if_chain_literals(node: ast.If, seen_ids: set):
+    """String literals compared in an if/elif chain (Eq / In tests)."""
+    literals: list[tuple[str, int]] = []
+    cur: ast.stmt = node
+    while isinstance(cur, ast.If):
+        seen_ids.add(id(cur))
+        for sub in ast.walk(cur.test):
+            if not isinstance(sub, ast.Compare):
+                continue
+            for op, comp in zip(sub.ops, sub.comparators):
+                if isinstance(op, (ast.Eq, ast.NotEq)) and \
+                        isinstance(comp, ast.Constant) and \
+                        isinstance(comp.value, str):
+                    literals.append((comp.value, cur.lineno))
+                elif isinstance(op, (ast.In, ast.NotIn)) and \
+                        isinstance(comp, (ast.Tuple, ast.List, ast.Set)):
+                    for elt in comp.elts:
+                        if isinstance(elt, ast.Constant) and \
+                                isinstance(elt.value, str):
+                            literals.append((elt.value, cur.lineno))
+        cur = cur.orelse[0] if (len(cur.orelse) == 1
+                                and isinstance(cur.orelse[0], ast.If)) \
+            else None
+    return literals
+
+
+def lint_source(text: str, path: str = "<string>",
+                marked: Optional[bool] = None) -> list[Violation]:
+    """All violations (suppressed and not) in one module's source."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Violation(path, e.lineno or 0, "bad-suppression",
+                          f"unparseable module: {e.msg}")]
+    if marked is None:
+        marked = bool(_MARK_RE.search(text))
+    allows = _suppressions(text)
+    raw: list[Violation] = []
+
+    def add(line: int, rule: str, message: str):
+        raw.append(Violation(path, line, rule, message))
+
+    # -- module-wide rules --------------------------------------------------
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            leaf = callee.split(".")[-1] if callee else ""
+            if leaf == "categorical" and (
+                    ".random." in f".{callee}." or callee == "categorical"):
+                add(node.lineno, "categorical-routing",
+                    f"{callee or 'categorical'}(...) — "
+                    + RULES["categorical-routing"])
+            if marked:
+                desc = _is_reduction_call(node)
+                if desc is not None:
+                    add(node.lineno, "raw-reduction",
+                        f"{desc} — " + RULES["raw-reduction"])
+        elif isinstance(node, ast.Dict):
+            keys = [k.value for k in node.keys
+                    if isinstance(k, ast.Constant)
+                    and isinstance(k.value, str)]
+            hits = sorted(set(keys) & DISPATCH_NAMES)
+            callable_vals = sum(
+                isinstance(v, (ast.Lambda, ast.Name, ast.Attribute))
+                for v in node.values)
+            if len(hits) >= 2 and callable_vals >= 2:
+                add(node.lineno, "stringly-dispatch",
+                    f"dict dispatch over registered names {hits} — "
+                    + RULES["stringly-dispatch"])
+
+    seen_ifs: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.If) and id(node) not in seen_ifs:
+            literals = _if_chain_literals(node, seen_ifs)
+            hits = sorted({v for v, _ in literals} & DISPATCH_NAMES)
+            if len(hits) >= 2:
+                add(node.lineno, "stringly-dispatch",
+                    f"if/elif chain over registered names {hits} — "
+                    + RULES["stringly-dispatch"])
+
+    # -- traced-function rules ----------------------------------------------
+    for fn_node in _traced_nodes(tree):
+        for node in ast.walk(fn_node):
+            if isinstance(node, ast.Call):
+                base = _dotted(node.func)
+                root = base.split(".")[0] if base else ""
+                if root in _NP_BASES:
+                    attr = base.split(".")[-1]
+                    if attr not in _NP_META:
+                        add(node.lineno, "numpy-in-jit",
+                            f"{base}(...) — " + RULES["numpy-in-jit"])
+                elif base in ("os.getenv", "os.environ.get"):
+                    add(node.lineno, "env-read",
+                        f"{base}(...) — " + RULES["env-read"])
+            elif isinstance(node, ast.Subscript):
+                if _dotted(node.value) == "os.environ":
+                    add(node.lineno, "env-read",
+                        "os.environ[...] — " + RULES["env-read"])
+            elif isinstance(node, (ast.If, ast.While)):
+                if _jnp_valued(node.test):
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    add(node.lineno, "traced-branch",
+                        f"Python `{kind}` on a jnp expression — "
+                        + RULES["traced-branch"])
+
+    # -- apply suppressions --------------------------------------------------
+    out: list[Violation] = []
+    for v in sorted(raw, key=lambda v: (v.line, v.rule)):
+        sup = None
+        for line in (v.line, v.line - 1):
+            hit = allows.get(line)
+            if hit is not None and hit[0] == v.rule:
+                sup = hit
+                break
+        if sup is not None and sup[1]:
+            out.append(dataclasses.replace(v, suppressed=True,
+                                           justification=sup[1]))
+        else:
+            out.append(v)
+    for line, (rule, just) in sorted(allows.items()):
+        if rule not in RULES or rule == "bad-suppression":
+            out.append(Violation(path, line, "bad-suppression",
+                                 f"allow({rule}) names an unknown rule"))
+        elif not just:
+            out.append(Violation(
+                path, line, "bad-suppression",
+                f"allow({rule}) needs a justification: "
+                f"`# contract: allow({rule}): <why this is exact>`"))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_file(path: str) -> list[Violation]:
+    with open(path, encoding="utf-8") as fh:
+        return lint_source(fh.read(), path=path)
+
+
+def default_root() -> str:
+    """``src/repro`` relative to this file — the default lint target."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_tree(root: Optional[str] = None,
+              skip: Iterable[str] = ()) -> list[Violation]:
+    """Lint every ``*.py`` under ``root`` (default: ``src/repro``)."""
+    root = root or default_root()
+    skip = set(skip)
+    out: list[Violation] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for name in sorted(filenames):
+            if not name.endswith(".py") or name in skip:
+                continue
+            out.extend(lint_file(os.path.join(dirpath, name)))
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis lint", description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=None,
+                    help="directory to lint (default: src/repro)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also list suppressed violations")
+    args = ap.parse_args(argv)
+    violations = lint_tree(args.root)
+    active = [v for v in violations if not v.suppressed]
+    suppressed = [v for v in violations if v.suppressed]
+    for v in active:
+        print(v.format(), file=sys.stderr)
+    if args.show_suppressed:
+        for v in suppressed:
+            print(v.format())
+    print(f"contract lint: {len(active)} violation(s), "
+          f"{len(suppressed)} suppressed")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,231 @@
+"""Recompile sentinel — trace/compile budgets as machine-checked asserts.
+
+The suite planner's headline property ("a mixed-population suite compiles
+into 1-2 programs, not one per scenario") used to live in bench notes and
+ad-hoc counting closures.  This module counts what jax actually does:
+
+  * every jaxpr trace and XLA compile, via the ``jax.monitoring``
+    duration events (``/jax/core/compile/...``) — cache hits fire nothing;
+  * the *name* of each traced/compiled program, via the
+    ``jax._src.dispatch`` debug log ("Finished tracing + transforming
+    {name} for pjit", "Finished XLA compilation of jit({name})") — eager
+    op dispatch shows up under primitive names (``multiply``, ``iota``),
+    resident programs under their Python function names, so budgets can
+    be scoped to the programs under test and stay immune to incidental
+    eager-op compiles.
+
+Usage::
+
+    from repro.analysis import tracecheck
+
+    with tracecheck.expect(max_programs=2,
+                           pattern=tracecheck.PLANNER_PROGRAMS) as watch:
+        suite.run(mode="simulate", num_updates=2000)
+    # raises TraceBudgetExceeded on the way out if >2 matching compiles
+
+    with tracecheck.forbid("spec round-trip must not touch jax"):
+        Scenario.from_json(scn.to_json())
+
+    counted = tracecheck.counting(objective)   # Python-trace counter
+    sweep(counted, ...); assert counted.traces == 1
+
+The pytest fixture (``tests/conftest.py``) injects this module per-test.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import logging
+import re
+from typing import Optional
+
+_TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_COMPILE_MSG = re.compile(r"Finished XLA compilation of jit\((.+?)\) in ")
+_TRACE_MSG = re.compile(r"Finished tracing \+ transforming (.+?) for pjit")
+
+#: the inner functions of every resident suite program: the analyze bucket
+#: (``analyze_lanes``/``one``), the simulate bucket (``lanes``/``one`` for
+#: batched, ``fn`` for pallas, ``_simulate_stats`` per reference lane) and
+#: the trainer scan (``single``).  Budgets scoped to this pattern count
+#: planner programs only, never incidental eager-op compiles.
+PLANNER_PROGRAMS = r"^(lanes|analyze_lanes|one|fn|single|_simulate_stats)$"
+
+
+class TraceBudgetExceeded(AssertionError):
+    """A watched block traced/compiled more programs than its budget."""
+
+
+@dataclasses.dataclass
+class Watch:
+    """Counters for one watched block (still live inside the block)."""
+
+    traces: int = 0                # jaxpr traces (monitoring events)
+    compiles: int = 0              # XLA compiles (monitoring events)
+    compiled: list = dataclasses.field(default_factory=list)  # names
+    traced: list = dataclasses.field(default_factory=list)    # names
+
+    def programs(self, pattern: Optional[str] = None) -> list:
+        """Compiled program names, optionally filtered by regex."""
+        if pattern is None:
+            return list(self.compiled)
+        rx = re.compile(pattern)
+        return [n for n in self.compiled if rx.search(n)]
+
+    def retraces(self, pattern: Optional[str] = None) -> int:
+        """Traces beyond the first per program name (shape-driven
+        retraces of one jit object count here)."""
+        names = self.traced if pattern is None else [
+            n for n in self.traced if re.search(pattern, n)]
+        return len(names) - len(set(names))
+
+
+_active: list[Watch] = []
+_installed = False
+
+
+def _on_event(event: str, duration, **_kw) -> None:
+    if not _active:
+        return
+    if event == _TRACE_EVENT:
+        for w in _active:
+            w.traces += 1
+    elif event == _COMPILE_EVENT:
+        for w in _active:
+            w.compiles += 1
+
+
+class _QuietDispatchDebug(logging.Filter):
+    """Keep pre-existing stderr handlers at their old threshold.
+
+    Lowering ``jax._src.dispatch`` to DEBUG (so our handler sees the
+    per-program compile messages) would also spill those records onto
+    jax's own stderr ``StreamHandler`` attached to the parent ``jax``
+    logger.  This filter, added to the *pre-existing* handlers only,
+    drops the sub-WARNING records we unlocked — console behaviour stays
+    exactly as before installation."""
+
+    def filter(self, record: logging.LogRecord) -> bool:
+        return not (record.name == "jax._src.dispatch"
+                    and record.levelno < logging.WARNING)
+
+
+class _DispatchLogHandler(logging.Handler):
+    def emit(self, record: logging.LogRecord) -> None:
+        if not _active:
+            return
+        try:
+            msg = record.getMessage()
+        except Exception:  # noqa: BLE001 — never let logging break a run
+            return
+        m = _COMPILE_MSG.search(msg)
+        if m:
+            for w in _active:
+                w.compiled.append(m.group(1))
+            return
+        m = _TRACE_MSG.search(msg)
+        if m:
+            for w in _active:
+                w.traced.append(m.group(1))
+
+
+def _install() -> None:
+    """One process-wide listener + log handler dispatching to the active
+    watch stack (jax.monitoring has no unregister — never pile up)."""
+    global _installed
+    if _installed:
+        return
+    import jax
+    from jax import monitoring
+
+    monitoring.register_event_duration_secs_listener(_on_event)
+    # the per-program names are logged at DEBUG unless jax_log_compiles;
+    # capture them without enabling the (stderr-noisy) flag
+    logger = logging.getLogger("jax._src.dispatch")
+    if logger.getEffectiveLevel() > logging.DEBUG:
+        quiet = _QuietDispatchDebug()
+        node: Optional[logging.Logger] = logger
+        while node is not None:
+            for h in node.handlers:
+                h.addFilter(quiet)
+            node = node.parent if node.propagate else None
+        logger.setLevel(logging.DEBUG)
+    logger.addHandler(_DispatchLogHandler())
+    del jax
+    _installed = True
+
+
+@contextlib.contextmanager
+def watch():
+    """Count traces/compiles (and program names) inside the block."""
+    _install()
+    w = Watch()
+    _active.append(w)
+    try:
+        yield w
+    finally:
+        _active.remove(w)
+
+
+@contextlib.contextmanager
+def expect(max_programs: Optional[int] = None,
+           pattern: Optional[str] = None,
+           max_compiles: Optional[int] = None,
+           max_traces: Optional[int] = None,
+           what: str = ""):
+    """Budget-checked :func:`watch`: raises :class:`TraceBudgetExceeded`
+    on exit when the block exceeded any given budget.
+
+    ``max_programs`` bounds *named* XLA compiles matching ``pattern``
+    (default: every name) — the right check for planner budgets, immune
+    to eager-op compiles.  ``max_compiles``/``max_traces`` bound the raw
+    monitoring counters (eager ops included) — the right check for
+    "this block must not touch the compiler at all".
+    """
+    with watch() as w:
+        yield w
+    label = f" ({what})" if what else ""
+    if max_programs is not None:
+        progs = w.programs(pattern)
+        if len(progs) > max_programs:
+            raise TraceBudgetExceeded(
+                f"compiled {len(progs)} programs{label}, budget "
+                f"{max_programs}: {progs}")
+    if max_compiles is not None and w.compiles > max_compiles:
+        raise TraceBudgetExceeded(
+            f"{w.compiles} XLA compiles{label}, budget {max_compiles}: "
+            f"{w.compiled}")
+    if max_traces is not None and w.traces > max_traces:
+        raise TraceBudgetExceeded(
+            f"{w.traces} jaxpr traces{label}, budget {max_traces}: "
+            f"{w.traced}")
+
+
+def forbid(what: str = "block must not trace or compile"):
+    """The block must not trace or compile anything — cached dispatch
+    only (zero-budget :func:`expect`)."""
+    return expect(max_traces=0, max_compiles=0, what=what)
+
+
+def fresh() -> None:
+    """Clear jax's compilation caches for deterministic compile counts."""
+    import jax
+
+    jax.clear_caches()
+
+
+class counting:  # noqa: N801 — reads as a verb at call sites
+    """Wrap a function so each *Python execution* is counted.
+
+    Under jit, the wrapped body runs only while tracing — ``.traces`` is
+    exactly the number of times jax traced through ``fn``.  Replaces the
+    ad-hoc ``traces.append(1)`` closures the trace-count tests grew.
+    """
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.traces = 0
+
+    def __call__(self, *args, **kwargs):
+        self.traces += 1
+        return self.fn(*args, **kwargs)

@@ -27,6 +27,7 @@ All padded quantities agree with their static counterparts to float64
 round-off; ``tests/test_batched_optimizer.py`` cross-checks both paths.
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 from typing import Callable, Optional
 

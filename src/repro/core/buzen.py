@@ -39,6 +39,7 @@ because the analytic identities in the test-suite hold to 1e-12 only in
 float64.
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 import os
 from typing import NamedTuple, Optional
@@ -275,6 +276,7 @@ def brute_force_log_Z(params: NetworkParams, m: int) -> float:
     for i in range(n):
         stations.append((p[i] / mu_u[i], True))
     if params.mu_cs is not None:
+        # contract: allow(raw-reduction): host-side numpy in the O(C(m+S-1,S-1)) literal oracle — never traced, never padded
         stations.append((float(p.sum()) / float(params.mu_cs), False))
 
     S = len(stations)

@@ -11,6 +11,7 @@ Implements:
   * the rho-scalarized joint time–energy objective (Eq. 18).
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 from typing import NamedTuple, Optional
 
@@ -76,7 +77,10 @@ def energy_optimal_routing(params: NetworkParams, power: PowerProfile) -> jax.Ar
             raise ValueError("P_cs given but params.mu_cs is None")
         e = e + power.P_cs / params.mu_cs
     w = 1.0 / jnp.sqrt(e)
-    return w / jnp.sum(w)
+    # sequential client-axis sum: p*_E computed on a padded network must
+    # equal the unpadded result bitwise (padded rows have w finite but the
+    # caller masks them; the normalizer itself must not reassociate)
+    return w / seqsum(w)
 
 
 def minimal_energy(params: NetworkParams, consts: LearningConstants,
@@ -87,7 +91,7 @@ def minimal_energy(params: NetworkParams, consts: LearningConstants,
     if power.P_cs is not None:
         e = e + power.P_cs / params.mu_cs
     pref = 24.0 * consts.L * consts.delta / (n**2 * consts.eps)
-    return pref * (4.0 + consts.B / consts.eps) * jnp.sum(jnp.sqrt(e)) ** 2
+    return pref * (4.0 + consts.B / consts.eps) * seqsum(jnp.sqrt(e)) ** 2
 
 
 def joint_objective(params: NetworkParams, m: int, consts: LearningConstants,

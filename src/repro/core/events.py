@@ -45,6 +45,7 @@ slot index is returned so a caller can attach a payload (the parameter
 snapshot ring of ``repro.fl.engine`` is indexed by slot).
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 import functools
 from typing import NamedTuple, Optional
@@ -233,6 +234,7 @@ def _station_counts(phase, client, n):
     comp_total = count((phase == COMP_WAIT) | (phase == COMP_SERV))
     comp_serving = count(phase == COMP_SERV)
     up = count(phase == UP)
+    # contract: allow(raw-reduction): 0/1 indicator count over the task table — exact small-integer f64 under any association, and the table axis is m_max (never padded-n)
     cs_total = jnp.sum(
         jnp.where((phase == CS_WAIT) | (phase == CS_SERV), 1.0, 0.0))
     cs_busy = jnp.any(phase == CS_SERV)

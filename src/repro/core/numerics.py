@@ -9,6 +9,7 @@ Model code is unaffected: all model/kernel modules request explicit dtypes
 (bf16/f32), which x64 mode does not override.
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 import jax
 

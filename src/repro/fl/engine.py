@@ -43,6 +43,7 @@ time of the discarded K+1-th update it popped before breaking — a ~1/K
 relative difference).
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 import dataclasses
 from typing import Callable, NamedTuple, Optional
@@ -131,10 +132,12 @@ def max_throughput_bound(net: NetworkParams, m) -> float:
     """Distribution-free upper bound on the update rate ``lambda``:
     ``min(single-server capacity, m / E[pure service per cycle])``."""
     p = np.asarray(net.p, dtype=np.float64)
+    # contract: allow(raw-reduction): host-side numpy planning bound (scan sizing only) — the traced path never sees it
     p = p / p.sum()
     station = float(np.min(np.asarray(net.mu_c) / np.maximum(p, 1e-12)))
     if net.mu_cs is not None:
         station = min(station, float(net.mu_cs))
+    # contract: allow(raw-reduction): host-side numpy planning bound (scan sizing only) — the traced path never sees it
     cycle = float(np.sum(p * (1.0 / np.asarray(net.mu_d)
                               + 1.0 / np.asarray(net.mu_c)
                               + 1.0 / np.asarray(net.mu_u))))
@@ -263,6 +266,7 @@ class DeviceTrainer:
                     return st, upd.time
 
                 _, times = jax.lax.scan(body, st, None, length=K_bound)
+                # contract: allow(raw-reduction): boolean count over scan steps — exact integer arithmetic under any association
                 return jnp.sum(times <= horizon)
 
             self._jit_cache[key_stat] = jax.jit(jax.vmap(one))
@@ -319,6 +323,7 @@ class DeviceTrainer:
             g = jax.tree_util.tree_map(
                 lambda v, w: v.astype(w.dtype), g, params)
             if grad_clip is not None:
+                # contract: allow(raw-reduction): parameter-axis grad norm — model leaves are never padded along the client axis
                 norm = jnp.sqrt(sum(jnp.sum(jnp.square(v))
                                     for v in jax.tree_util.tree_leaves(g)))
                 factor = jnp.minimum(jnp.asarray(1.0, norm.dtype),
@@ -406,6 +411,7 @@ class DeviceTrainer:
                 final_loss = final_acc = jnp.zeros(())
                 snap_losses = snap_accs = jnp.zeros((G,))
 
+            # contract: allow(raw-reduction): int32 count of live updates over the scan axis — exact integer arithmetic under any association
             k_h = jnp.sum(live.astype(jnp.int32))
             delay_sum = jnp.zeros((n,)).at[clients_k].add(
                 jnp.where(live, delays.astype(jnp.float64), 0.0))

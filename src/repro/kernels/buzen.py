@@ -30,6 +30,7 @@ against brute-force state enumeration) in ``tests/test_kernels.py`` and
 ``tests/test_batched_optimizer.py``.
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 import functools
 from typing import Optional
@@ -66,8 +67,9 @@ def _buzen_kernel(rho_ref, init_ref, out_ref, u_scr, *, n_stations: int,
                           jnp.broadcast_to(u[None, :], (m_pad, m_pad)),
                           shifted, axis=1), NEG_INF)
     row_max = jnp.max(terms, axis=1)
-    new_u = row_max + jnp.log(
-        jnp.sum(jnp.exp(terms - row_max[:, None]), axis=1))
+    # contract: allow(raw-reduction): logsumexp over the m-convolution axis within ONE station — the client/station axis is the kernel's sequential grid loop, and this f32 path is rtol-validated, not bitwise
+    sumexp = jnp.sum(jnp.exp(terms - row_max[:, None]), axis=1)
+    new_u = row_max + jnp.log(sumexp)
     u_scr[...] = new_u
 
     @pl.when(i == n_stations - 1)

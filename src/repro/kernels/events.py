@@ -34,6 +34,7 @@ remains regular jnp around the kernel call (see
 ``repro.sim.batched_events``).
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 import functools
 from typing import Optional
@@ -83,9 +84,11 @@ def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
 
     def gather_i(table, j):
         # x64 mode promotes integer sums to int64: pin the gather to i32
+        # contract: allow(raw-reduction): one-hot gather — exactly one non-zero term, bitwise under any association
         return jnp.sum(jnp.where(idx == j, table, 0)).astype(jnp.int32)
 
     def gather_rate(row_ref, c):
+        # contract: allow(raw-reduction): one-hot gather — exactly one non-zero term, bitwise under any association
         return jnp.sum(jnp.where(cli == c, row_ref[...], 0.0))
 
     # -- the completing slot (parallel argmin over the clock table) ---------
@@ -126,11 +129,13 @@ def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
 
     # -- FIFO promotion at the compute station of client c ------------------
     promo_comp = is_down | is_comp
+    # contract: allow(raw-reduction): int32 indicator count over the [m_max] table — exact integer arithmetic, and the table axis is never padded-n
     serving_c = jnp.sum(((phase == E.COMP_SERV) & (client == c))
                         .astype(jnp.int32)) > 0
     waiting_c = (phase == E.COMP_WAIT) & (client == c)
     vals = jnp.where(waiting_c, seq, _BIG_SEQ)
     _, pick = _first_index_min(vals, idx, m_max)
+    # contract: allow(raw-reduction): int32 indicator count over the [m_max] table — exact integer arithmetic, and the table axis is never padded-n
     any_wait = jnp.sum(waiting_c.astype(jnp.int32)) > 0
     do_comp = promo_comp & ~serving_c & any_wait
     onep = (idx == pick) & do_comp
@@ -143,7 +148,9 @@ def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
         cs_waiting = phase == E.CS_WAIT
         vals_cs = jnp.where(cs_waiting, seq, _BIG_SEQ)
         _, pick_cs = _first_index_min(vals_cs, idx, m_max)
+        # contract: allow(raw-reduction): int32 indicator count over the [m_max] table — exact integer arithmetic, and the table axis is never padded-n
         cs_busy = jnp.sum((phase == E.CS_SERV).astype(jnp.int32)) > 0
+        # contract: allow(raw-reduction): int32 indicator count over the [m_max] table — exact integer arithmetic, and the table axis is never padded-n
         any_cs_wait = jnp.sum(cs_waiting.astype(jnp.int32)) > 0
         do_cs = promo_cs & ~cs_busy & any_cs_wait
         onec = (idx == pick_cs) & do_cs

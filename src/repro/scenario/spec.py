@@ -542,6 +542,7 @@ class Scenario:
         if self.energy is not None and not _is_tracer(self.energy.kappa):
             if len(self.energy.kappa) != self.network.n:
                 raise ValueError("energy/network population mismatch")
+        # contract: allow(stringly-dispatch): eager construction-time check that these two strategies need an EnergySpec — resolution itself routes through STRATEGIES
         if (self.strategy.name in ("energy_opt", "joint")
                 and self.energy is None):
             raise ValueError(

@@ -26,6 +26,7 @@ previously scattered across ``make_strategies`` and the ``make_*_objective``
 factories.
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 import dataclasses
 from typing import Callable, NamedTuple, Optional
@@ -708,8 +709,12 @@ def _build_analyze(m_max: int, has_power: bool):
 
     if has_power:
         return jax.jit(jax.vmap(one))
-    return jax.jit(jax.vmap(lambda prm, m, consts, _pw, rho:
-                            one(prm, m, consts, None, rho),
-                            in_axes=(0, 0, 0, None, 0)))
+
+    # named (not a lambda) so repro.analysis.tracecheck program budgets can
+    # identify the analyze bucket program in the compile log
+    def analyze_lanes(prm, m, consts, _pw, rho):
+        return one(prm, m, consts, None, rho)
+
+    return jax.jit(jax.vmap(analyze_lanes, in_axes=(0, 0, 0, None, 0)))
 
 

@@ -26,6 +26,7 @@ and :func:`build_lanes_fn` (the cached-program form ``ScenarioSuite``
 dispatches through).
 """
 from __future__ import annotations
+# contract: padded-n — reductions here are on the bitwise padding contract
 
 import functools
 from typing import Optional
@@ -116,8 +117,14 @@ def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
 
     if has_power:
         return jax.jit(jax.vmap(one))
-    return jax.jit(jax.vmap(lambda prm, m, key, _pw: one(prm, m, key, None),
-                            in_axes=(0, 0, 0, None)))
+
+    # named (not a lambda) so the compile log — and the
+    # repro.analysis.tracecheck program budgets — can identify the planner
+    # program by name
+    def lanes(prm, m, key, _pw):
+        return one(prm, m, key, None)
+
+    return jax.jit(jax.vmap(lanes, in_axes=(0, 0, 0, None)))
 
 
 def simulate_stats_lanes(params, ms, num_updates: int, *, warmup: int = 0,

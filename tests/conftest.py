@@ -17,6 +17,21 @@ import zlib
 # Make ``src`` importable when pytest is run without PYTHONPATH=src.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def tracecheck():
+    """The recompile sentinel (``repro.analysis.tracecheck``), per-test.
+
+    Use ``tracecheck.expect(...)`` / ``tracecheck.forbid(...)`` /
+    ``tracecheck.counting(fn)`` — see the module docstring.  Imported
+    lazily so collecting jax-free test modules stays jax-free.
+    """
+    from repro.analysis import tracecheck as tc
+
+    return tc
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:

@@ -1,0 +1,445 @@
+"""The static-analysis subsystem (``repro.analysis``).
+
+Covers the three parts and their acceptance criteria:
+  * contract linter: every rule has pass/fail fixture snippets, the
+    suppression grammar is enforced (justification mandatory, unknown
+    rules rejected), the hardcoded registry names track the live
+    registries, and the repo itself lints clean;
+  * jaxpr auditor: the resident-program registry is complete, the
+    report matches the golden schema (``tests/data/audit_schema.json``)
+    and its f64 / host-callback findings are populated;
+  * recompile sentinel: a deliberately-recompiling function trips its
+    budget, cached dispatch stays silent, and the mixed-population
+    suite planner holds its "1-2 programs" budget — with a mutation
+    (per-scenario re-planning, the pre-suite behaviour) shown to FAIL
+    the budget, so the sentinel is known to have teeth.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis import lint
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+def _active(violations):
+    return [v for v in violations if not v.suppressed]
+
+
+def _rules(violations):
+    return sorted({v.rule for v in _active(violations)})
+
+
+# ---------------------------------------------------------------------------
+# linter: per-rule fail + pass snippets
+# ---------------------------------------------------------------------------
+
+def test_raw_reduction_flagged_in_marked_modules():
+    bad = "import jax.numpy as jnp\ntotal = jnp.sum(x)\n"
+    assert _rules(lint.lint_source(bad, marked=True)) == ["raw-reduction"]
+    # the bitwise-sequential forms pass
+    good = "from repro.core.numerics import seqsum\ntotal = seqsum(x)\n"
+    assert lint.lint_source(good, marked=True) == []
+    # unmarked modules may sum freely (they are off the padding contract)
+    assert lint.lint_source(bad, marked=False) == []
+
+
+def test_raw_reduction_flags_method_calls_and_cumsum():
+    src = "a = x.sum()\nb = jnp.cumsum(y)\nc = arr.cumsum(axis=0)\n"
+    vs = _active(lint.lint_source(src, marked=True))
+    assert [v.rule for v in vs] == ["raw-reduction"] * 3
+    assert [v.line for v in vs] == [1, 2, 3]
+
+
+def test_marker_comment_autodetected():
+    src = ("# contract: padded-n — client-axis reductions live here\n"
+           "import jax.numpy as jnp\n"
+           "total = jnp.sum(x)\n")
+    assert _rules(lint.lint_source(src)) == ["raw-reduction"]
+
+
+def test_categorical_routing_flagged_everywhere():
+    # flagged regardless of the padding marker: Gumbel draws with the
+    # logits' shape break bitwise padding *and* cost O(n) randomness
+    src = "i = jax.random.categorical(key, logits)\n"
+    assert _rules(lint.lint_source(src, marked=False)) == \
+        ["categorical-routing"]
+    src2 = "from jax.random import categorical\ni = categorical(k, lg)\n"
+    assert _rules(lint.lint_source(src2)) == ["categorical-routing"]
+    # unrelated .categorical attributes on other modules pass
+    assert lint.lint_source("x = pd.categorical(s)\n") == []
+
+
+def test_stringly_dispatch_flags_if_chains_and_dicts():
+    chain = (
+        'def f(law):\n'
+        '    if law == "exponential":\n'
+        '        return 1\n'
+        '    elif law == "lognormal":\n'
+        '        return 2\n'
+    )
+    assert _rules(lint.lint_source(chain)) == ["stringly-dispatch"]
+    membership = (
+        'def f(s):\n'
+        '    if s in ("energy_opt", "joint"):\n'
+        '        return 1\n'
+    )
+    assert _rules(lint.lint_source(membership)) == ["stringly-dispatch"]
+    table = 'FNS = {"exponential": draw_e, "deterministic": draw_d}\n'
+    assert _rules(lint.lint_source(table)) == ["stringly-dispatch"]
+
+
+def test_stringly_dispatch_ignores_non_registry_strings():
+    # branching on strings that are not registered law/strategy names is
+    # ordinary code, and a single registered name is validation, not
+    # dispatch
+    ok = (
+        'def f(mode):\n'
+        '    if mode == "fast":\n'
+        '        return 1\n'
+        '    elif mode == "slow":\n'
+        '        return 2\n'
+        'def g(law):\n'
+        '    if law == "exponential":\n'
+        '        return 1\n'
+    )
+    assert lint.lint_source(ok) == []
+
+
+def test_numpy_in_jit_flagged_only_inside_traced_functions():
+    bad = (
+        'import numpy as np\n'
+        '@jax.jit\n'
+        'def f(x):\n'
+        '    return np.sin(x)\n'
+    )
+    assert _rules(lint.lint_source(bad)) == ["numpy-in-jit"]
+    # numpy metadata (dtypes etc.) is host-safe under a trace
+    meta = (
+        '@jax.jit\n'
+        'def f(x):\n'
+        '    return x.astype(np.float32(0).dtype)\n'
+    )
+    assert lint.lint_source(meta) == []
+    # the same call outside any traced function passes
+    assert lint.lint_source("y = np.sin(x)\n") == []
+
+
+def test_numpy_in_jit_sees_functions_passed_to_transforms():
+    src = (
+        'def body(c, _):\n'
+        '    return np.add(c, 1), None\n'
+        'out = jax.lax.scan(body, c0, None, length=3)\n'
+    )
+    assert _rules(lint.lint_source(src)) == ["numpy-in-jit"]
+
+
+def test_traced_branch_flagged():
+    bad = (
+        '@jax.jit\n'
+        'def f(x):\n'
+        '    if jnp.any(x > 0):\n'
+        '        return x\n'
+        '    return -x\n'
+    )
+    assert _rules(lint.lint_source(bad)) == ["traced-branch"]
+    good = (
+        '@jax.jit\n'
+        'def f(x):\n'
+        '    return jnp.where(x > 0, x, -x)\n'
+    )
+    assert lint.lint_source(good) == []
+
+
+def test_env_read_flagged_inside_traced_functions():
+    bad = (
+        '@jax.jit\n'
+        'def f(x):\n'
+        '    if os.environ.get("REPRO_SIM_BACKEND") == "x":\n'
+        '        return x\n'
+        '    y = os.environ["REPRO_FLAG"]\n'
+        '    z = os.getenv("REPRO_MODE")\n'
+        '    return x\n'
+    )
+    vs = _active(lint.lint_source(bad))
+    assert [v.rule for v in vs] == ["env-read"] * 3
+    # resolving the flag eagerly, outside the trace, passes
+    ok = ('backend = os.environ.get("REPRO_SIM_BACKEND")\n'
+          '@jax.jit\n'
+          'def f(x):\n'
+          '    return x\n')
+    assert lint.lint_source(ok) == []
+
+
+# ---------------------------------------------------------------------------
+# linter: suppression grammar
+# ---------------------------------------------------------------------------
+
+def test_suppression_with_justification_suppresses():
+    src = ("import jax.numpy as jnp\n"
+           "# contract: allow(raw-reduction): exact 0/1 indicator count\n"
+           "total = jnp.sum(flags)\n")
+    vs = lint.lint_source(src, marked=True)
+    assert len(vs) == 1 and vs[0].suppressed
+    assert vs[0].justification == "exact 0/1 indicator count"
+    # trailing same-line comments work too
+    inline = ("import jax.numpy as jnp\n"
+              "total = jnp.sum(flags)"
+              "  # contract: allow(raw-reduction): indicator count\n")
+    vs = lint.lint_source(inline, marked=True)
+    assert len(vs) == 1 and vs[0].suppressed
+
+
+def test_suppression_without_justification_rejected():
+    src = ("import jax.numpy as jnp\n"
+           "# contract: allow(raw-reduction)\n"
+           "total = jnp.sum(flags)\n")
+    rules = _rules(lint.lint_source(src, marked=True))
+    # the violation stays active AND the empty allow is itself flagged
+    assert rules == ["bad-suppression", "raw-reduction"]
+
+
+def test_suppression_of_unknown_rule_rejected():
+    src = "# contract: allow(frobnicate): because reasons\nx = 1\n"
+    assert _rules(lint.lint_source(src)) == ["bad-suppression"]
+
+
+def test_suppression_must_match_the_rule():
+    src = ("import jax.numpy as jnp\n"
+           "# contract: allow(numpy-in-jit): wrong rule for this line\n"
+           "total = jnp.sum(flags)\n")
+    assert "raw-reduction" in _rules(lint.lint_source(src, marked=True))
+
+
+# ---------------------------------------------------------------------------
+# linter: the repo itself + registry drift
+# ---------------------------------------------------------------------------
+
+def test_repo_lints_clean():
+    """Acceptance: zero unsuppressed violations across ``src/repro``."""
+    active = _active(lint.lint_tree())
+    assert not active, "\n".join(v.format() for v in active)
+
+
+def test_repo_suppressions_all_carry_justifications():
+    for v in lint.lint_tree():
+        if v.suppressed:
+            assert v.justification, v.format()
+
+
+def test_hardcoded_registry_names_match_live_registries():
+    """The linter hardcodes law/strategy names to stay import-light;
+    this is the drift guard the hardcoding is conditioned on."""
+    import repro.scenario.suite  # noqa: F401 — registers the strategies
+    from repro.scenario import STRATEGIES, law_names
+
+    assert set(law_names()) == set(lint.LAW_NAMES)
+    assert set(STRATEGIES.names()) == set(lint.STRATEGY_NAMES)
+
+
+def test_lint_cli_green_on_repo(capsys):
+    assert lint.main([]) == 0
+    out = capsys.readouterr().out
+    assert "contract lint: 0 violation(s)" in out
+
+
+# ---------------------------------------------------------------------------
+# recompile sentinel
+# ---------------------------------------------------------------------------
+
+def test_sentinel_catches_deliberate_recompiles(tracecheck):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def recompiles_me(x):
+        return x * 2.0
+
+    with pytest.raises(tracecheck.TraceBudgetExceeded,
+                       match="recompiles_me"):
+        with tracecheck.expect(max_programs=1, pattern="^recompiles_me$",
+                               what="shape-polymorphic loop"):
+            for k in (2, 3, 4):  # three shapes -> three compiles
+                recompiles_me(jnp.ones(k))
+
+
+def test_sentinel_allows_cached_dispatch(tracecheck):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def cached_fn(x):
+        return x + 1.0
+
+    cached_fn(jnp.ones(3))  # warm the cache
+    with tracecheck.forbid("second same-shape call must hit the cache"):
+        cached_fn(jnp.ones(3))
+
+
+def test_sentinel_watch_records_program_names(tracecheck):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def named_program(x):
+        return x - 0.5
+
+    with tracecheck.watch() as w:
+        named_program(jnp.ones(4))
+    assert w.programs("^named_program$") == ["named_program"]
+    assert w.compiles >= 1 and w.traces >= 1
+
+
+def test_counting_wrapper_counts_python_traces(tracecheck):
+    import jax
+    import jax.numpy as jnp
+
+    counted = tracecheck.counting(lambda x: x * 3.0)
+    fn = jax.jit(counted)
+    fn(jnp.ones(2))
+    fn(jnp.ones(2))  # cache hit: body must not run again
+    fn(jnp.ones(5))  # new shape: one more trace
+    assert counted.traces == 2
+
+
+# ---------------------------------------------------------------------------
+# sentinel x suite planner: the machine-checked "1-2 programs" property
+# ---------------------------------------------------------------------------
+
+def _mixed_population_suite(seeds=(0,)):
+    from repro.core import LearningConstants
+    from repro.scenario import (EXPLICIT, LearningSpec, NetworkSpec,
+                                Scenario, ScenarioSuite, StrategySpec)
+
+    consts = LearningConstants(M=2.0, G=5.0)
+    scns = {}
+    for i, n in enumerate((3, 4, 6)):  # mixed populations: padded-n planner
+        rng = np.random.default_rng(40 + i)
+        net = NetworkSpec(mu_c=rng.uniform(0.5, 6.0, n),
+                          mu_d=rng.uniform(0.5, 6.0, n),
+                          mu_u=rng.uniform(0.5, 6.0, n))
+        scns[f"n{n}"] = Scenario(
+            network=net, learning=LearningSpec(consts=consts),
+            strategy=StrategySpec(EXPLICIT, p=rng.dirichlet(np.ones(n)),
+                                  m=n - 1))
+    return ScenarioSuite(scns, seeds=seeds)
+
+
+# NOTE: each planner test uses a unique num_updates so the process-wide
+# build_lanes_fn memoization cannot leak compiled programs across tests.
+
+def test_suite_mixed_population_holds_program_budget(tracecheck):
+    suite = _mixed_population_suite(seeds=(0, 1))
+    with tracecheck.expect(max_programs=2,
+                           pattern=tracecheck.PLANNER_PROGRAMS,
+                           what="mixed-n suite planner") as w:
+        res = suite.run(mode="simulate", num_updates=173)
+    assert res.programs == 1  # one law bucket -> one padded program
+    assert len(w.programs(tracecheck.PLANNER_PROGRAMS)) <= 2
+
+
+def test_sentinel_catches_per_scenario_replanning(tracecheck):
+    """Mutation: re-plan each scenario in its own suite (the pre-padded-n
+    behaviour — one program per population).  The sentinel must fail it,
+    proving the budget check has teeth."""
+    from repro.scenario import ScenarioSuite
+
+    suite = _mixed_population_suite(seeds=(0,))
+    with pytest.raises(tracecheck.TraceBudgetExceeded, match="budget"):
+        with tracecheck.expect(max_programs=2,
+                               pattern=tracecheck.PLANNER_PROGRAMS,
+                               what="per-scenario re-planning mutation"):
+            for name, scn in suite.scenarios.items():
+                ScenarioSuite({name: scn}, seeds=(0,)).run(
+                    mode="simulate", num_updates=179)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr auditor
+# ---------------------------------------------------------------------------
+
+EXPECTED_PROGRAMS = {
+    "suite_analyze", "suite_simulate_batched", "suite_simulate_pallas",
+    "simulate_reference_lane", "trainer_scan", "kernel_buzen",
+    "kernel_events",
+}
+
+
+def test_audit_registry_covers_every_resident_program():
+    from repro.analysis import audit
+
+    assert set(audit.resident_programs()) == EXPECTED_PROGRAMS
+
+
+@pytest.fixture(scope="module")
+def audit_report():
+    """A two-program report (the cheap analyze + Buzen-kernel builders);
+    the full seven-program artifact is CI's job (AUDIT_jaxpr.json)."""
+    from repro.analysis import audit
+
+    return audit.build_report(names=["suite_analyze", "kernel_buzen"])
+
+
+_SCHEMA_TYPES = {"str": str, "int": int, "number": (int, float),
+                 "bool": bool}
+
+
+def _check_schema(spec, value, path="report"):
+    if isinstance(spec, str):
+        assert isinstance(value, _SCHEMA_TYPES[spec]), \
+            f"{path}: {value!r} is not {spec}"
+        if spec in ("int", "number"):
+            assert not isinstance(value, bool), f"{path}: bool is not {spec}"
+    elif isinstance(spec, list):
+        assert isinstance(value, list), f"{path}: {type(value)} != list"
+        for i, item in enumerate(value):
+            _check_schema(spec[0], item, f"{path}[{i}]")
+    elif isinstance(spec, dict):
+        assert isinstance(value, dict), f"{path}: {type(value)} != dict"
+        if "__each__" in spec:
+            for k, v in value.items():
+                _check_schema(spec["__each__"], v, f"{path}.{k}")
+        else:
+            missing = set(spec) - set(value)
+            extra = set(value) - set(spec)
+            assert not missing, f"{path}: missing keys {sorted(missing)}"
+            assert not extra, f"{path}: unexpected keys {sorted(extra)}"
+            for k in spec:
+                _check_schema(spec[k], value[k], f"{path}.{k}")
+    else:  # pragma: no cover - malformed golden file
+        raise AssertionError(f"bad schema node at {path}: {spec!r}")
+
+
+def test_audit_report_matches_golden_schema(audit_report):
+    with open(os.path.join(DATA, "audit_schema.json")) as fh:
+        golden = json.load(fh)
+    _check_schema(golden, audit_report)
+    assert audit_report["schema"] == {"name": "repro.analysis.audit",
+                                      "version": 1}
+
+
+def test_audit_findings_populated(audit_report):
+    progs = audit_report["programs"]
+    analyze = progs["suite_analyze"]
+    # x64 clocks: the closed forms carry f64 primitives off-TPU, and the
+    # auditor must see (and blame) them with source-located examples
+    assert audit_report["x64_enabled"] is True
+    assert analyze["f64"]["count"] > 0
+    assert analyze["f64"]["examples"]
+    assert analyze["tpu_compilable"] is False
+    assert "f64-primitives" in analyze["tpu_blockers"]
+    # host-callback findings are populated (count 0 is a finding too)
+    for entry in progs.values():
+        assert entry["host_callbacks"]["count"] == 0
+        assert entry["total_primitives"] > 0
+    # the f32 Buzen kernel is the one TPU-ready program of this pair
+    buzen = progs["kernel_buzen"]
+    assert buzen["f64"]["count"] == 0
+    assert buzen["tpu_compilable"] is True
+    summary = audit_report["summary"]
+    assert summary["programs"] == 2
+    assert "kernel_buzen" in summary["tpu_ready"]
+    assert "suite_analyze" in summary["tpu_blocked"]

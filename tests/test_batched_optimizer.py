@@ -164,23 +164,19 @@ def test_joint_optimal_batched_matches_sequential():
 # no per-m recompilation: ONE trace of the objective per sweep
 # ---------------------------------------------------------------------------
 
-def test_sweep_traces_objective_once():
+def test_sweep_traces_objective_once(tracecheck):
     rng = np.random.default_rng(5)
     n, m_hi = 4, 8
     params = reference_params(rng, n)
-    inner = make_time_objective_padded(params, CONSTS, m_hi)
-    traces = []
-
-    def counting_obj(p, m, logZ):
-        traces.append(1)  # Python side effect fires once per trace only
-        return inner(p, m, logZ)
-
-    batched_concurrency_sweep(counting_obj, params,
+    counted = tracecheck.counting(
+        make_time_objective_padded(params, CONSTS, m_hi))
+    batched_concurrency_sweep(counted, params,
                               m_grid=jnp.arange(1, m_hi + 1), steps=30)
     # scan + value_and_grad trace the loss a few times, plus one final
     # row_values evaluation — but never once per m (the B=8 grid rows all
     # share a single vmapped trace)
-    assert len(traces) < m_hi, f"objective traced {len(traces)}x for B={m_hi}"
+    assert counted.traces < m_hi, \
+        f"objective traced {counted.traces}x for B={m_hi}"
 
 
 # ---------------------------------------------------------------------------

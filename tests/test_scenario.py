@@ -18,7 +18,6 @@ Covers the acceptance criteria of the Scenario redesign:
     round-trips and builds its spec without any jax dispatch.
 """
 import json
-import logging
 import os
 import sys
 
@@ -455,21 +454,17 @@ def test_suite_train_matches_run_strategy_grid():
 # benchmark scenarios: registered specs round-trip and build trace-free
 # ---------------------------------------------------------------------------
 
-def test_bench_scenarios_roundtrip_and_build_without_tracing(caplog):
+def test_bench_scenarios_roundtrip_and_build_without_tracing(tracecheck):
     from benchmarks.scenarios import BENCH_SCENARIOS
 
     assert len(BENCH_SCENARIOS) >= 8
-    dispatch_logger = logging.getLogger("jax._src.dispatch")
-    with jax.log_compiles(True):
-        with caplog.at_level(logging.WARNING, logger="jax._src.dispatch"):
-            rebuilt = {}
-            for name, scn in BENCH_SCENARIOS.items():
-                s2 = Scenario.from_json(scn.to_json())
-                assert s2 == scn, name
-                assert s2.hash() == scn.hash()
-                rebuilt[name] = s2
-    traced = [r for r in caplog.records if "tracing" in r.getMessage()]
-    assert not traced, f"spec round-trip traced jax code: {traced[:3]}"
+    rebuilt = {}
+    with tracecheck.forbid("spec round-trip must not touch the compiler"):
+        for name, scn in BENCH_SCENARIOS.items():
+            s2 = Scenario.from_json(scn.to_json())
+            assert s2 == scn, name
+            assert s2.hash() == scn.hash()
+            rebuilt[name] = s2
     # materialization is eager and well-formed (tiny convert ops only)
     for name, scn in rebuilt.items():
         params = scn.params()

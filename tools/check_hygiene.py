@@ -1,58 +1,29 @@
 #!/usr/bin/env python
-"""Repo-hygiene check: fail when generated files are tracked by git.
+"""Thin shim over :mod:`repro.analysis.hygiene` (the logic moved there).
 
-Bytecode has been accidentally committed before (27 ``__pycache__/*.pyc``
-files rode along in a PR); ``.gitignore`` prevents *new* additions, but
-only a check that runs in CI/tier-1 keeps already-tracked junk from
-coming back.  Run directly (exit 1 on violations) or import
-:func:`tracked_junk` from the tests.
+Kept so existing entry points (``python tools/check_hygiene.py``, the
+tier-1 wrapper in ``tests/test_hygiene.py``) keep working; prefer
+``python -m repro.analysis hygiene`` — or plain ``python -m
+repro.analysis``, which runs the contract linter too.
 """
 from __future__ import annotations
 
 import os
-import subprocess
 import sys
 
-REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_SRC = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "src"))
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-# path fragments that must never be tracked
-FORBIDDEN = ("__pycache__/", ".pytest_cache/")
-FORBIDDEN_SUFFIXES = (".pyc", ".pyo")
-
-
-def tracked_files(repo_root: str = REPO_ROOT) -> list[str]:
-    """``git ls-files`` of the repo (empty if git is unavailable)."""
-    try:
-        out = subprocess.run(
-            ["git", "ls-files"], cwd=repo_root, check=True,
-            capture_output=True, text=True)
-    except (OSError, subprocess.CalledProcessError):
-        return []
-    return [line for line in out.stdout.splitlines() if line]
-
-
-def tracked_junk(repo_root: str = REPO_ROOT) -> list[str]:
-    """Tracked paths violating repo hygiene (bytecode, tool caches)."""
-    bad = []
-    for path in tracked_files(repo_root):
-        if (path.endswith(FORBIDDEN_SUFFIXES)
-                or any(frag in path for frag in FORBIDDEN)):
-            bad.append(path)
-    return bad
-
-
-def main() -> int:
-    bad = tracked_junk()
-    if bad:
-        print("tracked files violating repo hygiene:", file=sys.stderr)
-        for path in bad:
-            print(f"  {path}", file=sys.stderr)
-        print(f"fix with: git rm --cached {' '.join(bad[:5])} ...",
-              file=sys.stderr)
-        return 1
-    print(f"hygiene OK ({len(tracked_files())} tracked files clean)")
-    return 0
-
+from repro.analysis.hygiene import (  # noqa: E402,F401 — re-exports
+    FORBIDDEN,
+    FORBIDDEN_SUFFIXES,
+    REPO_ROOT,
+    main,
+    tracked_files,
+    tracked_junk,
+)
 
 if __name__ == "__main__":
     raise SystemExit(main())
