@@ -1,0 +1,152 @@
+"""Class-aggregation scaling sweep: population size as a free variable.
+
+The class axis makes every cost O(#classes) instead of O(n):
+
+  * closed forms — the class Buzen DP + class-weighted population sums
+    (``repro.core.batched.*_classes``) vs the padded per-client forms at
+    the same (n, m); the tracked number is ``speedup_vs_per_client`` at
+    n = 10^4 (the per-client DP is O(n m^2), the class DP O(C m^2));
+  * event engine — the class-aggregated engine
+    (``repro.core.events.simulate_stats_classes``) across
+    n = 10^2 / 10^4 / 10^6 members at fixed C: all three share ONE
+    compiled program (the population enters only through the ``count``
+    data), so the per-event cost column is n-independent;
+  * suite sharding — the same class suite through ``backend="batched"``
+    vs ``backend="sharded"`` (``repro.sim.sharded``): bitwise-equal
+    entries, lanes split across all local devices (1 on plain CPU;
+    the CI leg forces 8 with ``--xla_force_host_platform_device_count``).
+
+Rows are keyed by ``Scenario.hash()`` into ``BENCH_smoke.json`` via the
+``class_scale`` entry of ``benchmarks.scenarios.BENCH_SCENARIOS``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched import (round_complexity_padded,
+                                round_complexity_classes, throughput_padded,
+                                wallclock_time_classes)
+from repro.core.buzen import (class_log_normalizing_constants,
+                              log_normalizing_constants)
+from repro.scenario import ScenarioSuite
+from repro.sim.sharded import device_count
+
+from .common import row, time_us
+from .scenarios import CONSTS as _CONSTS
+from .scenarios import class_scale_scenario, record
+
+
+def _class_forms_fn(m_max: int):
+    @jax.jit
+    def fn(classes, m):
+        logZ = class_log_normalizing_constants(classes, m_max)
+        return (throughput_padded(logZ, m),
+                round_complexity_classes(classes, m, _CONSTS, logZ, m_max))
+
+    return fn
+
+
+def _client_forms_fn(m_max: int):
+    @jax.jit
+    def fn(prm, m):
+        logZ = log_normalizing_constants(prm, m_max)
+        return (throughput_padded(logZ, m),
+                round_complexity_padded(prm, m, _CONSTS, logZ, m_max))
+
+    return fn
+
+
+def run(ns=(100, 10_000, 1_000_000), Cs=(1, 4, 16), m: int = 8,
+        m_max: int = 16, num_updates: int = 300, warmup: int = 100,
+        seeds=(0, 1), client_ns=(100, 10_000)) -> list[str]:
+    out = []
+    record("class_scale", class_scale_scenario(10_000, 4, m=m))
+
+    # -- closed forms: class-space across the (n, C) grid, per-client
+    #    comparison where the expansion is still tractable ------------------
+    class_fn = _class_forms_fn(m_max)  # one jit; each C retraces once
+    client_fn = _client_forms_fn(m_max)
+    for n in ns:
+        for C in Cs:
+            scn = class_scale_scenario(n, C, m=m)
+            classes = scn.class_params()
+            us = time_us(lambda c=classes: jax.block_until_ready(
+                class_fn(c, m)))
+            derived = f"n={n}_C={C}_m={m}"
+            if C == Cs[1 % len(Cs)] and n in client_ns:
+                # per-client oracle at the same (n, m): expanded params +
+                # O(n m^2) DP (n = 10^6 is intentionally NOT expanded —
+                # that is the point of the class axis; its row reports the
+                # class-space cost only)
+                prm = scn.params()
+                thr_c, k_c = class_fn(classes, m)
+                thr_p, k_p = client_fn(prm, m)
+                us_pc = time_us(lambda: jax.block_until_ready(
+                    client_fn(prm, m)))
+                derived += (f"_speedup_vs_per_client={us_pc / us:.1f}x"
+                            f"_thr_rel_err="
+                            f"{abs(float(thr_c - thr_p)) / float(thr_p):.2e}"
+                            f"_K_rel_err="
+                            f"{abs(float(k_c - k_p)) / float(k_p):.2e}")
+            out.append(row(f"class_forms_n{n}_C{C}", us, derived))
+
+    # -- event engine: ONE compiled class program per C; the n sweep at
+    #    fixed C reuses it (count is data), so per-event cost is flat ------
+    from repro.core.events import simulate_stats_classes
+
+    C_ev = Cs[1 % len(Cs)]
+    mult = 3
+    num_events = mult * (num_updates + warmup) + mult * m + 8
+    for n in ns:
+        classes = class_scale_scenario(n, C_ev, m=m).class_params()
+
+        def go(c=classes):
+            st = simulate_stats_classes(c, m, num_updates, warmup=warmup,
+                                        m_max=m)
+            jax.block_until_ready(st.throughput)
+            return st
+
+        go()  # compile (shared across the n sweep at fixed C)
+        t0 = time.perf_counter()
+        st = go()
+        us = (time.perf_counter() - t0) * 1e6
+        thr = float(np.mean(np.asarray(st.throughput)))
+        out.append(row(
+            f"class_events_n{n}_C{C_ev}", us,
+            f"us_per_event={us / num_events:.2f}_updates={num_updates}"
+            f"_thr={thr:.3f}"))
+
+    # -- suite sharding: batched vs sharded on the same class lanes --------
+    suite_b = ScenarioSuite([class_scale_scenario(n, C_ev, m=m)
+                             for n in ns], seeds=seeds)
+    suite_s = ScenarioSuite([class_scale_scenario(n, C_ev, m=m)
+                             for n in ns], seeds=seeds)
+
+    def run_suite(suite, backend):
+        t0 = time.perf_counter()
+        res = suite.run(mode="simulate", num_updates=num_updates,
+                        warmup=warmup, backend=backend)
+        return res, (time.perf_counter() - t0) * 1e6
+
+    res_b, _ = run_suite(suite_b, "batched")    # compile
+    res_s, _ = run_suite(suite_s, "sharded")
+    suite_b._result_cache.clear()
+    suite_s._result_cache.clear()
+    res_b, us_b = run_suite(suite_b, "batched")
+    res_s, us_s = run_suite(suite_s, "sharded")
+    bitwise = all(
+        bool(jnp.all(jnp.asarray(x) == jnp.asarray(y)))
+        for k in res_b.entries
+        for a, b in zip(res_b.entries[k], res_s.entries[k])
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)))
+    out.append(row(
+        "class_suite_sharded", us_s,
+        f"devices={device_count()}_lanes={len(ns) * len(seeds)}"
+        f"_batched_us={us_b:.0f}_speedup={us_b / us_s:.2f}x"
+        f"_bitwise_vs_batched={bitwise}"))
+    return out

@@ -98,6 +98,56 @@ def run(scale: int = 1, m: int = 132, lanes: int = 6,
                 derived += f"_bitwise_vs_reference={bitwise}"
         out.append(row(f"events_scale_{backend}", us, derived))
 
+    # the loop-invariant routing-CDF hoist: "before" rebuilds the O(n)
+    # sequential seqcumsum inside every scan step (route_prefix=None),
+    # "after" computes it once outside and passes it in — everything else
+    # about the two programs is identical, and the trajectories are the
+    # same seqcumsum of the same p, so the work compared is bitwise-equal.
+    # On CPU the XLA scan already hoists the loop-invariant cumsum, so this
+    # row sits near 1.0x here — it exists to catch the compiled-TPU path
+    # (no LICM across a pallas_call boundary) and any regression that makes
+    # the prefix loop-variant again
+    from repro.core import events as ev
+    from repro.core.numerics import seqcumsum
+
+    mult = 4 if params.mu_cs is not None else 3
+    num_events = mult * (num_updates + warmup) + mult * m + 8
+
+    def build(hoisted):
+        @jax.jit
+        def go(prm, key):
+            st = ev.init_state(prm, m, key, m_max=m, warmup=warmup,
+                               cap=warmup + num_updates)
+            prefix = seqcumsum(prm.p) if hoisted else None
+
+            def body(s, _):
+                s, _o = ev.step_event(prm, s, route_prefix=prefix)
+                return s, None
+
+            st, _ = jax.lax.scan(body, st, None, length=num_events)
+            return ev.finalize_stats(st)
+
+        return go
+
+    before_fn, after_fn = build(False), build(True)
+    key0 = jax.random.PRNGKey(0)
+
+    def t(fn):
+        jax.block_until_ready(fn().throughput)  # compile
+        min_us = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn().throughput)
+            us = (time.perf_counter() - t0) * 1e6
+            min_us = us if min_us is None else min(min_us, us)
+        return min_us
+
+    us_before = t(lambda: before_fn(params, key0))
+    us_after = t(lambda: after_fn(params, key0))
+    out.append(row("events_scale_cdf_hoist", us_after,
+                   f"n={n}_before_us={us_before:.0f}"
+                   f"_speedup={us_before / us_after:.2f}x"))
+
     # the same workload through the Scenario layer: one bucketed program,
     # then a re-run served entirely from the suite-level result cache
     suite = ScenarioSuite(scn, seeds=tuple(range(lanes)))

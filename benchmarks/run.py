@@ -24,7 +24,8 @@ sys.path.insert(0, _REPO_ROOT)  # `import benchmarks` when run as a script
 
 
 def build_suites(mode: str, backends=None):
-    from benchmarks import (bench_concurrency_sweep, bench_energy_joint,
+    from benchmarks import (bench_class_scale, bench_concurrency_sweep,
+                            bench_energy_joint,
                             bench_events_scale, bench_kernels, bench_pareto,
                             bench_population_sweep, bench_pruned_sweep,
                             bench_queueing, bench_round_optimization,
@@ -45,6 +46,10 @@ def build_suites(mode: str, backends=None):
             # paper-scale (n=100, m_max=132) sim-backend sweep
             ("events_scale", lambda: bench_events_scale.run(
                 backends=backends)),
+            # class aggregation: n = 10^2..10^6 members as O(#classes)
+            # closed forms + event engine, plus the sharded-suite row
+            ("class_scale", lambda: bench_class_scale.run(
+                num_updates=200, warmup=100, seeds=(0, 1))),
             ("scenario_suite", lambda: bench_scenario_suite.run(
                 scale=20, num_updates=2000, seeds=(0, 1, 2, 3))),
             # mixed-population (n = 9/32/100) suite as ONE program vs the
@@ -88,6 +93,9 @@ def build_suites(mode: str, backends=None):
             seeds=tuple(range(8)))),
         ("events_scale", lambda: bench_events_scale.run(
             lanes=6 if fast else 16, backends=backends)),
+        ("class_scale", lambda: bench_class_scale.run(
+            num_updates=400 if fast else 2000, warmup=200,
+            seeds=(0, 1) if fast else tuple(range(4)))),
         ("scenario_suite", lambda: bench_scenario_suite.run(
             scale=20 if fast else 10,
             num_updates=2000 if fast else 10000, seeds=tuple(range(4)))),

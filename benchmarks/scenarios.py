@@ -19,7 +19,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import LearningConstants
-from repro.scenario import (EnergySpec, LearningSpec, NetworkSpec,
+from repro.scenario import (ClassSpec, EnergySpec, LearningSpec, NetworkSpec,
                             ObjectiveSpec, PAPER_CLUSTERS_TABLE1,
                             PAPER_CLUSTERS_TABLE6, Scenario, StrategySpec)
 
@@ -81,6 +81,30 @@ def population_scenario(scale: int = 1) -> Scenario:
         name=f"population_n{net.n}")
 
 
+def class_scale_scenario(n: int = 10_000, C: int = 4, m: int = 8,
+                         name: str = "") -> Scenario:
+    """A class-aggregated population of ``n`` members in ``C`` classes.
+
+    Rates interpolate the Table-1 spread (mu_c in [1, 3], transfers ~3x
+    faster); members split evenly across classes (remainder to the last),
+    pinned uniform routing and a small concurrency budget ``m`` — the
+    ``class_scale`` bench measures how the closed forms and the event
+    engine scale in ``n`` at fixed ``C``.
+    """
+    base = n // C
+    counts = np.full(C, base, np.int64)
+    counts[-1] += n - base * C
+    t = np.linspace(0.0, 1.0, C) if C > 1 else np.zeros(1)
+    classes = ClassSpec(mu_c=1.0 + 2.0 * t, mu_d=6.0 + 2.0 * t,
+                        mu_u=6.0 + 2.0 * t, count=counts)
+    return Scenario(
+        network=NetworkSpec(classes=classes),
+        learning=LearningSpec(consts=CONSTS),
+        strategy=StrategySpec("explicit", p=np.full(C, 1.0 / n), m=m,
+                              m_max=m),
+        name=name or f"class_scale_n{n}_C{C}")
+
+
 def two_client_scenario(mu2: float = 1.0) -> Scenario:
     """The Figure-2 two-client system (client 2 = ``mu2``x faster)."""
     return Scenario(
@@ -113,6 +137,7 @@ BENCH_SCENARIOS: dict[str, Scenario] = {
     "scenario_suite": table1_scenario(20, strategy="time_opt", steps=60,
                                       name="scenario_suite"),
     "events_scale": events_scale_scenario(),
+    "class_scale": class_scale_scenario(),
     "population_sweep": population_scenario(1),
     "pruned_sweep": table1_scenario(1, strategy="time_opt", steps=8,
                                     m_max=132, search="pruned",

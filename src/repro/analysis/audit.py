@@ -203,6 +203,27 @@ def _tiny_nets(L: int = 2, n_max: int = 3, cs: bool = False):
     return _stack_params(nets)
 
 
+def _tiny_classes(L: int = 2, c_max: int = 3):
+    import numpy as np
+
+    from ..core.buzen import ClassParams, pad_classes
+    from ..scenario.suite import _stack_params
+
+    rng = np.random.default_rng(11)
+    lanes = []
+    for i in range(L):
+        C = c_max - (i % 2)  # mixed class counts exercise pad_classes
+        cnt = rng.integers(1, 4, C)
+        cls = ClassParams(
+            p=rng.dirichlet(np.ones(C)) / cnt,
+            mu_c=rng.uniform(0.5, 4.0, C),
+            mu_d=rng.uniform(2.0, 6.0, C),
+            mu_u=rng.uniform(2.0, 6.0, C),
+            count=cnt)
+        lanes.append(pad_classes(cls, c_max))
+    return _stack_params(lanes)
+
+
 def resident_programs() -> dict[str, tuple[str, Callable]]:
     """name -> (description, thunk); each thunk returns a ClosedJaxpr.
 
@@ -304,6 +325,37 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
         return jax.make_jaxpr(fn)(params0, p_mat, ms, etas, sim_keys,
                                   data_keys)
 
+    def suite_analyze_classes():
+        from ..core.complexity import LearningConstants
+        from ..scenario.suite import _build_analyze_classes, _stack_consts
+
+        cls = _tiny_classes(L, n_max)
+        consts = _stack_consts([LearningConstants(M=2.0, G=5.0)] * L)
+        m_vec = jnp.asarray([2, 3], jnp.int64)
+        rho = jnp.asarray([0.3, 0.5])
+        fn = _build_analyze_classes(m_max, has_power=False)
+        return jax.make_jaxpr(lambda c, m, co, r: fn(c, m, co, None, r))(
+            cls, m_vec, consts, rho)
+
+    def suite_simulate_classes():
+        from ..sim.batched_events import build_class_lanes_fn
+
+        fn = build_class_lanes_fn("batched", 6, 2, "exponential", m_max,
+                                  False)
+        cls = _tiny_classes(L, n_max)
+        m_vec = jnp.asarray([2, 3], jnp.int32)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(L)])
+        return jax.make_jaxpr(lambda c, m, k: fn(c, m, k, None))(
+            cls, m_vec, keys)
+
+    def suite_simulate_sharded():
+        from ..sim.sharded import build_sharded_lanes_fn
+
+        fn = build_sharded_lanes_fn(6, 2, "exponential", m_max, False)
+        prm, m_vec, keys = _sim_args()
+        return jax.make_jaxpr(lambda p, m, k: fn(p, m, k, None))(
+            prm, m_vec, keys)
+
     def kernel_buzen():
         from ..kernels.buzen import buzen_pallas_batched
 
@@ -314,6 +366,18 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
             lambda lr, lg: buzen_pallas_batched(lr, lg, m_max,
                                                 interpret=True))(
             log_rho, log_gamma)
+
+    def kernel_buzen_classes():
+        from ..kernels.buzen import buzen_classes_pallas_batched
+
+        rng = np.random.default_rng(5)
+        log_rho = jnp.asarray(rng.normal(size=(L, n_max)), jnp.float32)
+        counts = jnp.asarray(rng.integers(1, 4, size=(L, n_max)))
+        log_gamma = jnp.asarray(rng.normal(size=(L,)), jnp.float32)
+        return jax.make_jaxpr(
+            lambda lr, c, lg: buzen_classes_pallas_batched(
+                lr, c, lg, m_max, interpret=True))(log_rho, counts,
+                                                   log_gamma)
 
     def kernel_events():
         from ..core import events
@@ -339,6 +403,16 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
             "ScenarioSuite simulate bucket, pallas backend (interpret): "
             "lock-step lane scan around the event kernel",
             suite_simulate_pallas),
+        "suite_analyze_classes": (
+            "ScenarioSuite analyze bucket, class networks: jit(vmap) of "
+            "the O(#classes) class closed forms", suite_analyze_classes),
+        "suite_simulate_classes": (
+            "ScenarioSuite simulate bucket, class networks: jit(vmap) of "
+            "the class-aggregated event scan", suite_simulate_classes),
+        "suite_simulate_sharded": (
+            "ScenarioSuite simulate bucket, sharded backend: "
+            "jit(shard_map) of the lane sweep over the device mesh",
+            suite_simulate_sharded),
         "simulate_reference_lane": (
             "reference backend per-lane program: events._simulate_stats "
             "bounded scan", simulate_reference_lane),
@@ -348,6 +422,10 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
         "kernel_buzen": (
             "Pallas Buzen DP kernel, interpret path "
             "(kernels.buzen.buzen_pallas_batched)", kernel_buzen),
+        "kernel_buzen_classes": (
+            "Pallas class-space Buzen DP kernel, interpret path "
+            "(kernels.buzen.buzen_classes_pallas_batched)",
+            kernel_buzen_classes),
         "kernel_events": (
             "Pallas event-step kernel, interpret path "
             "(kernels.events.step_event_pallas)", kernel_events),

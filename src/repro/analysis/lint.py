@@ -6,9 +6,14 @@ turns them from ROADMAP prose into checked-in static analysis:
 
 ``raw-reduction``
     ``jnp.sum``/``jnp.cumsum`` (or ``np.``, or the ``.sum()``/``.cumsum()``
-    methods) in a contract-marked module.  Client-axis reductions must use
+    methods), and any ``logsumexp``, in a contract-marked module.
+    Client-axis AND class-axis reductions must use
     ``numerics.seqsum``/``seqcumsum`` — XLA reduces reassociate with array
-    *length*, so a raw sum over a zero-padded axis is not bitwise stable.
+    *length*, so a raw sum over a zero-padded axis is not bitwise stable;
+    the class closed forms reduce in log-space, so ``logsumexp`` over the
+    padded class axis is the same bug wearing a log coat (reductions over
+    the static ``m``-convolution axis are fine and say so in an
+    ``allow()``).
 ``categorical-routing``
     ``jax.random.categorical`` anywhere under ``src/``.  The Gumbel trick
     draws noise with the logits' shape, so routing through it depends on
@@ -60,8 +65,8 @@ DISPATCH_NAMES = LAW_NAMES | STRATEGY_NAMES
 
 RULES = {
     "raw-reduction":
-        "raw sum/cumsum in a contract-marked module; client-axis "
-        "reductions must use numerics.seqsum/seqcumsum",
+        "raw sum/cumsum/logsumexp in a contract-marked module; client- "
+        "and class-axis reductions must use numerics.seqsum/seqcumsum",
     "categorical-routing":
         "jax.random.categorical draws Gumbel noise with the logits' "
         "shape; routing must be inverse-CDF on one scalar uniform",
@@ -186,10 +191,15 @@ def _traced_nodes(tree: ast.AST):
 
 
 def _is_reduction_call(node: ast.Call) -> Optional[str]:
-    """Describe a raw sum/cumsum call, else None."""
+    """Describe a raw sum/cumsum/logsumexp call, else None."""
+    if isinstance(node.func, ast.Name):
+        # `from jax.scipy.special import logsumexp` is the house idiom
+        return ("logsumexp(...)" if node.func.id == "logsumexp" else None)
     if not isinstance(node.func, ast.Attribute):
         return None
     attr = node.func.attr
+    if attr == "logsumexp":
+        return f"{_dotted(node.func.value)}.{attr}(...)"
     if attr not in ("sum", "cumsum"):
         return None
     base = _dotted(node.func.value)

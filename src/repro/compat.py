@@ -9,12 +9,30 @@ call sites stay clean:
     them when available and silently builds a plain mesh otherwise (older
     jax meshes are implicitly all-auto, which is exactly what the
     ``Auto``-typed call sites request).
+  * ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax`` (and
+    dropped ``check_rep``).  :func:`shard_map` calls whichever exists.
 """
 from __future__ import annotations
 
 import jax
 
 HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def shard_map(f, mesh, *, in_specs, out_specs):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on 0.4.x.
+
+    The 0.4.x path passes ``check_rep=False``: the repo's sharded programs
+    are strictly lane-local (no collectives), which the replication checker
+    of that era mis-handles around closed-over constants inside ``scan``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
 
 
 def make_mesh(shape, axis_names, *, auto_axes: bool = True):

@@ -4,8 +4,17 @@ bounds, energy model, and routing/concurrency optimization.
 ``repro.core.batched`` holds the padded (traced-``m``) variants of the
 closed forms that power :func:`batched_concurrency_sweep` — the one-compile
 sweep over the whole ``(p, m)`` grid."""
-from .batched import (batch_log_normalizing_constants,
-                      delay_jacobian_padded,
+from .batched import (batch_class_log_normalizing_constants,
+                      batch_log_normalizing_constants,
+                      delay_jacobian_classes, delay_jacobian_padded,
+                      energy_complexity_classes,
+                      expand_class_matrix,
+                      expected_relative_delay_classes,
+                      joint_objective_classes,
+                      make_round_objective_classes,
+                      make_time_objective_classes,
+                      round_complexity_classes, second_moment_classes,
+                      wallclock_time_classes,
                       energy_complexity_padded,
                       expected_relative_delay_padded,
                       joint_objective_padded, make_energy_objective_padded,
@@ -15,15 +24,18 @@ from .batched import (batch_log_normalizing_constants,
                       round_complexity_padded, second_moment_matrix_padded,
                       tau_surface, throughput_padded,
                       wallclock_time_padded)
-from .buzen import (NetworkParams, get_backend, log_normalizing_constants,
-                    log_Z_ratio, pad_network, set_backend)
-from .events import EventStats, simulate_stats, unpad_stats
+from .buzen import (ClassParams, NetworkParams,
+                    class_log_normalizing_constants, classes_from_network,
+                    get_backend, log_normalizing_constants, log_Z_ratio,
+                    pad_classes, pad_network, set_backend)
+from .events import (EventStats, expand_class_stats, simulate_stats,
+                     simulate_stats_classes, unpad_stats)
 from .complexity import (LearningConstants, eta_max, round_complexity,
                          round_complexity_unbounded, system_staleness_factor,
                          wallclock_time)
 from .energy import (PowerProfile, energy_complexity, energy_optimal_routing,
-                     energy_per_round, joint_objective, minimal_energy,
-                     per_task_energy)
+                     energy_per_round, energy_per_round_classes,
+                     joint_objective, minimal_energy, per_task_energy)
 from .jackson import (analyze, delay_jacobian, expected_relative_delay,
                       mean_total_counts, second_moment_matrix, throughput,
                       throughput_grad)
@@ -33,12 +45,23 @@ from .optimize import (OptResult, SweepResult, batched_concurrency_sweep,
                        make_joint_objective, make_round_objective,
                        make_throughput_objective, make_time_objective,
                        max_throughput, optimize_routing, round_optimal,
-                       sequential_concurrency_search, time_optimal)
+                       sequential_concurrency_search, time_optimal,
+                       time_optimal_classes)
 
 __all__ = [
     "NetworkParams", "log_normalizing_constants", "log_Z_ratio",
     "pad_network", "set_backend", "get_backend",
+    "ClassParams", "class_log_normalizing_constants", "classes_from_network",
+    "pad_classes",
     "EventStats", "simulate_stats", "unpad_stats",
+    "simulate_stats_classes", "expand_class_stats",
+    "batch_class_log_normalizing_constants",
+    "expected_relative_delay_classes", "round_complexity_classes",
+    "wallclock_time_classes", "energy_complexity_classes",
+    "joint_objective_classes", "second_moment_classes",
+    "delay_jacobian_classes", "expand_class_matrix",
+    "make_time_objective_classes", "make_round_objective_classes",
+    "energy_per_round_classes", "time_optimal_classes",
     "batch_log_normalizing_constants", "expected_relative_delay_padded",
     "throughput_padded", "round_complexity_padded", "wallclock_time_padded",
     "energy_complexity_padded", "joint_objective_padded",

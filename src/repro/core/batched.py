@@ -99,6 +99,7 @@ def _padded_series_vs_Z(log_load: jax.Array, logZ: jax.Array, pop: jax.Array,
     terms = jnp.asarray(log_load)[..., None] * k + zterm
     if weights_log is not None:
         terms = terms + weights_log
+    # contract: allow(raw-reduction): logsumexp over the k = 1..m_max convolution axis — compile-time length, never client/class padded
     return logsumexp(jnp.where(idx >= 0, terms, NEG_INF), axis=-1)
 
 
@@ -244,6 +245,7 @@ def second_moment_matrix_padded(params: NetworkParams, m: jax.Array,
         valid = (s <= pop_c)[:, None, None]
         if mask is not None:
             valid = valid & (mask[:, None] & mask[None, :])[None]
+        # contract: allow(raw-reduction): logsumexp over the s = 2..m_max axis — compile-time length, never client/class padded
         alpha_off = jnp.exp(logsumexp(
             jnp.where(valid, log_c + zlog, NEG_INF), axis=0))
     else:
@@ -284,10 +286,12 @@ def _cs_second_moment_terms_padded(params: NetworkParams, logZ: jax.Array,
     base = jnp.where(k <= pop,
                      k * log_load_cs + _lz(logZ, pop - k) - _lz(logZ, pop),
                      NEG_INF)
+    # contract: allow(raw-reduction): logsumexp over the k = 1..m_max axis — compile-time length, never client/class padded
     s0 = jnp.exp(logsumexp(base))
     s1_terms = jnp.where(k > 1,
                          base + jnp.log(jnp.maximum(k - 1.0, 1e-300)),
                          NEG_INF)
+    # contract: allow(raw-reduction): logsumexp over the k = 1..m_max axis — compile-time length, never client/class padded
     s1 = jnp.exp(logsumexp(s1_terms))
     pi = p / psum
     alpha_cs = (pi[:, None] * pi[None, :]) * 2.0 * s1 * psum * psum
@@ -304,6 +308,7 @@ def _cs_second_moment_terms_padded(params: NetworkParams, logZ: jax.Array,
                 + _lz(logZ, pop - kk[:, None] - ll[None, :]) - _lz(logZ, pop))
         valid = (kk[:, None] + ll[None, :]) <= pop
         grid = jnp.where(valid[None, :, :], grid, NEG_INF)
+        # contract: allow(raw-reduction): logsumexp over the (kk, ll) m-grid axes — compile-time lengths, never client/class padded
         alpha_cs_i = jnp.exp(logsumexp(grid, axis=(1, 2)))
     else:
         alpha_cs_i = jnp.zeros(n)
@@ -330,6 +335,300 @@ def delay_jacobian_padded(params: NetworkParams, m: jax.Array,
     p_safe = jnp.where(mask, params.p, 1.0)  # keep padded 0/0 out of the primal
     return jnp.where(mask[None, :] & mask[:, None],
                      cov / p_safe[None, :], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# class-space closed forms: O(#classes) per evaluation (ClassParams)
+# ---------------------------------------------------------------------------
+#
+# Every form below is the padded per-client formula evaluated on class
+# representatives: the product-form marginals depend on a client only
+# through its (p, mu_c, mu_d, mu_u) profile, so one member of each class
+# stands for all ``count`` of them and population-level reductions weight
+# by ``count`` (sequentially — padded count-0 classes add exact zeros).
+# Agrees with the ``*_padded`` forms on ``classes.expand()`` to f64
+# roundoff; **bitwise** invariant to class padding (``pad_classes``).
+
+
+def batch_class_log_normalizing_constants(
+    classes, p_batch: jax.Array, m_max: int, *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """``log Z_{n, 0..m_max}`` for every per-member routing row ``[B, C]``.
+
+    The class analogue of :func:`batch_log_normalizing_constants` —
+    O(C m^2) per row via the negative-binomial class DP.
+    """
+    from .buzen import class_log_normalizing_constants
+
+    backend = get_backend() if backend is None else backend
+    if backend == "pallas":
+        from ..kernels.buzen import buzen_classes_log_Z_batched
+
+        cnt = classes.count.astype(classes.p.dtype)
+        log_rho = jnp.log(p_batch) - jnp.log(classes.mu_c)[None, :]
+        gamma = p_batch * (1.0 / classes.mu_d + 1.0 / classes.mu_u)[None, :]
+        log_gamma_total = jnp.log(seqsum(cnt[None, :] * gamma, axis=-1))
+        counts = jnp.broadcast_to(cnt[None, :], p_batch.shape)
+        if classes.mu_cs is not None:
+            log_load_cs = (jnp.log(seqsum(cnt[None, :] * p_batch, axis=-1))
+                           - jnp.log(classes.mu_cs))
+            log_rho = jnp.concatenate([log_rho, log_load_cs[:, None]],
+                                      axis=-1)
+            counts = jnp.concatenate(
+                [counts, jnp.ones((p_batch.shape[0], 1), counts.dtype)],
+                axis=-1)
+        return buzen_classes_log_Z_batched(log_rho, counts,
+                                           log_gamma_total, m_max)
+    if backend != "jnp":
+        raise ValueError(f"unknown buzen backend: {backend}")
+    return jax.vmap(
+        lambda p: class_log_normalizing_constants(classes._replace(p=p),
+                                                  m_max, backend="jnp")
+    )(p_batch)
+
+
+def mean_member_counts_classes(classes, logZ: jax.Array, pop: jax.Array,
+                               m_max: int) -> jax.Array:
+    """``E[sum_s X_i^s]`` for ONE member of each class at population ``pop``.
+
+    The per-client formula of :func:`mean_total_counts_padded` evaluated on
+    class representatives (``logZ`` from the class DP): all members of a
+    class share the value.
+    """
+    comp = jnp.exp(_padded_series_vs_Z(classes.log_rho, logZ, pop, 1, m_max))
+    is_part = classes.gamma * jnp.exp(_lz(logZ, pop - 1) - _lz(logZ, pop))
+    total = comp + is_part
+    if classes.mu_cs is not None:
+        msum = seqsum(classes.mass)
+        log_load_cs = jnp.log(msum) - jnp.log(classes.mu_cs)
+        cs_total = jnp.exp(_padded_series_vs_Z(log_load_cs, logZ, pop, 1,
+                                               m_max))
+        total = total + classes.p / msum * cs_total
+    return total
+
+
+def expected_relative_delay_classes(classes, m: jax.Array, logZ: jax.Array,
+                                    m_max: int) -> jax.Array:
+    """``E0[D_i]`` (Thm 2 Eq 3/5) per class member for traced ``m``."""
+    return mean_member_counts_classes(classes, logZ, m - 1, m_max)
+
+
+def round_complexity_classes(classes, m: jax.Array,
+                             consts: LearningConstants, logZ: jax.Array,
+                             m_max: int) -> jax.Array:
+    """``K_eps(p, m)`` (Thm 3 Eq 9) with class-weighted population sums.
+
+    ``sum_i`` over clients becomes ``sum_c count_c * (member value)``;
+    padded classes (count 0) contribute exact zeros through pinned-safe
+    divisions, mirroring the traced-``n`` masking of
+    :func:`round_complexity_padded`.
+    """
+    cnt = classes.count.astype(classes.p.dtype)
+    n = classes.n_total.astype(classes.p.dtype)
+    mask = classes.count > 0
+    eps = consts.eps
+    delays = expected_relative_delay_classes(classes, m, logZ, m_max)
+    p_safe = jnp.where(mask, classes.p, 1.0)
+    inv_np = jnp.where(mask, cnt / (n * p_safe), 0.0)
+    stale_terms = jnp.where(mask, cnt * delays / p_safe**2, 0.0)
+    first = (4.0 + consts.B / eps) * seqsum(inv_np)
+    staleness = seqsum(stale_terms)
+    raw = consts.C * (m - 1.0) / eps * staleness
+    safe = jnp.where(m > 1, raw, 1.0)
+    second = jnp.where(m > 1, jnp.sqrt(safe), 0.0)
+    return 24.0 * consts.L * consts.delta / (n * eps) * (first + second)
+
+
+def wallclock_time_classes(classes, m: jax.Array, consts: LearningConstants,
+                           logZ: jax.Array, m_max: int) -> jax.Array:
+    """``E0[tau_eps] = K_eps / lambda`` (Prop. 4/8), class-space."""
+    return (round_complexity_classes(classes, m, consts, logZ, m_max)
+            / throughput_padded(logZ, m))
+
+
+def energy_complexity_classes(classes, m: jax.Array,
+                              consts: LearningConstants, power: PowerProfile,
+                              logZ: jax.Array, m_max: int) -> jax.Array:
+    """``E0[E_eps]`` (Prop. 5/9), class-space (``power`` holds per-class
+    arrays)."""
+    from .energy import energy_per_round_classes
+
+    return (round_complexity_classes(classes, m, consts, logZ, m_max)
+            * energy_per_round_classes(classes, power))
+
+
+def joint_objective_classes(classes, m: jax.Array,
+                            consts: LearningConstants, power: PowerProfile,
+                            rho: jax.Array, tau_star: jax.Array,
+                            e_star: jax.Array, logZ: jax.Array,
+                            m_max: int) -> jax.Array:
+    """Normalized rho-scalarization (Eq. 18), class-space."""
+    from .energy import energy_per_round_classes
+
+    k_eps = round_complexity_classes(classes, m, consts, logZ, m_max)
+    tau = k_eps / throughput_padded(logZ, m)
+    en = k_eps * energy_per_round_classes(classes, power)
+    return rho * en / e_star + (1.0 - rho) * tau / tau_star
+
+
+def second_moment_classes(classes, m: jax.Array, logZ: jax.Array,
+                          m_max: int):
+    """Member-representative second moments ``(cross [C, C], same [C])``.
+
+    ``cross[a, b] = E[S_i S_j]`` for a member ``i`` of class ``a`` and a
+    *distinct* member ``j`` of class ``b`` (the ``a == b`` diagonal is the
+    distinct-members-of-one-class value, meaningful when ``count >= 2`` —
+    ``_log_geom_sum`` is exact at equal loads); ``same[c] = E[S_i^2]``.
+    Together these are the full O(C^2) compression of the per-client
+    ``[n, n]`` matrix (:func:`expand_class_matrix` unrolls for the oracle).
+    """
+    log_rho = classes.log_rho
+    gamma = classes.gamma
+    mask = classes.count > 0
+    lr_safe = jnp.where(mask, log_rho, 0.0)
+    pop = m - 1
+    pop_c = jnp.clip(pop, 1)
+
+    # ---- alpha (queue-queue) ----------------------------------------------
+    wlog = jnp.log(2.0 * jnp.arange(1, m_max + 1) - 1.0)
+    alpha_same = jnp.exp(_padded_series_vs_Z(log_rho, logZ, pop_c, 1, m_max,
+                                             weights_log=wlog))
+    if m_max >= 2:
+        s = jnp.arange(2, m_max + 1)
+        d = lr_safe[:, None] - lr_safe[None, :]
+        lgs = jax.vmap(lambda K: _log_geom_sum(d, K))(s - 1)
+        log_c = s[:, None, None] * lr_safe[None, None, :] + lgs
+        zlog = (_lz(logZ, pop_c - s) - _lz(logZ, pop_c))[:, None, None]
+        valid = ((s <= pop_c)[:, None, None]
+                 & (mask[:, None] & mask[None, :])[None])
+        # contract: allow(raw-reduction): logsumexp over the s = 2..m_max axis — compile-time length, never client/class padded
+        alpha_cross = jnp.exp(logsumexp(
+            jnp.where(valid, log_c + zlog, NEG_INF), axis=0))
+    else:
+        alpha_cross = jnp.zeros((classes.C, classes.C))
+
+    # ---- beta / psi --------------------------------------------------------
+    beta2 = jnp.exp(_padded_series_vs_Z(log_rho, logZ, pop_c, 2, m_max))
+    z3 = jnp.exp(_lz(logZ, pop_c - 2) - _lz(logZ, pop_c))
+    z2 = jnp.exp(_lz(logZ, pop_c - 1) - _lz(logZ, pop_c))
+
+    cross = (alpha_cross + beta2[:, None] * gamma[None, :]
+             + beta2[None, :] * gamma[:, None]
+             + gamma[:, None] * gamma[None, :] * z3)
+    same = alpha_same + 2.0 * beta2 * gamma + gamma**2 * z3 + gamma * z2
+
+    if classes.mu_cs is not None:
+        cross_cs, same_cs = _cs_second_moment_terms_classes(
+            classes, logZ, pop_c, m_max)
+        cross = cross + cross_cs
+        same = same + same_cs
+    return (jnp.where(pop > 0, cross, 0.0), jnp.where(pop > 0, same, 0.0))
+
+
+def _cs_second_moment_terms_classes(classes, logZ: jax.Array,
+                                    pop: jax.Array, m_max: int):
+    """Theorem 7 Eq (24) CS terms on class representatives
+    (``(cross, same)`` extras matching :func:`second_moment_classes`)."""
+    p = classes.p
+    psum = seqsum(classes.mass)
+    gamma = classes.gamma
+    log_rho = classes.log_rho
+    log_load_cs = jnp.log(psum) - jnp.log(classes.mu_cs)
+
+    beta_cs2 = jnp.exp(_padded_series_vs_Z(log_load_cs, logZ, pop, 2, m_max))
+
+    k = jnp.arange(1, m_max + 1)
+    base = jnp.where(k <= pop,
+                     k * log_load_cs + _lz(logZ, pop - k) - _lz(logZ, pop),
+                     NEG_INF)
+    # contract: allow(raw-reduction): logsumexp over the k = 1..m_max axis — compile-time length, never client/class padded
+    s0 = jnp.exp(logsumexp(base))
+    s1_terms = jnp.where(k > 1,
+                         base + jnp.log(jnp.maximum(k - 1.0, 1e-300)),
+                         NEG_INF)
+    # contract: allow(raw-reduction): logsumexp over the k = 1..m_max axis — compile-time length, never client/class padded
+    s1 = jnp.exp(logsumexp(s1_terms))
+    pi = p / psum
+
+    if m_max >= 2:
+        kk = jnp.arange(1, m_max)
+        ll = jnp.arange(1, m_max)
+        grid = (kk[:, None] * log_load_cs
+                + ll[None, :] * log_rho[:, None, None]
+                + _lz(logZ, pop - kk[:, None] - ll[None, :]) - _lz(logZ, pop))
+        valid = (kk[:, None] + ll[None, :]) <= pop
+        grid = jnp.where(valid[None, :, :], grid, NEG_INF)
+        # contract: allow(raw-reduction): logsumexp over the (kk, ll) m-grid axes — compile-time lengths, never client/class padded
+        alpha_cs_i = jnp.exp(logsumexp(grid, axis=(1, 2)))
+    else:
+        alpha_cs_i = jnp.zeros(classes.C)
+
+    pairs = pi[:, None] * pi[None, :] * 2.0 * s1 * psum * psum
+    betas = beta_cs2 * (pi[:, None] * gamma[None, :]
+                        + pi[None, :] * gamma[:, None]) * psum
+    alphas = (pi[:, None] * alpha_cs_i[None, :] * psum
+              + pi[None, :] * alpha_cs_i[:, None] * psum)
+    cross = pairs + betas + alphas
+    same = (pi**2 * 2.0 * s1 * psum * psum + pi * psum * s0
+            + 2.0 * beta_cs2 * pi * gamma * psum
+            + 2.0 * pi * alpha_cs_i * psum)
+    return cross, same
+
+
+def delay_jacobian_classes(classes, m: jax.Array, logZ: jax.Array,
+                           m_max: int):
+    """Class-compressed delay Jacobian ``(J_cross [C, C], J_same [C])``.
+
+    ``J_cross[a, b] = d E0[D_i] / d p_j`` for a member ``i`` of class ``a``
+    and a distinct member ``j`` of class ``b`` (covariance identity, Thm 2
+    Eq 4 / Thm 7 Eq 22); ``J_same[c]`` is the own-mass sensitivity.
+    Padded columns mask to zero as in :func:`delay_jacobian_padded`.
+    """
+    mean = mean_member_counts_classes(classes, logZ, m - 1, m_max)
+    cross, same = second_moment_classes(classes, m, logZ, m_max)
+    cov_cross = cross - mean[:, None] * mean[None, :]
+    cov_same = same - mean**2
+    mask = classes.count > 0
+    p_safe = jnp.where(mask, classes.p, 1.0)
+    j_cross = jnp.where(mask[:, None] & mask[None, :],
+                        cov_cross / p_safe[None, :], 0.0)
+    j_same = jnp.where(mask, cov_same / p_safe, 0.0)
+    return j_cross, j_same
+
+
+def expand_class_matrix(cross, same, count) -> jax.Array:
+    """Unroll class-pair values to the per-client ``[n, n]`` matrix
+    (host-side oracle helper: diagonal from ``same``, off-diagonal — both
+    across and within classes — from ``cross``)."""
+    import numpy as np
+
+    reps = np.asarray(count).astype(int)
+    idx = np.repeat(np.arange(len(reps)), reps)
+    mat = np.asarray(cross)[np.ix_(idx, idx)].copy()
+    np.fill_diagonal(mat, np.asarray(same)[idx])
+    return jnp.asarray(mat)
+
+
+def make_time_objective_classes(classes, consts: LearningConstants,
+                                m_max: int):
+    """Class-space wall-clock objective with the padded sweep protocol
+    ``obj(p, m, logZ)`` (``p`` per-member, ``logZ`` from the class DP)."""
+    def obj(p, m, logZ):
+        return wallclock_time_classes(_with_p(classes, p), m, consts, logZ,
+                                      m_max)
+    obj.m_max = m_max  # consumed by the sweep-side padding guard
+    return obj
+
+
+def make_round_objective_classes(classes, consts: LearningConstants,
+                                 m_max: int):
+    """Class-space ``K_eps`` objective (padded sweep protocol)."""
+    def obj(p, m, logZ):
+        return round_complexity_classes(_with_p(classes, p), m, consts, logZ,
+                                        m_max)
+    obj.m_max = m_max  # consumed by the sweep-side padding guard
+    return obj
 
 
 # ---------------------------------------------------------------------------

@@ -152,6 +152,138 @@ def pad_network(params: NetworkParams, n_max: int) -> NetworkParams:
         n_active=jnp.asarray(n_act, jnp.int64))
 
 
+class ClassParams(NamedTuple):
+    """Class-aggregated network: ``C`` client classes with multiplicities.
+
+    The product-form network depends on a client only through its
+    ``(p, mu_c, mu_d, mu_u)`` profile, so ``count[c]`` identical clients
+    collapse into one *class*: their ``count`` single-server computation
+    stations enter the Buzen DP as a single negative-binomial generating
+    series (the multiplicity is an analytic exponent, see
+    :func:`_negbinom_series`), and the IS stations enter through the
+    aggregate Poisson factor as always.  Closed forms become O(C) instead
+    of O(n) — the scaling law for ``n = 10^5..10^6`` populations.
+
+    ``p`` is the **per-member** routing mass (each member of class ``c``
+    has routing probability ``p[c]``); the class as a whole carries mass
+    ``count[c] * p[c]``.  Padded classes (the traced-``C`` convention of
+    :func:`pad_classes`) have ``count = 0`` and ``p = 0`` and are bitwise
+    invisible: their negative-binomial factor is the convolution identity
+    and all class reductions are strictly sequential (``seqsum``).
+
+    :meth:`expand` unrolls back to the per-client :class:`NetworkParams` —
+    the oracle every class-space surface is tested against.
+    """
+
+    p: jax.Array  # [C] per-member routing mass (0 on padded classes)
+    mu_c: jax.Array  # [C] computation rates
+    mu_d: jax.Array  # [C] downlink rates
+    mu_u: jax.Array  # [C] uplink rates
+    count: jax.Array  # [C] integer multiplicity (0 = padded class)
+    mu_cs: Optional[jax.Array] = None  # scalar CS rate (None = no CS station)
+
+    @property
+    def C(self) -> int:
+        """Static class-axis length (including padded classes)."""
+        return self.p.shape[0]
+
+    @property
+    def n_total(self):
+        """Traced total population ``sum_c count[c]`` (padded classes add 0)."""
+        return seqsum(self.count)
+
+    @property
+    def mass(self) -> jax.Array:
+        """Class routing mass ``count * p`` (what the inverse-CDF routes on)."""
+        return self.count.astype(self.p.dtype) * self.p
+
+    @property
+    def log_rho(self) -> jax.Array:
+        """Per-member log-load of one computation station of each class."""
+        return jnp.log(self.p) - jnp.log(self.mu_c)
+
+    @property
+    def gamma(self) -> jax.Array:
+        """Per-member aggregate IS load ``gamma_c`` (Theorem 2)."""
+        return self.p * (1.0 / self.mu_d + 1.0 / self.mu_u)
+
+    @property
+    def log_gamma_total(self) -> jax.Array:
+        """Aggregate IS log-load over the whole population (sequential)."""
+        return jnp.log(seqsum(self.count.astype(self.p.dtype) * self.gamma))
+
+    def with_cs(self, mu_cs) -> "ClassParams":
+        return self._replace(mu_cs=jnp.asarray(mu_cs, dtype=self.p.dtype))
+
+    def expand(self) -> NetworkParams:
+        """Unroll to the per-client network (host-side; the test oracle).
+
+        Requires concrete counts — this is O(n) by construction and exists
+        for validation and small-population interop, not for the hot path.
+        """
+        import numpy as np
+
+        reps = np.asarray(self.count).astype(int)
+
+        def rep(x):
+            return jnp.asarray(np.repeat(np.asarray(x), reps))
+
+        return NetworkParams(p=rep(self.p), mu_c=rep(self.mu_c),
+                             mu_d=rep(self.mu_d), mu_u=rep(self.mu_u),
+                             mu_cs=self.mu_cs)
+
+
+def pad_classes(classes: ClassParams, c_max: int) -> ClassParams:
+    """Pad a class set to ``c_max`` rows (the traced-``C`` convention).
+
+    Padded classes carry zero count, zero routing mass and unit rates, so
+    they are **bitwise** invisible to the class-space DP, closed forms and
+    event engine (the class analogue of :func:`pad_network`): a count-0
+    class has the convolution-identity negative-binomial factor, adds
+    exactly 0 to every sequential class reduction, and receives zero mass
+    in the routing inverse-CDF.
+    """
+    C = classes.C
+    if c_max < C:
+        raise ValueError(f"c_max={c_max} is smaller than the class-set "
+                         f"size C={C}")
+
+    def pad(x, fill):
+        x = jnp.asarray(x)
+        return jnp.concatenate(
+            [x, jnp.full((c_max - C,), fill, dtype=x.dtype)])
+
+    return classes._replace(
+        p=pad(classes.p, 0.0), mu_c=pad(classes.mu_c, 1.0),
+        mu_d=pad(classes.mu_d, 1.0), mu_u=pad(classes.mu_u, 1.0),
+        count=pad(classes.count, 0))
+
+
+def classes_from_network(params: NetworkParams) -> ClassParams:
+    """Group identical clients of a concrete network into classes.
+
+    Host-side: rows with bitwise-equal ``(p, mu_c, mu_d, mu_u)`` profiles
+    collapse into one class (first-occurrence order preserved).  Padded
+    rows (beyond ``n_active``) are dropped — re-pad with
+    :func:`pad_classes` if a static class axis is needed.
+    """
+    import numpy as np
+
+    n = params.n if params.n_active is None else int(params.n_active)
+    cols = np.stack([np.asarray(params.p)[:n], np.asarray(params.mu_c)[:n],
+                     np.asarray(params.mu_d)[:n],
+                     np.asarray(params.mu_u)[:n]], axis=1)
+    _, first, counts = np.unique(
+        cols, axis=0, return_index=True, return_counts=True)
+    order = np.argsort(first)  # undo np.unique's lexicographic sort
+    cols_u = cols[np.sort(first)]
+    return ClassParams(
+        p=jnp.asarray(cols_u[:, 0]), mu_c=jnp.asarray(cols_u[:, 1]),
+        mu_d=jnp.asarray(cols_u[:, 2]), mu_u=jnp.asarray(cols_u[:, 3]),
+        count=jnp.asarray(counts[order], dtype=jnp.int64),
+        mu_cs=params.mu_cs)
+
+
 def _log_conv(log_a: jax.Array, log_b: jax.Array) -> jax.Array:
     """Truncated convolution in log space.
 
@@ -165,6 +297,7 @@ def _log_conv(log_a: jax.Array, log_b: jax.Array) -> jax.Array:
     rev = jnp.arange(M + 1)[:, None] - idx  # m - k
     valid = rev >= 0
     terms = jnp.where(valid, log_a[None, :] + log_b[jnp.clip(rev, 0)], NEG_INF)
+    # contract: allow(raw-reduction): logsumexp over the k = 0..m_max convolution axis — compile-time length, never client/class padded
     return logsumexp(terms, axis=1)
 
 
@@ -186,6 +319,29 @@ def _poisson_series(log_load: jax.Array, m_max: int) -> jax.Array:
     (``k = 0`` pinned as in :func:`_geometric_series`)."""
     k = jnp.arange(m_max + 1)
     return jnp.where(k == 0, 0.0, k * log_load - gammaln(k + 1.0))
+
+
+def _negbinom_series(log_rho: jax.Array, count: jax.Array,
+                     m_max: int) -> jax.Array:
+    """Generating series of ``count`` identical single-server stations.
+
+    ``count`` stations of per-member load ``rho`` contribute the factor
+    ``(1 - rho x)^{-count} = sum_j C(j + count - 1, j) rho^j x^j`` — the
+    multiplicity enters as an analytic exponent instead of ``count``
+    convolution folds.  In log space::
+
+        coef[j] = j log_rho + lgamma(j + count) - lgamma(j + 1) - lgamma(count)
+
+    ``count = 0`` (a padded class) makes every ``j >= 1`` coefficient
+    ``-inf`` (``lgamma(0) = +inf``), and the ``j = 0`` term is pinned to
+    exactly ``0`` — the convolution identity, mirroring the load-0 pin of
+    :func:`_geometric_series`.  ``count = 1`` reduces to the geometric
+    series exactly (the lgamma terms cancel).
+    """
+    j = jnp.arange(m_max + 1)
+    cnt = jnp.asarray(count, dtype=jnp.float64)
+    lw = gammaln(j + cnt) - gammaln(j + 1.0) - gammaln(cnt)
+    return jnp.where(j == 0, 0.0, j * log_rho + lw)
 
 
 def log_normalizing_constants(
@@ -247,6 +403,58 @@ def log_normalizing_constants(
         # on the simplex).  Keeping the explicit sum_j p_j lets raw partials
         # d/dp_j flow through the CS station, matching Theorem 7's CS terms.
         log_load_cs = jnp.log(seqsum(params.p)) - jnp.log(params.mu_cs)
+        logZ = _log_conv(logZ, _geometric_series(log_load_cs, m_max))
+    return logZ
+
+
+def class_log_normalizing_constants(
+    classes: ClassParams,
+    m_max: int,
+    *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Class-space Buzen DP: ``log Z_{n,m}`` in O(C m^2) instead of O(n m^2).
+
+    The ``2n`` IS stations enter through the aggregate Poisson factor
+    (as in ``method="aggregate"``), and each class's ``count`` computation
+    stations fold in as ONE negative-binomial series
+    (:func:`_negbinom_series`).  Agrees with
+    :func:`log_normalizing_constants` on ``classes.expand()`` to f64
+    roundoff (the fold order differs, so not bitwise across the two
+    representations) and is **bitwise** invariant to class padding
+    (:func:`pad_classes`).  ``backend="pallas"`` routes through the
+    class-space TPU kernel (``repro.kernels.buzen``, float32).
+    """
+    backend = _backend if backend is None else backend
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown buzen backend: {backend!r}")
+    if backend == "pallas":
+        from ..kernels.buzen import buzen_classes_pallas_batched  # no cycle
+
+        log_rho = classes.log_rho
+        count = classes.count.astype(classes.p.dtype)
+        if classes.mu_cs is not None:
+            # the CS station is a count-1 "class" with load sum(mass)/mu_cs
+            log_load_cs = jnp.log(seqsum(classes.mass)) - jnp.log(
+                classes.mu_cs)
+            log_rho = jnp.concatenate([log_rho, log_load_cs[None]])
+            count = jnp.concatenate([count, jnp.ones((1,), count.dtype)])
+        out = buzen_classes_pallas_batched(
+            log_rho[None, :], count[None, :],
+            classes.log_gamma_total[None], m_max)[0]
+        return out.astype(classes.p.dtype)
+
+    logZ = _poisson_series(classes.log_gamma_total, m_max)
+
+    def fold(carry, xs):
+        lr, cnt = xs
+        return _log_conv(carry, _negbinom_series(lr, cnt, m_max)), None
+
+    logZ, _ = jax.lax.scan(fold, logZ, (classes.log_rho, classes.count))
+    if classes.mu_cs is not None:
+        # same geometric CS factor as the per-client DP, with the class-mass
+        # sequential sum standing in for sum_j p_j
+        log_load_cs = jnp.log(seqsum(classes.mass)) - jnp.log(classes.mu_cs)
         logZ = _log_conv(logZ, _geometric_series(log_load_cs, m_max))
     return logZ
 

@@ -60,6 +60,26 @@ def energy_per_round(params: NetworkParams, power: PowerProfile) -> jax.Array:
     return e
 
 
+def energy_per_round_classes(classes, power: PowerProfile) -> jax.Array:
+    """Class-space :func:`energy_per_round`: O(C) with ``power`` holding
+    per-class arrays.
+
+    ``sum_i p_i E_i / sum_i p_i`` over clients groups into
+    ``sum_c count_c p_c E_c / sum_c count_c p_c`` — class masses weight the
+    per-member task energies; padded classes (count 0) add exact zeros to
+    both sequential sums.
+    """
+    e_member = (power.P_c / classes.mu_c + power.P_u / classes.mu_u
+                + power.P_d / classes.mu_d)
+    mass = classes.mass
+    e = seqsum(mass / seqsum(mass) * e_member)
+    if power.P_cs is not None:
+        if classes.mu_cs is None:
+            raise ValueError("P_cs given but classes.mu_cs is None")
+        e = e + power.P_cs / classes.mu_cs
+    return e
+
+
 def energy_complexity(params: NetworkParams, m: int, consts: LearningConstants,
                       power: PowerProfile,
                       logZ: jax.Array | None = None) -> jax.Array:

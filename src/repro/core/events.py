@@ -145,7 +145,8 @@ def _draw(key: jax.Array, rate: jax.Array, distribution: str,
     return get_law(distribution).device_draw(key, rate, shape)
 
 
-def _route_client(p: jax.Array, key: jax.Array, n_act) -> jax.Array:
+def _route_client(p: jax.Array, key: jax.Array, n_act,
+                  prefix: Optional[jax.Array] = None) -> jax.Array:
     """Dispatch-routing draw ``C ~ p/sum(p)`` by inverse-CDF on one uniform.
 
     Deliberately *not* ``jax.random.categorical``: the Gumbel trick draws
@@ -160,8 +161,16 @@ def _route_client(p: jax.Array, key: jax.Array, n_act) -> jax.Array:
     normalization pass), padded entries repeat that total so
     ``searchsorted`` never lands on them, and the clip covers the
     measure-zero ``u * total >= total`` edge.
+
+    ``prefix`` lets the caller pass ``seqcumsum(p)`` precomputed: the
+    routing CDF is loop-invariant across an event scan, so hoisting it
+    into the scan constants saves an O(n) sequential cumsum *per event*
+    (:func:`_simulate_stats` does this).  The hoisted value is the same
+    ``seqcumsum`` of the same ``p`` — trajectories are bitwise identical
+    either way.
     """
-    prefix = seqcumsum(p)
+    if prefix is None:
+        prefix = seqcumsum(p)
     u = jax.random.uniform(key, dtype=p.dtype) * prefix[-1]
     idx = jnp.searchsorted(prefix, u, side="right")
     return jnp.minimum(idx, n_act - 1).astype(jnp.int32)
@@ -253,12 +262,17 @@ def _station_index(phase, client, n):
 
 def step_event(params: NetworkParams, state: EventState, *,
                distribution: str = "exponential",
-               power=None) -> tuple[EventState, EventOut]:
+               power=None,
+               route_prefix: Optional[jax.Array] = None
+               ) -> tuple[EventState, EventOut]:
     """Advance the network by exactly one event (one service completion).
 
     Pure and jit/vmap-safe.  ``params.mu_cs is None`` statically selects the
     CS-free network; ``power`` (a ``PowerProfile`` or None) statically
-    enables phase-dependent energy accounting (Eq. 14).
+    enables phase-dependent energy accounting (Eq. 14).  ``route_prefix``
+    optionally supplies the precomputed routing CDF ``seqcumsum(params.p)``
+    (loop-invariant across a scan — see :func:`_route_client`); ``None``
+    recomputes it in-body, bitwise the same.
     """
     n = params.n
     m_max = state.phase.shape[0]
@@ -306,7 +320,8 @@ def step_event(params: NetworkParams, state: EventState, *,
     new_round = state.round + jnp.where(is_update, 1, 0).astype(jnp.int32)
 
     # update -> immediate re-dispatch of a fresh task into the freed slot
-    c_new = _route_client(params.p, k_disp_cli, params.active_count)
+    c_new = _route_client(params.p, k_disp_cli, params.active_count,
+                          route_prefix)
     svc_up = _draw(k_up, params.mu_u[c], distribution)
     svc_down = _draw(k_disp_svc, params.mu_d[c_new], distribution)
 
@@ -397,7 +412,8 @@ def next_update(params: NetworkParams, state: EventState, *,
                 distribution: str = "exponential", power=None,
                 max_steps: Optional[int] = None,
                 backend: Optional[str] = None,
-                interpret: Optional[bool] = None
+                interpret: Optional[bool] = None,
+                route_prefix: Optional[jax.Array] = None
                 ) -> tuple[EventState, UpdateOut]:
     """Run events until the next model update (uplink/CS completion).
 
@@ -419,9 +435,11 @@ def next_update(params: NetworkParams, state: EventState, *,
     if resolve_backend(backend) == "pallas":
         from ..kernels.events import step_event_pallas1
 
+        # the kernel computes the routing CDF in-register; a host-hoisted
+        # prefix does not apply (and is bitwise irrelevant either way)
         step_fn = functools.partial(step_event_pallas1, interpret=interpret)
     else:
-        step_fn = step_event
+        step_fn = functools.partial(step_event, route_prefix=route_prefix)
     m_max = state.phase.shape[0]
     if max_steps is None:
         max_steps = (4 if params.mu_cs is not None else 3) * m_max + 8
@@ -506,9 +524,14 @@ def _simulate_stats(params, m, key, num_updates, warmup, distribution,
     cap = warmup + num_updates
     st = init_state(params, m, key, m_max=m_max, distribution=distribution,
                     warmup=warmup, cap=cap)
+    # the routing CDF is loop-invariant: hoist it out of the scan body so it
+    # enters as a scan constant instead of an O(n) sequential cumsum per
+    # event (same seqcumsum of the same p — trajectories bitwise unchanged)
+    route_prefix = seqcumsum(params.p)
 
     def body(st, _):
-        st, _ = step_event(params, st, distribution=distribution, power=power)
+        st, _ = step_event(params, st, distribution=distribution, power=power,
+                           route_prefix=route_prefix)
         return st, None
 
     st, _ = jax.lax.scan(body, st, None, length=num_events)
@@ -554,3 +577,371 @@ def simulate_stats(params: NetworkParams, m, num_updates: int, *,
         return jax.tree_util.tree_map(lambda x: x[0], stats)
     return _simulate_stats(params, m, key, int(num_updates), int(warmup),
                            distribution, m_max, power)
+
+
+# ---------------------------------------------------------------------------
+# class-aggregated event engine (O(#classes) per-event statistics)
+# ---------------------------------------------------------------------------
+
+class ClassEventState(NamedTuple):
+    """Carry of the class-aggregated event scan.
+
+    The task table is identical to :class:`EventState` except each task is
+    owned by a ``(cls, member)`` pair — the class index plus the member
+    index *within* the class — instead of a flat client id.  All per-client
+    statistics collapse to per-class aggregates (members of a class are
+    exchangeable, Section 2.6 product form), so the carry is O(#classes)
+    wide no matter how large the population: ``n = 10^5..10^6`` simulates
+    at the same per-event cost as ``n = 10^2``.
+    """
+
+    t: jax.Array          # current wall-clock time
+    key: jax.Array        # PRNG carry
+    round: jax.Array      # updates completed so far
+    seq_ctr: jax.Array    # global FIFO arrival counter
+    cls: jax.Array        # [m_max] owning class of each task
+    member: jax.Array     # [m_max] member index within the class
+    phase: jax.Array      # [m_max]
+    finish: jax.Array     # [m_max]
+    seq: jax.Array        # [m_max]
+    disp_round: jax.Array  # [m_max]
+    warmup: jax.Array
+    cap: jax.Array
+    t_cap: jax.Array
+    t0: jax.Array
+    t1: jax.Array
+    delay_sum: jax.Array  # [C] per-class relative-delay sums
+    delay_cnt: jax.Array  # [C]
+    energy: jax.Array
+    occ_int: jax.Array    # [3C+1] time-weighted per-class occupancy
+    occ: jax.Array        # [3C+1] current per-class occupancy
+    serving: jax.Array    # [C] count of busy compute servers of each class
+    cs_busy: jax.Array
+
+
+def _route_class(mass: jax.Array, count: jax.Array, key: jax.Array,
+                 prefix: Optional[jax.Array] = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Draw ``(class, member)`` for one dispatch.
+
+    Two shape-independent draws: the class by inverse-CDF of the class
+    masses ``count * p`` (one scalar uniform against the sequential prefix,
+    exactly :func:`_route_client` on the class axis — padded count-0
+    classes carry zero mass and repeat the total in the prefix, so
+    ``searchsorted`` never lands on them), then a uniform member index in
+    ``[0, count[class])`` (one scalar ``randint``; the traced bound only
+    depends on the drawn class).  Trajectories are therefore **bitwise
+    invariant** to trailing class padding.  The clip targets the last class
+    with nonzero count (not the last row, which may be padded) so the
+    measure-zero ``u * total >= total`` edge cannot select an empty class.
+    """
+    if prefix is None:
+        prefix = seqcumsum(mass)
+    k_cls, k_mem = jax.random.split(key)
+    u = jax.random.uniform(k_cls, dtype=mass.dtype) * prefix[-1]
+    idx = jnp.searchsorted(prefix, u, side="right")
+    cum = seqcumsum(count)
+    c_last = jnp.searchsorted(cum, cum[-1] - 1, side="right")
+    c = jnp.minimum(idx, c_last).astype(jnp.int32)
+    mb = jax.random.randint(k_mem, (), 0, jnp.maximum(count[c], 1))
+    return c, mb.astype(jnp.int32)
+
+
+def _class_station_counts(phase, cls, C):
+    """Per-class occupancy recount: down[C], comp_total[C],
+    comp_serving[C], up[C], cs_total, cs_busy.
+
+    ``comp_serving[c]`` counts the COMP_SERV tasks of class ``c`` — each
+    member's compute server holds at most one, so this is exactly the
+    number of busy compute servers of the class.  Used to seed the O(1)
+    occupancy carries at :func:`init_class_state` and as the test oracle.
+    """
+    def count(mask):
+        return jnp.zeros((C,), jnp.float64).at[cls].add(
+            jnp.where(mask, 1.0, 0.0))
+
+    down = count(phase == DOWN)
+    comp_total = count((phase == COMP_WAIT) | (phase == COMP_SERV))
+    comp_serving = count(phase == COMP_SERV)
+    up = count(phase == UP)
+    # contract: allow(raw-reduction): 0/1 indicator count over the task table — exact small-integer f64 under any association, and the table axis is m_max (never padded-n)
+    cs_total = jnp.sum(
+        jnp.where((phase == CS_WAIT) | (phase == CS_SERV), 1.0, 0.0))
+    cs_busy = jnp.any(phase == CS_SERV)
+    return down, comp_total, comp_serving, up, cs_total, cs_busy
+
+
+def init_class_state(classes, m, key: jax.Array, *,
+                     m_max: Optional[int] = None,
+                     distribution: str = "exponential",
+                     warmup=0, cap=_NO_CAP, t_cap=jnp.inf) -> ClassEventState:
+    """Initial state of the class engine: ``m`` tasks dispatched uniformly
+    at random over the ``n_total`` population members at ``t = 0``.
+
+    The uniform member is drawn as a flat index in ``[0, n_total)`` and
+    split into ``(class, member)`` against the sequential count prefix —
+    the same distribution as :func:`init_state` on the expanded network,
+    and bitwise invariant to trailing class padding (padded classes repeat
+    ``n_total`` in the prefix, and the flat draw is strictly below it).
+    """
+    C = classes.C
+    if m_max is None:
+        m_max = int(m)
+    key, k_cli, k_svc = jax.random.split(key, 3)
+    cum = seqcumsum(classes.count)
+    idx = jax.random.randint(k_cli, (m_max,), 0, cum[-1])
+    cls = jnp.searchsorted(cum, idx, side="right").astype(jnp.int32)
+    member = (idx - jnp.where(cls > 0, cum[jnp.maximum(cls - 1, 0)], 0)
+              ).astype(jnp.int32)
+    active = jnp.arange(m_max) < m
+    svc = _draw(k_svc, classes.mu_d[cls], distribution, (m_max,))
+    phase0 = jnp.where(active, DOWN, INACTIVE).astype(jnp.int32)
+    down, comp_total, comp_serving, up, cs_total, cs_busy = (
+        _class_station_counts(phase0, cls, C))
+    return ClassEventState(
+        t=jnp.zeros((), jnp.float64),
+        key=key,
+        round=jnp.zeros((), jnp.int32),
+        seq_ctr=jnp.zeros((), jnp.int32),
+        cls=cls,
+        member=member,
+        phase=phase0,
+        finish=jnp.where(active, svc, jnp.inf),
+        seq=jnp.zeros((m_max,), jnp.int32),
+        disp_round=jnp.zeros((m_max,), jnp.int32),
+        warmup=jnp.asarray(warmup, jnp.int32),
+        cap=jnp.asarray(cap, jnp.int32),
+        t_cap=jnp.asarray(t_cap, jnp.float64),
+        t0=jnp.zeros((), jnp.float64),
+        t1=jnp.zeros((), jnp.float64),
+        delay_sum=jnp.zeros((C,), jnp.float64),
+        delay_cnt=jnp.zeros((C,), jnp.int32),
+        energy=jnp.zeros((), jnp.float64),
+        occ_int=jnp.zeros((3 * C + 1,), jnp.float64),
+        occ=jnp.concatenate([down, comp_total, up, cs_total[None]]),
+        serving=comp_serving,
+        cs_busy=cs_busy,
+    )
+
+
+def step_class_event(classes, state: ClassEventState, *,
+                     distribution: str = "exponential",
+                     power=None,
+                     route_prefix: Optional[jax.Array] = None
+                     ) -> tuple[ClassEventState, EventOut]:
+    """Class-aggregated :func:`step_event`: one service completion, with
+    every per-client surface replaced by its per-class aggregate.
+
+    The dynamics are *identical* to the expanded network's — FIFO
+    promotion conditions on the completed task's ``(class, member)`` pair,
+    so each member still owns a private single-server compute queue — only
+    the carried statistics collapse.  ``power`` (when given) holds
+    per-class ``[C]`` arrays.  The emitted :class:`EventOut` reports the
+    completed task's *class* in the ``client`` field.
+    """
+    C = classes.C
+    m_max = state.phase.shape[0]
+    has_cs = classes.mu_cs is not None
+
+    j = jnp.argmin(state.finish)
+    t_new = state.finish[j]
+
+    measure = (state.round >= state.warmup) & (state.round < state.cap)
+    dt_eff = jnp.where(
+        measure,
+        jnp.clip(jnp.minimum(t_new, state.t_cap)
+                 - jnp.minimum(state.t, state.t_cap), 0.0, None),
+        0.0)
+    occ_int = state.occ_int + dt_eff * state.occ
+    energy = state.energy
+    if power is not None:
+        # serving is a per-class busy-server COUNT (members share the class
+        # power rating), uplink/downlink go by the class occupancy segments
+        pwr = seqsum(power.P_c * state.serving
+                     + power.P_u * state.occ[2 * C:3 * C]
+                     + power.P_d * state.occ[:C])
+        if power.P_cs is not None:
+            pwr = pwr + power.P_cs * state.cs_busy
+        energy = energy + dt_eff * pwr
+
+    c = state.cls[j]
+    mb = state.member[j]
+    ph = state.phase[j]
+    key, k_up, k_disp, k_disp_svc, k_comp, k_cs = jax.random.split(
+        state.key, 6)
+
+    is_down = ph == DOWN
+    is_comp = ph == COMP_SERV
+    is_up = ph == UP
+    is_cs = ph == CS_SERV
+    is_update = is_cs if has_cs else is_up
+
+    delay = state.round - state.disp_round[j]
+    new_round = state.round + jnp.where(is_update, 1, 0).astype(jnp.int32)
+
+    c_new, mb_new = _route_class(classes.mass, classes.count, k_disp,
+                                 route_prefix)
+    svc_up = _draw(k_up, classes.mu_u[c], distribution)
+    svc_down = _draw(k_disp_svc, classes.mu_d[c_new], distribution)
+
+    phase_j = jnp.where(
+        is_down, COMP_WAIT,
+        jnp.where(is_comp, UP, jnp.where(is_update, DOWN, CS_WAIT)))
+    finish_j = jnp.where(
+        is_comp, t_new + svc_up,
+        jnp.where(is_update, t_new + svc_down, jnp.inf))
+    joins_fifo = is_down | (is_up & has_cs)
+    seq_j = jnp.where(joins_fifo, state.seq_ctr, state.seq[j])
+    seq_ctr = state.seq_ctr + joins_fifo.astype(jnp.int32)
+    cls_j = jnp.where(is_update, c_new, c)
+    member_j = jnp.where(is_update, mb_new, mb)
+    disp_j = jnp.where(is_update, new_round, state.disp_round[j])
+
+    onej = jnp.arange(m_max) == j
+    phase = jnp.where(onej, phase_j, state.phase).astype(jnp.int32)
+    finish = jnp.where(onej, finish_j, state.finish)
+    seq = jnp.where(onej, seq_j, state.seq).astype(jnp.int32)
+    cls = jnp.where(onej, cls_j, state.cls).astype(jnp.int32)
+    member = jnp.where(onej, member_j, state.member).astype(jnp.int32)
+    disp_round = jnp.where(onej, disp_j, state.disp_round).astype(jnp.int32)
+
+    # -- FIFO promotions: the compute queue belongs to MEMBER (c, mb) -------
+    promo_comp = is_down | is_comp
+    mine = (cls == c) & (member == mb)
+    serving_m = jnp.any((phase == COMP_SERV) & mine)
+    waiting_m = (phase == COMP_WAIT) & mine
+    pick = jnp.argmin(jnp.where(waiting_m, seq, _BIG_SEQ))
+    do_comp = promo_comp & ~serving_m & jnp.any(waiting_m)
+    svc_c = _draw(k_comp, classes.mu_c[c], distribution)
+    onep = (jnp.arange(m_max) == pick) & do_comp
+    phase = jnp.where(onep, COMP_SERV, phase)
+    finish = jnp.where(onep, t_new + svc_c, finish)
+
+    if has_cs:
+        promo_cs = is_up | is_cs
+        cs_waiting = phase == CS_WAIT
+        pick_cs = jnp.argmin(jnp.where(cs_waiting, seq, _BIG_SEQ))
+        do_cs = promo_cs & ~jnp.any(phase == CS_SERV) & jnp.any(cs_waiting)
+        svc_cs = _draw(k_cs, classes.mu_cs, distribution)
+        onec = (jnp.arange(m_max) == pick_cs) & do_cs
+        phase = jnp.where(onec, CS_SERV, phase)
+        finish = jnp.where(onec, t_new + svc_cs, finish)
+
+    stations = jnp.arange(3 * C + 1)
+    occ_new = (state.occ
+               + jnp.where(stations == _station_index(phase_j, cls_j, C),
+                           1.0, 0.0)
+               - jnp.where(stations == _station_index(ph, c, C), 1.0, 0.0))
+    delta_srv = (jnp.where(do_comp, 1.0, 0.0)
+                 - jnp.where(is_comp, 1.0, 0.0))
+    serving_new = state.serving + jnp.where(jnp.arange(C) == c,
+                                            delta_srv, 0.0)
+    cs_busy_new = ((state.cs_busy & ~is_cs) | do_cs if has_cs
+                   else state.cs_busy)
+
+    upd_measured = is_update & measure
+    delay_sum = state.delay_sum.at[c].add(
+        jnp.where(upd_measured, delay.astype(jnp.float64), 0.0))
+    delay_cnt = state.delay_cnt.at[c].add(
+        jnp.where(upd_measured, 1, 0).astype(jnp.int32))
+    t0 = jnp.where(is_update & (new_round == state.warmup), t_new, state.t0)
+    t1 = jnp.where(is_update & (new_round == state.cap), t_new, state.t1)
+
+    new_state = ClassEventState(
+        t=t_new, key=key, round=new_round, seq_ctr=seq_ctr,
+        cls=cls, member=member, phase=phase, finish=finish, seq=seq,
+        disp_round=disp_round,
+        warmup=state.warmup, cap=state.cap, t_cap=state.t_cap,
+        t0=t0, t1=t1, delay_sum=delay_sum, delay_cnt=delay_cnt,
+        energy=energy, occ_int=occ_int,
+        occ=occ_new, serving=serving_new, cs_busy=cs_busy_new)
+    out = EventOut(is_update=is_update,
+                   time=t_new,
+                   slot=j.astype(jnp.int32),
+                   client=c,
+                   delay=delay.astype(jnp.int32))
+    return new_state, out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_updates", "warmup", "distribution", "m_max"))
+def _simulate_stats_classes(classes, m, key, num_updates, warmup,
+                            distribution, m_max, power):
+    mult = 4 if classes.mu_cs is not None else 3
+    num_events = mult * (num_updates + warmup) + mult * m_max + 8
+    cap = warmup + num_updates
+    st = init_class_state(classes, m, key, m_max=m_max,
+                          distribution=distribution, warmup=warmup, cap=cap)
+    # hoisted loop-invariant routing CDF (see _simulate_stats)
+    route_prefix = seqcumsum(classes.mass)
+
+    def body(st, _):
+        st, _ = step_class_event(classes, st, distribution=distribution,
+                                 power=power, route_prefix=route_prefix)
+        return st, None
+
+    st, _ = jax.lax.scan(body, st, None, length=num_events)
+    return finalize_stats(st)
+
+
+def simulate_stats_classes(classes, m, num_updates: int, *,
+                           warmup: int = 0, key: Optional[jax.Array] = None,
+                           seed: int = 0, distribution: str = "exponential",
+                           power=None,
+                           m_max: Optional[int] = None) -> EventStats:
+    """Class-aggregated :func:`simulate_stats`: statistics over
+    ``num_updates`` rounds with O(#classes) per-event state.
+
+    Returns an :class:`EventStats` whose per-client fields are per-CLASS
+    aggregates (``mean_delay``/``delay_counts`` of shape ``[C]``, occupancy
+    ``[3C+1]``); expand to the per-member view on demand with
+    :func:`expand_class_stats`.  ``power`` (when given) must hold per-class
+    ``[C]`` arrays.  Runs on the jnp step only — the class table transition
+    has no Pallas kernel (per-event cost is already n-independent).
+    """
+    get_law(distribution)  # eager: unknown laws fail here with the options
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    if m_max is None:
+        m_max = int(m)
+    return _simulate_stats_classes(classes, m, key, int(num_updates),
+                                   int(warmup), distribution, m_max, power)
+
+
+def expand_class_stats(stats: EventStats, count) -> EventStats:
+    """Expand per-class :class:`EventStats` to the per-member view.
+
+    Host-side, on demand (O(n) by construction — the class engine never
+    materializes per-member state).  Members of a class are exchangeable,
+    so class aggregates expand to per-member *averages*: ``mean_delay``
+    repeats the class mean, ``delay_counts`` becomes the average count per
+    member (``cnt_c / count_c``, a float), and each per-class occupancy
+    segment divides equally among the members.  Padded count-0 classes are
+    dropped.  Works on any number of leading lane axes.
+    """
+    cnt = np.asarray(count)
+    keep = cnt > 0
+    reps = cnt[keep].astype(np.int64)
+    w = reps.astype(np.float64)
+    C = cnt.shape[0]
+
+    def rep(x, per_member=False):
+        x = np.asarray(x)[..., keep]
+        if per_member:
+            x = x / w
+        return np.repeat(x, reps, axis=-1)
+
+    occ = np.asarray(stats.mean_queue_counts)
+    return EventStats(
+        updates=stats.updates,
+        time=stats.time,
+        throughput=stats.throughput,
+        mean_delay=jnp.asarray(rep(stats.mean_delay)),
+        delay_counts=jnp.asarray(rep(stats.delay_counts, per_member=True)),
+        energy=stats.energy,
+        mean_queue_counts=jnp.asarray(np.concatenate(
+            [rep(occ[..., 0:C], per_member=True),
+             rep(occ[..., C:2 * C], per_member=True),
+             rep(occ[..., 2 * C:3 * C], per_member=True),
+             occ[..., 3 * C:]], axis=-1)),
+    )

@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import numerics  # noqa: F401
-from .buzen import NetworkParams, log_normalizing_constants
+from .buzen import ClassParams, NetworkParams, log_normalizing_constants
 from .complexity import LearningConstants, round_complexity, wallclock_time
 from .energy import PowerProfile, energy_complexity, joint_objective
 from .jackson import throughput
@@ -118,6 +118,42 @@ def optimize_routing(
     return OptResult(p=p, m=m, value=float(objective(p, m)), history=list(map(float, vals)))
 
 
+def _sharded_rows(solve, theta0, m_grid, ctx, B: int):
+    """Run a row-local solver with its row axis split over local devices.
+
+    Rows pad to a device multiple by repeating the last row (sliced back
+    off the result).  ``solve(theta_rows, m_rows, ctx_rows)`` must be
+    row-local — no cross-row reductions reach the outputs — so each shard
+    computes exactly what it would single-device and the concatenated
+    result is **bitwise** equal to the unsharded call.
+    """
+    from jax.sharding import PartitionSpec
+
+    from ..compat import make_mesh, shard_map
+
+    ndev = len(jax.devices())
+    Bp = -(-B // ndev) * ndev
+
+    def pad_rows(x):
+        if x is None or Bp == B:
+            return x
+        reps = jnp.broadcast_to(x[-1:], (Bp - B,) + x.shape[1:])
+        return jnp.concatenate([x, reps], axis=0)
+
+    mesh = make_mesh((ndev,), ("lanes",))
+    spec = PartitionSpec("lanes")
+    if ctx is None:
+        fn = shard_map(lambda th, mm: solve(th, mm, None), mesh,
+                       in_specs=(spec, spec), out_specs=(spec, spec))
+        ps, vals = jax.jit(fn)(pad_rows(theta0), pad_rows(m_grid))
+    else:
+        fn = shard_map(solve, mesh, in_specs=(spec, spec, spec),
+                       out_specs=(spec, spec))
+        ps, vals = jax.jit(fn)(pad_rows(theta0), pad_rows(m_grid),
+                               pad_rows(jnp.asarray(ctx)))
+    return ps[:B], vals[:B]
+
+
 def batched_concurrency_sweep(
     objective: Callable,
     params: NetworkParams,
@@ -129,6 +165,7 @@ def batched_concurrency_sweep(
     p_init: Optional[jax.Array] = None,
     m_max: Optional[int] = None,
     backend: Optional[str] = None,
+    shard: bool = False,
 ) -> SweepResult:
     """Optimize routing for every concurrency candidate in ONE jitted sweep.
 
@@ -144,12 +181,33 @@ def batched_concurrency_sweep(
 
     ``ctx`` optionally batches an extra per-row objective input (e.g. the
     Pareto weight ``rho``), so one sweep can also span strategy variants.
+
+    ``params`` may be a :class:`ClassParams`: rows are then per-member
+    routing over classes (the O(C) negative-binomial DP replaces the O(n)
+    one), the simplex constraint ``sum_c count_c p_c = 1`` is enforced by a
+    softmax over class *masses*, and padded (count-0) classes are masked
+    out of the logits.
+
+    ``shard=True`` splits the ``B`` rows across all local devices with
+    ``shard_map`` (rows pad to a device multiple by repeating the last
+    row).  Rows never interact — the Buzen DP, the objective and Adam are
+    all row-local — so the sharded sweep is **bitwise** equal to the
+    single-device one, at ``1/num_devices`` the per-device row count.
     """
-    from .batched import batch_log_normalizing_constants
+    from .batched import (batch_class_log_normalizing_constants,
+                          batch_log_normalizing_constants)
 
     m_grid = jnp.asarray(m_grid, dtype=jnp.int64)
     B = int(m_grid.shape[0])
-    n = params.n
+    is_classes = isinstance(params, ClassParams)
+    if is_classes:
+        n = params.C
+        cmask = np.asarray(params.count) > 0
+        cnt_safe = jnp.where(jnp.asarray(cmask),
+                             params.count.astype(jnp.float64), 1.0)
+        n_total = float(np.asarray(params.count).sum())
+    else:
+        n = params.n
     m_top = int(jnp.max(m_grid))
     m_pad = m_top if m_max is None else m_max
     if m_pad < m_top:
@@ -164,26 +222,57 @@ def batched_concurrency_sweep(
             f"objective was built with m_max={obj_pad} but this sweep pads "
             f"logZ to m_max={m_pad}; the paddings must match")
 
-    p0 = jnp.full((n,), 1.0 / n) if p_init is None else jnp.asarray(p_init)
-    theta0 = jnp.log(jnp.clip(p0, 1e-12))
+    if is_classes:
+        # logits parameterize class masses q (sum 1); members share
+        # p = q / count, and padded classes are pinned to -inf mass
+        p0 = (jnp.full((n,), 1.0 / n_total) if p_init is None
+              else jnp.asarray(p_init))
+        q0 = params.count.astype(jnp.float64) * p0
+        theta0 = jnp.log(jnp.clip(q0, 1e-12))
+    else:
+        p0 = (jnp.full((n,), 1.0 / n) if p_init is None
+              else jnp.asarray(p_init))
+        theta0 = jnp.log(jnp.clip(p0, 1e-12))
     if theta0.ndim == 1:
         theta0 = jnp.broadcast_to(theta0, (B, n))
 
-    def row_values(thetas):
-        ps = jax.nn.softmax(thetas, axis=-1)
-        logZ = batch_log_normalizing_constants(params, ps, m_pad,
-                                               backend=backend)
-        if ctx is None:
-            vals = jax.vmap(objective)(ps, m_grid, logZ)
+    def to_p(thetas):
+        if is_classes:
+            th = jnp.where(jnp.asarray(cmask)[None, :], thetas, -jnp.inf)
+            return jax.nn.softmax(th, axis=-1) / cnt_safe[None, :]
+        return jax.nn.softmax(thetas, axis=-1)
+
+    def row_values(thetas, m_rows, ctx_rows):
+        ps = to_p(thetas)
+        if is_classes:
+            logZ = batch_class_log_normalizing_constants(params, ps, m_pad,
+                                                         backend=backend)
         else:
-            vals = jax.vmap(objective)(ps, m_grid, logZ, ctx)
+            logZ = batch_log_normalizing_constants(params, ps, m_pad,
+                                                   backend=backend)
+        if ctx_rows is None:
+            vals = jax.vmap(objective)(ps, m_rows, logZ)
+        else:
+            vals = jax.vmap(objective)(ps, m_rows, logZ, ctx_rows)
         return ps, vals
 
-    def loss(thetas):
-        return jnp.sum(row_values(thetas)[1])
+    def solve(theta0_rows, m_rows, ctx_rows):
+        def loss(thetas):
+            return jnp.sum(row_values(thetas, m_rows, ctx_rows)[1])
 
-    theta, _ = _adam_minimize(loss, theta0, steps, lr)
-    ps, vals = row_values(theta)  # one eager final evaluation — no re-jit
+        theta, _ = _adam_minimize(loss, theta0_rows, steps, lr)
+        return row_values(theta, m_rows, ctx_rows)
+
+    # both paths jit the SAME solve (scan + final evaluation as one
+    # program): jit(solve) == jit(shard_map(solve)) bitwise, whereas an
+    # eager final evaluation fuses differently in the last bit
+    if shard:
+        ps, vals = _sharded_rows(solve, theta0, m_grid, ctx, B)
+    elif ctx is None:
+        ps, vals = jax.jit(lambda th, mm: solve(th, mm, None))(theta0,
+                                                               m_grid)
+    else:
+        ps, vals = jax.jit(solve)(theta0, m_grid, jnp.asarray(ctx))
 
     m_np = np.asarray(m_grid)
     vals_np = np.asarray(vals)
@@ -418,6 +507,29 @@ def time_optimal(params: NetworkParams, consts: LearningConstants,
                          "'batched', 'pruned' or 'sequential'")
     return sequential_concurrency_search(
         make_time_objective(params, consts), params.n, m_start=2, m_max=m_max, **kw)
+
+
+def time_optimal_classes(classes: ClassParams, consts: LearningConstants,
+                         m_max: int, *, search: str = "batched",
+                         **kw) -> OptResult:
+    """Class-space ``time_optimal``: O(C) per Adam step instead of O(n).
+
+    ``m_max`` is explicit (the per-client default ``n + 32`` would be
+    absurd at ``n = 10^6``; concurrency is a deployment budget there).
+    Returns per-member routing ``p`` (length ``C``) under the mass
+    constraint ``sum_c count_c p_c = 1``.
+    """
+    from .batched import make_time_objective_classes
+
+    if search not in ("batched", "pruned"):
+        raise ValueError(f"unknown search mode: {search!r}; expected "
+                         "'batched' or 'pruned'")
+    engine = (batched_concurrency_sweep if search == "batched"
+              else pruned_concurrency_sweep)
+    res = engine(
+        make_time_objective_classes(classes, consts, m_max), classes,
+        m_grid=jnp.arange(2, m_max + 1), m_max=m_max, **kw)
+    return res.best
 
 
 def round_optimal(params: NetworkParams, consts: LearningConstants, m: int,

@@ -182,3 +182,162 @@ def buzen_pallas(log_rho: jax.Array, log_gamma_total: jax.Array, m_max: int,
     return buzen_pallas_batched(log_rho[None, :],
                                 jnp.asarray(log_gamma_total)[None], m_max,
                                 interpret=interpret)[0]
+
+
+# ---------------------------------------------------------------------------
+# class-space kernel: one grid step folds a whole client CLASS
+# ---------------------------------------------------------------------------
+
+def _buzen_classes_kernel(series_ref, init_ref, out_ref, u_scr, *,
+                          n_stations: int, m_pad: int):
+    """Station ``i`` convolves the running row with a PRECOMPUTED series.
+
+    Identical control flow to :func:`_buzen_kernel`, but the station factor
+    is the negative-binomial series of a whole class (``count`` identical
+    single-server stations folded analytically) instead of the geometric
+    series of one client — the grid is ``(B, C)``, not ``(B, n)``, which is
+    what makes population size a free variable on this backend.
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        u_scr[...] = init_ref[0]  # aggregated IS Poisson factor row
+
+    series = series_ref[0, 0]  # [m_pad] class series coefficients
+    u = u_scr[...]
+    # T[m, k] = series[k] + U[m - k], masked to k <= m
+    mm = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 0)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 1)
+    valid = kk <= mm
+    shifted = jnp.where(valid, (mm - kk), 0)
+    terms = jnp.where(valid,
+                      jnp.broadcast_to(series[None, :], (m_pad, m_pad))
+                      + jnp.take_along_axis(
+                          jnp.broadcast_to(u[None, :], (m_pad, m_pad)),
+                          shifted, axis=1), NEG_INF)
+    row_max = jnp.max(terms, axis=1)
+    # contract: allow(raw-reduction): logsumexp over the m-convolution axis within ONE class station — the class axis is the kernel's sequential grid loop, and this f32 path is rtol-validated, not bitwise
+    sumexp = jnp.sum(jnp.exp(terms - row_max[:, None]), axis=1)
+    u_scr[...] = row_max + jnp.log(sumexp)
+
+    @pl.when(i == n_stations - 1)
+    def _finalize():
+        out_ref[0] = u_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("m_max", "interpret"))
+def buzen_classes_pallas_batched(log_rho: jax.Array, counts: jax.Array,
+                                 log_gamma_total: jax.Array, m_max: int, *,
+                                 interpret: Optional[bool] = None
+                                 ) -> jax.Array:
+    """``log Z_{., 0..m_max}`` for a batch of CLASS-aggregated networks.
+
+    ``log_rho``/``counts`` are ``[B, S]`` per-member single-server
+    log-loads and class multiplicities (append the CS station as a count-1
+    column if modelled); ``log_gamma_total`` the ``[B]`` aggregated
+    infinite-server log-loads.  Each grid step folds a whole class through
+    its negative-binomial generating series
+
+        ``coef[j] = j log_rho + lgamma(j + count) - lgamma(j + 1)
+                    - lgamma(count)``
+
+    precomputed on the host in float32 (``j = 0`` pinned to ``0``;
+    ``count = 0`` padded classes clamp to the mask value, making them
+    exact convolution identities as in the ``jnp`` DP).  Returns float32
+    ``[B, m_max + 1]``.  Forward-only — differentiate through
+    :func:`buzen_classes_log_Z_batched`.
+    """
+    from jax.scipy.special import gammaln
+
+    interp = default_interpret() if interpret is None else interpret
+    B, S = log_rho.shape
+    m_pad = m_max + 1
+    k = jnp.arange(m_pad, dtype=jnp.float32)
+    init_rows = (k[None, :] * log_gamma_total[:, None].astype(jnp.float32)
+                 - gammaln(k + 1.0)[None, :]).astype(jnp.float32)
+    cnt = counts.astype(jnp.float32)
+    lw = (gammaln(k[None, None, :] + cnt[:, :, None])
+          - gammaln(k + 1.0)[None, None, :]
+          - gammaln(cnt)[:, :, None])
+    lr32 = jnp.maximum(log_rho.astype(jnp.float32), NEG_INF)
+    series = k[None, None, :] * lr32[:, :, None] + lw
+    series = jnp.where(k[None, None, :] == 0, 0.0,
+                       jnp.maximum(series, NEG_INF))
+
+    kernel = functools.partial(_buzen_classes_kernel, n_stations=S,
+                               m_pad=m_pad)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, S),
+        in_specs=[
+            pl.BlockSpec((1, 1, m_pad), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, m_pad), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_pad), lambda b, i: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m_pad,), jnp.float32)],
+        interpret=interp,
+        compiler_params=None if interp else _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(series, init_rows)
+
+
+def _reference_class_log_Z(log_rho: jax.Array, counts: jax.Array,
+                           log_gamma_total: jax.Array,
+                           m_max: int) -> jax.Array:
+    """Float64 ``jnp`` class DP on the ``[B, S]``/``[B]`` layout — VJP
+    donor for :func:`buzen_classes_log_Z_batched` (matches
+    ``core.buzen.class_log_normalizing_constants``)."""
+    from ..core.buzen import _log_conv, _negbinom_series, _poisson_series
+
+    def one(lr_row, cnt_row, lg):
+        logZ = _poisson_series(lg, m_max)
+
+        def fold(carry, xs):
+            lr, cnt = xs
+            return _log_conv(carry, _negbinom_series(lr, cnt, m_max)), None
+
+        logZ, _ = jax.lax.scan(fold, logZ, (lr_row, cnt_row))
+        return logZ
+
+    return jax.vmap(one)(log_rho, counts, log_gamma_total)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def buzen_classes_log_Z_batched(log_rho: jax.Array, counts: jax.Array,
+                                log_gamma_total: jax.Array,
+                                m_max: int) -> jax.Array:
+    """Differentiable batched class Buzen DP: Pallas forward, reference VJP.
+
+    The class analogue of :func:`buzen_log_Z_batched`: float32 kernel
+    forward, float64 ``jnp`` negative-binomial recursion for the backward
+    pass.  ``counts`` are structural multiplicities — their partials are
+    pinned to exactly 0.
+    """
+    out = buzen_classes_pallas_batched(log_rho, counts, log_gamma_total,
+                                       m_max)
+    return out.astype(log_rho.dtype)
+
+
+def _buzen_classes_log_Z_fwd(log_rho, counts, log_gamma_total, m_max):
+    return (buzen_classes_log_Z_batched(log_rho, counts, log_gamma_total,
+                                        m_max),
+            (log_rho, counts, log_gamma_total))
+
+
+def _buzen_classes_log_Z_bwd(m_max, residuals, g):
+    log_rho, counts, log_gamma_total = residuals
+    _, vjp = jax.vjp(
+        lambda lr, lg: _reference_class_log_Z(lr, counts, lg, m_max),
+        log_rho, log_gamma_total)
+    g_lr, g_lg = vjp(g.astype(log_rho.dtype))
+    # padded (count-0) classes enter as log_rho = -inf with an identity
+    # series: the forward value does not depend on them, so pin their
+    # partials to exactly 0 (and counts are structural integers)
+    mask = jnp.isfinite(log_rho) & (counts > 0)
+    return (jnp.where(mask, g_lr, 0.0), jnp.zeros_like(g_lr), g_lg)
+
+
+buzen_classes_log_Z_batched.defvjp(_buzen_classes_log_Z_fwd,
+                                   _buzen_classes_log_Z_bwd)

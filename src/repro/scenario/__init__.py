@@ -37,7 +37,7 @@ from .laws import TimingLaw, get_law, law_names
 from .registry import (OBJECTIVES, PARTITIONS, STRATEGIES, TIMING_LAWS,
                        Registry, objective, partition, strategy, timing_law)
 
-_SPEC = ("Scenario", "NetworkSpec", "LearningSpec", "EnergySpec",
+_SPEC = ("Scenario", "NetworkSpec", "ClassSpec", "LearningSpec", "EnergySpec",
          "StrategySpec", "ObjectiveSpec", "SimSpec", "DataSpec",
          "ClusterSpec",
          "PAPER_CLUSTERS_TABLE1", "PAPER_CLUSTERS_TABLE6", "expand_clusters",

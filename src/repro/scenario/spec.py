@@ -45,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.complexity import LearningConstants
-from ..core.buzen import NetworkParams
+from ..core.buzen import ClassParams, NetworkParams
 from ..core.energy import PowerProfile
 from .registry import OBJECTIVES, PARTITIONS, STRATEGIES, TIMING_LAWS
 
@@ -196,52 +196,190 @@ def expand_clusters(clusters, scale: int = 1):
 # sub-specs
 # ---------------------------------------------------------------------------
 
-@_pytree_dataclass(data_fields=("mu_c", "mu_d", "mu_u", "p", "mu_cs"))
+@_pytree_dataclass(data_fields=("mu_c", "mu_d", "mu_u", "p", "count"))
 @dataclasses.dataclass(frozen=True, eq=False)
-class NetworkSpec:
-    """The closed queueing network: per-client rates, base routing, the
-    service-time law, and the optional CS-side buffer (Section 7)."""
+class ClassSpec:
+    """Client classes with integer multiplicities — the O(C) population axis.
 
-    mu_c: np.ndarray                  # [n] computation rates
-    mu_d: np.ndarray                  # [n] downlink rates
-    mu_u: np.ndarray                  # [n] uplink rates
-    p: Optional[np.ndarray] = None    # [n] base routing (None = uniform)
-    mu_cs: Optional[float] = None     # CS buffer rate (None = no CS station)
-    law: str = "exponential"          # registered timing law (meta)
-    labels: Optional[tuple] = None    # per-client cluster labels (meta)
+    The product-form network depends on a client only through its
+    ``(p, mu_c, mu_d, mu_u)`` profile, so ``count[c]`` identical clients
+    collapse into one class (``repro.core.buzen.ClassParams``): closed
+    forms run the O(C) negative-binomial Buzen DP, the event engine carries
+    O(C) statistics, and the population size ``n_total = sum(count)``
+    becomes a free variable — ``n = 10^5..10^6`` scenarios cost the same
+    as ``n = 10^2`` ones.  ``p`` is the *per-member* routing mass (class
+    ``c`` as a whole carries ``count[c] * p[c]``); ``None`` means uniform
+    ``1 / n_total``.  :meth:`NetworkSpec.params` expands back to the
+    per-client oracle (O(n), for validation and small-``n`` interop).
+    """
+
+    mu_c: np.ndarray                  # [C] computation rates
+    mu_d: np.ndarray                  # [C] downlink rates
+    mu_u: np.ndarray                  # [C] uplink rates
+    count: np.ndarray                 # [C] integer multiplicities (>= 1)
+    p: Optional[np.ndarray] = None    # [C] per-member routing (None = uniform)
+    labels: Optional[tuple] = None    # per-class cluster labels (meta)
 
     def __post_init__(self):
         if _SKIP_VALIDATION:
             return
-        n = _coerce_vec(self, "mu_c", positive=True)
-        n = _coerce_vec(self, "mu_d", n, positive=True)
-        n = _coerce_vec(self, "mu_u", n, positive=True)
-        _coerce_vec(self, "p", n, positive=True)
+        C = _coerce_vec(self, "mu_c", positive=True)
+        C = _coerce_vec(self, "mu_d", C, positive=True)
+        C = _coerce_vec(self, "mu_u", C, positive=True)
+        _coerce_vec(self, "p", C, positive=True)
+        if self.count is not None and not _is_tracer(self.count):
+            arr = np.asarray(self.count)
+            if arr.ndim != 1:
+                raise ValueError(f"ClassSpec.count must be 1-D, got shape "
+                                 f"{arr.shape}")
+            if C is not None and arr.shape[0] != C:
+                raise ValueError(f"ClassSpec.count has length "
+                                 f"{arr.shape[0]}, expected {C}")
+            if (not np.issubdtype(arr.dtype, np.integer)
+                    and not np.all(arr == np.round(arr))):
+                raise ValueError("ClassSpec.count must be integers")
+            arr = arr.astype(np.int64)
+            if not (arr >= 1).all():
+                raise ValueError("ClassSpec.count must be >= 1 (padding "
+                                 "with count-0 classes happens at the "
+                                 "ClassParams level, not in the spec)")
+            object.__setattr__(self, "count", arr)
+        if self.labels is not None:
+            object.__setattr__(self, "labels", tuple(self.labels))
+            if C is not None and len(self.labels) != C:
+                raise ValueError("labels/rates length mismatch")
+
+    @classmethod
+    def from_clusters(cls, clusters, scale: int = 1) -> "ClassSpec":
+        """One class per cluster row — the aggregated form of
+        :meth:`NetworkSpec.from_clusters` (same ``scale`` semantics)."""
+        return cls(
+            mu_c=np.asarray([c.mu_c for c in clusters], np.float64),
+            mu_d=np.asarray([c.mu_d for c in clusters], np.float64),
+            mu_u=np.asarray([c.mu_u for c in clusters], np.float64),
+            count=np.asarray([max(1, c.count // scale) for c in clusters],
+                             np.int64),
+            labels=tuple(c.name for c in clusters))
+
+    @property
+    def C(self) -> int:
+        return len(self.count)
+
+    @property
+    def n_total(self) -> int:
+        return int(np.asarray(self.count).sum())
+
+    def class_params(self, p=None, mu_cs=None) -> ClassParams:
+        """Materialize :class:`repro.core.buzen.ClassParams` (routing
+        override ``p`` > spec base ``p`` > uniform ``1/n_total``)."""
+        if p is None:
+            p = (self.p if self.p is not None
+                 else np.full(self.C, 1.0 / self.n_total))
+        cp = ClassParams(
+            p=jnp.asarray(p, jnp.float64),
+            mu_c=jnp.asarray(self.mu_c), mu_d=jnp.asarray(self.mu_d),
+            mu_u=jnp.asarray(self.mu_u),
+            count=jnp.asarray(self.count, jnp.int64))
+        if mu_cs is not None:
+            cp = cp.with_cs(mu_cs)
+        return cp
+
+    def to_dict(self) -> dict:
+        return {"mu_c": _dict_vec(self.mu_c), "mu_d": _dict_vec(self.mu_d),
+                "mu_u": _dict_vec(self.mu_u),
+                "count": [int(x) for x in np.asarray(self.count)],
+                "p": _dict_vec(self.p),
+                "labels": None if self.labels is None else list(self.labels)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ClassSpec":
+        return cls(**{**d, "labels": None if d.get("labels") is None
+                      else tuple(d["labels"])})
+
+
+@_pytree_dataclass(data_fields=("mu_c", "mu_d", "mu_u", "p", "mu_cs",
+                                "classes"))
+@dataclasses.dataclass(frozen=True, eq=False)
+class NetworkSpec:
+    """The closed queueing network: per-client rates, base routing, the
+    service-time law, and the optional CS-side buffer (Section 7).
+
+    Two population representations, mutually exclusive:
+
+      * per-client arrays ``mu_c``/``mu_d``/``mu_u``/``p`` (the original
+        O(n) form), or
+      * ``classes=``, a :class:`ClassSpec` of class profiles with integer
+        multiplicities — all closed forms and the event engine then run
+        O(#classes), making ``n`` a free variable.
+    """
+
+    mu_c: Optional[np.ndarray] = None  # [n] computation rates
+    mu_d: Optional[np.ndarray] = None  # [n] downlink rates
+    mu_u: Optional[np.ndarray] = None  # [n] uplink rates
+    p: Optional[np.ndarray] = None    # [n] base routing (None = uniform)
+    mu_cs: Optional[float] = None     # CS buffer rate (None = no CS station)
+    law: str = "exponential"          # registered timing law (meta)
+    labels: Optional[tuple] = None    # per-client cluster labels (meta)
+    classes: Optional[ClassSpec] = None  # class-aggregated population
+
+    def __post_init__(self):
+        if _SKIP_VALIDATION:
+            return
+        if self.classes is not None:
+            if any(getattr(self, f) is not None
+                   for f in ("mu_c", "mu_d", "mu_u", "p")):
+                raise ValueError(
+                    "NetworkSpec with classes= must not also carry "
+                    "per-client rate/routing arrays — the ClassSpec is the "
+                    "population")
+        else:
+            if self.mu_c is None:
+                raise ValueError("NetworkSpec needs either per-client "
+                                 "rates (mu_c/mu_d/mu_u) or classes=")
+            n = _coerce_vec(self, "mu_c", positive=True)
+            n = _coerce_vec(self, "mu_d", n, positive=True)
+            n = _coerce_vec(self, "mu_u", n, positive=True)
+            _coerce_vec(self, "p", n, positive=True)
+            if self.labels is not None:
+                object.__setattr__(self, "labels", tuple(self.labels))
+                if n is not None and len(self.labels) != n:
+                    raise ValueError("labels/rates length mismatch")
         if self.mu_cs is not None and not _is_tracer(self.mu_cs):
             if not float(self.mu_cs) > 0:
                 raise ValueError(f"mu_cs must be positive, got {self.mu_cs}")
             object.__setattr__(self, "mu_cs", float(self.mu_cs))
-        if self.labels is not None:
-            object.__setattr__(self, "labels", tuple(self.labels))
-            if n is not None and len(self.labels) != n:
-                raise ValueError("labels/rates length mismatch")
         TIMING_LAWS.get(self.law)  # eager: unknown laws fail here, not in jit
 
     @classmethod
     def from_clusters(cls, clusters, scale: int = 1, *,
                       mu_cs: Optional[float] = None,
-                      law: str = "exponential") -> "NetworkSpec":
+                      law: str = "exponential",
+                      aggregate: bool = False) -> "NetworkSpec":
+        """Per-client network from cluster rows; ``aggregate=True`` builds
+        the class-aggregated form (one :class:`ClassSpec` class per
+        cluster) instead of expanding to per-client arrays."""
+        if aggregate:
+            return cls(classes=ClassSpec.from_clusters(clusters, scale),
+                       mu_cs=mu_cs, law=law)
         labels, mu_c, mu_d, mu_u, _, _, _ = expand_clusters(clusters, scale)
         return cls(mu_c=mu_c, mu_d=mu_d, mu_u=mu_u, mu_cs=mu_cs, law=law,
                    labels=labels)
 
     @property
     def n(self) -> int:
-        return len(self.mu_c)
+        return (self.classes.n_total if self.classes is not None
+                else len(self.mu_c))
 
     def params(self, p=None) -> NetworkParams:
         """Materialize :class:`repro.core.NetworkParams` (routing override
-        ``p`` > spec base ``p`` > uniform)."""
+        ``p`` > spec base ``p`` > uniform).
+
+        For a class network this *expands* the population (O(n) — the
+        oracle path; the O(C) planner paths call :meth:`class_params`
+        instead), with ``p`` interpreted per-member over classes.
+        """
+        if self.classes is not None:
+            return self.class_params(p).expand()
         if p is None:
             p = self.p if self.p is not None else np.full(self.n, 1.0 / self.n)
         params = NetworkParams(
@@ -252,16 +390,32 @@ class NetworkSpec:
             params = params.with_cs(self.mu_cs)
         return params
 
+    def class_params(self, p=None) -> ClassParams:
+        """Materialize :class:`repro.core.buzen.ClassParams` (class
+        networks only; ``p`` is per-member routing over classes)."""
+        if self.classes is None:
+            raise ValueError("not a class network: construct NetworkSpec "
+                             "with classes= for the O(C) forms")
+        return self.classes.class_params(p, mu_cs=self.mu_cs)
+
     def to_dict(self) -> dict:
-        return {"mu_c": _dict_vec(self.mu_c), "mu_d": _dict_vec(self.mu_d),
-                "mu_u": _dict_vec(self.mu_u), "p": _dict_vec(self.p),
-                "mu_cs": _opt_float(self.mu_cs), "law": self.law,
-                "labels": None if self.labels is None else list(self.labels)}
+        d = {"mu_c": _dict_vec(self.mu_c), "mu_d": _dict_vec(self.mu_d),
+             "mu_u": _dict_vec(self.mu_u), "p": _dict_vec(self.p),
+             "mu_cs": _opt_float(self.mu_cs), "law": self.law,
+             "labels": None if self.labels is None else list(self.labels)}
+        # absent (not null) when unset — the SimSpec/DataSpec precedent:
+        # pre-existing per-client scenarios keep their canonical JSON, and
+        # hence their Scenario.hash(), unchanged
+        if self.classes is not None:
+            d["classes"] = self.classes.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "NetworkSpec":
         return cls(**{**d, "labels": None if d.get("labels") is None
-                      else tuple(d["labels"])})
+                      else tuple(d["labels"]),
+                      "classes": None if d.get("classes") is None
+                      else ClassSpec.from_dict(d["classes"])})
 
 
 @_pytree_dataclass(data_fields=("consts",))
@@ -331,8 +485,12 @@ class EnergySpec:
         return cls(kappa=kappa, P_u=P_u, P_d=P_d, P_cs=P_cs)
 
     def profile(self, network: NetworkSpec) -> PowerProfile:
+        """For class networks the arrays are per-CLASS (``[C]``, one power
+        rating shared by the members of a class)."""
+        mu_c = (network.classes.mu_c if network.classes is not None
+                else network.mu_c)
         return PowerProfile.from_dvfs(
-            jnp.asarray(self.kappa), jnp.asarray(network.mu_c),
+            jnp.asarray(self.kappa), jnp.asarray(mu_c),
             jnp.asarray(self.P_u), jnp.asarray(self.P_d),
             P_cs=None if self.P_cs is None else jnp.asarray(self.P_cs))
 
@@ -540,7 +698,11 @@ class Scenario:
         if _SKIP_VALIDATION:
             return
         if self.energy is not None and not _is_tracer(self.energy.kappa):
-            if len(self.energy.kappa) != self.network.n:
+            # class networks carry per-CLASS power arrays
+            expected = (self.network.classes.C
+                        if self.network.classes is not None
+                        else self.network.n)
+            if len(self.energy.kappa) != expected:
                 raise ValueError("energy/network population mismatch")
         # contract: allow(stringly-dispatch): eager construction-time check that these two strategies need an EnergySpec — resolution itself routes through STRATEGIES
         if (self.strategy.name in ("energy_opt", "joint")
@@ -560,6 +722,13 @@ class Scenario:
 
     def params(self, p=None) -> NetworkParams:
         return self.network.params(p)
+
+    def class_params(self, p=None) -> ClassParams:
+        return self.network.class_params(p)
+
+    @property
+    def is_class_network(self) -> bool:
+        return self.network.classes is not None
 
     def power(self) -> Optional[PowerProfile]:
         return None if self.energy is None else self.energy.profile(

@@ -35,19 +35,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.buzen import (NetworkParams, log_normalizing_constants,
+from ..core.buzen import (NetworkParams, class_log_normalizing_constants,
+                          log_normalizing_constants, pad_classes,
                           pad_network)
 from ..core.events import unpad_stats
 from ..core.complexity import LearningConstants, wallclock_time
 from ..core.energy import (PowerProfile, energy_optimal_routing,
                            minimal_energy)
-from ..core.batched import (energy_complexity_padded,
+from ..core.batched import (energy_complexity_classes,
+                            energy_complexity_padded,
+                            expected_relative_delay_classes,
                             expected_relative_delay_padded,
                             make_energy_objective_padded,
                             make_joint_objective_padded,
                             make_round_objective_padded,
                             make_throughput_objective_padded,
                             make_time_objective_padded,
+                            round_complexity_classes,
                             round_complexity_padded, throughput_padded)
 from ..core.optimize import (joint_optimal, make_energy_objective,
                              make_joint_objective, make_round_objective,
@@ -235,13 +239,73 @@ def default_m_max(n: int) -> int:
     return n + max(8, n // 4)
 
 
+def _resolve_class_strategy(scenario: Scenario, cache: dict
+                            ) -> tuple[np.ndarray, int]:
+    """Class-space strategy resolution — O(#classes), never expands.
+
+    Returns a PER-CLASS routing vector ``p`` of shape ``[C]`` (one member's
+    probability for each class; the class mass is ``count_c * p_c``).
+    Supported strategies: ``"asyncsgd"`` (uniform per-member routing,
+    ``m = n_total`` unless forced) and ``"time_opt"`` (the class-space
+    concurrency sweep of ``repro.core.optimize.time_optimal_classes``;
+    requires an explicit ``StrategySpec.m_max`` — the per-client default
+    ``n + max(8, n//4)`` would be absurd at ``n = 10^6``).  Other
+    registered strategies raise: resolve them on the expanded per-client
+    network (``aggregate=False``) when the population is small enough.
+    """
+    from ..core.optimize import time_optimal_classes
+
+    spec = scenario.strategy
+    classes = scenario.class_params()
+    n_total = int(scenario.n)
+    C = scenario.network.classes.C
+    if spec.name == "asyncsgd":
+        m = spec.m if spec.m is not None else n_total
+        return _as_pm(np.full(C, 1.0 / n_total), m)
+    if spec.name == "time_opt":
+        if spec.m_max is None:
+            raise ValueError(
+                "class-network 'time_opt' needs an explicit "
+                "StrategySpec.m_max: the per-client default scales with the "
+                f"population (n_total = {n_total} here)")
+        if spec.m is not None and spec.m > spec.m_max:
+            raise ValueError(f"forced m={spec.m} exceeds m_max={spec.m_max}")
+        from ..core.batched import make_time_objective_classes
+        from ..core.optimize import batched_concurrency_sweep
+
+        if spec.m is not None:
+            res = batched_concurrency_sweep(
+                make_time_objective_classes(classes, scenario.consts,
+                                            spec.m_max),
+                classes, m_grid=[spec.m], m_max=spec.m_max,
+                steps=spec.steps).best
+        else:
+            res = time_optimal_classes(classes, scenario.consts, spec.m_max,
+                                       search=spec.search, steps=spec.steps)
+        cache.setdefault("tau_star", float(res.value))
+        return _as_pm(res.p, res.m)
+    raise ValueError(
+        f"strategy {scenario.strategy.name!r} has no class-space resolver; "
+        "class networks support 'explicit', 'asyncsgd' and 'time_opt' "
+        "(expand with NetworkSpec.from_clusters(..., aggregate=False) to "
+        "use the per-client resolvers)")
+
+
 def resolve_strategy(scenario: Scenario, *, resolved: Optional[dict] = None,
                      cache: Optional[dict] = None
                      ) -> tuple[np.ndarray, int]:
-    """One scenario's ``(p, m)``: explicit spec or registry resolver."""
+    """One scenario's ``(p, m)``: explicit spec or registry resolver.
+
+    Class-aggregated networks dispatch to the O(#classes) resolvers BEFORE
+    any per-client array exists — ``scenario.params()`` would expand the
+    population, which is exactly what the class axis avoids.
+    """
     spec = scenario.strategy
     if spec.name == EXPLICIT:
         return _as_pm(spec.p, spec.m)
+    if scenario.is_class_network:
+        return _resolve_class_strategy(scenario,
+                                       {} if cache is None else cache)
     n = scenario.n
     ctx = ResolveContext(
         params=scenario.params(), consts=scenario.consts,
@@ -378,7 +442,13 @@ class ScenarioSuite:
         """
         strategies = self.resolve()
         names = list(self.scenarios)
-        n_max = max(s.n for s in self.scenarios.values())
+        # class-aggregated scenarios never inflate the per-client pad: the
+        # suite-wide n_max spans plain scenarios only, class lanes pad on
+        # the CLASS axis (c_max) instead
+        n_max = max((s.n for s in self.scenarios.values()
+                     if not s.is_class_network), default=0)
+        c_max = max((s.network.classes.C for s in self.scenarios.values()
+                     if s.is_class_network), default=0)
         entries: dict = {}
         cache_hits = 0
         buckets: dict = {}
@@ -390,33 +460,47 @@ class ScenarioSuite:
                 entries[name] = hit
                 cache_hits += 1
                 continue
-            key = (scn.network.mu_cs is not None, _power_sig(scn))
+            key = (scn.network.mu_cs is not None, _power_sig(scn),
+                   scn.is_class_network)
             buckets.setdefault(key, []).append(name)
 
         programs = 0
-        for (has_cs, power_sig), members in buckets.items():
+        for (has_cs, power_sig, is_classes), members in buckets.items():
             has_power = power_sig is not None
             m_max = max(strategies[name][1] for name in members)
-            prm = _stack_params(
-                [pad_network(self.scenarios[n_].params(strategies[n_][0]),
-                             n_max) for n_ in members])
+            axis_max = c_max if is_classes else n_max
+            if is_classes:
+                prm = _stack_params(
+                    [pad_classes(
+                        self.scenarios[n_].class_params(strategies[n_][0]),
+                        c_max) for n_ in members])
+            else:
+                prm = _stack_params(
+                    [pad_network(
+                        self.scenarios[n_].params(strategies[n_][0]),
+                        n_max) for n_ in members])
             consts = _stack_consts([self.scenarios[n_].consts
                                     for n_ in members])
             power = (_stack_power([_pad_power(self.scenarios[n_].power(),
-                                              n_max) for n_ in members])
+                                              axis_max) for n_ in members])
                      if has_power else None)
             m_vec = jnp.asarray([strategies[n_][1] for n_ in members],
                                 jnp.int64)
             rho = jnp.asarray([self.scenarios[n_].objective.rho
                                for n_ in members])
-            sig = ("analyze", n_max, has_cs, power_sig, m_max)
+            sig = ("analyze", is_classes, axis_max, has_cs, power_sig, m_max)
             fn = self._jit_cache.get(sig)
             if fn is None:
-                fn = self._jit_cache[sig] = _build_analyze(m_max, has_power)
+                build = (_build_analyze_classes if is_classes
+                         else _build_analyze)
+                fn = self._jit_cache[sig] = build(m_max, has_power)
                 programs += 1
             out = fn(prm, m_vec, consts, power, rho)
             for i, name in enumerate(members):
-                n_i = self.scenarios[name].n
+                # class rows report per-CLASS delays (one member each);
+                # truncate to the scenario's own axis either way
+                n_i = (self.scenarios[name].network.classes.C if is_classes
+                       else self.scenarios[name].n)
                 row = {k: np.asarray(v[i]) for k, v in out.items()}
                 row["delays"] = row["delays"][:n_i]
                 p, m = strategies[name]
@@ -463,11 +547,14 @@ class ScenarioSuite:
         per-scenario unpadded run at the same table size exactly.
         """
         from ..sim.backend import resolve_backend
-        from ..sim.batched_events import build_lanes_fn
+        from ..sim.batched_events import build_class_lanes_fn, build_lanes_fn
 
         strategies = self.resolve()
         names = list(self.scenarios)
-        n_max = max(s.n for s in self.scenarios.values())
+        n_max = max((s.n for s in self.scenarios.values()
+                     if not s.is_class_network), default=0)
+        c_max = max((s.network.classes.C for s in self.scenarios.values()
+                     if s.is_class_network), default=0)
         entries: dict = {}
         cache_hits = 0
         buckets: dict = {}
@@ -477,12 +564,12 @@ class ScenarioSuite:
                                  else scn.sim_backend)
             interp = None if scn.sim is None else scn.sim.interpret
             key = (scn.network.law, scn.network.mu_cs is not None,
-                   _power_sig(scn), bk, interp)
+                   _power_sig(scn), bk, interp, scn.is_class_network)
             buckets.setdefault(key, []).append(name)
 
         programs = 0
         S = len(self.seeds)
-        for (law, has_cs, power_sig, bk, interp), members in \
+        for (law, has_cs, power_sig, bk, interp, is_classes), members in \
                 buckets.items():
             has_power = power_sig is not None
             # the table size comes from ALL bucket members (trajectories
@@ -510,12 +597,21 @@ class ScenarioSuite:
                     todo.append((name, ckey))
             if not todo:
                 continue
-            lane_params = _stack_params(
-                [pad_network(self.scenarios[n_].params(strategies[n_][0]),
-                             n_max)
-                 for n_, _ in todo for _ in self.seeds])
+            axis_max = c_max if is_classes else n_max
+            if is_classes:
+                lane_params = _stack_params(
+                    [pad_classes(
+                        self.scenarios[n_].class_params(strategies[n_][0]),
+                        c_max)
+                     for n_, _ in todo for _ in self.seeds])
+            else:
+                lane_params = _stack_params(
+                    [pad_network(
+                        self.scenarios[n_].params(strategies[n_][0]),
+                        n_max)
+                     for n_, _ in todo for _ in self.seeds])
             power = (_stack_power([_pad_power(self.scenarios[n_].power(),
-                                              n_max)
+                                              axis_max)
                                    for n_, _ in todo for _ in self.seeds])
                      if has_power else None)
             m_vec = jnp.asarray([strategies[n_][1]
@@ -523,17 +619,25 @@ class ScenarioSuite:
                                 jnp.int32)
             keys = jnp.stack([jax.random.PRNGKey(s)
                               for _ in todo for s in self.seeds])
-            sig = ("simulate", n_max, law, has_cs, power_sig, mx,
-                   int(num_updates), int(warmup), bk, interp)
+            sig = ("simulate", is_classes, axis_max, law, has_cs, power_sig,
+                   mx, int(num_updates), int(warmup), bk, interp)
             fn = self._jit_cache.get(sig)
             if fn is None:
-                fn = self._jit_cache[sig] = build_lanes_fn(
-                    bk, int(num_updates), int(warmup), law, mx, has_power,
-                    interpret=interp)
+                if is_classes:
+                    fn = self._jit_cache[sig] = build_class_lanes_fn(
+                        bk, int(num_updates), int(warmup), law, mx,
+                        has_power)
+                else:
+                    fn = self._jit_cache[sig] = build_lanes_fn(
+                        bk, int(num_updates), int(warmup), law, mx,
+                        has_power, interpret=interp)
                 programs += 1
             stats = fn(lane_params, m_vec, keys, power)
             for i, (name, ckey) in enumerate(todo):
-                n_i = self.scenarios[name].n
+                # class lanes: statistics are per-CLASS — unpad on the
+                # class axis (expand_class_stats recovers per-member views)
+                n_i = (self.scenarios[name].network.classes.C if is_classes
+                       else self.scenarios[name].n)
                 entries[name] = [
                     unpad_stats(jax.tree_util.tree_map(
                         lambda a: a[i * S + j], stats), n_i)
@@ -716,5 +820,41 @@ def _build_analyze(m_max: int, has_power: bool):
         return one(prm, m, consts, None, rho)
 
     return jax.jit(jax.vmap(analyze_lanes, in_axes=(0, 0, 0, None, 0)))
+
+
+def _build_analyze_classes(m_max: int, has_power: bool):
+    """The class-space analogue of :func:`_build_analyze`.
+
+    Each lane is a :class:`~repro.core.buzen.ClassParams` network: the
+    class Buzen DP is O(C m^2) and every population sum is class-weighted,
+    so the analyze pass never materializes a per-client array — n = 10^6
+    scenarios cost the same as n = 10 at equal class counts.  ``delays``
+    is per-CLASS (one member of each class).
+    """
+
+    def one(cls_, m, consts, power, rho):
+        logZ = class_log_normalizing_constants(cls_, m_max)
+        thr = throughput_padded(logZ, m)
+        delays = expected_relative_delay_classes(cls_, m, logZ, m_max)
+        k_eps = round_complexity_classes(cls_, m, consts, logZ, m_max)
+        tau = k_eps / thr
+        out = {"throughput": thr, "K_eps": k_eps, "tau": tau,
+               "delays": delays}
+        if has_power:
+            en = energy_complexity_classes(cls_, m, consts, power, logZ,
+                                           m_max)
+            out["energy"] = en
+            out["joint"] = rho * en + (1.0 - rho) * tau
+        return out
+
+    if has_power:
+        return jax.jit(jax.vmap(one))
+
+    # named (not a lambda) for the tracecheck program budgets
+    def analyze_class_lanes(prm, m, consts, _pw, rho):
+        return one(prm, m, consts, None, rho)
+
+    return jax.jit(jax.vmap(analyze_class_lanes,
+                            in_axes=(0, 0, 0, None, 0)))
 
 

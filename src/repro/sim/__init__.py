@@ -8,7 +8,11 @@ One flag (``REPRO_SIM_BACKEND`` / :func:`set_backend`, per-call
     (bitwise identical to the reference; the default);
   * ``"pallas"``    — the lock-step scan with the per-event table
     transition in the Pallas TPU kernel ``repro.kernels.events``
-    (compiled on TPU, ``interpret=True`` fallback elsewhere).
+    (compiled on TPU, ``interpret=True`` fallback elsewhere);
+  * ``"sharded"``   — the batched program ``shard_map``-ped over the lane
+    axis so lanes split across all local devices
+    (``repro.sim.sharded``; bitwise identical to ``"batched"`` at any
+    device count).
 
 Routed through this dispatch: ``repro.core.events.simulate_stats`` /
 ``next_update``, the fused trainer (``repro.fl.engine``), and
@@ -25,7 +29,8 @@ from __future__ import annotations
 
 from .backend import BACKENDS, get_backend, resolve_backend, set_backend
 
-_LANES = ("simulate_stats_lanes", "build_lanes_fn", "stack_lanes")
+_LANES = ("simulate_stats_lanes", "build_lanes_fn", "build_class_lanes_fn",
+          "stack_lanes")
 
 __all__ = ["BACKENDS", "set_backend", "get_backend", "resolve_backend",
            *_LANES]

@@ -17,6 +17,9 @@ dispatches behind a named backend —
     phase-promotion / routing / FIFO-pick table transition) runs in the
     Pallas TPU kernel ``repro.kernels.events`` (compiled on TPU,
     ``interpret=True`` fallback elsewhere).
+  * ``"sharded"``  — ``"batched"`` with the lane axis split across all
+    local devices via ``shard_map`` (``repro.sim.sharded``); bitwise
+    identical to ``"batched"`` lane-by-lane at any device count.
 
 Select per call with ``backend=...``, process-wide with
 :func:`set_backend`, or via the ``REPRO_SIM_BACKEND`` environment variable.
@@ -28,7 +31,7 @@ from __future__ import annotations
 import os
 from typing import Optional
 
-BACKENDS = ("reference", "batched", "pallas")
+BACKENDS = ("reference", "batched", "pallas", "sharded")
 
 _backend: Optional[str] = None  # resolved lazily so a bad env var reports late
 

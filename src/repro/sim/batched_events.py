@@ -110,6 +110,11 @@ def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
     if backend == "pallas":
         return _make_pallas_fn(nu, wu, distribution, m_max, interpret)
 
+    if backend == "sharded":
+        from .sharded import build_sharded_lanes_fn
+
+        return build_sharded_lanes_fn(nu, wu, distribution, m_max, has_power)
+
     # "batched": one jitted vmap of the single-lane scan
     def one(prm, m, key, power):
         return events._simulate_stats(prm, m, key, nu, wu, distribution,
@@ -125,6 +130,63 @@ def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
         return one(prm, m, key, None)
 
     return jax.jit(jax.vmap(lanes, in_axes=(0, 0, 0, None)))
+
+
+def build_class_lanes_fn(backend: str, num_updates: int, warmup: int,
+                         distribution: str, m_max: int, has_power: bool):
+    """The compiled class-lane sweep program for one static signature.
+
+    Like :func:`build_lanes_fn` but each lane is a class-aggregated network
+    (``repro.core.buzen.ClassParams``) run through the O(#classes) engine
+    ``events._simulate_stats_classes`` — per-lane state scales with the
+    number of classes, not the population, so lanes with n = 10^5-10^6
+    members fit on device.  No pallas kernel exists for the class engine;
+    ``"pallas"`` raises.
+    """
+    return _build_class_lanes_fn(resolve_backend(backend), int(num_updates),
+                                 int(warmup), distribution, int(m_max),
+                                 bool(has_power))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_class_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
+                          m_max: int, has_power: bool):
+    if backend == "pallas":
+        raise ValueError(
+            "the class-aggregated event engine has no pallas kernel; pin "
+            "backend='batched', 'reference' or 'sharded' for class lanes")
+
+    def one(cls_, m, key, power):
+        return events._simulate_stats_classes(cls_, m, key, nu, wu,
+                                              distribution, m_max, power)
+
+    if backend == "reference":
+        def fn(lane_classes, m_vec, keys, power):
+            outs = []
+            for i in range(int(m_vec.shape[0])):
+                cls_ = jax.tree_util.tree_map(lambda x: x[i], lane_classes)
+                pw = (None if power is None
+                      else jax.tree_util.tree_map(lambda x: x[i], power))
+                outs.append(one(cls_, m_vec[i], keys[i], pw))
+            return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+        return fn
+
+    if backend == "sharded":
+        from .sharded import build_sharded_class_lanes_fn
+
+        return build_sharded_class_lanes_fn(nu, wu, distribution, m_max,
+                                            has_power)
+
+    # "batched": one jitted vmap of the single-lane class scan
+    if has_power:
+        return jax.jit(jax.vmap(one))
+
+    # named (not a lambda) for the tracecheck program budgets
+    def class_lanes(cls_, m, key, _pw):
+        return one(cls_, m, key, None)
+
+    return jax.jit(jax.vmap(class_lanes, in_axes=(0, 0, 0, None)))
 
 
 def simulate_stats_lanes(params, ms, num_updates: int, *, warmup: int = 0,

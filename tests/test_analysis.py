@@ -362,9 +362,10 @@ def test_sentinel_catches_per_scenario_replanning(tracecheck):
 # ---------------------------------------------------------------------------
 
 EXPECTED_PROGRAMS = {
-    "suite_analyze", "suite_simulate_batched", "suite_simulate_pallas",
-    "simulate_reference_lane", "trainer_scan", "kernel_buzen",
-    "kernel_events",
+    "suite_analyze", "suite_analyze_classes", "suite_simulate_batched",
+    "suite_simulate_classes", "suite_simulate_pallas",
+    "suite_simulate_sharded", "simulate_reference_lane", "trainer_scan",
+    "kernel_buzen", "kernel_buzen_classes", "kernel_events",
 }
 
 
@@ -377,7 +378,7 @@ def test_audit_registry_covers_every_resident_program():
 @pytest.fixture(scope="module")
 def audit_report():
     """A two-program report (the cheap analyze + Buzen-kernel builders);
-    the full seven-program artifact is CI's job (AUDIT_jaxpr.json)."""
+    the full eleven-program artifact is CI's job (AUDIT_jaxpr.json)."""
     from repro.analysis import audit
 
     return audit.build_report(names=["suite_analyze", "kernel_buzen"])

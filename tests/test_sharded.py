@@ -1,0 +1,152 @@
+"""Multi-device lane sharding (``repro.sim.sharded``).
+
+Bitwise contract: lanes are lane-local programs, so ``shard_map`` over the
+lane axis only changes WHERE a lane runs — ``backend="sharded"`` equals
+``backend="batched"`` lane-by-lane at ANY device count.  In-process tests
+run at whatever the process device count is (1 on plain CPU; the CI
+multi-device leg forces 8 with ``--xla_force_host_platform_device_count``);
+the subprocess test always exercises a real 8-device mesh plus the
+non-divisible lane-padding path.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.buzen import NetworkParams
+from repro.sim.batched_events import simulate_stats_lanes
+from repro.sim.sharded import device_count
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def random_params(seed, n, with_cs=False):
+    rng = np.random.default_rng(seed)
+    params = NetworkParams(
+        p=jnp.asarray(rng.dirichlet(np.ones(n) * 2.0)),
+        mu_c=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.5, 4.0, n)))
+    return params.with_cs(1.5) if with_cs else params
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sharded_backend_registered():
+    from repro.sim.backend import BACKENDS
+
+    assert "sharded" in BACKENDS
+
+
+@pytest.mark.parametrize("with_cs", [False, True])
+def test_sharded_lanes_bitwise_vs_batched(with_cs):
+    lanes = [random_params(s, 6, with_cs) for s in range(5)]
+    ms = [3, 4, 5, 3, 4]
+    kw = dict(warmup=50, m_max=5, seeds=range(5))
+    a = simulate_stats_lanes(lanes, ms, 200, backend="batched", **kw)
+    b = simulate_stats_lanes(lanes, ms, 200, backend="sharded", **kw)
+    assert_trees_equal(a, b)
+
+
+def test_sharded_class_lanes_bitwise_vs_batched():
+    from repro.core.buzen import ClassParams
+    from repro.sim.batched_events import build_class_lanes_fn, stack_lanes
+
+    def mk(seed):
+        rng = np.random.default_rng(seed)
+        cnt = np.array([3, 2, 5])
+        p = rng.dirichlet(np.ones(3))
+        return ClassParams(p=jnp.asarray(p / cnt), mu_c=jnp.asarray(
+            rng.uniform(0.5, 4.0, 3)),
+            mu_d=jnp.asarray(rng.uniform(2.0, 6.0, 3)),
+            mu_u=jnp.asarray(rng.uniform(2.0, 6.0, 3)),
+            count=jnp.asarray(cnt))
+
+    lane_classes = stack_lanes([mk(s) for s in range(4)])
+    m_vec = jnp.asarray([3, 4, 5, 3], jnp.int32)
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(4)])
+    fb = build_class_lanes_fn("batched", 200, 50, "exponential", 5, False)
+    fs = build_class_lanes_fn("sharded", 200, 50, "exponential", 5, False)
+    assert_trees_equal(fb(lane_classes, m_vec, keys, None),
+                       fs(lane_classes, m_vec, keys, None))
+
+
+def test_sharded_suite_bitwise_vs_batched():
+    from repro.scenario import NetworkSpec, Scenario, ScenarioSuite
+    from repro.scenario.spec import ClusterSpec, LearningSpec
+
+    rows = (ClusterSpec("A", 1.0, 6.0, 6.0, 3),
+            ClusterSpec("B", 2.0, 7.0, 7.0, 3))
+    base = Scenario(network=NetworkSpec.from_clusters(rows),
+                    learning=LearningSpec())
+    mk = lambda: ScenarioSuite(base.with_strategy("asyncsgd", m=4),
+                               seeds=(0, 1, 2))
+    ra = mk().run(mode="simulate", num_updates=200, warmup=50,
+                  backend="batched")
+    rb = mk().run(mode="simulate", num_updates=200, warmup=50,
+                  backend="sharded")
+    for k in ra.entries:
+        for a, b in zip(ra.entries[k], rb.entries[k]):
+            assert_trees_equal(a, b)
+
+
+def test_class_lanes_pallas_backend_rejected():
+    from repro.sim.batched_events import build_class_lanes_fn
+
+    with pytest.raises(ValueError, match="pallas"):
+        build_class_lanes_fn("pallas", 100, 0, "exponential", 4, False)
+
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.core.buzen import NetworkParams
+from repro.sim.batched_events import simulate_stats_lanes
+from repro.sim.sharded import device_count
+
+assert device_count() == 8, device_count()
+
+def mk(seed, n=6):
+    rng = np.random.default_rng(seed)
+    return NetworkParams(
+        p=jnp.asarray(rng.dirichlet(np.ones(n) * 2.0)),
+        mu_c=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.5, 4.0, n)))
+
+# L=5 is NOT a multiple of 8: exercises the repeat-last-lane padding
+lanes = [mk(s) for s in range(5)]
+ms = [3, 4, 5, 3, 4]
+kw = dict(warmup=30, m_max=5, seeds=range(5))
+a = simulate_stats_lanes(lanes, ms, 120, backend="batched", **kw)
+b = simulate_stats_lanes(lanes, ms, 120, backend="sharded", **kw)
+for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+print("OK devices=8 bitwise")
+"""
+
+
+def test_sharded_eight_devices_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _CHILD],
+                         capture_output=True, text=True, timeout=560,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK devices=8 bitwise" in out.stdout
+
+
+def test_device_count_positive():
+    assert device_count() >= 1
