@@ -1,0 +1,131 @@
+"""Serve-path benchmark: micro-batching vs one-at-a-time dispatch.
+
+Boots the real server (unix socket, in-process) and pushes one mixed-
+population simulate workload through it two ways:
+
+* ``serve_batched`` — every request pipelined into the same micro-batch
+  window, so the batcher coalesces them into spare lanes of few
+  dispatches (requests/dispatch > 1 is the headline number);
+* ``serve_sequential`` — the same requests submitted one-at-a-time
+  (wait for each result before the next), the no-batching baseline;
+* ``serve_cache_hit`` — a repeat of an already-answered request: served
+  from the response cache at admission, zero dispatches.
+
+Rows carry req/s, mean requests- and lanes-per-dispatch (from the
+``scheduled`` events) and the server-side p50/p99 request latency.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+N_REQUESTS = 6
+SEEDS = (0, 1)
+NUM_UPDATES = 60
+
+
+def _scenarios():
+    from repro.core.complexity import LearningConstants
+    from repro.scenario import (LearningSpec, NetworkSpec, Scenario,
+                                StrategySpec)
+
+    consts = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0,
+                               eps=1.0)
+    out = []
+    for i in range(N_REQUESTS):
+        n = 3 + (i % 3)  # mixed populations: the padded coalescing case
+        rng = np.random.default_rng(100 + i)
+        out.append(Scenario(
+            network=NetworkSpec(mu_c=list(rng.uniform(1.0, 2.0, n)),
+                                mu_d=[2.0] * n, mu_u=[2.0] * n),
+            learning=LearningSpec(consts=consts),
+            strategy=StrategySpec("explicit", p=list(np.full(n, 1.0 / n)),
+                                  m=2)))
+    return out
+
+
+def _sched_stats(client, ids):
+    reqs, lanes = [], []
+    for rid in ids:
+        for ev in client.events_for(rid):
+            if ev["event"] == "scheduled":
+                reqs.append(ev["requests"])
+                lanes.append(ev["lanes"])
+    return ((float(np.mean(reqs)) if reqs else 0.0),
+            (float(np.mean(lanes)) if lanes else 0.0))
+
+
+def run():
+    from repro.serve.client import ServeClient
+    from repro.serve.server import ServeConfig, Server
+
+    scns = _scenarios()
+    sock = tempfile.mktemp(suffix=".sock")
+    server = Server(ServeConfig(socket_path=sock, max_wait=0.1,
+                                max_lanes=64))
+    server.start()
+    try:
+        # warm the resident program (compile cost must not skew either arm)
+        with ServeClient(sock, timeout=600) as c:
+            c.run(scns[0], mode="simulate", seeds=SEEDS,
+                  num_updates=NUM_UPDATES)
+
+        with ServeClient(sock, timeout=600) as c:
+            t0 = time.perf_counter()
+            ids = [c.submit(s, mode="simulate", seeds=SEEDS,
+                            num_updates=NUM_UPDATES) for s in scns[1:]]
+            for rid in ids:
+                c.unwrap(c.collect(rid))
+            wall = time.perf_counter() - t0
+            rpd, lpd = _sched_stats(c, ids)
+        n = len(scns) - 1
+        yield (f"serve_batched,{wall / n * 1e6:.1f},"
+               f"req_per_s={n / wall:.1f};requests_per_dispatch={rpd:.2f};"
+               f"lanes_per_dispatch={lpd:.2f}")
+
+        # sequential baseline: fresh rates so the response cache cannot help
+        seq = []
+        for i in range(N_REQUESTS - 1):
+            rng = np.random.default_rng(200 + i)
+            base = scns[1 + i].to_dict()
+            base["network"]["mu_c"] = list(
+                rng.uniform(1.0, 2.0, len(base["network"]["mu_c"])))
+            seq.append(base)
+        with ServeClient(sock, timeout=600) as c:
+            t0 = time.perf_counter()
+            ids = []
+            for s in seq:
+                rid = c.submit(s, mode="simulate", seeds=SEEDS,
+                               num_updates=NUM_UPDATES)
+                c.unwrap(c.collect(rid))
+                ids.append(rid)
+            wall_seq = time.perf_counter() - t0
+            rpd_seq, lpd_seq = _sched_stats(c, ids)
+        n = len(seq)
+        yield (f"serve_sequential,{wall_seq / n * 1e6:.1f},"
+               f"req_per_s={n / wall_seq:.1f};"
+               f"requests_per_dispatch={rpd_seq:.2f};"
+               f"lanes_per_dispatch={lpd_seq:.2f}")
+
+        # repeat request: response cache at admission, no dispatch
+        with ServeClient(sock, timeout=600) as c:
+            t0 = time.perf_counter()
+            rid = c.submit(scns[1], mode="simulate", seeds=SEEDS,
+                           num_updates=NUM_UPDATES)
+            msg = c.collect(rid)
+            c.unwrap(msg)
+            t_hit = time.perf_counter() - t0
+            assert msg.get("cached") is True
+            assert c.events_for(rid) == []  # no accepted/scheduled: no lanes
+            st = c.stats()
+        yield f"serve_cache_hit,{t_hit * 1e6:.1f},cached_no_dispatch"
+        lat = st["latency"].get("serve.request_latency{mode=simulate}", {})
+        yield (f"serve_latency,{lat.get('p50', 0.0) * 1e6:.1f},"
+               f"p50_ms={lat.get('p50', 0.0) * 1e3:.2f};"
+               f"p99_ms={lat.get('p99', 0.0) * 1e3:.2f}")
+    finally:
+        server.stop()

@@ -30,7 +30,8 @@ def build_suites(mode: str, backends=None):
                             bench_population_sweep, bench_pruned_sweep,
                             bench_queueing, bench_round_optimization,
                             bench_routing_table, bench_scenario_suite,
-                            bench_tau_surface, bench_training_comparison)
+                            bench_serve, bench_tau_surface,
+                            bench_training_comparison)
 
     backends = backends or bench_events_scale.DEFAULT_BACKENDS
     fast = mode == "fast"
@@ -71,6 +72,8 @@ def build_suites(mode: str, backends=None):
                 horizon=40.0, distributions=("exponential",), seeds=(0,))),
             ("energy_joint", lambda: bench_energy_joint.run(
                 horizon=40.0, seeds=(0,))),
+            # micro-batched vs one-at-a-time dispatch through the server
+            ("serve", lambda: bench_serve.run()),
             ("kernels", lambda: bench_kernels.run()),
         ]
     return [
@@ -105,6 +108,7 @@ def build_suites(mode: str, backends=None):
             steps=30 if fast else 120)),
         ("energy_joint", lambda: bench_energy_joint.run(
             horizon=120.0 if fast else 240.0, seeds=(0,) if fast else (0, 1))),
+        ("serve", lambda: bench_serve.run()),
         ("kernels", lambda: bench_kernels.run()),
     ]
 
@@ -120,7 +124,18 @@ def main(argv=None) -> None:
                     help="comma-separated repro.sim backends the "
                          "events_scale sweep records per-backend rows for "
                          "(default: reference,batched,pallas)")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="skip the persistent XLA compilation cache "
+                         "(JAX_COMPILATION_CACHE_DIR picks its location)")
     args = ap.parse_args(argv)
+
+    if not args.no_compile_cache:
+        # warm restarts for the bench too: repeat runs deserialize their
+        # programs instead of recompiling (suite rows record cache_hits)
+        from repro.serve.xla_cache import enable_persistent_cache
+
+        print(f"# persistent compilation cache at "
+              f"{enable_persistent_cache()}", flush=True)
 
     backends = None
     if args.backends:
@@ -162,7 +177,8 @@ def main(argv=None) -> None:
         results.append({"suite": name, "name": f"{name}.__suite_s",
                         "us_per_call": (time.time() - t0) * 1e6,
                         "derived": "suite_wall_time",
-                        "traces": w.traces, "compiles": w.compiles})
+                        "traces": w.traces, "compiles": w.compiles,
+                        "cache_hits": w.cache_hits})
 
     if mode == "smoke":
         import jax

@@ -325,6 +325,61 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
         return jax.make_jaxpr(fn)(params0, p_mat, ms, etas, sim_keys,
                                   data_keys)
 
+    def trainer_scan_lane_nets():
+        from ..fl.engine import DeviceTrainer, pad_client_data
+        from ..fl.models import mlp_classifier
+        from ..fl.trainer import AsyncFLConfig
+        from ..core.buzen import NetworkParams, pad_network
+
+        rng = np.random.default_rng(9)
+        n_top = 3
+
+        def mk_net(n):
+            return NetworkParams(
+                p=jnp.asarray(rng.dirichlet(np.ones(n))),
+                mu_c=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+                mu_d=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+                mu_u=jnp.asarray(rng.uniform(0.5, 4.0, n)))
+
+        def mk_clients(n, s):
+            return [(rng.normal(size=(s, 4)).astype(np.float32),
+                     rng.integers(0, 2, size=s).astype(np.int32))
+                    for _ in range(n)]
+
+        test = (rng.normal(size=(6, 4)).astype(np.float32),
+                rng.integers(0, 2, size=6).astype(np.int32))
+        model = mlp_classifier(4, 2, hidden=(4,))
+        trainer = DeviceTrainer(
+            model, mk_clients(n_top, 4), mk_net(n_top),
+            AsyncFLConfig(eta=0.05, batch_size=2, eval_every_time=2.0),
+            test_data=test)
+        K, G = 4, 2
+        fn = trainer._build(K, G, m_max, 6.0, "batched", None,
+                            lane_mode=True)
+        # mixed populations: lane 1 is a 2-client net padded to n_top
+        sizes_n = [n_top, n_top - 1]
+        nets = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[pad_network(mk_net(n), n_top) for n in sizes_n])
+        tables = [pad_client_data(mk_clients(n, 3 + n % 2), n_total=n_top,
+                                  min_samples=4) for n in sizes_n]
+        lane_x = jnp.stack([t.x for t in tables])
+        lane_y = jnp.stack([t.y for t in tables])
+        lane_sizes = jnp.stack([t.sizes for t in tables])
+        n_acts = jnp.asarray(np.asarray(sizes_n, np.float64))
+        params0 = jax.vmap(model.init)(
+            jnp.stack([jax.random.PRNGKey(s) for s in range(L)]))
+        p_mat = jnp.stack([
+            jnp.pad(net_p, (0, n_top - net_p.shape[0]))
+            for net_p in (mk_net(n).p for n in sizes_n)])
+        ms = jnp.asarray([2] * L, jnp.int32)
+        etas = jnp.asarray([0.05] * L)
+        sim_keys = jnp.stack([jax.random.PRNGKey(10 + s) for s in range(L)])
+        data_keys = jnp.stack([jax.random.PRNGKey(20 + s) for s in range(L)])
+        return jax.make_jaxpr(fn)(params0, nets, lane_x, lane_y,
+                                  lane_sizes, n_acts, p_mat, ms, etas,
+                                  sim_keys, data_keys)
+
     def suite_analyze_classes():
         from ..core.complexity import LearningConstants
         from ..scenario.suite import _build_analyze_classes, _stack_consts
@@ -419,6 +474,10 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
         "trainer_scan": (
             "DeviceTrainer fused training scan (suite train bucket): "
             "jit(vmap) over lanes", trainer_scan),
+        "trainer_scan_lane_nets": (
+            "DeviceTrainer lane-mode training scan (serve mixed-n train "
+            "bucket): network + padded client table vmapped per lane",
+            trainer_scan_lane_nets),
         "kernel_buzen": (
             "Pallas Buzen DP kernel, interpret path "
             "(kernels.buzen.buzen_pallas_batched)", kernel_buzen),

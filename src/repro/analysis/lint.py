@@ -31,8 +31,11 @@ turns them from ROADMAP prose into checked-in static analysis:
     Python ``if``/``while`` on a ``jnp`` expression inside a traced
     function (must be ``lax.cond``/``jnp.where``/``lax.while_loop``).
 ``env-read``
-    ``os.environ``/``os.getenv`` inside a traced function: the value is
-    frozen at trace time, invisibly keyed into no cache.
+    ``os.environ``/``os.getenv`` inside a traced function (the value is
+    frozen at trace time, invisibly keyed into no cache) or at module
+    scope (frozen at *import* time — a server process imports once and
+    then ignores the environment forever; read config where it is
+    consumed, or suppress with the why).  Writes are fine.
 ``bad-suppression``
     a ``# contract: allow(...)`` comment without a justification, or
     naming an unknown rule.
@@ -79,8 +82,9 @@ RULES = {
         "Python if/while on a traced (jnp) value inside a traced "
         "function; use lax.cond/jnp.where",
     "env-read":
-        "os.environ read inside a traced function; resolve flags before "
-        "tracing",
+        "os.environ read inside a traced function (frozen at trace "
+        "time) or at module scope (frozen at import time); resolve "
+        "flags where they are consumed",
     "bad-suppression":
         "contract: allow(...) without a justification or naming an "
         "unknown rule",
@@ -247,6 +251,32 @@ def _if_chain_literals(node: ast.If, seen_ids: set):
     return literals
 
 
+def _module_scope_nodes(tree: ast.Module):
+    """AST nodes executed at import time: everything outside function
+    and lambda bodies (class bodies DO run at import)."""
+    stack = list(tree.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _env_read(node) -> Optional[str]:
+    """The offending spelling if ``node`` reads the environment."""
+    if isinstance(node, ast.Call):
+        base = _dotted(node.func)
+        if base in ("os.getenv", "os.environ.get"):
+            return f"{base}(...)"
+    elif isinstance(node, ast.Subscript):
+        if _dotted(node.value) == "os.environ" and \
+                isinstance(node.ctx, ast.Load):
+            return "os.environ[...]"
+    return None
+
+
 def lint_source(text: str, path: str = "<string>",
                 marked: Optional[bool] = None) -> list[Violation]:
     """All violations (suppressed and not) in one module's source."""
@@ -291,6 +321,12 @@ def lint_source(text: str, path: str = "<string>",
                     f"dict dispatch over registered names {hits} — "
                     + RULES["stringly-dispatch"])
 
+    for node in _module_scope_nodes(tree):
+        spelled = _env_read(node)
+        if spelled is not None:
+            add(node.lineno, "env-read",
+                f"{spelled} at module scope — " + RULES["env-read"])
+
     seen_ifs: set = set()
     for node in ast.walk(tree):
         if isinstance(node, ast.If) and id(node) not in seen_ifs:
@@ -316,7 +352,7 @@ def lint_source(text: str, path: str = "<string>",
                     add(node.lineno, "env-read",
                         f"{base}(...) — " + RULES["env-read"])
             elif isinstance(node, ast.Subscript):
-                if _dotted(node.value) == "os.environ":
+                if _env_read(node) is not None:
                     add(node.lineno, "env-read",
                         "os.environ[...] — " + RULES["env-read"])
             elif isinstance(node, (ast.If, ast.While)):

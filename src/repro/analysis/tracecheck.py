@@ -41,6 +41,7 @@ from typing import Optional
 
 _TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
 _COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_CACHE_HIT_EVENT = "/jax/compilation_cache/cache_hits"
 _COMPILE_MSG = re.compile(r"Finished XLA compilation of jit\((.+?)\) in ")
 _TRACE_MSG = re.compile(r"Finished tracing \+ transforming (.+?) for pjit")
 
@@ -49,7 +50,8 @@ _TRACE_MSG = re.compile(r"Finished tracing \+ transforming (.+?) for pjit")
 #: batched, ``fn`` for pallas, ``_simulate_stats`` per reference lane) and
 #: the trainer scan (``single``).  Budgets scoped to this pattern count
 #: planner programs only, never incidental eager-op compiles.
-PLANNER_PROGRAMS = r"^(lanes|analyze_lanes|one|fn|single|_simulate_stats)$"
+PLANNER_PROGRAMS = (
+    r"^(lanes|analyze_lanes|one|fn|single|single_lanes|_simulate_stats)$")
 
 
 class TraceBudgetExceeded(AssertionError):
@@ -62,8 +64,17 @@ class Watch:
 
     traces: int = 0                # jaxpr traces (monitoring events)
     compiles: int = 0              # XLA compiles (monitoring events)
+    cache_hits: int = 0            # persistent-compilation-cache hits
     compiled: list = dataclasses.field(default_factory=list)  # names
     traced: list = dataclasses.field(default_factory=list)    # names
+
+    @property
+    def fresh_compiles(self) -> int:
+        """Compiles that actually ran XLA: the ``backend_compile``
+        duration event still fires when the executable came out of the
+        persistent compilation cache (jax deserializes under the same
+        timer), so warm-restart checks must subtract the hits."""
+        return self.compiles - self.cache_hits
 
     def programs(self, pattern: Optional[str] = None) -> list:
         """Compiled program names, optionally filtered by regex."""
@@ -93,6 +104,13 @@ def _on_event(event: str, duration, **_kw) -> None:
     elif event == _COMPILE_EVENT:
         for w in _active:
             w.compiles += 1
+
+
+def _on_cache_event(event: str, **_kw) -> None:
+    """Non-duration monitoring events: persistent-cache hits."""
+    if _active and event == _CACHE_HIT_EVENT:
+        for w in _active:
+            w.cache_hits += 1
 
 
 class _QuietDispatchDebug(logging.Filter):
@@ -139,6 +157,7 @@ def _install() -> None:
     from jax import monitoring
 
     monitoring.register_event_duration_secs_listener(_on_event)
+    monitoring.register_event_listener(_on_cache_event)
     # the per-program names are logged at DEBUG unless jax_log_compiles;
     # capture them without enabling the (stderr-noisy) flag
     logger = logging.getLogger("jax._src.dispatch")

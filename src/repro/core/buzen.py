@@ -52,6 +52,7 @@ from . import numerics  # noqa: F401  (enables x64)
 from .numerics import NEG_INF, seqsum
 
 _BACKENDS = ("jnp", "pallas")
+# contract: allow(env-read): import-time default only — set_backend() overrides it at runtime, nothing caches the value
 _backend = os.environ.get("REPRO_BUZEN_BACKEND", "jnp")
 
 

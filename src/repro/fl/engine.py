@@ -80,14 +80,19 @@ class PaddedClientData(NamedTuple):
     sizes: jax.Array  # [n] int32
 
 
-def pad_client_data(clients, n_total: Optional[int] = None
-                    ) -> PaddedClientData:
+def pad_client_data(clients, n_total: Optional[int] = None,
+                    min_samples: Optional[int] = None) -> PaddedClientData:
     """Stack per-client ``(x_i, y_i)`` datasets into padded device arrays.
 
     ``n_total`` (the traced-``n`` convention: the network's static
     ``n_max``) appends empty placeholder rows beyond the real clients —
     padded clients carry zero routing mass, are never dispatched, and so
     never have a minibatch sampled from their (single zero) row.
+    ``min_samples`` forces the sample axis to at least that length so
+    per-lane tables of different datasets stack into one ``[L, n, S_max]``
+    array (minibatch draws are bounded by the *real* ``sizes``, so the
+    extra zero rows are never sampled and trajectories are bitwise
+    invariant to the sample-axis padding).
     """
     sizes = np.array([len(y) for _, y in clients], dtype=np.int32)
     if (sizes <= 0).any():
@@ -97,6 +102,8 @@ def pad_client_data(clients, n_total: Optional[int] = None
         raise ValueError(f"n_total={n_rows} is smaller than the "
                          f"{len(clients)} provided clients")
     s_max = int(sizes.max())
+    if min_samples is not None:
+        s_max = max(s_max, int(min_samples))
     x0 = np.asarray(clients[0][0])
     xs = np.zeros((n_rows, s_max) + x0.shape[1:], dtype=np.float32)
     ys = np.zeros((n_rows, s_max), dtype=np.int32)
@@ -213,20 +220,22 @@ class DeviceTrainer:
 
     # -- static-shape planning ---------------------------------------------
 
-    def _plan_one(self, p, m, horizon: float) -> int:
+    def _plan_one(self, p, m, horizon: float, net=None) -> int:
         """Per-lane *upper bound* on rounds within ``horizon``, from the
         closed-form throughput (exponential) tightened / replaced by the
         distribution-free bound otherwise.  Only used to size the cheap
         queueing-only pre-simulation; the training scan itself gets the
         exact per-lane count from :meth:`_count_updates`."""
-        lane = self.net._replace(p=jnp.asarray(p))
+        base = self.net if net is None else net
+        lane = base._replace(p=jnp.asarray(p))
         rate = max_throughput_bound(lane, m)
         if self.cfg.distribution == "exponential":
             rate = min(rate, 1.25 * float(jackson.throughput(lane, int(m))))
         return int(horizon * rate * 1.08) + 2 * int(m) + 32
 
     def _count_updates(self, ps, ms, sim_keys, horizon: float,
-                       max_updates: Optional[int] = None) -> np.ndarray:
+                       max_updates: Optional[int] = None,
+                       nets=None) -> np.ndarray:
         """Exact per-lane update counts within ``horizon`` (capped by
         ``max_updates`` when given — e.g. a huge horizon with a round cap
         must not size the counting scan from the horizon).
@@ -234,28 +243,35 @@ class DeviceTrainer:
         The event trajectory is a pure function of the sim key, so a
         queueing-only scan (no gradients, no snapshots — a fraction of the
         fused scan's cost) reproduces exactly the event stream the training
-        scan will see; its count sizes that scan with zero padding margin."""
+        scan will see; its count sizes that scan with zero padding margin.
+        ``nets`` (per-lane padded networks, see :meth:`run_lanes`) switches
+        the counting program to take the network pytree as a vmapped
+        argument instead of a closure constant."""
         backend = resolve_backend(self.sim_backend)
         interp = self.sim_interpret
+        net_key = None if nets is None else tuple(
+            np.asarray(leaf).tobytes()
+            for net in nets for leaf in jax.tree_util.tree_leaves(net))
         cache_key = (tuple(np.asarray(p, np.float64).tobytes() for p in ps),
                      tuple(int(m) for m in ms),
                      np.asarray(sim_keys).tobytes(), round(horizon, 9),
-                     max_updates, backend, interp)
+                     max_updates, backend, interp, net_key)
         hit = self._count_cache.get(cache_key)
         if hit is not None:
             return hit
-        K_bound = max(self._plan_one(p, m, horizon) for p, m in zip(ps, ms))
+        lane_nets = [None] * len(ms) if nets is None else nets
+        K_bound = max(self._plan_one(p, m, horizon, net=lane_net)
+                      for p, m, lane_net in zip(ps, ms, lane_nets))
         if max_updates is not None:
             K_bound = min(K_bound, int(max_updates))
         K_bound = max(K_bound, 1)
         m_max = int(max(ms))
         key_stat = ("count", K_bound, m_max, round(horizon, 9), backend,
-                    interp)
+                    interp, nets is not None)
         if key_stat not in self._jit_cache:
             net0, dist = self.net, self.cfg.distribution
 
-            def one(p, m, key_sim):
-                net = net0._replace(p=p)
+            def count_body(net, m, key_sim):
                 st = events.init_state(net, m, key_sim, m_max=m_max,
                                        distribution=dist)
 
@@ -269,10 +285,24 @@ class DeviceTrainer:
                 # contract: allow(raw-reduction): boolean count over scan steps — exact integer arithmetic under any association
                 return jnp.sum(times <= horizon)
 
+            if nets is None:
+                def one(p, m, key_sim):
+                    return count_body(net0._replace(p=p), m, key_sim)
+            else:
+                def one(net, p, m, key_sim):
+                    return count_body(net._replace(p=p), m, key_sim)
+
             self._jit_cache[key_stat] = jax.jit(jax.vmap(one))
         p_mat = jnp.asarray(np.stack([np.asarray(p, np.float64) for p in ps]))
-        counts = np.asarray(self._jit_cache[key_stat](
-            p_mat, jnp.asarray(np.asarray(ms, np.int32)), sim_keys))
+        m_arr = jnp.asarray(np.asarray(ms, np.int32))
+        if nets is None:
+            counts = np.asarray(self._jit_cache[key_stat](
+                p_mat, m_arr, sim_keys))
+        else:
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *nets)
+            counts = np.asarray(self._jit_cache[key_stat](
+                stacked, p_mat, m_arr, sim_keys))
         self._count_cache[cache_key] = counts
         return counts
 
@@ -289,18 +319,11 @@ class DeviceTrainer:
     # -- the fused run ------------------------------------------------------
 
     def _build(self, K: int, G: int, m_max: int, horizon: float,
-               backend: str, interp: Optional[bool]):
+               backend: str, interp: Optional[bool],
+               lane_mode: bool = False, lane_power: bool = False):
         cfg = self.cfg
         n = self.n
-        n_act = self.n_act
-        data = self.data
-        # flat views: one row-gather per minibatch instead of slicing the
-        # whole client dataset out first
-        s_max = data.x.shape[1]
-        data_x_flat = data.x.reshape((n * s_max,) + data.x.shape[2:])
-        data_y_flat = data.y.reshape((n * s_max,))
         net0 = self.net
-        power = self.power
         has_test = self.has_test
         dist = cfg.distribution
         grad_clip = cfg.grad_clip
@@ -344,8 +367,9 @@ class DeviceTrainer:
 
         t_grid_static = jnp.arange(G) * delta
 
-        def single(params0, p, m, eta, key_sim, key_data):
-            net = net0._replace(p=p)
+        def run_one(params0, net, s_max, data_x_flat, data_y_flat, sizes,
+                    n_act, power, p, m, eta, key_sim, key_data):
+            net = net._replace(p=p)
             # sequential sum: bitwise invariant to padded zero-mass clients
             p_norm = p / seqsum(p)
             st = events.init_state(net, m, key_sim, m_max=m_max,
@@ -374,7 +398,7 @@ class DeviceTrainer:
                 stale = jax.tree_util.tree_map(lambda s: s[j], snaps)
                 dkey, kb = jax.random.split(dkey)
                 idx = (c * s_max
-                       + jax.random.randint(kb, (batch,), 0, data.sizes[c]))
+                       + jax.random.randint(kb, (batch,), 0, sizes[c]))
                 xb, yb = data_x_flat[idx], data_y_flat[idx]
                 # bias correction over the REAL population (Algorithm 2):
                 # padded rows have p = 0 and are never drawn as C_k
@@ -444,11 +468,52 @@ class DeviceTrainer:
                 throughput=thr, energy=st.energy)
             return dlog, paramsK
 
-        return jax.jit(jax.vmap(single))
+        if not lane_mode:
+            data = self.data
+            # flat views: one row-gather per minibatch instead of slicing
+            # the whole client dataset out first
+            s_max0 = data.x.shape[1]
+            dxf0 = data.x.reshape((n * s_max0,) + data.x.shape[2:])
+            dyf0 = data.y.reshape((n * s_max0,))
+            sizes0, n_act0, power0 = data.sizes, self.n_act, self.power
+
+            def single(params0, p, m, eta, key_sim, key_data):
+                return run_one(params0, net0, s_max0, dxf0, dyf0, sizes0,
+                               n_act0, power0, p, m, eta, key_sim, key_data)
+
+            return jax.jit(jax.vmap(single))
+
+        # lane mode: network, client table, real-population count (and
+        # optionally the power profile) ride along each lane as vmapped
+        # arguments, so lanes with different populations/datasets share one
+        # resident program — the mixed-n train bucket.  The in-program
+        # reshape to flat views is a free metadata op under XLA.
+        if lane_power:
+            def single_lanes(params0, net, dx, dy, sizes, n_act, power,
+                             p, m, eta, key_sim, key_data):
+                s_max = dx.shape[1]
+                dxf = dx.reshape((n * s_max,) + dx.shape[2:])
+                dyf = dy.reshape((n * s_max,))
+                return run_one(params0, net, s_max, dxf, dyf, sizes, n_act,
+                               power, p, m, eta, key_sim, key_data)
+        else:
+            def single_lanes(params0, net, dx, dy, sizes, n_act,
+                             p, m, eta, key_sim, key_data):
+                s_max = dx.shape[1]
+                dxf = dx.reshape((n * s_max,) + dx.shape[2:])
+                dyf = dy.reshape((n * s_max,))
+                return run_one(params0, net, s_max, dxf, dyf, sizes, n_act,
+                               None, p, m, eta, key_sim, key_data)
+
+        return jax.jit(jax.vmap(single_lanes))
 
     def _run_bucket(self, ps, ms, etas, sim_keys, init_keys, data_keys,
-                    horizon: float, K: int, m_max: int):
-        """One jitted, vmapped call over lanes sharing a scan length."""
+                    horizon: float, K: int, m_max: int, lane_args=None):
+        """One jitted, vmapped call over lanes sharing a scan length.
+
+        ``lane_args`` (stacked ``(nets, x, y, sizes, n_acts, powers)``)
+        selects the lane-mode program where the network and client table
+        are vmapped arguments rather than closure constants."""
         G = int(horizon / self.cfg.eval_every_time) + 1
         if G > _GRID_CAP:
             raise ValueError(
@@ -457,21 +522,34 @@ class DeviceTrainer:
                 f"backend")
         backend = resolve_backend(self.sim_backend)
         interp = self.sim_interpret
+        params0 = jax.vmap(self.model.init)(init_keys)
+        p_mat = jnp.asarray(np.stack([np.asarray(p, np.float64) for p in ps]))
+        m_arr = jnp.asarray(np.asarray(ms, np.int32))
+        eta_arr = jnp.asarray(np.asarray(etas, np.float64))
+        if lane_args is not None:
+            nets, lx, ly, lsizes, n_acts, powers = lane_args
+            key_stat = ("lanes", K, G, m_max, round(horizon, 9), backend,
+                        interp, lx.shape[1:], powers is not None,
+                        nets.mu_cs is not None)
+            if key_stat not in self._jit_cache:
+                self._jit_cache[key_stat] = self._build(
+                    K, G, m_max, horizon, backend, interp,
+                    lane_mode=True, lane_power=powers is not None)
+            fn = self._jit_cache[key_stat]
+            args = (params0, nets, lx, ly, lsizes, n_acts)
+            if powers is not None:
+                args = args + (powers,)
+            return fn(*args, p_mat, m_arr, eta_arr, sim_keys, data_keys)
         key_stat = (K, G, m_max, round(horizon, 9), backend, interp)
         if key_stat not in self._jit_cache:
             self._jit_cache[key_stat] = self._build(K, G, m_max, horizon,
                                                     backend, interp)
         fn = self._jit_cache[key_stat]
-
-        params0 = jax.vmap(self.model.init)(init_keys)
-        p_mat = jnp.asarray(np.stack([np.asarray(p, np.float64) for p in ps]))
-        return fn(params0, p_mat,
-                  jnp.asarray(np.asarray(ms, np.int32)),
-                  jnp.asarray(np.asarray(etas, np.float64)),
-                  sim_keys, data_keys)
+        return fn(params0, p_mat, m_arr, eta_arr, sim_keys, data_keys)
 
     def run_lanes(self, ps, ms, etas, seeds, horizon_time: float, *,
-                  max_updates: Optional[int] = None, init_keys=None):
+                  max_updates: Optional[int] = None, init_keys=None,
+                  nets=None, lane_clients=None, lane_powers=None):
         """Run ``L`` lanes (routing ``ps[L, n]``, concurrency ``ms[L]``,
         step size ``etas[L]``, seed ``seeds[L]``) as jitted, vmapped scans.
 
@@ -481,11 +559,50 @@ class DeviceTrainer:
         scans run with near-zero padded rounds and a slow-throughput lane
         never pays a fast lane's scan length.  Each bucket is one compile,
         cached across calls.  Returns
-        ``(list[TrainLog], final_params_stacked)`` in input lane order."""
+        ``(list[TrainLog], final_params_stacked)`` in input lane order.
+
+        Mixed-``n`` lanes: ``nets`` gives each lane its own network, padded
+        (``pad_network``) to this trainer's static row count; it requires
+        ``lane_clients`` (per-lane client datasets, padded here into one
+        ``[L, n, S_max]`` table) and optionally ``lane_powers`` (per-lane
+        power profiles padded to the same rows).  Under the padding
+        contract the per-lane trajectories are bitwise identical to a
+        single-lane run of each scenario at its own size."""
         from .trainer import TrainLog  # local: trainer imports this module
 
         L = len(ms)
         horizon = float(horizon_time)
+        lane_mode = nets is not None
+        if lane_mode:
+            if len(nets) != L:
+                raise ValueError(f"{len(nets)} lane networks for {L} lanes")
+            if lane_clients is None or len(lane_clients) != L:
+                raise ValueError("per-lane networks require per-lane "
+                                 "client datasets (lane_clients)")
+            if lane_powers is not None and len(lane_powers) != L:
+                raise ValueError(
+                    f"{len(lane_powers)} lane powers for {L} lanes")
+            for net in nets:
+                if net.n != self.n:
+                    raise ValueError(
+                        f"lane network has {net.n} rows; pad_network it "
+                        f"to this trainer's {self.n}")
+            n_acts = [net.n if net.n_active is None
+                      else int(np.asarray(net.n_active)) for net in nets]
+            s_top = max(max(len(y) for _, y in cl) for cl in lane_clients)
+            tables = [pad_client_data(cl, n_total=self.n, min_samples=s_top)
+                      for cl in lane_clients]
+            lane_x = jnp.stack([t.x for t in tables])
+            lane_y = jnp.stack([t.y for t in tables])
+            lane_sizes = jnp.stack([t.sizes for t in tables])
+            stacked_nets = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *nets)
+            stacked_pw = (None if lane_powers is None else
+                          jax.tree_util.tree_map(
+                              lambda *xs: jnp.stack(xs), *lane_powers))
+            n_act_arr = jnp.asarray(np.asarray(n_acts, np.float64))
+        elif lane_clients is not None or lane_powers is not None:
+            raise ValueError("lane_clients/lane_powers need nets")
         # sim/data streams always derive from the lane seeds (matching the
         # host loop, whose sim is seeded by cfg.seed); ``init_keys`` only
         # overrides the model-initialization keys (the host loop's rng_key)
@@ -498,7 +615,7 @@ class DeviceTrainer:
         all_sim_keys = jax.vmap(lambda k: jax.random.fold_in(k, 1))(seed_keys)
         all_data_keys = jax.vmap(lambda k: jax.random.fold_in(k, 2))(seed_keys)
         counts = self._count_updates(ps, ms, all_sim_keys, horizon,
-                                     max_updates)
+                                     max_updates, nets=nets)
         # +1: include the first update beyond the horizon (the host loop's
         # break event), which pins t_end and the throughput denominator
         plans = [int(c) + 1 for c in counts]
@@ -519,10 +636,18 @@ class DeviceTrainer:
             if max_updates is not None:
                 K = min(K, int(max_updates))
             rows = jnp.asarray(idx)
+            lane_args = None
+            if lane_mode:
+                take = lambda t: jax.tree_util.tree_map(
+                    lambda a: a[rows], t)
+                lane_args = (take(stacked_nets), lane_x[rows], lane_y[rows],
+                             lane_sizes[rows], n_act_arr[rows],
+                             None if stacked_pw is None else take(stacked_pw))
             dlog, fin = self._run_bucket(
                 [ps[i] for i in idx], [ms[i] for i in idx],
                 [etas[i] for i in idx], all_sim_keys[rows],
-                all_init_keys[rows], all_data_keys[rows], horizon, K, m_max)
+                all_init_keys[rows], all_data_keys[rows], horizon, K, m_max,
+                lane_args=lane_args)
             for row, i in enumerate(idx):
                 dlogs[i] = jax.tree_util.tree_map(lambda a: a[row], dlog)
                 finals[i] = jax.tree_util.tree_map(lambda a: a[row], fin)
@@ -546,7 +671,8 @@ class DeviceTrainer:
                 times = losses = accs = upds = []
             logs.append(TrainLog(
                 times=times, accuracies=accs, losses=losses, updates=upds,
-                mean_delay=np.asarray(dlog.mean_delay)[:self.n_act],
+                mean_delay=np.asarray(dlog.mean_delay)[
+                    :(n_acts[i] if lane_mode else self.n_act)],
                 throughput=float(dlog.throughput),
                 energy=float(dlog.energy)))
         return logs, final_params

@@ -342,12 +342,31 @@ class SuiteResult:
     programs: int
     strategies: dict  # name -> (p, m) resolved routing/concurrency
     cache_hits: int = 0
+    metrics: Optional[dict] = None  # Metrics.snapshot() of the owning suite
+
+
+@dataclasses.dataclass
+class SuiteCaches:
+    """The content-keyed caches a :class:`ScenarioSuite` runs on, as a
+    shareable bundle: pass one ``SuiteCaches`` to many suites (the
+    ``repro.serve`` dispatcher builds a fresh suite per micro-batch) and
+    they share resident jitted programs, built trainers, per-entry
+    results and DataSpec-built datasets.  Name-keyed state (resolved
+    strategies) stays per-suite — names are caller-chosen and collide
+    across requests."""
+
+    jit: dict = dataclasses.field(default_factory=dict)
+    trainers: dict = dataclasses.field(default_factory=dict)
+    results: dict = dataclasses.field(default_factory=dict)
+    data: dict = dataclasses.field(default_factory=dict)
 
 
 class ScenarioSuite:
     """A keyed collection of Scenarios sharing a seed set."""
 
-    def __init__(self, scenarios, seeds=(0,)):
+    def __init__(self, scenarios, seeds=(0,), *, caches=None, metrics=None):
+        from ..serve.metrics import Metrics  # standalone helper module
+
         if isinstance(scenarios, Scenario):
             scenarios = [scenarios]
         if not isinstance(scenarios, dict):
@@ -361,11 +380,13 @@ class ScenarioSuite:
                 raise TypeError(f"suite entry {k!r} is not a Scenario: {s!r}")
         self.scenarios: dict[str, Scenario] = dict(scenarios)
         self.seeds = tuple(int(s) for s in seeds)
+        self.caches = caches if caches is not None else SuiteCaches()
+        self.metrics = metrics if metrics is not None else Metrics()
         self._strategies: dict[str, tuple[np.ndarray, int]] = {}
-        self._jit_cache: dict = {}
-        self._trainers: dict = {}
-        self._result_cache: dict = {}  # per-entry results, Scenario.hash keys
-        self._data_cache: dict = {}    # DataSpec-built (clients, test_data)
+        self._jit_cache = self.caches.jit
+        self._trainers = self.caches.trainers
+        self._result_cache = self.caches.results  # Scenario.hash keys
+        self._data_cache = self.caches.data  # DataSpec-built datasets
 
     @classmethod
     def strategy_grid(cls, base: Scenario, strategies, seeds=(0,),
@@ -419,13 +440,20 @@ class ScenarioSuite:
     # -- dispatch ------------------------------------------------------------
 
     def run(self, mode: str = "analyze", **kw) -> SuiteResult:
-        if mode == "analyze":
-            return self._run_analyze(**kw)
-        if mode == "simulate":
-            return self._run_simulate(**kw)
-        if mode == "train":
-            return self._run_train(**kw)
-        raise ValueError(f"unknown mode: {mode!r}; expected one of {MODES}")
+        runners = {"analyze": self._run_analyze,
+                   "simulate": self._run_simulate,
+                   "train": self._run_train}
+        if mode not in runners:
+            raise ValueError(
+                f"unknown mode: {mode!r}; expected one of {MODES}")
+        with self.metrics.timed("suite.run", mode=mode):
+            res = runners[mode](**kw)
+        self.metrics.inc("suite.requests", by=len(self.scenarios), mode=mode)
+        self.metrics.inc("suite.cache_hits", by=res.cache_hits, mode=mode)
+        self.metrics.inc("suite.programs", by=res.programs, mode=mode)
+        self.metrics.inc("suite.lanes", by=res.lanes, mode=mode)
+        res.metrics = self.metrics.snapshot()
+        return res
 
     # -- analyze: closed forms, one jit per structure bucket -----------------
 
@@ -495,7 +523,11 @@ class ScenarioSuite:
                          else _build_analyze)
                 fn = self._jit_cache[sig] = build(m_max, has_power)
                 programs += 1
-            out = fn(prm, m_vec, consts, power, rho)
+            with self.metrics.timed("suite.dispatch", mode="analyze"):
+                out = jax.block_until_ready(fn(prm, m_vec, consts, power,
+                                               rho))
+            self.metrics.observe("suite.lanes_per_dispatch", len(members),
+                                 mode="analyze")
             for i, name in enumerate(members):
                 # class rows report per-CLASS delays (one member each);
                 # truncate to the scenario's own axis either way
@@ -632,7 +664,11 @@ class ScenarioSuite:
                         bk, int(num_updates), int(warmup), law, mx,
                         has_power, interpret=interp)
                 programs += 1
-            stats = fn(lane_params, m_vec, keys, power)
+            with self.metrics.timed("suite.dispatch", mode="simulate"):
+                stats = jax.block_until_ready(
+                    fn(lane_params, m_vec, keys, power))
+            self.metrics.observe("suite.lanes_per_dispatch", len(todo) * S,
+                                 mode="simulate")
             for i, (name, ckey) in enumerate(todo):
                 # class lanes: statistics are per-CLASS — unpad on the
                 # class axis (expand_class_stats recovers per-member views)
@@ -687,21 +723,46 @@ class ScenarioSuite:
                 entries[name] = hit[4]
                 cache_hits += 1
                 continue
-            key = (str(scn.network.to_dict()), scn.learning.grad_clip,
-                   str(None if scn.energy is None else scn.energy.to_dict()),
-                   str(None if scn.data is None else scn.data.to_dict()),
-                   scn.sim_backend,
-                   None if scn.sim is None else scn.sim.interpret,
-                   tuple(sorted(config_overrides.items())))
+            if clients is None and not scn.is_class_network:
+                # DataSpec-driven scenarios bucket by STRUCTURE (like
+                # analyze/simulate): the network, client table and power
+                # profile ride each lane as vmapped arguments, so
+                # mixed-population train requests share one program.
+                # fl_config draws only law/grad_clip from the spec (eta is
+                # per-lane); the power profile needs only its structural
+                # signature; the data spec pins the shared test set.
+                key = ("nets", scn.network.law,
+                       scn.network.mu_cs is not None, _power_sig(scn),
+                       scn.learning.grad_clip,
+                       str(None if scn.data is None else scn.data.to_dict()),
+                       scn.sim_backend,
+                       None if scn.sim is None else scn.sim.interpret,
+                       tuple(sorted(config_overrides.items())))
+            else:
+                key = ("exact", str(scn.network.to_dict()),
+                       scn.learning.grad_clip,
+                       str(None if scn.energy is None
+                           else scn.energy.to_dict()),
+                       str(None if scn.data is None else scn.data.to_dict()),
+                       scn.sim_backend,
+                       None if scn.sim is None else scn.sim.interpret,
+                       tuple(sorted(config_overrides.items())))
             buckets.setdefault(key, []).append((name, ckey))
 
         programs = 0
         for key, members in buckets.items():
-            scn0 = self.scenarios[members[0][0]]
+            lane_mode = key[0] == "nets"
+            # the template scenario sizes the trainer's static row count:
+            # the largest population in a structural bucket, any member in
+            # an exact one (all identical networks)
+            ref_name = (max((nm for nm, _ in members),
+                            key=lambda nm: self.scenarios[nm].n)
+                        if lane_mode else members[0][0])
+            scn0 = self.scenarios[ref_name]
             cfg = scn0.fl_config(**config_overrides)
             if clients is None:
                 bucket_clients, built_test = self._client_data(
-                    scn0, members[0][0])
+                    scn0, ref_name)
                 bucket_test = test_data if test_data is not None \
                     else built_test
             else:
@@ -717,27 +778,56 @@ class ScenarioSuite:
                     and cached[2] is bucket_test and cached[3] is loss_fn:
                 trainer = cached[4]
             if trainer is None:
+                template_net = (pad_network(scn0.params(), scn0.n)
+                                if lane_mode else scn0.params())
                 trainer = DeviceTrainer(
-                    model, bucket_clients, scn0.params(), cfg,
-                    test_data=bucket_test, power=scn0.power(),
+                    model, bucket_clients, template_net, cfg,
+                    test_data=bucket_test,
+                    power=None if lane_mode else scn0.power(),
                     loss_fn=loss_fn or cross_entropy_loss,
                     sim_backend=scn0.sim_backend,
                     sim_interpret=None if scn0.sim is None
                     else scn0.sim.interpret)
                 self._trainers[key] = (model, bucket_clients, bucket_test,
                                        loss_fn, trainer)
+            n_top = trainer.n
             ps, ms, etas, seeds = [], [], [], []
+            nets, lane_clients, lane_powers = [], [], []
             for name, _ in members:
+                scn = self.scenarios[name]
                 p, m = strategies[name]
+                if lane_mode:
+                    p = np.concatenate(
+                        [np.asarray(p, np.float64),
+                         np.zeros(n_top - len(p))])
+                    net_i = pad_network(scn.params(), n_top)
+                    cl_i, _ = self._client_data(scn, name)
+                    pw_i = scn.power()
+                    if pw_i is not None:
+                        pw_i = _pad_power(pw_i, n_top)
                 for s in self.seeds:
                     ps.append(p)
                     ms.append(m)
-                    etas.append(self.scenarios[name].eta())
+                    etas.append(scn.eta())
                     seeds.append(s)
+                    if lane_mode:
+                        nets.append(net_i)
+                        lane_clients.append(cl_i)
+                        lane_powers.append(pw_i)
+            lane_kw = {}
+            if lane_mode:
+                lane_kw = dict(
+                    nets=nets, lane_clients=lane_clients,
+                    lane_powers=(None if lane_powers[0] is None
+                                 else lane_powers))
             before = len(trainer._jit_cache)
-            logs, _ = trainer.run_lanes(ps, ms, etas, seeds,
-                                        float(horizon_time),
-                                        max_updates=max_updates)
+            with self.metrics.timed("suite.dispatch", mode="train"):
+                logs, _ = trainer.run_lanes(ps, ms, etas, seeds,
+                                            float(horizon_time),
+                                            max_updates=max_updates,
+                                            **lane_kw)
+            self.metrics.observe("suite.lanes_per_dispatch", len(ps),
+                                 mode="train")
             programs += max(len(trainer._jit_cache) - before, 0)
             S = len(self.seeds)
             for i, (name, ckey) in enumerate(members):

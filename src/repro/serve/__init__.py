@@ -1,0 +1,15 @@
+"""``repro.serve`` — the always-on suite service.
+
+A persistent server (``python -m repro.serve``) accepts scenario
+requests over JSON lines (unix socket, stdio fallback), coalesces
+concurrent requests into spare lanes of the suite planner's resident
+programs, answers repeats from a ``Scenario.hash()`` response cache,
+and restarts warm through the jax persistent compilation cache.
+
+This ``__init__`` stays import-light (``metrics`` only): the scenario
+layer imports :class:`Metrics` from here, and the server/executor pull
+in jax-heavy modules only when actually booted.
+"""
+from .metrics import Histogram, Metrics
+
+__all__ = ["Histogram", "Metrics"]

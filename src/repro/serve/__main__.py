@@ -1,0 +1,62 @@
+"""``python -m repro.serve`` — boot the suite server.
+
+Flags (env defaults in parens): ``--socket PATH``
+(``$REPRO_SERVE_SOCKET``, default ``/tmp/repro-serve.sock``),
+``--stdio`` (JSON lines on stdin/stdout instead of a socket),
+``--max-wait-ms`` (``$REPRO_SERVE_MAX_WAIT_MS``, 20), ``--max-lanes``
+(``$REPRO_SERVE_MAX_LANES``, 64), ``--no-compile-cache`` to skip the
+persistent XLA cache (``$JAX_COMPILATION_CACHE_DIR`` picks its
+location).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.serve",
+                                 description="always-on scenario-suite "
+                                             "server (JSON lines)")
+    # server process config: env read once at startup, flags win — these
+    # run before any jax tracing, and the README documents each variable
+    # contract: allow(env-read): server startup config — read once in main() before any jit, documented in README Serving
+    env = os.environ.get
+    ap.add_argument("--socket", default=env("REPRO_SERVE_SOCKET",
+                                            "/tmp/repro-serve.sock"))
+    ap.add_argument("--stdio", action="store_true",
+                    help="serve stdin/stdout instead of a socket")
+    # contract: allow(env-read): server startup config — read once in main() before any jit, documented in README Serving
+    ap.add_argument("--max-wait-ms", type=float,
+                    default=float(env("REPRO_SERVE_MAX_WAIT_MS", "20")))
+    # contract: allow(env-read): server startup config — read once in main() before any jit, documented in README Serving
+    ap.add_argument("--max-lanes", type=int,
+                    default=int(env("REPRO_SERVE_MAX_LANES", "64")))
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="skip the persistent XLA compilation cache")
+    args = ap.parse_args(argv)
+
+    if not args.no_compile_cache:
+        from .xla_cache import enable_persistent_cache
+
+        path = enable_persistent_cache()
+        print(f"serve: persistent compilation cache at {path}",
+              file=sys.stderr, flush=True)
+
+    from .server import ServeConfig, Server
+
+    config = ServeConfig(socket_path="" if args.stdio else args.socket,
+                         max_wait=args.max_wait_ms / 1000.0,
+                         max_lanes=args.max_lanes)
+    server = Server(config)
+    signal.signal(signal.SIGTERM, lambda *_: server.stop())
+    if not args.stdio:
+        print(f"serve: listening on {args.socket}", file=sys.stderr,
+              flush=True)
+    server.serve_forever()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Warm restarts: the jax persistent compilation cache.
+
+``enable_persistent_cache()`` points jax at an on-disk XLA executable
+cache (``JAX_COMPILATION_CACHE_DIR``, default ``~/.cache/repro/xla``)
+with the thresholds opened up so every resident program qualifies
+(CPU compiles are fast and small — the defaults would skip them all).
+A restarted server's first request then deserializes its programs
+instead of recompiling: ``repro.analysis.tracecheck`` counts the
+persistent-cache hits separately (``Watch.fresh_compiles``), and the
+restart subprocess test asserts the second boot pays ZERO fresh
+compiles.
+
+Call it before the first jit dispatch; it is idempotent.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+DEFAULT_CACHE_DIR = "~/.cache/repro/xla"
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get("JAX_COMPILATION_CACHE_DIR")
+    return env if env else os.path.expanduser(DEFAULT_CACHE_DIR)
+
+
+def enable_persistent_cache(cache_dir: Optional[str] = None) -> str:
+    """Enable the on-disk compilation cache; returns the directory."""
+    import jax
+
+    path = cache_dir if cache_dir else default_cache_dir()
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    # cache EVERY executable: CPU compiles are below the default 1 MiB /
+    # 1 s thresholds, which would silently cache nothing here
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    return path

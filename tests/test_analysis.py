@@ -166,12 +166,32 @@ def test_env_read_flagged_inside_traced_functions():
     )
     vs = _active(lint.lint_source(bad))
     assert [v.rule for v in vs] == ["env-read"] * 3
-    # resolving the flag eagerly, outside the trace, passes
-    ok = ('backend = os.environ.get("REPRO_SIM_BACKEND")\n'
+    # resolving the flag eagerly, in plain (untraced) runtime code, passes
+    ok = ('def configure():\n'
+          '    backend = os.environ.get("REPRO_SIM_BACKEND")\n'
+          '    return backend\n'
           '@jax.jit\n'
           'def f(x):\n'
           '    return x\n')
     assert lint.lint_source(ok) == []
+
+
+def test_env_read_flagged_at_module_scope():
+    # import-time reads freeze server config for the process lifetime
+    bad = ('backend = os.environ.get("REPRO_SIM_BACKEND")\n'
+           'flag = os.environ["REPRO_FLAG"]\n'
+           'mode = os.getenv("REPRO_MODE")\n')
+    vs = _active(lint.lint_source(bad))
+    assert [v.rule for v in vs] == ["env-read"] * 3
+    assert all("module scope" in v.message for v in vs)
+    # environment WRITES at module scope are fine (Store ctx)
+    ok = 'os.environ["XLA_FLAGS"] = "--xla_force_host_platform"\n'
+    assert lint.lint_source(ok) == []
+    # a justified suppression documents the read
+    sup = ('# contract: allow(env-read): read once at import, documented\n'
+           'backend = os.environ.get("REPRO_SIM_BACKEND")\n')
+    vs = lint.lint_source(sup)
+    assert len(vs) == 1 and vs[0].suppressed
 
 
 # ---------------------------------------------------------------------------
@@ -365,7 +385,8 @@ EXPECTED_PROGRAMS = {
     "suite_analyze", "suite_analyze_classes", "suite_simulate_batched",
     "suite_simulate_classes", "suite_simulate_pallas",
     "suite_simulate_sharded", "simulate_reference_lane", "trainer_scan",
-    "kernel_buzen", "kernel_buzen_classes", "kernel_events",
+    "trainer_scan_lane_nets", "kernel_buzen", "kernel_buzen_classes",
+    "kernel_events",
 }
 
 
@@ -378,7 +399,7 @@ def test_audit_registry_covers_every_resident_program():
 @pytest.fixture(scope="module")
 def audit_report():
     """A two-program report (the cheap analyze + Buzen-kernel builders);
-    the full eleven-program artifact is CI's job (AUDIT_jaxpr.json)."""
+    the full twelve-program artifact is CI's job (AUDIT_jaxpr.json)."""
     from repro.analysis import audit
 
     return audit.build_report(names=["suite_analyze", "kernel_buzen"])
