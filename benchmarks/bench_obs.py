@@ -1,0 +1,83 @@
+"""Telemetry-ring overhead benchmark: rings off vs on, plus drift.
+
+The observability contract (``repro.obs``) promises two things a bench
+can hold it to:
+
+* tracing OFF is free — the untraced program is byte-identical to the
+  pre-obs one (property-tested in ``tests/test_obs.py``), so the
+  ``obs_rings_off`` row IS the baseline;
+* tracing ON costs a bounded constant factor — the ring is two fused
+  dynamic-update-slices per event inside the same scan.  The
+  ``obs_rings_on`` row records the measured ratio and the run *fails*
+  if it leaves ``MAX_OVERHEAD_RATIO`` (a regression guard, not a perf
+  target: a blown ratio means the ring stopped fusing).
+
+The ``obs_drift`` row runs the closed-form drift monitor on the traced
+run and reports the worst relative error across checks — the same
+comparison ``python -m repro.obs check`` gates in CI, riding along here
+so the number lands in the perf trajectory too.
+"""
+from __future__ import annotations
+
+import time
+
+NUM_UPDATES = 1500
+WARMUP = 150
+REPS = 4
+#: regression guard on traced/untraced wall-clock (generous: smoke-scale
+#: runs are jitter-prone; the ring's steady-state cost is ~1.2-1.6x)
+MAX_OVERHEAD_RATIO = 5.0
+
+
+def _scenario(traced: bool):
+    from benchmarks import scenarios as bench_scenarios
+    from repro.scenario import Scenario
+
+    scn = bench_scenarios.obs_scenario()
+    if traced:
+        return bench_scenarios.record("obs", scn)
+    d = scn.to_dict()
+    d.pop("sim", None)  # same spec with the ring disabled
+    return Scenario.from_dict(d)
+
+
+def _time(scn, caches) -> float:
+    """Mean seconds per suite dispatch, post-compile, cache-miss seeds."""
+    from repro.scenario import ScenarioSuite
+
+    ScenarioSuite({"obs": scn}, seeds=(999,), caches=caches).run(
+        mode="simulate", num_updates=NUM_UPDATES, warmup=WARMUP)  # warm
+    t0 = time.perf_counter()
+    for rep in range(REPS):
+        ScenarioSuite({"obs": scn}, seeds=(rep,), caches=caches).run(
+            mode="simulate", num_updates=NUM_UPDATES, warmup=WARMUP)
+    return (time.perf_counter() - t0) / REPS
+
+
+def run():
+    from repro.scenario import ScenarioSuite
+    from repro.scenario.suite import SuiteCaches
+
+    caches = SuiteCaches()
+    t_off = _time(_scenario(traced=False), caches)
+    scn_on = _scenario(traced=True)
+    t_on = _time(scn_on, caches)
+    ratio = t_on / t_off
+    yield f"obs_rings_off,{t_off * 1e6:.1f},baseline_untraced"
+    yield (f"obs_rings_on,{t_on * 1e6:.1f},"
+           f"overhead_ratio={ratio:.2f};guard={MAX_OVERHEAD_RATIO:.1f}")
+    if ratio > MAX_OVERHEAD_RATIO:
+        raise AssertionError(
+            f"telemetry-ring overhead {ratio:.2f}x exceeds the "
+            f"{MAX_OVERHEAD_RATIO:.1f}x guard — the ring appends likely "
+            f"stopped fusing into the event scan")
+
+    t0 = time.perf_counter()
+    res = ScenarioSuite({"obs": scn_on}, seeds=(0,), caches=caches).run(
+        mode="simulate", num_updates=NUM_UPDATES, warmup=WARMUP)
+    t_drift = time.perf_counter() - t0
+    rep = res.drift["obs"][0]
+    worst = max((c["rel_err"] for c in rep["checks"]), default=0.0)
+    yield (f"obs_drift,{t_drift * 1e6:.1f},"
+           f"ok={rep['ok']};worst_rel_err={worst:.4f};"
+           f"checks={len(rep['checks'])}")

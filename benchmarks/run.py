@@ -26,7 +26,8 @@ sys.path.insert(0, _REPO_ROOT)  # `import benchmarks` when run as a script
 def build_suites(mode: str, backends=None):
     from benchmarks import (bench_class_scale, bench_concurrency_sweep,
                             bench_energy_joint,
-                            bench_events_scale, bench_kernels, bench_pareto,
+                            bench_events_scale, bench_kernels, bench_obs,
+                            bench_pareto,
                             bench_population_sweep, bench_pruned_sweep,
                             bench_queueing, bench_round_optimization,
                             bench_routing_table, bench_scenario_suite,
@@ -74,6 +75,8 @@ def build_suites(mode: str, backends=None):
                 horizon=40.0, seeds=(0,))),
             # micro-batched vs one-at-a-time dispatch through the server
             ("serve", lambda: bench_serve.run()),
+            # telemetry rings off vs on (bounded-overhead guard) + drift
+            ("obs", lambda: bench_obs.run()),
             ("kernels", lambda: bench_kernels.run()),
         ]
     return [
@@ -109,6 +112,7 @@ def build_suites(mode: str, backends=None):
         ("energy_joint", lambda: bench_energy_joint.run(
             horizon=120.0 if fast else 240.0, seeds=(0,) if fast else (0, 1))),
         ("serve", lambda: bench_serve.run()),
+        ("obs", lambda: bench_obs.run()),
         ("kernels", lambda: bench_kernels.run()),
     ]
 

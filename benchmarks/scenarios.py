@@ -21,7 +21,8 @@ import numpy as np
 from repro.core import LearningConstants
 from repro.scenario import (ClassSpec, EnergySpec, LearningSpec, NetworkSpec,
                             ObjectiveSpec, PAPER_CLUSTERS_TABLE1,
-                            PAPER_CLUSTERS_TABLE6, Scenario, StrategySpec)
+                            PAPER_CLUSTERS_TABLE6, Scenario, SimSpec,
+                            StrategySpec, TraceSpec)
 
 # The constants used across every benchmark (Assumptions A1-A5).
 CONSTS = LearningConstants(L=1.0, delta=1.0, sigma=1.0, M=2.0, G=5.0, eps=1.0)
@@ -105,6 +106,20 @@ def class_scale_scenario(n: int = 10_000, C: int = 4, m: int = 8,
         name=name or f"class_scale_n{n}_C{C}")
 
 
+def obs_scenario(n: int = 8, trace_events: int = 16384) -> Scenario:
+    """The telemetry-overhead workload (``bench_obs``): a heterogeneous
+    compute-bound population with the event ring enabled, pinned uniform
+    routing at ``m = 2n``."""
+    rng = np.random.default_rng(42)
+    return Scenario(
+        network=NetworkSpec(mu_c=list(0.8 + 0.4 * rng.random(n)),
+                            mu_d=[4.0] * n, mu_u=[4.0] * n),
+        strategy=StrategySpec("explicit", p=list(np.full(n, 1.0 / n)),
+                              m=2 * n, m_max=2 * n),
+        sim=SimSpec(trace=TraceSpec(events=trace_events)),
+        name="obs_overhead")
+
+
 def two_client_scenario(mu2: float = 1.0) -> Scenario:
     """The Figure-2 two-client system (client 2 = ``mu2``x faster)."""
     return Scenario(
@@ -142,6 +157,7 @@ BENCH_SCENARIOS: dict[str, Scenario] = {
     "pruned_sweep": table1_scenario(1, strategy="time_opt", steps=8,
                                     m_max=132, search="pruned",
                                     name="pruned_sweep_s1"),
+    "obs": obs_scenario(),
 }
 
 # specs actually executed in this process (bench modules call record());

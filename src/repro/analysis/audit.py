@@ -271,6 +271,15 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
         return jax.make_jaxpr(lambda p, m, k: fn(p, m, k, None))(
             prm, m_vec, keys)
 
+    def suite_simulate_batched_traced():
+        from ..sim.batched_events import build_lanes_fn
+
+        fn = build_lanes_fn("batched", 6, 2, "exponential", m_max, False,
+                            trace_events=8)
+        prm, m_vec, keys = _sim_args()
+        return jax.make_jaxpr(lambda p, m, k: fn(p, m, k, None))(
+            prm, m_vec, keys)
+
     def suite_simulate_pallas():
         from ..sim.batched_events import build_lanes_fn
 
@@ -315,6 +324,42 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
             test_data=test)
         K, G = 4, 2
         fn = trainer._build(K, G, m_max, 6.0, "batched", None)
+        params0 = jax.vmap(model.init)(
+            jnp.stack([jax.random.PRNGKey(s) for s in range(L)]))
+        p_mat = jnp.asarray(np.stack([np.asarray(net.p)] * L))
+        ms = jnp.asarray([2] * L, jnp.int32)
+        etas = jnp.asarray([0.05] * L)
+        sim_keys = jnp.stack([jax.random.PRNGKey(10 + s) for s in range(L)])
+        data_keys = jnp.stack([jax.random.PRNGKey(20 + s) for s in range(L)])
+        return jax.make_jaxpr(fn)(params0, p_mat, ms, etas, sim_keys,
+                                  data_keys)
+
+    def trainer_scan_traced():
+        from ..fl.engine import DeviceTrainer
+        from ..fl.models import mlp_classifier
+        from ..fl.trainer import AsyncFLConfig
+        from ..core.buzen import NetworkParams
+
+        rng = np.random.default_rng(9)
+        n = 3
+        net = NetworkParams(
+            p=jnp.asarray(rng.dirichlet(np.ones(n))),
+            mu_c=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+            mu_d=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+            mu_u=jnp.asarray(rng.uniform(0.5, 4.0, n)))
+        clients = [(rng.normal(size=(4, 4)).astype(np.float32),
+                    rng.integers(0, 2, size=4).astype(np.int32))
+                   for _ in range(n)]
+        test = (rng.normal(size=(6, 4)).astype(np.float32),
+                rng.integers(0, 2, size=6).astype(np.int32))
+        model = mlp_classifier(4, 2, hidden=(4,))
+        trainer = DeviceTrainer(
+            model, clients, net,
+            AsyncFLConfig(eta=0.05, batch_size=2, eval_every_time=2.0),
+            test_data=test)
+        K, G = 4, 2
+        fn = trainer._build(K, G, m_max, 6.0, "batched", None,
+                            trace_updates=8)
         params0 = jax.vmap(model.init)(
             jnp.stack([jax.random.PRNGKey(s) for s in range(L)]))
         p_mat = jnp.asarray(np.stack([np.asarray(net.p)] * L))
@@ -454,6 +499,10 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
         "suite_simulate_batched": (
             "ScenarioSuite simulate bucket, batched backend: jit(vmap) of "
             "the single-lane event scan", suite_simulate_batched),
+        "suite_simulate_batched_traced": (
+            "ScenarioSuite simulate bucket with the event telemetry ring "
+            "threaded as scan carry (repro.obs)",
+            suite_simulate_batched_traced),
         "suite_simulate_pallas": (
             "ScenarioSuite simulate bucket, pallas backend (interpret): "
             "lock-step lane scan around the event kernel",
@@ -474,6 +523,9 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
         "trainer_scan": (
             "DeviceTrainer fused training scan (suite train bucket): "
             "jit(vmap) over lanes", trainer_scan),
+        "trainer_scan_traced": (
+            "DeviceTrainer fused training scan with the update telemetry "
+            "ring threaded as scan carry (repro.obs)", trainer_scan_traced),
         "trainer_scan_lane_nets": (
             "DeviceTrainer lane-mode training scan (serve mixed-n train "
             "bucket): network + padded client table vmapped per lane",

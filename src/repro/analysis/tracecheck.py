@@ -37,6 +37,7 @@ import contextlib
 import dataclasses
 import logging
 import re
+import time
 from typing import Optional
 
 _TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
@@ -44,6 +45,8 @@ _COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
 _CACHE_HIT_EVENT = "/jax/compilation_cache/cache_hits"
 _COMPILE_MSG = re.compile(r"Finished XLA compilation of jit\((.+?)\) in ")
 _TRACE_MSG = re.compile(r"Finished tracing \+ transforming (.+?) for pjit")
+# the same messages end "... in {seconds} sec": captured for compile spans
+_SPAN_SECS = re.compile(r" in ([0-9.eE+-]+) sec")
 
 #: the inner functions of every resident suite program: the analyze bucket
 #: (``analyze_lanes``/``one``), the simulate bucket (``lanes``/``one`` for
@@ -67,6 +70,10 @@ class Watch:
     cache_hits: int = 0            # persistent-compilation-cache hits
     compiled: list = dataclasses.field(default_factory=list)  # names
     traced: list = dataclasses.field(default_factory=list)    # names
+    #: per-compile ``(program, end_perf_counter, seconds)`` triples — the
+    #: compile track of the repro.obs Perfetto export
+    #: (``repro.obs.trace.perfetto_trace(compile_spans=...)``)
+    spans: list = dataclasses.field(default_factory=list)
 
     @property
     def fresh_compiles(self) -> int:
@@ -138,8 +145,12 @@ class _DispatchLogHandler(logging.Handler):
             return
         m = _COMPILE_MSG.search(msg)
         if m:
+            secs = _SPAN_SECS.search(msg)
+            span = (m.group(1), time.perf_counter(),
+                    float(secs.group(1)) if secs else 0.0)
             for w in _active:
                 w.compiled.append(m.group(1))
+                w.spans.append(span)
             return
         m = _TRACE_MSG.search(msg)
         if m:

@@ -538,6 +538,50 @@ def _simulate_stats(params, m, key, num_updates, warmup, distribution,
     return finalize_stats(st)
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "num_updates", "warmup", "distribution", "m_max", "trace_events"))
+def _simulate_stats_traced(params, m, key, num_updates, warmup, distribution,
+                           m_max, power, trace_events):
+    """:func:`_simulate_stats` carrying an ``repro.obs`` event ring.
+
+    A separate program on purpose: the untraced scan stays byte-for-byte
+    what it was (same name for the compile sentinel, same jit cache
+    entry), and the ring rides as extra carry state.  The append reads
+    the *pre-event* state (the completed station) and the post-step state
+    (the destination station) but never feeds back into either — no
+    randomness consumed, no value altered — so the returned
+    :class:`EventStats` is **bitwise** equal to the untraced run
+    (``tests/test_obs.py`` property-tests this across all backends).
+    """
+    from ..obs.rings import event_ring_append, event_ring_init
+
+    mult = 4 if params.mu_cs is not None else 3
+    num_events = mult * (num_updates + warmup) + mult * m_max + 8
+    cap = warmup + num_updates
+    st = init_state(params, m, key, m_max=m_max, distribution=distribution,
+                    warmup=warmup, cap=cap)
+    route_prefix = seqcumsum(params.p)
+    n = params.n
+    ring = event_ring_init(int(trace_events))
+
+    def body(carry, _):
+        st, ring = carry
+        st2, out = step_event(params, st, distribution=distribution,
+                              power=power, route_prefix=route_prefix)
+        ph = st.phase[out.slot]
+        ring = event_ring_append(
+            ring, time=out.time,
+            station=_station_index(ph, out.client, n),
+            station_to=_station_index(st2.phase[out.slot],
+                                      st2.client[out.slot], n),
+            kind=ph, slot=out.slot, client=out.client, delay=out.delay,
+            update=out.is_update)
+        return (st2, ring), None
+
+    (st, ring), _ = jax.lax.scan(body, (st, ring), None, length=num_events)
+    return finalize_stats(st), ring
+
+
 def simulate_stats(params: NetworkParams, m, num_updates: int, *,
                    warmup: int = 0, key: Optional[jax.Array] = None,
                    seed: int = 0, distribution: str = "exponential",
@@ -882,6 +926,43 @@ def _simulate_stats_classes(classes, m, key, num_updates, warmup,
 
     st, _ = jax.lax.scan(body, st, None, length=num_events)
     return finalize_stats(st)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_updates", "warmup", "distribution", "m_max", "trace_events"))
+def _simulate_stats_classes_traced(classes, m, key, num_updates, warmup,
+                                   distribution, m_max, power, trace_events):
+    """:func:`_simulate_stats_classes` carrying an event ring (the
+    ``client`` column records the completed task's *class*; stations use
+    the ``[3C+1]`` class layout).  Bitwise non-invasive, like
+    :func:`_simulate_stats_traced`."""
+    from ..obs.rings import event_ring_append, event_ring_init
+
+    mult = 4 if classes.mu_cs is not None else 3
+    num_events = mult * (num_updates + warmup) + mult * m_max + 8
+    cap = warmup + num_updates
+    st = init_class_state(classes, m, key, m_max=m_max,
+                          distribution=distribution, warmup=warmup, cap=cap)
+    route_prefix = seqcumsum(classes.mass)
+    C = classes.C
+    ring = event_ring_init(int(trace_events))
+
+    def body(carry, _):
+        st, ring = carry
+        st2, out = step_class_event(classes, st, distribution=distribution,
+                                    power=power, route_prefix=route_prefix)
+        ph = st.phase[out.slot]
+        ring = event_ring_append(
+            ring, time=out.time,
+            station=_station_index(ph, out.client, C),
+            station_to=_station_index(st2.phase[out.slot],
+                                      st2.cls[out.slot], C),
+            kind=ph, slot=out.slot, client=out.client, delay=out.delay,
+            update=out.is_update)
+        return (st2, ring), None
+
+    (st, ring), _ = jax.lax.scan(body, (st, ring), None, length=num_events)
+    return finalize_stats(st), ring
 
 
 def simulate_stats_classes(classes, m, num_updates: int, *,

@@ -161,7 +161,8 @@ class DeviceTrainer:
                  config, test_data=None, power=None,
                  loss_fn: Callable = cross_entropy_loss,
                  sim_backend: Optional[str] = None,
-                 sim_interpret: Optional[bool] = None):
+                 sim_interpret: Optional[bool] = None,
+                 trace_updates: int = 0):
         self.model = model
         self.net = net
         self.cfg = config
@@ -171,6 +172,13 @@ class DeviceTrainer:
         # sim_interpret overrides the pallas kernel's compile/interpret auto
         self.sim_backend = sim_backend
         self.sim_interpret = sim_interpret
+        # repro.obs update-telemetry ring capacity (0 = tracing off: the
+        # fused scan is byte-identical to the untraced program); when set,
+        # each lane of :meth:`run_lanes` records its last ``trace_updates``
+        # applied updates and the per-lane rings land in
+        # :attr:`last_update_rings`
+        self.trace_updates = int(trace_updates)
+        self.last_update_rings = None
         self.n = net.n              # static row count (n_max when padded)
         # real population: the bias correction eta/(n p_C) and the reported
         # per-client statistics use the *active* count under the traced-n
@@ -211,12 +219,14 @@ class DeviceTrainer:
         :meth:`run_lanes` call — resolve them with
         ``repro.scenario.resolve_strategy`` or a ``ScenarioSuite``."""
         sim = getattr(scenario, "sim", None)
+        trace = None if sim is None else getattr(sim, "trace", None)
         return cls(model, clients, scenario.params(),
                    scenario.fl_config(**config_overrides),
                    test_data=test_data, power=scenario.power(),
                    loss_fn=loss_fn,
                    sim_backend=None if sim is None else sim.backend,
-                   sim_interpret=None if sim is None else sim.interpret)
+                   sim_interpret=None if sim is None else sim.interpret,
+                   trace_updates=0 if trace is None else trace.updates)
 
     # -- static-shape planning ---------------------------------------------
 
@@ -320,7 +330,9 @@ class DeviceTrainer:
 
     def _build(self, K: int, G: int, m_max: int, horizon: float,
                backend: str, interp: Optional[bool],
-               lane_mode: bool = False, lane_power: bool = False):
+               lane_mode: bool = False, lane_power: bool = False,
+               trace_updates: int = 0):
+        tr = int(trace_updates)
         cfg = self.cfg
         n = self.n
         net0 = self.net
@@ -387,9 +399,20 @@ class DeviceTrainer:
             # touches a single snapshot row per update.
             grid_snaps = jax.tree_util.tree_map(
                 lambda w: jnp.broadcast_to(w[None], (G,) + w.shape), params0)
+            if tr:
+                # telemetry aux carry (repro.obs): the update ring plus the
+                # per-slot snapshot write times.  Appends read (upd, g) and
+                # never feed back into the training state, so the traced
+                # program is bitwise identical to the untraced one
+                # (tests/test_obs.py)
+                from ..obs.rings import update_ring_append, update_ring_init
+                aux0 = (update_ring_init(tr),
+                        jnp.zeros((m_max,), jnp.float64))
+            else:
+                aux0 = ()
 
             def body(carry, _):
-                st, params, snaps, grid_snaps, prev_t, dkey = carry
+                st, params, snaps, grid_snaps, prev_t, dkey, aux = carry
                 st, upd = events.next_update(net, st, distribution=dist,
                                              power=power, backend=backend,
                                              interpret=interp)
@@ -404,6 +427,20 @@ class DeviceTrainer:
                 # padded rows have p = 0 and are never drawn as C_k
                 scale = eta / (n_act * p_norm[c])
                 g = grad_fn(stale, xb, yb)
+                if tr:
+                    ring, snap_t = aux
+                    # contract: allow(raw-reduction): parameter-axis grad norm — model leaves are never padded along the client axis
+                    sq = [jnp.sum(jnp.square(v.astype(jnp.float64)))
+                          for v in jax.tree_util.tree_leaves(g)]
+                    gnorm = jnp.sqrt(sum(sq))
+                    ring = update_ring_append(
+                        ring, time=upd.time, client=c, staleness=upd.delay,
+                        grad_norm=gnorm, snapshot_age=upd.time - snap_t[j],
+                        valid=live)
+                    # like the snaps write, no live-mask on snap_t: time is
+                    # monotone, so a post-horizon write is only ever read by
+                    # appends whose valid gate is already False
+                    aux = (ring, snap_t.at[j].set(upd.time))
                 new_params = apply_update(params, g, scale)
                 new_params = jax.tree_util.tree_map(
                     lambda a, b: jnp.where(live, a, b), new_params, params)
@@ -420,11 +457,12 @@ class DeviceTrainer:
                 snaps = jax.tree_util.tree_map(
                     lambda s, w: s.at[j].set(w), snaps, new_params)
                 out = (upd.time, c, upd.delay, live)
-                return (st, new_params, snaps, grid_snaps, upd.time, dkey), out
+                return (st, new_params, snaps, grid_snaps, upd.time, dkey,
+                        aux), out
 
-            (st, paramsK, _, grid_snaps, _, _), outs = jax.lax.scan(
+            (st, paramsK, _, grid_snaps, _, _, aux), outs = jax.lax.scan(
                 body, (st, params0, snaps, grid_snaps,
-                       jnp.zeros((), jnp.float64), key_data),
+                       jnp.zeros((), jnp.float64), key_data, aux0),
                 None, length=K)
             times, clients_k, delays, live = outs
 
@@ -466,6 +504,8 @@ class DeviceTrainer:
                 final_loss=final_loss, final_acc=final_acc, updates=k_h,
                 mean_delay=mean_delay, delay_counts=delay_cnt,
                 throughput=thr, energy=st.energy)
+            if tr:
+                return dlog, paramsK, aux[0]
             return dlog, paramsK
 
         if not lane_mode:
@@ -526,24 +566,27 @@ class DeviceTrainer:
         p_mat = jnp.asarray(np.stack([np.asarray(p, np.float64) for p in ps]))
         m_arr = jnp.asarray(np.asarray(ms, np.int32))
         eta_arr = jnp.asarray(np.asarray(etas, np.float64))
+        tr = self.trace_updates
         if lane_args is not None:
             nets, lx, ly, lsizes, n_acts, powers = lane_args
             key_stat = ("lanes", K, G, m_max, round(horizon, 9), backend,
                         interp, lx.shape[1:], powers is not None,
-                        nets.mu_cs is not None)
+                        nets.mu_cs is not None, tr)
             if key_stat not in self._jit_cache:
                 self._jit_cache[key_stat] = self._build(
                     K, G, m_max, horizon, backend, interp,
-                    lane_mode=True, lane_power=powers is not None)
+                    lane_mode=True, lane_power=powers is not None,
+                    trace_updates=tr)
             fn = self._jit_cache[key_stat]
             args = (params0, nets, lx, ly, lsizes, n_acts)
             if powers is not None:
                 args = args + (powers,)
             return fn(*args, p_mat, m_arr, eta_arr, sim_keys, data_keys)
-        key_stat = (K, G, m_max, round(horizon, 9), backend, interp)
+        key_stat = (K, G, m_max, round(horizon, 9), backend, interp, tr)
         if key_stat not in self._jit_cache:
             self._jit_cache[key_stat] = self._build(K, G, m_max, horizon,
-                                                    backend, interp)
+                                                    backend, interp,
+                                                    trace_updates=tr)
         fn = self._jit_cache[key_stat]
         return fn(params0, p_mat, m_arr, eta_arr, sim_keys, data_keys)
 
@@ -631,6 +674,7 @@ class DeviceTrainer:
 
         dlogs = [None] * L
         finals = [None] * L
+        rings = [None] * L if self.trace_updates else None
         m_max = int(max(ms))  # shared: bucket membership must not change shapes
         for K, idx in sorted(buckets.items()):
             if max_updates is not None:
@@ -643,14 +687,23 @@ class DeviceTrainer:
                 lane_args = (take(stacked_nets), lane_x[rows], lane_y[rows],
                              lane_sizes[rows], n_act_arr[rows],
                              None if stacked_pw is None else take(stacked_pw))
-            dlog, fin = self._run_bucket(
+            out = self._run_bucket(
                 [ps[i] for i in idx], [ms[i] for i in idx],
                 [etas[i] for i in idx], all_sim_keys[rows],
                 all_init_keys[rows], all_data_keys[rows], horizon, K, m_max,
                 lane_args=lane_args)
+            if self.trace_updates:
+                dlog, fin, ring = out
+            else:
+                dlog, fin = out
             for row, i in enumerate(idx):
                 dlogs[i] = jax.tree_util.tree_map(lambda a: a[row], dlog)
                 finals[i] = jax.tree_util.tree_map(lambda a: a[row], fin)
+                if rings is not None:
+                    rings[i] = jax.tree_util.tree_map(lambda a: a[row], ring)
+        # per-lane update rings in input lane order (None when tracing off);
+        # decode with repro.obs.rings.decode
+        self.last_update_rings = rings
         final_params = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *finals)
 

@@ -1,0 +1,156 @@
+"""On-device telemetry rings for the event engine and the fused trainer.
+
+A ring is a NamedTuple of fixed-size device arrays plus a monotone write
+counter, threaded through a ``lax.scan`` as extra carry state.  Appends
+write at ``count % capacity`` (wraparound keeps the most recent records)
+and are **bitwise non-invasive** by construction: they consume no
+randomness and never feed back into the simulation state, so a traced
+run equals an untraced run exactly (property-tested like the padding
+contract, ``tests/test_obs.py``).
+
+Capacity 0 is the statically-disabled channel: the arrays are
+zero-length, :func:`_append` is a Python-level no-op, and XLA dead-code
+eliminates the carry — the untraced program is unchanged.
+
+Channels:
+
+  * :class:`EventRing` — one record per *event* (service completion) of
+    the closed network: completion clock, the station the task completed
+    at (``repro.core.events._station_index`` layout: down_i / comp_i /
+    up_i / CS), the post-transition station, pre-event phase, task slot,
+    client, relative delay, and the update flag.  Enough to reconstruct
+    the full simulated timeline (``repro.obs.trace``) and the empirical
+    throughput / staleness / occupancy the drift monitors compare
+    against the closed forms (``repro.obs.drift``).
+  * :class:`UpdateRing` — one record per *applied* model update of the
+    fused trainer: apply clock, client, staleness (relative delay),
+    gradient norm and snapshot age.
+
+Decoding is host-side (:func:`decode`): wraparound is unrolled so the
+records come back in chronological order, with the number of dropped
+(overwritten) records reported.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class EventRing(NamedTuple):
+    """Per-event channel (all arrays ``[capacity]``; ``count`` scalar)."""
+
+    time: jax.Array        # completion clock (f64)
+    station: jax.Array     # station completed at (pre-event, [3n+1] layout)
+    station_to: jax.Array  # station the task moved to
+    kind: jax.Array        # pre-event phase (DOWN/COMP_SERV/UP/CS_SERV)
+    slot: jax.Array        # task-table row
+    client: jax.Array      # owning client (class index on the class engine)
+    delay: jax.Array       # relative delay round - dispatch_round
+    update: jax.Array      # 1 iff this event applied a model update
+    count: jax.Array       # total records ever appended (monotone)
+
+
+class UpdateRing(NamedTuple):
+    """Per-applied-update channel of the fused trainer."""
+
+    time: jax.Array          # apply clock (f64)
+    client: jax.Array        # gradient's client C_k
+    staleness: jax.Array     # relative delay of the applied gradient
+    grad_norm: jax.Array     # global L2 norm of the applied gradient
+    snapshot_age: jax.Array  # apply clock minus the stale snapshot's clock
+    count: jax.Array
+
+
+_EVENT_DTYPES = {"time": jnp.float64, "station": jnp.int32,
+                 "station_to": jnp.int32, "kind": jnp.int32,
+                 "slot": jnp.int32, "client": jnp.int32,
+                 "delay": jnp.int32, "update": jnp.int32}
+_UPDATE_DTYPES = {"time": jnp.float64, "client": jnp.int32,
+                  "staleness": jnp.int32, "grad_norm": jnp.float64,
+                  "snapshot_age": jnp.float64}
+
+
+def event_ring_init(capacity: int) -> EventRing:
+    """An empty event ring (``capacity == 0`` disables the channel)."""
+    cap = int(capacity)
+    cols = {k: jnp.zeros((cap,), dt) for k, dt in _EVENT_DTYPES.items()}
+    return EventRing(count=jnp.zeros((), jnp.int32), **cols)
+
+
+def update_ring_init(capacity: int) -> UpdateRing:
+    """An empty update ring (``capacity == 0`` disables the channel)."""
+    cap = int(capacity)
+    cols = {k: jnp.zeros((cap,), dt) for k, dt in _UPDATE_DTYPES.items()}
+    return UpdateRing(count=jnp.zeros((), jnp.int32), **cols)
+
+
+def _append(ring, valid: Optional[jax.Array], cols: dict):
+    """Write one record at ``count % capacity`` and bump the counter.
+
+    ``valid`` (a traced bool, e.g. "this update landed before the
+    horizon") gates the write and the bump; ``None`` appends
+    unconditionally.  Static no-op at capacity 0.
+    """
+    cap = ring.time.shape[0]
+    if cap == 0:
+        return ring
+    idx = ring.count % cap
+    upd = {}
+    for name, value in cols.items():
+        col = getattr(ring, name)
+        v = jnp.asarray(value).astype(col.dtype)
+        if valid is not None:
+            v = jnp.where(valid, v, col[idx])
+        upd[name] = col.at[idx].set(v)
+    inc = 1 if valid is None else jnp.asarray(valid).astype(jnp.int32)
+    return ring._replace(count=ring.count + inc, **upd)
+
+
+def event_ring_append(ring: EventRing, *, time, station, station_to, kind,
+                      slot, client, delay, update,
+                      valid: Optional[jax.Array] = None) -> EventRing:
+    return _append(ring, valid, {
+        "time": time, "station": station, "station_to": station_to,
+        "kind": kind, "slot": slot, "client": client, "delay": delay,
+        "update": update})
+
+
+def update_ring_append(ring: UpdateRing, *, time, client, staleness,
+                       grad_norm, snapshot_age,
+                       valid: Optional[jax.Array] = None) -> UpdateRing:
+    return _append(ring, valid, {
+        "time": time, "client": client, "staleness": staleness,
+        "grad_norm": grad_norm, "snapshot_age": snapshot_age})
+
+
+def decode(ring) -> dict:
+    """Host-side view of one ring (one lane — index any lane axes first).
+
+    Returns ``{column: np.ndarray}`` in chronological order plus
+    ``count`` (records ever appended), ``capacity`` and ``dropped``
+    (records overwritten by wraparound).
+    """
+    count = int(np.asarray(ring.count))
+    cap = int(ring.time.shape[0])
+    out: dict = {}
+    for name in ring._fields:
+        if name == "count":
+            continue
+        col = np.asarray(getattr(ring, name))
+        if count <= cap:
+            col = col[:count]
+        else:
+            col = np.roll(col, -(count % cap), axis=0)
+        out[name] = col
+    out["count"] = count
+    out["capacity"] = cap
+    out["dropped"] = max(0, count - cap)
+    return out
+
+
+def decode_lane(ring, lane: int) -> dict:
+    """:func:`decode` of one lane of a lane-stacked ring."""
+    return decode(jax.tree_util.tree_map(lambda x: x[lane], ring))

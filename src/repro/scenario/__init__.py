@@ -38,7 +38,7 @@ from .registry import (OBJECTIVES, PARTITIONS, STRATEGIES, TIMING_LAWS,
                        Registry, objective, partition, strategy, timing_law)
 
 _SPEC = ("Scenario", "NetworkSpec", "ClassSpec", "LearningSpec", "EnergySpec",
-         "StrategySpec", "ObjectiveSpec", "SimSpec", "DataSpec",
+         "StrategySpec", "ObjectiveSpec", "SimSpec", "TraceSpec", "DataSpec",
          "ClusterSpec",
          "PAPER_CLUSTERS_TABLE1", "PAPER_CLUSTERS_TABLE6", "expand_clusters",
          "DEFAULT_ETA", "MAX_THROUGHPUT_ETA", "EXPLICIT", "stack")

@@ -573,15 +573,57 @@ class ObjectiveSpec:
 
 @_pytree_dataclass(data_fields=())
 @dataclasses.dataclass(frozen=True, eq=False)
+class TraceSpec:
+    """Telemetry-channel selection for ``repro.obs`` (see its docs).
+
+    ``events``/``updates`` are ring capacities (records kept; 0 disables
+    the channel — the rings are zero-length and XLA dead-code-eliminates
+    them, so an untraced scenario compiles the exact pre-existing
+    program).  Tracing is **bitwise non-invasive**: results are identical
+    with any capacities.  ``tolerance`` is the relative drift band the
+    monitors (``repro.obs.drift``) allow between ring empirics and the
+    closed-form predictions.
+    """
+
+    events: int = 0        # event-ring capacity (engine channel)
+    updates: int = 0       # update-ring capacity (fused-trainer channel)
+    tolerance: float = 0.25
+
+    def __post_init__(self):
+        if _SKIP_VALIDATION:
+            return
+        for f in ("events", "updates"):
+            v = int(getattr(self, f))
+            if v < 0:
+                raise ValueError(f"TraceSpec.{f} must be >= 0, got {v}")
+            object.__setattr__(self, f, v)
+        tol = float(self.tolerance)
+        if not tol > 0:
+            raise ValueError(f"TraceSpec.tolerance must be > 0, got {tol}")
+        object.__setattr__(self, "tolerance", tol)
+
+    def to_dict(self) -> dict:
+        return {"events": int(self.events), "updates": int(self.updates),
+                "tolerance": float(self.tolerance)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TraceSpec":
+        return cls(**d)
+
+
+@_pytree_dataclass(data_fields=())
+@dataclasses.dataclass(frozen=True, eq=False)
 class SimSpec:
     """Event-engine execution knobs: which ``repro.sim`` backend runs this
     scenario's trajectories (``None`` = the process-wide
-    ``REPRO_SIM_BACKEND`` default) and, for the Pallas backend, an
+    ``REPRO_SIM_BACKEND`` default), for the Pallas backend an
     ``interpret``-mode override (``None`` = auto: compiled on TPU,
-    interpreted elsewhere)."""
+    interpreted elsewhere), and the optional ``repro.obs`` telemetry
+    channels (``trace``; ``None`` = tracing off)."""
 
     backend: Optional[str] = None     # "reference" | "batched" | "pallas"
     interpret: Optional[bool] = None
+    trace: Optional[TraceSpec] = None
 
     def __post_init__(self):
         if _SKIP_VALIDATION:
@@ -592,13 +634,23 @@ class SimSpec:
             object.__setattr__(self, "backend", _check(str(self.backend)))
         if self.interpret is not None:
             object.__setattr__(self, "interpret", bool(self.interpret))
+        if self.trace is not None and not isinstance(self.trace, TraceSpec):
+            object.__setattr__(self, "trace", TraceSpec(**dict(self.trace)))
 
     def to_dict(self) -> dict:
-        return {"backend": self.backend, "interpret": self.interpret}
+        d = {"backend": self.backend, "interpret": self.interpret}
+        # absent (not null) when unset: pre-obs SimSpec JSON — and every
+        # Scenario.hash() over it — is unchanged by the trace field
+        if self.trace is not None:
+            d["trace"] = self.trace.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "SimSpec":
-        return cls(**d)
+        d = dict(d)
+        trace = d.pop("trace", None)
+        return cls(trace=None if trace is None
+                   else TraceSpec.from_dict(trace), **d)
 
 
 @_pytree_dataclass(data_fields=())
@@ -741,6 +793,11 @@ class Scenario:
     def sim_backend(self) -> Optional[str]:
         """The pinned ``repro.sim`` backend (None = process default)."""
         return None if self.sim is None else self.sim.backend
+
+    @property
+    def trace(self) -> Optional[TraceSpec]:
+        """The ``repro.obs`` telemetry channels (None = tracing off)."""
+        return None if self.sim is None else self.sim.trace
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)

@@ -333,6 +333,13 @@ class SuiteResult:
     ``cache_hits`` counts entries served from the suite-level result cache
     (keyed by ``Scenario.hash()`` x seeds x mode x run settings): re-running
     an unchanged scenario costs nothing.
+
+    Scenarios carrying a ``TraceSpec`` (``SimSpec.trace``) additionally
+    fill ``traces[name]`` — per-seed decoded telemetry rings
+    (``repro.obs.rings.decode`` dicts for ``simulate``, update-ring dicts
+    for ``train``) — and, for ``simulate``, ``drift[name]``: per-seed
+    ``repro.obs.drift.drift_report`` comparisons of the ring empirics
+    against the closed forms.  Both stay ``None`` when nothing traced.
     """
 
     mode: str
@@ -343,6 +350,8 @@ class SuiteResult:
     strategies: dict  # name -> (p, m) resolved routing/concurrency
     cache_hits: int = 0
     metrics: Optional[dict] = None  # Metrics.snapshot() of the owning suite
+    traces: Optional[dict] = None   # name -> per-seed decoded rings
+    drift: Optional[dict] = None    # name -> per-seed drift reports
 
 
 @dataclasses.dataclass
@@ -365,7 +374,7 @@ class ScenarioSuite:
     """A keyed collection of Scenarios sharing a seed set."""
 
     def __init__(self, scenarios, seeds=(0,), *, caches=None, metrics=None):
-        from ..serve.metrics import Metrics  # standalone helper module
+        from ..obs.metrics import Metrics  # standalone helper module
 
         if isinstance(scenarios, Scenario):
             scenarios = [scenarios]
@@ -588,6 +597,8 @@ class ScenarioSuite:
         c_max = max((s.network.classes.C for s in self.scenarios.values()
                      if s.is_class_network), default=0)
         entries: dict = {}
+        traces: dict = {}
+        drift: dict = {}
         cache_hits = 0
         buckets: dict = {}
         for name in names:
@@ -595,13 +606,20 @@ class ScenarioSuite:
             bk = resolve_backend(backend if backend is not None
                                  else scn.sim_backend)
             interp = None if scn.sim is None else scn.sim.interpret
+            tr = 0 if scn.trace is None else int(scn.trace.events)
+            if tr and scn.is_class_network:
+                raise ValueError(
+                    f"scenario {name!r}: TraceSpec on a class-aggregated "
+                    "network is not supported in suite dispatch — class "
+                    "rings index stations per class, not per client; "
+                    "expand the population (aggregate=False) to trace it")
             key = (scn.network.law, scn.network.mu_cs is not None,
-                   _power_sig(scn), bk, interp, scn.is_class_network)
+                   _power_sig(scn), bk, interp, scn.is_class_network, tr)
             buckets.setdefault(key, []).append(name)
 
         programs = 0
         S = len(self.seeds)
-        for (law, has_cs, power_sig, bk, interp, is_classes), members in \
+        for (law, has_cs, power_sig, bk, interp, is_classes, tr), members in \
                 buckets.items():
             has_power = power_sig is not None
             # the table size comes from ALL bucket members (trajectories
@@ -625,6 +643,10 @@ class ScenarioSuite:
                 if hit is not None:
                     entries[name] = hit
                     cache_hits += 1
+                    if tr:  # cached alongside the stats, same ckey
+                        thit = self._result_cache.get(("trace",) + ckey)
+                        if thit is not None:
+                            traces[name], drift[name] = thit
                 else:
                     todo.append((name, ckey))
             if not todo:
@@ -652,7 +674,7 @@ class ScenarioSuite:
             keys = jnp.stack([jax.random.PRNGKey(s)
                               for _ in todo for s in self.seeds])
             sig = ("simulate", is_classes, axis_max, law, has_cs, power_sig,
-                   mx, int(num_updates), int(warmup), bk, interp)
+                   mx, int(num_updates), int(warmup), bk, interp, tr)
             fn = self._jit_cache.get(sig)
             if fn is None:
                 if is_classes:
@@ -662,11 +684,12 @@ class ScenarioSuite:
                 else:
                     fn = self._jit_cache[sig] = build_lanes_fn(
                         bk, int(num_updates), int(warmup), law, mx,
-                        has_power, interpret=interp)
+                        has_power, interpret=interp, trace_events=tr)
                 programs += 1
             with self.metrics.timed("suite.dispatch", mode="simulate"):
-                stats = jax.block_until_ready(
+                out = jax.block_until_ready(
                     fn(lane_params, m_vec, keys, power))
+            stats, rings = out if tr else (out, None)
             self.metrics.observe("suite.lanes_per_dispatch", len(todo) * S,
                                  mode="simulate")
             for i, (name, ckey) in enumerate(todo):
@@ -679,9 +702,33 @@ class ScenarioSuite:
                         lambda a: a[i * S + j], stats), n_i)
                     for j in range(S)]
                 self._result_cache[ckey] = entries[name]
+                if tr:
+                    from ..obs.drift import drift_report, predict
+                    from ..obs.rings import decode
+
+                    scn = self.scenarios[name]
+                    m_i = strategies[name][1]
+                    # closed forms are seed- and run-invariant: one predict
+                    # per (scenario, m), cached across suite runs
+                    pkey = ("drift_pred", scn.hash(), int(m_i))
+                    preds = self._result_cache.get(pkey)
+                    if preds is None:
+                        preds = predict(scn.params(strategies[name][0]), m_i)
+                        self._result_cache[pkey] = preds
+                    traces[name] = [
+                        decode(jax.tree_util.tree_map(
+                            lambda a: a[i * S + j], rings))
+                        for j in range(S)]
+                    drift[name] = [
+                        drift_report(d, predictions=preds, law=law,
+                                     tolerance=scn.trace.tolerance)
+                        for d in traces[name]]
+                    self._result_cache[("trace",) + ckey] = (traces[name],
+                                                             drift[name])
         return SuiteResult(mode="simulate", entries=entries, seeds=self.seeds,
                            lanes=len(names) * S, programs=programs,
-                           strategies=strategies, cache_hits=cache_hits)
+                           strategies=strategies, cache_hits=cache_hits,
+                           traces=traces or None, drift=drift or None)
 
     # -- train: fused device trainer (PR-2 lane planner) ---------------------
 
@@ -710,6 +757,7 @@ class ScenarioSuite:
         run_sig = (float(horizon_time), max_updates,
                    tuple(sorted(config_overrides.items())))
         entries: dict = {}
+        traces: dict = {}
         cache_hits = 0
         buckets: dict = {}
         for name in names:
@@ -721,6 +769,8 @@ class ScenarioSuite:
             if hit is not None and hit[0] is model and hit[1] is clients \
                     and hit[2] is test_data and hit[3] is loss_fn:
                 entries[name] = hit[4]
+                if hit[5] is not None:
+                    traces[name] = hit[5]
                 cache_hits += 1
                 continue
             if clients is None and not scn.is_class_network:
@@ -737,6 +787,7 @@ class ScenarioSuite:
                        str(None if scn.data is None else scn.data.to_dict()),
                        scn.sim_backend,
                        None if scn.sim is None else scn.sim.interpret,
+                       0 if scn.trace is None else int(scn.trace.updates),
                        tuple(sorted(config_overrides.items())))
             else:
                 key = ("exact", str(scn.network.to_dict()),
@@ -746,6 +797,7 @@ class ScenarioSuite:
                        str(None if scn.data is None else scn.data.to_dict()),
                        scn.sim_backend,
                        None if scn.sim is None else scn.sim.interpret,
+                       0 if scn.trace is None else int(scn.trace.updates),
                        tuple(sorted(config_overrides.items())))
             buckets.setdefault(key, []).append((name, ckey))
 
@@ -787,7 +839,9 @@ class ScenarioSuite:
                     loss_fn=loss_fn or cross_entropy_loss,
                     sim_backend=scn0.sim_backend,
                     sim_interpret=None if scn0.sim is None
-                    else scn0.sim.interpret)
+                    else scn0.sim.interpret,
+                    trace_updates=0 if scn0.trace is None
+                    else scn0.trace.updates)
                 self._trainers[key] = (model, bucket_clients, bucket_test,
                                        loss_fn, trainer)
             n_top = trainer.n
@@ -830,14 +884,21 @@ class ScenarioSuite:
                                  mode="train")
             programs += max(len(trainer._jit_cache) - before, 0)
             S = len(self.seeds)
+            lane_rings = trainer.last_update_rings
+            if lane_rings is not None:
+                from ..obs.rings import decode
             for i, (name, ckey) in enumerate(members):
                 entries[name] = logs[i * S:(i + 1) * S]
+                if lane_rings is not None:
+                    traces[name] = [decode(lane_rings[i * S + j])
+                                    for j in range(S)]
                 self._result_cache[ckey] = (model, clients, test_data,
-                                            loss_fn, entries[name])
+                                            loss_fn, entries[name],
+                                            traces.get(name))
         return SuiteResult(mode="train", entries=entries, seeds=self.seeds,
                            lanes=len(names) * len(self.seeds),
                            programs=programs, strategies=strategies,
-                           cache_hits=cache_hits)
+                           cache_hits=cache_hits, traces=traces or None)
 
 
 _ANALYZE_KEY = {"time": "tau", "round": "K_eps", "throughput": "throughput",

@@ -106,6 +106,12 @@ class ServeClient:
         self.send({"id": req_id, "verb": "stats"})
         return self.unwrap(self.collect(req_id))
 
+    def metrics(self) -> str:
+        """Prometheus text exposition of the server's metric registry."""
+        req_id = f"r{next(self._ids)}"
+        self.send({"id": req_id, "verb": "metrics"})
+        return self.unwrap(self.collect(req_id))
+
     def shutdown(self) -> str:
         req_id = f"r{next(self._ids)}"
         self.send({"id": req_id, "verb": "shutdown"})

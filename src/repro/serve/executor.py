@@ -64,6 +64,9 @@ class Executor:
         self._resolved: dict = {}         # (scenario hash) -> (p, m)
         self._models: dict = {}           # model-spec key -> Model
         self._responses: dict = {}        # response cache
+        #: rolling drift-monitor summary over every traced dispatch,
+        #: surfaced by the server's ``stats`` verb
+        self.drift: dict = {"checked": 0, "breaches": 0, "last": None}
 
     # -- admission-side helpers (no jax) ------------------------------------
 
@@ -111,7 +114,11 @@ class Executor:
                      None if scn.energy is None
                      else scn.energy.P_cs is not None,
                      scn.is_class_network, scn.sim_backend,
-                     None if scn.sim is None else scn.sim.interpret)
+                     None if scn.sim is None else scn.sim.interpret,
+                     # ring capacities key the traced program variants —
+                     # traced and untraced requests must not coalesce
+                     None if scn.trace is None
+                     else (scn.trace.events, scn.trace.updates))
         if req.mode == "analyze":
             # closed forms are padding-invariant on every axis incl. the
             # task table, and analyze results cache by scenario hash alone
@@ -196,6 +203,14 @@ class Executor:
                                 max_updates=(None if max_updates is None
                                              else int(max_updates)),
                                 **opts)
+            if getattr(res, "drift", None):
+                for reports in res.drift.values():
+                    for rep in reports:
+                        self.drift["checked"] += 1
+                        if not rep.get("ok"):
+                            self.drift["breaches"] += 1
+                            self.metrics.inc("obs.drift_breaches", mode=mode)
+                        self.drift["last"] = rep
             out = []
             for i, req in enumerate(requests):
                 payload = encode_entry(mode, res.entries[f"q{i}"])

@@ -1,124 +1,11 @@
-"""Counters and latency histograms shared by the server and direct runs.
+"""Backward-compat shim — the metrics registry lives in ``repro.obs``.
 
-``SuiteResult.cache_hits`` used to be the only observability the planner
-had.  A :class:`Metrics` registry threads through ``ScenarioSuite.run``
-(every suite owns one; pass ``metrics=`` to share a registry across
-suites, as ``repro.serve`` does across micro-batches) and through the
-server's admission/dispatch path, so both report the same per-bucket
-counters: programs compiled, lanes dispatched, cache hits, and wall-clock
-latency percentiles.
-
-The registry is thread-safe (the server observes from reader threads and
-the dispatcher thread concurrently) and dependency-free: histograms keep
-a bounded reservoir of recent observations — exact percentiles over the
-window, O(1) memory.
+The registry started here (PR 8) as a serve-side helper; when
+observability grew into its own subsystem the single shared registry
+(suite + server + drift monitors) moved to :mod:`repro.obs.metrics`.
+Existing imports keep working through this module.
 """
-from __future__ import annotations
+from ..obs.metrics import _RESERVOIR  # noqa: F401  (tests size reservoirs)
+from ..obs.metrics import Histogram, Metrics, _Timer  # noqa: F401
 
-import threading
-import time
-from collections import deque
-from typing import Optional
-
-_RESERVOIR = 2048  # recent-observation window per histogram
-
-
-class Histogram:
-    """Bounded-reservoir histogram: exact percentiles over the most
-    recent ``_RESERVOIR`` observations, plus all-time count and sum."""
-
-    __slots__ = ("count", "total", "_window")
-
-    def __init__(self):
-        self.count = 0
-        self.total = 0.0
-        self._window = deque(maxlen=_RESERVOIR)
-
-    def observe(self, value: float) -> None:
-        self.count += 1
-        self.total += float(value)
-        self._window.append(float(value))
-
-    def percentile(self, q: float) -> float:
-        """Exact q-quantile (0 <= q <= 1) of the recent window (nearest
-        rank); 0.0 when nothing has been observed."""
-        if not self._window:
-            return 0.0
-        ordered = sorted(self._window)
-        rank = min(len(ordered) - 1, max(0, round(q * (len(ordered) - 1))))
-        return ordered[rank]
-
-    def summary(self) -> dict:
-        return {"count": self.count,
-                "mean": self.total / self.count if self.count else 0.0,
-                "p50": self.percentile(0.50),
-                "p99": self.percentile(0.99)}
-
-
-class Metrics:
-    """Thread-safe named counters + histograms with optional labels.
-
-    Label values land in the flattened snapshot key as
-    ``name{k=v,...}`` — e.g. ``suite.lanes{mode=train}``.
-    """
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._counters: dict[str, float] = {}
-        self._hists: dict[str, Histogram] = {}
-
-    @staticmethod
-    def _key(name: str, labels: dict) -> str:
-        if not labels:
-            return name
-        inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
-        return f"{name}{{{inner}}}"
-
-    def inc(self, name: str, by: float = 1, **labels) -> None:
-        key = self._key(name, labels)
-        with self._lock:
-            self._counters[key] = self._counters.get(key, 0) + by
-
-    def counter(self, name: str, **labels) -> float:
-        with self._lock:
-            return self._counters.get(self._key(name, labels), 0)
-
-    def observe(self, name: str, value: float, **labels) -> None:
-        key = self._key(name, labels)
-        with self._lock:
-            hist = self._hists.get(key)
-            if hist is None:
-                hist = self._hists[key] = Histogram()
-        hist.observe(value)
-
-    def timed(self, name: str, **labels) -> "_Timer":
-        """``with metrics.timed("suite.dispatch", mode="train"): ...``
-        observes the block's wall-clock seconds."""
-        return _Timer(self, name, labels)
-
-    def snapshot(self) -> dict:
-        """JSON-able view: ``{"counters": {...}, "latency": {key:
-        {count, mean, p50, p99}}}``."""
-        with self._lock:
-            counters = dict(self._counters)
-            hists = {k: h.summary() for k, h in self._hists.items()}
-        return {"counters": counters, "latency": hists}
-
-
-class _Timer:
-    __slots__ = ("_metrics", "_name", "_labels", "_t0")
-
-    def __init__(self, metrics: Metrics, name: str, labels: dict):
-        self._metrics = metrics
-        self._name = name
-        self._labels = labels
-
-    def __enter__(self) -> "_Timer":
-        self._t0 = time.perf_counter()
-        return self
-
-    def __exit__(self, *exc) -> Optional[bool]:
-        self._metrics.observe(self._name,
-                              time.perf_counter() - self._t0,
-                              **self._labels)
-        return None
+__all__ = ["Histogram", "Metrics"]

@@ -12,6 +12,7 @@ Requests::
      "scenario": {...Scenario.to_dict()...}, "seeds": [0, 1],
      "options": {"num_updates": 200}}
     {"id": "s1", "verb": "stats"}
+    {"id": "m1", "verb": "metrics"}
     {"id": "d1", "verb": "shutdown"}
 
 Streamed responses for a ``run`` (all tagged with the request id)::
@@ -34,7 +35,7 @@ import numpy as np
 from ..scenario import Scenario
 
 MODES = ("analyze", "simulate", "train")
-VERBS = ("run", "stats", "shutdown")
+VERBS = ("run", "stats", "metrics", "shutdown")
 
 #: options accepted per mode (anything else is a structured error — an
 #: unknown knob silently ignored would poison bitwise reproducibility)

@@ -2,8 +2,9 @@
 
 Thread model (single-threaded jax use by construction):
 
-- one **reader thread per connection** parses JSON lines; ``stats`` and
-  ``shutdown`` are answered inline; valid ``run`` requests get an
+- one **reader thread per connection** parses JSON lines; ``stats``,
+  ``metrics`` and ``shutdown`` are answered inline; valid ``run``
+  requests get an
   ``accepted`` event and enter the admission queue.  Parse errors are
   structured ``error`` events — the connection (and server) keep going.
 - ONE **dispatcher thread** owns every jax call: it drains micro-batch
@@ -170,6 +171,11 @@ class Server:
                     tr.send({"id": msg.get("id"), "event": "result",
                              "value": self.stats()})
                     continue
+                if verb == "metrics":
+                    # Prometheus text exposition of the shared registry
+                    tr.send({"id": msg.get("id"), "event": "result",
+                             "value": self.metrics.exposition()})
+                    continue
                 if verb == "shutdown":
                     tr.send({"id": msg.get("id"), "event": "result",
                              "value": "draining"})
@@ -264,7 +270,8 @@ class Server:
                 "queued": self.admission.qsize(),
                 "response_cache_size": len(self.executor._responses),
                 "counters": snap["counters"],
-                "latency": snap["latency"]}
+                "latency": snap["latency"],
+                "drift": dict(self.executor.drift)}
 
 
 def run_stdio_server() -> None:

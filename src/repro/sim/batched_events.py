@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from ..core import events
 from ..core.buzen import NetworkParams
 from ..core.events import EventStats, finalize_stats
+from ..obs.rings import event_ring_append, event_ring_init
 from .backend import resolve_backend
 
 
@@ -50,7 +51,8 @@ def stack_lanes(trees):
 
 
 def _make_pallas_fn(num_updates: int, warmup: int, distribution: str,
-                    m_max: int, interpret: Optional[bool]):
+                    m_max: int, interpret: Optional[bool],
+                    trace_events: int = 0):
     def fn(lane_params, m_vec, keys, power):
         mult = 4 if lane_params.mu_cs is not None else 3
         num_events = mult * (num_updates + warmup) + mult * m_max + 8
@@ -58,42 +60,66 @@ def _make_pallas_fn(num_updates: int, warmup: int, distribution: str,
         st = jax.vmap(lambda prm, m, key: events.init_state(
             prm, m, key, m_max=m_max, distribution=distribution,
             warmup=warmup, cap=cap))(lane_params, m_vec, keys)
+        n = lane_params.p.shape[-1]
+        L = m_vec.shape[0]
+        ring = jax.vmap(lambda _: event_ring_init(int(trace_events)))(
+            jnp.arange(L))
 
-        def body(st, _):
+        def body(carry, _):
             from ..kernels.events import step_event_pallas
 
-            st, _ = step_event_pallas(lane_params, st,
-                                      distribution=distribution,
-                                      power=power, interpret=interpret)
-            return st, None
+            st, ring = carry
+            st2, out = step_event_pallas(lane_params, st,
+                                         distribution=distribution,
+                                         power=power, interpret=interpret)
+            if trace_events:
+                # ring appends read the pre/post states, never feed back:
+                # traced == untraced bitwise (tests/test_obs.py)
+                def app(rg, pre, post, o):
+                    ph = pre.phase[o.slot]
+                    return event_ring_append(
+                        rg, time=o.time,
+                        station=events._station_index(ph, o.client, n),
+                        station_to=events._station_index(
+                            post.phase[o.slot], post.client[o.slot], n),
+                        kind=ph, slot=o.slot, client=o.client,
+                        delay=o.delay, update=o.is_update)
 
-        st, _ = jax.lax.scan(body, st, None, length=num_events)
-        return jax.vmap(finalize_stats)(st)
+                ring = jax.vmap(app)(ring, st, st2, out)
+            return (st2, ring), None
+
+        (st, ring), _ = jax.lax.scan(body, (st, ring), None,
+                                     length=num_events)
+        stats = jax.vmap(finalize_stats)(st)
+        return (stats, ring) if trace_events else stats
 
     return jax.jit(fn)
 
 
 def build_lanes_fn(backend: str, num_updates: int, warmup: int,
                    distribution: str, m_max: int, has_power: bool,
-                   interpret: Optional[bool] = None):
+                   interpret: Optional[bool] = None, trace_events: int = 0):
     """The compiled lane-sweep program for one static signature.
 
     Returns ``fn(lane_params, m_vec, keys, power) -> EventStats`` with a
     leading lane axis on every field; ``power`` is ``None`` when
     ``has_power`` is false, else a lane-stacked ``PowerProfile``.
+    ``trace_events > 0`` selects the traced program variant: the return
+    becomes ``(EventStats, EventRing)`` (per-lane rings of that
+    capacity), with statistics bitwise equal to the untraced program.
     Programs are memoized per signature — repeated sweeps (and every
     :func:`simulate_stats_lanes` call) reuse the compiled jit entry
     instead of retracing a fresh closure.
     """
     return _build_lanes_fn(resolve_backend(backend), int(num_updates),
                            int(warmup), distribution, int(m_max),
-                           bool(has_power), interpret)
+                           bool(has_power), interpret, int(trace_events))
 
 
 @functools.lru_cache(maxsize=None)
 def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
                     m_max: int, has_power: bool,
-                    interpret: Optional[bool]):
+                    interpret: Optional[bool], trace_events: int = 0):
     if backend == "reference":
         def fn(lane_params, m_vec, keys, power):
             outs = []
@@ -101,21 +127,45 @@ def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
                 prm = jax.tree_util.tree_map(lambda x: x[i], lane_params)
                 pw = (None if power is None
                       else jax.tree_util.tree_map(lambda x: x[i], power))
-                outs.append(events._simulate_stats(
-                    prm, m_vec[i], keys[i], nu, wu, distribution, m_max, pw))
+                if trace_events:
+                    outs.append(events._simulate_stats_traced(
+                        prm, m_vec[i], keys[i], nu, wu, distribution, m_max,
+                        pw, trace_events))
+                else:
+                    outs.append(events._simulate_stats(
+                        prm, m_vec[i], keys[i], nu, wu, distribution, m_max,
+                        pw))
             return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
         return fn
 
     if backend == "pallas":
-        return _make_pallas_fn(nu, wu, distribution, m_max, interpret)
+        return _make_pallas_fn(nu, wu, distribution, m_max, interpret,
+                               trace_events)
 
     if backend == "sharded":
         from .sharded import build_sharded_lanes_fn
 
-        return build_sharded_lanes_fn(nu, wu, distribution, m_max, has_power)
+        return build_sharded_lanes_fn(nu, wu, distribution, m_max, has_power,
+                                      trace_events)
 
     # "batched": one jitted vmap of the single-lane scan
+    if trace_events:
+        def one_traced(prm, m, key, power):
+            return events._simulate_stats_traced(
+                prm, m, key, nu, wu, distribution, m_max, power,
+                trace_events)
+
+        if has_power:
+            return jax.jit(jax.vmap(one_traced))
+
+        # same planner-program name as the untraced variant: the compile
+        # log and the tracecheck budgets see one "lanes" family
+        def lanes(prm, m, key, _pw):
+            return one_traced(prm, m, key, None)
+
+        return jax.jit(jax.vmap(lanes, in_axes=(0, 0, 0, None)))
+
     def one(prm, m, key, power):
         return events._simulate_stats(prm, m, key, nu, wu, distribution,
                                       m_max, power)
@@ -133,32 +183,40 @@ def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
 
 
 def build_class_lanes_fn(backend: str, num_updates: int, warmup: int,
-                         distribution: str, m_max: int, has_power: bool):
+                         distribution: str, m_max: int, has_power: bool,
+                         trace_events: int = 0):
     """The compiled class-lane sweep program for one static signature.
 
     Like :func:`build_lanes_fn` but each lane is a class-aggregated network
     (``repro.core.buzen.ClassParams``) run through the O(#classes) engine
     ``events._simulate_stats_classes`` — per-lane state scales with the
     number of classes, not the population, so lanes with n = 10^5-10^6
-    members fit on device.  No pallas kernel exists for the class engine;
-    ``"pallas"`` raises.
+    members fit on device.  ``trace_events > 0`` selects the traced
+    variant returning ``(stats, ring)``.  No pallas kernel exists for the
+    class engine; ``"pallas"`` raises.
     """
     return _build_class_lanes_fn(resolve_backend(backend), int(num_updates),
                                  int(warmup), distribution, int(m_max),
-                                 bool(has_power))
+                                 bool(has_power), int(trace_events))
 
 
 @functools.lru_cache(maxsize=None)
 def _build_class_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
-                          m_max: int, has_power: bool):
+                          m_max: int, has_power: bool, trace_events: int = 0):
     if backend == "pallas":
         raise ValueError(
             "the class-aggregated event engine has no pallas kernel; pin "
             "backend='batched', 'reference' or 'sharded' for class lanes")
 
-    def one(cls_, m, key, power):
-        return events._simulate_stats_classes(cls_, m, key, nu, wu,
-                                              distribution, m_max, power)
+    if trace_events:
+        def one(cls_, m, key, power):
+            return events._simulate_stats_classes_traced(
+                cls_, m, key, nu, wu, distribution, m_max, power,
+                trace_events)
+    else:
+        def one(cls_, m, key, power):
+            return events._simulate_stats_classes(cls_, m, key, nu, wu,
+                                                  distribution, m_max, power)
 
     if backend == "reference":
         def fn(lane_classes, m_vec, keys, power):
@@ -176,7 +234,7 @@ def _build_class_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
         from .sharded import build_sharded_class_lanes_fn
 
         return build_sharded_class_lanes_fn(nu, wu, distribution, m_max,
-                                            has_power)
+                                            has_power, trace_events)
 
     # "batched": one jitted vmap of the single-lane class scan
     if has_power:
@@ -194,7 +252,8 @@ def simulate_stats_lanes(params, ms, num_updates: int, *, warmup: int = 0,
                          distribution: str = "exponential", power=None,
                          m_max: Optional[int] = None,
                          backend: Optional[str] = None,
-                         interpret: Optional[bool] = None) -> EventStats:
+                         interpret: Optional[bool] = None,
+                         trace_events: int = 0) -> EventStats:
     """Stationary statistics for ``L`` lanes through the selected backend.
 
     ``params`` is a list of per-lane :class:`NetworkParams` (or one
@@ -202,8 +261,10 @@ def simulate_stats_lanes(params, ms, num_updates: int, *, warmup: int = 0,
     ``keys``/``seeds`` the per-lane PRNG streams (default
     ``PRNGKey(0..L-1)``); ``power`` ``None``, one shared profile, or a
     per-lane list.  Returns :class:`EventStats` with a leading ``[L]``
-    lane axis.  Backends agree bitwise on alike lanes ("reference" vs
-    "batched") — see the module docstring.
+    lane axis — or ``(EventStats, EventRing)`` when ``trace_events > 0``
+    enables the telemetry ring (statistics bitwise unchanged).  Backends
+    agree bitwise on alike lanes ("reference" vs "batched") — see the
+    module docstring.
     """
     from ..scenario.laws import get_law
 
@@ -233,5 +294,6 @@ def simulate_stats_lanes(params, ms, num_updates: int, *, warmup: int = 0,
                 lambda x: jnp.broadcast_to(jnp.asarray(x), (L,) + jnp.asarray(x).shape),
                 power)
     fn = build_lanes_fn(backend, num_updates, warmup, distribution,
-                        int(m_max), power is not None, interpret=interpret)
+                        int(m_max), power is not None, interpret=interpret,
+                        trace_events=trace_events)
     return fn(lane_params, m_vec, keys, power)
