@@ -16,7 +16,12 @@ Fidelity columns per row: relative throughput error vs the closed form
 (Prop. 4) and relative staleness-identity error (Eq. 7:
 ``sum_i p_i E0[R_i] = m - 1``), both within the tolerances documented in
 ``tests/test_events.py`` at the default window (600 updates after a
-400-update warmup).  A final row reruns the sweep through
+400-update warmup).  A megastep chunk sweep (E in
+``CHUNK_SWEEP``) times the batched backend retiring E events per scan
+step at a low lane count (vmapping many lanes already amortizes the
+per-step dispatch the megastep targets) — bitwise-equal trajectories
+(``tests/test_megastep.py``), so the rows are pure dispatch-amortization
+numbers, guarded by ``MAX_CHUNK_SLOWDOWN``.  A final row reruns the sweep through
 ``ScenarioSuite`` to record the suite-level result cache
 (``cache_hits``/``programs``).
 """
@@ -36,6 +41,13 @@ from .scenarios import events_scale_scenario, record
 
 DEFAULT_BACKENDS = ("reference", "batched", "pallas")
 
+#: megastep sizes for the chunk-sweep rows (1 == the single-step baseline)
+CHUNK_SWEEP = (1, 8, 32)
+#: regression guard: a megastep program must never land slower than this
+#: factor of the single-step baseline at smoke scale (it exists to catch a
+#: chunked path that stopped fusing, not to pin the speedup)
+MAX_CHUNK_SLOWDOWN = 1.2
+
 
 def _fidelity(params, m, stats):
     p = np.asarray(params.p)
@@ -50,7 +62,8 @@ def _fidelity(params, m, stats):
 
 def run(scale: int = 1, m: int = 132, lanes: int = 6,
         num_updates: int = 600, warmup: int = 400,
-        backends=DEFAULT_BACKENDS, pallas_lanes: int = 2) -> list[str]:
+        backends=DEFAULT_BACKENDS, pallas_lanes: int = 2,
+        chunk_lanes: int = 2) -> list[str]:
     out = []
     # canonical order: reference first, so the batched speedup and pallas
     # bitwise comparison columns exist regardless of how --backends was
@@ -97,6 +110,44 @@ def run(scale: int = 1, m: int = 132, lanes: int = 6,
                     for f in st._fields)
                 derived += f"_bitwise_vs_reference={bitwise}"
         out.append(row(f"events_scale_{backend}", us, derived))
+
+    # -- megastep chunk sweep (batched backend): E events per scan step,
+    # same trajectories bitwise (tests/test_megastep.py), so the delta is
+    # pure per-step dispatch amortization.  The guard fails the bench run
+    # (and CI's smoke job) if any chunked program regresses past
+    # MAX_CHUNK_SLOWDOWN x single-step.
+    chunk_us = {}
+    for chunk in CHUNK_SWEEP:
+        def go_chunk(E=chunk):
+            st = simulate_stats_lanes([params] * chunk_lanes,
+                                      [m] * chunk_lanes,
+                                      num_updates, warmup=warmup, m_max=m,
+                                      backend="batched",
+                                      seeds=range(chunk_lanes), chunk=E)
+            jax.block_until_ready(st.throughput)
+            return st
+
+        go_chunk()  # compile
+        best = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            go_chunk()
+            us = (time.perf_counter() - t0) * 1e6
+            best = us if best is None else min(best, us)
+        chunk_us[chunk] = best
+        derived = (f"n={n}_m={m}_lanes={chunk_lanes}_updates={num_updates}"
+                   f"_backend=batched")
+        if chunk != 1:
+            derived += (f"_speedup_vs_single={chunk_us[1] / best:.2f}x"
+                        f";guard={MAX_CHUNK_SLOWDOWN:.1f}")
+        out.append(row(f"events_scale_chunk_E{chunk}", best, derived))
+    worst = max(us / chunk_us[1] for E, us in chunk_us.items() if E != 1)
+    if worst > MAX_CHUNK_SLOWDOWN:
+        raise AssertionError(
+            f"megastep wall-clock {worst:.2f}x the single-step baseline "
+            f"exceeds the {MAX_CHUNK_SLOWDOWN:.1f}x guard — the chunked "
+            f"scan body likely stopped fusing (or the block draws went "
+            f"sequential on a unit-factorized law)")
 
     # the loop-invariant routing-CDF hoist: "before" rebuilds the O(n)
     # sequential seqcumsum inside every scan step (route_prefix=None),

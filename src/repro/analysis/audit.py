@@ -492,6 +492,37 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
                 p, s, distribution="exponential", power=None,
                 interpret=True)[0])(prm, st)
 
+    def suite_simulate_batched_megastep():
+        from ..sim.batched_events import build_lanes_fn
+
+        fn = build_lanes_fn("batched", 6, 2, "exponential", m_max, False,
+                            chunk=2)
+        prm, m_vec, keys = _sim_args()
+        return jax.make_jaxpr(lambda p, m, k: fn(p, m, k, None))(
+            prm, m_vec, keys)
+
+    def suite_simulate_pallas_megastep():
+        from ..sim.batched_events import build_lanes_fn
+
+        fn = build_lanes_fn("pallas", 6, 2, "exponential", m_max, False,
+                            interpret=True, chunk=2)
+        prm, m_vec, keys = _sim_args()
+        return jax.make_jaxpr(lambda p, m, k: fn(p, m, k, None))(
+            prm, m_vec, keys)
+
+    def kernel_events_megastep():
+        from ..core import events
+        from ..kernels.events import megastep_event_pallas
+
+        prm, m_vec, keys = _sim_args()
+        st = jax.vmap(lambda p, m, k: events.init_state(
+            p, m, k, m_max=m_max, distribution="exponential", warmup=0,
+            cap=8))(prm, m_vec, keys)
+        return jax.make_jaxpr(
+            lambda p, s: megastep_event_pallas(
+                p, s, chunk=2, distribution="exponential", power=None,
+                interpret=True)[0])(prm, st)
+
     return {
         "suite_analyze": (
             "ScenarioSuite analyze bucket: jit(vmap) of the padded closed "
@@ -507,6 +538,16 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
             "ScenarioSuite simulate bucket, pallas backend (interpret): "
             "lock-step lane scan around the event kernel",
             suite_simulate_pallas),
+        "suite_simulate_batched_megastep": (
+            "ScenarioSuite simulate bucket, batched backend, chunk=2 "
+            "megastep: block-drawn randomness + fused multi-event scan "
+            "body (bitwise equal to the single-step program)",
+            suite_simulate_batched_megastep),
+        "suite_simulate_pallas_megastep": (
+            "ScenarioSuite simulate bucket, pallas backend (interpret), "
+            "chunk=2 megastep: one kernel launch retires up to 2 events "
+            "against the resident finish-clock table",
+            suite_simulate_pallas_megastep),
         "suite_analyze_classes": (
             "ScenarioSuite analyze bucket, class networks: jit(vmap) of "
             "the O(#classes) class closed forms", suite_analyze_classes),
@@ -540,6 +581,10 @@ def resident_programs() -> dict[str, tuple[str, Callable]]:
         "kernel_events": (
             "Pallas event-step kernel, interpret path "
             "(kernels.events.step_event_pallas)", kernel_events),
+        "kernel_events_megastep": (
+            "Pallas megastep event kernel, interpret path "
+            "(kernels.events.megastep_event_pallas, chunk=2)",
+            kernel_events_megastep),
     }
 
 

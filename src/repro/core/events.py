@@ -176,6 +176,101 @@ def _route_client(p: jax.Array, key: jax.Array, n_act,
     return jnp.minimum(idx, n_act - 1).astype(jnp.int32)
 
 
+class EventBlocks(NamedTuple):
+    """Pre-drawn randomness for a chunk of consecutive events (megastep).
+
+    Every leaf carries a leading ``[chunk]`` axis; one row resolves one
+    :func:`step_event_block` call.  The factorization follows what is
+    state-independent in the per-event stream: the routing draw, the
+    downlink service (its rate is keyed by the routed client, known before
+    the argmin) and the CS service resolve fully up front; the uplink and
+    computation services depend on the *completing* client's rate, so they
+    are stored as the law's unit parts (``TimingLaw.unit_draw``) and
+    rate-applied inside the step — or, for laws without a unit
+    factorization, as the raw subkeys (``device_draw`` runs in-step,
+    bitwise by construction).
+    """
+
+    c_new: jax.Array       # routed client (client engine) / class (class)
+    member: jax.Array      # routed member within the class; () otherwise
+    svc_down: jax.Array    # downlink service of the re-dispatched task
+    up: jax.Array          # uplink unit part (or raw subkey)
+    comp: jax.Array        # computation unit part (or raw subkey)
+    svc_cs: jax.Array      # CS service draw; () when the network has no CS
+
+
+def _apply_unit(u, rate, distribution: str):
+    """Resolve a stored uplink/computation entry against the completing
+    client's rate — ``unit_apply`` replays ``device_draw``'s exact op
+    order (bitwise), the raw-subkey fallback *is* ``device_draw``."""
+    law = get_law(distribution)
+    if law.unit_apply is not None:
+        return law.unit_apply(u, rate)
+    return law.device_draw(u, rate)
+
+
+def draw_event_blocks(params: NetworkParams, key: jax.Array, chunk: int, *,
+                      distribution: str = "exponential",
+                      route_prefix: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, EventBlocks]:
+    """Draw the randomness of ``chunk`` consecutive events up front.
+
+    A tiny-carry scan (the carry is just the PRNG key) replays
+    :func:`step_event`'s 6-way split per event; the draws themselves then
+    resolve on the collected subkeys — the exact primitives on the exact
+    keys of ``chunk`` single steps.  Laws with a unit factorization draw
+    **vmapped** over the chunk axis (PRNG bits are integer-exact per key
+    and the uniform→sample conversions compile bitwise elementwise);
+    laws without one (e.g. lognormal, whose erf_inv/exp chain is not
+    fusion-stable across a materialization boundary) stay on a strictly
+    sequential scalar-shape draw scan and store raw subkeys for the
+    rate-dependent services.  Returns ``(chain, blocks)``: ``chain[i]``
+    is the carried key after ``i + 1`` events (the partial-chunk resume
+    point) and ``blocks`` one :class:`EventBlocks` row per event.
+    """
+    law = get_law(distribution)
+    has_cs = params.mu_cs is not None
+
+    if law.unit_draw is None:
+        def body(k, _):
+            k2, k_up, k_cli, k_svc, k_comp, k_cs = jax.random.split(k, 6)
+            c_new = _route_client(params.p, k_cli, params.active_count,
+                                  route_prefix)
+            svc_down = _draw(k_svc, params.mu_d[c_new], distribution)
+            svc_cs = (_draw(k_cs, params.mu_cs, distribution)
+                      if has_cs else ())
+            blk = EventBlocks(c_new=c_new, member=(), svc_down=svc_down,
+                              up=k_up, comp=k_comp, svc_cs=svc_cs)
+            return k2, (k2, blk)
+
+        _, (chain, blks) = jax.lax.scan(body, key, None, length=chunk)
+        return chain, blks
+
+    def split6(k, _):
+        ks = jax.random.split(k, 6)
+        return ks[0], (ks[0], ks[1], ks[2], ks[3], ks[4], ks[5])
+
+    _, (chain, k_up, k_cli, k_svc, k_comp, k_cs) = jax.lax.scan(
+        split6, key, None, length=chunk)
+    c_new = jax.vmap(lambda k: _route_client(
+        params.p, k, params.active_count, route_prefix))(k_cli)
+    svc_down = jax.vmap(
+        lambda k, r: _draw(k, r, distribution))(k_svc, params.mu_d[c_new])
+    up = jax.vmap(law.unit_draw)(k_up)
+    comp = jax.vmap(law.unit_draw)(k_comp)
+    svc_cs = (jax.vmap(lambda k: _draw(k, params.mu_cs, distribution))(k_cs)
+              if has_cs else ())
+    return chain, EventBlocks(c_new=c_new, member=(), svc_down=svc_down,
+                              up=up, comp=comp, svc_cs=svc_cs)
+
+
+def _tree_select(pred, on_true, on_false):
+    """Leaf-wise ``where`` — the masked-step select of the megastep scans
+    (a scalar predicate; identical trees selected leaf-by-leaf)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
 def init_state(params: NetworkParams, m, key: jax.Array, *,
                m_max: Optional[int] = None,
                distribution: str = "exponential",
@@ -273,6 +368,43 @@ def step_event(params: NetworkParams, state: EventState, *,
     optionally supplies the precomputed routing CDF ``seqcumsum(params.p)``
     (loop-invariant across a scan — see :func:`_route_client`); ``None``
     recomputes it in-body, bitwise the same.
+
+    Structured as a one-event :class:`EventBlocks` draw followed by the
+    randomness-free table transition :func:`step_event_block` — the same
+    primitives on the same keys as the historical inline body (values are
+    position-independent under jit), so trajectories are bitwise
+    unchanged; the megastep engine reuses the block step with ``chunk``
+    pre-drawn rows.
+    """
+    law = get_law(distribution)
+    key, k_up, k_disp_cli, k_disp_svc, k_comp, k_cs = jax.random.split(
+        state.key, 6)
+    c_new = _route_client(params.p, k_disp_cli, params.active_count,
+                          route_prefix)
+    svc_down = _draw(k_disp_svc, params.mu_d[c_new], distribution)
+    if law.unit_draw is not None:
+        up, comp = law.unit_draw(k_up), law.unit_draw(k_comp)
+    else:
+        up, comp = k_up, k_comp
+    svc_cs = (_draw(k_cs, params.mu_cs, distribution)
+              if params.mu_cs is not None else ())
+    blk = EventBlocks(c_new=c_new, member=(), svc_down=svc_down,
+                      up=up, comp=comp, svc_cs=svc_cs)
+    return step_event_block(params, state._replace(key=key), blk,
+                            distribution=distribution, power=power)
+
+
+def step_event_block(params: NetworkParams, state: EventState,
+                     blk: EventBlocks, *,
+                     distribution: str = "exponential",
+                     power=None) -> tuple[EventState, EventOut]:
+    """One event transition with its randomness pre-resolved in ``blk``.
+
+    The randomness-free core of :func:`step_event`: consumes no PRNG key
+    (``state.key`` passes through untouched — megastep callers advance it
+    from the :func:`_chunk_keys` chain) and reads the routing / service
+    draws from one :class:`EventBlocks` row, applying the law's unit
+    parts against the completing client's rates in-step.
     """
     n = params.n
     m_max = state.phase.shape[0]
@@ -280,7 +412,6 @@ def step_event(params: NetworkParams, state: EventState, *,
 
     j = jnp.argmin(state.finish)
     t_new = state.finish[j]
-    dt = t_new - state.t
 
     # -- statistics over the sojourn ending at this event (pre-event state) --
     # the occupancy vector / busy indicators are O(1)-update carries of the
@@ -307,8 +438,6 @@ def step_event(params: NetworkParams, state: EventState, *,
     # -- the event itself ---------------------------------------------------
     c = state.client[j]
     ph = state.phase[j]
-    key, k_up, k_disp_cli, k_disp_svc, k_comp, k_cs = jax.random.split(
-        state.key, 6)
 
     is_down = ph == DOWN
     is_comp = ph == COMP_SERV
@@ -320,10 +449,9 @@ def step_event(params: NetworkParams, state: EventState, *,
     new_round = state.round + jnp.where(is_update, 1, 0).astype(jnp.int32)
 
     # update -> immediate re-dispatch of a fresh task into the freed slot
-    c_new = _route_client(params.p, k_disp_cli, params.active_count,
-                          route_prefix)
-    svc_up = _draw(k_up, params.mu_u[c], distribution)
-    svc_down = _draw(k_disp_svc, params.mu_d[c_new], distribution)
+    c_new = blk.c_new
+    svc_up = _apply_unit(blk.up, params.mu_u[c], distribution)
+    svc_down = blk.svc_down
 
     phase_j = jnp.where(
         is_down, COMP_WAIT,
@@ -352,7 +480,7 @@ def step_event(params: NetworkParams, state: EventState, *,
     waiting_c = (phase == COMP_WAIT) & (client == c)
     pick = jnp.argmin(jnp.where(waiting_c, seq, _BIG_SEQ))
     do_comp = promo_comp & ~serving_c & jnp.any(waiting_c)
-    svc_c = _draw(k_comp, params.mu_c[c], distribution)
+    svc_c = _apply_unit(blk.comp, params.mu_c[c], distribution)
     onep = (jnp.arange(m_max) == pick) & do_comp
     phase = jnp.where(onep, COMP_SERV, phase)
     finish = jnp.where(onep, t_new + svc_c, finish)
@@ -363,10 +491,9 @@ def step_event(params: NetworkParams, state: EventState, *,
         cs_waiting = phase == CS_WAIT
         pick_cs = jnp.argmin(jnp.where(cs_waiting, seq, _BIG_SEQ))
         do_cs = promo_cs & ~jnp.any(phase == CS_SERV) & jnp.any(cs_waiting)
-        svc_cs = _draw(k_cs, params.mu_cs, distribution)
         onec = (jnp.arange(m_max) == pick_cs) & do_cs
         phase = jnp.where(onec, CS_SERV, phase)
-        finish = jnp.where(onec, t_new + svc_cs, finish)
+        finish = jnp.where(onec, t_new + blk.svc_cs, finish)
 
     # -- O(1) maintenance of the occupancy carries: slot j moved stations;
     # FIFO promotions stay within theirs (WAIT and SERV share a station),
@@ -393,7 +520,7 @@ def step_event(params: NetworkParams, state: EventState, *,
     t1 = jnp.where(is_update & (new_round == state.cap), t_new, state.t1)
 
     new_state = EventState(
-        t=t_new, key=key, round=new_round, seq_ctr=seq_ctr,
+        t=t_new, key=state.key, round=new_round, seq_ctr=seq_ctr,
         client=client, phase=phase, finish=finish, seq=seq,
         disp_round=disp_round,
         warmup=state.warmup, cap=state.cap, t_cap=state.t_cap,
@@ -413,8 +540,8 @@ def next_update(params: NetworkParams, state: EventState, *,
                 max_steps: Optional[int] = None,
                 backend: Optional[str] = None,
                 interpret: Optional[bool] = None,
-                route_prefix: Optional[jax.Array] = None
-                ) -> tuple[EventState, UpdateOut]:
+                route_prefix: Optional[jax.Array] = None,
+                chunk: int = 1) -> tuple[EventState, UpdateOut]:
     """Run events until the next model update (uplink/CS completion).
 
     A ``lax.while_loop`` bounded by ``max_steps`` (default ``3 m_max + 8``,
@@ -429,10 +556,19 @@ def next_update(params: NetworkParams, state: EventState, *,
     ``interpret`` overrides — while ``"reference"``/``"batched"`` share
     the single-lane jnp step (lane batching happens in the caller's
     ``vmap``).
+
+    ``chunk > 1`` (static) selects the megastep body: each while-loop
+    iteration pre-draws a block of ``chunk`` events and retires them in an
+    inner masked scan (under ``"pallas"``, one kernel launch with an
+    in-VMEM early-stop loop) — events past the update, or past the
+    ``max_steps`` bound, are discarded and the key chain advances by
+    exactly the events consumed, so the returned update (and the state it
+    leaves behind) is **bitwise** the single-step result.
     """
     from ..sim.backend import resolve_backend  # dependency-free
 
-    if resolve_backend(backend) == "pallas":
+    use_pallas = resolve_backend(backend) == "pallas"
+    if use_pallas:
         from ..kernels.events import step_event_pallas1
 
         # the kernel computes the routing CDF in-register; a host-hoisted
@@ -454,11 +590,54 @@ def next_update(params: NetworkParams, state: EventState, *,
         _, out, steps = carry
         return (~out.is_update) & (steps < max_steps)
 
-    def body(carry):
-        st, _, steps = carry
-        st, out = step_fn(params, st, distribution=distribution,
-                          power=power)
-        return st, out, steps + 1
+    if chunk == 1:
+        def body(carry):
+            st, _, steps = carry
+            st, out = step_fn(params, st, distribution=distribution,
+                              power=power)
+            return st, out, steps + 1
+    elif use_pallas:
+        from ..kernels.events import megastep_event_pallas1
+
+        def body(carry):
+            st, out, steps = carry
+            st, aux = megastep_event_pallas1(
+                params, st, chunk=chunk, rem=max_steps - steps,
+                distribution=distribution, power=power,
+                interpret=interpret, stop_on_update=True)
+            outs = EventOut(is_update=aux.update, time=aux.time,
+                            slot=aux.slot, client=aux.client,
+                            delay=aux.delay)
+
+            def sel(o, x):
+                keep, o2 = x
+                return _tree_select(keep, o2, o), None
+
+            out, _ = jax.lax.scan(sel, out, (aux.keep, outs))
+            return st, out, steps + aux.taken
+    else:
+        def body(carry):
+            st, out, steps = carry
+            chain, blks = draw_event_blocks(
+                params, st.key, chunk, distribution=distribution,
+                route_prefix=route_prefix)
+
+            def inner(c2, blk):
+                st, out, taken = c2
+                st2, out2 = step_event_block(
+                    params, st, blk, distribution=distribution, power=power)
+                take = (~out.is_update) & (steps + taken < max_steps)
+                return (_tree_select(take, st2, st),
+                        _tree_select(take, out2, out),
+                        taken + take.astype(jnp.int32)), None
+
+            (st, out, taken), _ = jax.lax.scan(
+                inner, (st, out, jnp.zeros((), jnp.int32)), blks)
+            # key chain advances by exactly the events consumed (see
+            # _chunk_keys); an all-masked chunk leaves the key untouched
+            k = jnp.clip(taken, 1, chunk)
+            st = st._replace(key=jnp.where(taken > 0, chain[k - 1], st.key))
+            return st, out, steps + taken
 
     st, out, steps = jax.lax.while_loop(
         cond, body, (state, dummy, jnp.zeros((), jnp.int32)))
@@ -513,10 +692,54 @@ def unpad_stats(stats: EventStats, n: int) -> EventStats:
              occ[..., 2 * nm:2 * nm + n], occ[..., 3 * nm:]], axis=-1))
 
 
+def _scan_chunked(step_block, draw_blocks, st, num_events: int, chunk: int,
+                  ring=None, append=None):
+    """Advance ``num_events`` events in megasteps of ``chunk``.
+
+    The outer scan runs ``ceil(num_events / chunk)`` iterations; each
+    draws one randomness block from the carried key and retires up to
+    ``chunk`` events in a rolled inner scan.  Events past ``num_events``
+    (the masked partial final chunk) are computed and discarded via
+    :func:`_tree_select`, and the carried key advances by exactly the
+    *real* event count from the :func:`_chunk_keys` chain — so the final
+    state (statistics windows included: ``warmup``/``cap``/``t_cap`` land
+    on exact event boundaries) is **bitwise** the single-step scan's.
+
+    ``append(ring, pre, post, out, keep)`` optionally threads an obs ring
+    through the chunked carry; masked events append with ``valid=False``
+    (a static no-op on the ring), keeping tracing bitwise non-invasive.
+    """
+    n_chunks = -(-num_events // chunk)
+    offsets = jnp.arange(chunk)
+
+    def outer(carry, _):
+        st, rem, ring = carry
+        chain, blks = draw_blocks(st.key)
+
+        def inner(c2, xs):
+            st, ring = c2
+            blk, keep = xs
+            st2, out = step_block(st, blk)
+            if append is not None:
+                ring = append(ring, st, st2, out, keep)
+            return (_tree_select(keep, st2, st), ring), None
+
+        (st, ring), _ = jax.lax.scan(inner, (st, ring),
+                                     (blks, rem > offsets))
+        k = jnp.clip(jnp.minimum(rem, chunk), 1, chunk)
+        st = st._replace(key=jnp.where(rem > 0, chain[k - 1], st.key))
+        return (st, rem - chunk, ring), None
+
+    (st, _, ring), _ = jax.lax.scan(
+        outer, (st, jnp.asarray(num_events, jnp.int32), ring), None,
+        length=n_chunks)
+    return st, ring
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "num_updates", "warmup", "distribution", "m_max"))
+    "num_updates", "warmup", "distribution", "m_max", "chunk"))
 def _simulate_stats(params, m, key, num_updates, warmup, distribution,
-                    m_max, power):
+                    m_max, power, chunk=1):
     # every completed task cycle is down -> comp -> up (-> cs): exactly 3 (4)
     # events per update, plus at most one incomplete cycle per task
     mult = 4 if params.mu_cs is not None else 3
@@ -529,19 +752,33 @@ def _simulate_stats(params, m, key, num_updates, warmup, distribution,
     # event (same seqcumsum of the same p — trajectories bitwise unchanged)
     route_prefix = seqcumsum(params.p)
 
-    def body(st, _):
-        st, _ = step_event(params, st, distribution=distribution, power=power,
-                           route_prefix=route_prefix)
-        return st, None
+    if chunk == 1:
+        def body(st, _):
+            st, _ = step_event(params, st, distribution=distribution,
+                               power=power, route_prefix=route_prefix)
+            return st, None
 
-    st, _ = jax.lax.scan(body, st, None, length=num_events)
+        st, _ = jax.lax.scan(body, st, None, length=num_events)
+        return finalize_stats(st)
+
+    def draw(key):
+        return draw_event_blocks(params, key, chunk,
+                                 distribution=distribution,
+                                 route_prefix=route_prefix)
+
+    def step(st, blk):
+        return step_event_block(params, st, blk, distribution=distribution,
+                                power=power)
+
+    st, _ = _scan_chunked(step, draw, st, num_events, chunk)
     return finalize_stats(st)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_updates", "warmup", "distribution", "m_max", "trace_events"))
+    "num_updates", "warmup", "distribution", "m_max", "trace_events",
+    "chunk"))
 def _simulate_stats_traced(params, m, key, num_updates, warmup, distribution,
-                           m_max, power, trace_events):
+                           m_max, power, trace_events, chunk=1):
     """:func:`_simulate_stats` carrying an ``repro.obs`` event ring.
 
     A separate program on purpose: the untraced scan stays byte-for-byte
@@ -564,21 +801,46 @@ def _simulate_stats_traced(params, m, key, num_updates, warmup, distribution,
     n = params.n
     ring = event_ring_init(int(trace_events))
 
-    def body(carry, _):
-        st, ring = carry
-        st2, out = step_event(params, st, distribution=distribution,
-                              power=power, route_prefix=route_prefix)
-        ph = st.phase[out.slot]
-        ring = event_ring_append(
+    if chunk == 1:
+        def body(carry, _):
+            st, ring = carry
+            st2, out = step_event(params, st, distribution=distribution,
+                                  power=power, route_prefix=route_prefix)
+            ph = st.phase[out.slot]
+            ring = event_ring_append(
+                ring, time=out.time,
+                station=_station_index(ph, out.client, n),
+                station_to=_station_index(st2.phase[out.slot],
+                                          st2.client[out.slot], n),
+                kind=ph, slot=out.slot, client=out.client, delay=out.delay,
+                update=out.is_update)
+            return (st2, ring), None
+
+        (st, ring), _ = jax.lax.scan(body, (st, ring), None,
+                                     length=num_events)
+        return finalize_stats(st), ring
+
+    def draw(key):
+        return draw_event_blocks(params, key, chunk,
+                                 distribution=distribution,
+                                 route_prefix=route_prefix)
+
+    def step(st, blk):
+        return step_event_block(params, st, blk, distribution=distribution,
+                                power=power)
+
+    def append(ring, pre, post, out, keep):
+        ph = pre.phase[out.slot]
+        return event_ring_append(
             ring, time=out.time,
             station=_station_index(ph, out.client, n),
-            station_to=_station_index(st2.phase[out.slot],
-                                      st2.client[out.slot], n),
+            station_to=_station_index(post.phase[out.slot],
+                                      post.client[out.slot], n),
             kind=ph, slot=out.slot, client=out.client, delay=out.delay,
-            update=out.is_update)
-        return (st2, ring), None
+            update=out.is_update, valid=keep)
 
-    (st, ring), _ = jax.lax.scan(body, (st, ring), None, length=num_events)
+    st, ring = _scan_chunked(step, draw, st, num_events, chunk,
+                             ring=ring, append=append)
     return finalize_stats(st), ring
 
 
@@ -587,7 +849,8 @@ def simulate_stats(params: NetworkParams, m, num_updates: int, *,
                    seed: int = 0, distribution: str = "exponential",
                    power=None, m_max: Optional[int] = None,
                    backend: Optional[str] = None,
-                   interpret: Optional[bool] = None) -> EventStats:
+                   interpret: Optional[bool] = None,
+                   chunk: int = 1) -> EventStats:
     """Stationary statistics over ``num_updates`` rounds, fully on device.
 
     Mirrors :meth:`repro.core.simulator.AsyncNetworkSim.run`: statistics are
@@ -599,7 +862,10 @@ def simulate_stats(params: NetworkParams, m, num_updates: int, *,
     ``backend`` (default: the ``repro.sim`` process flag) picks the step
     implementation; multi-lane sweeps belong in
     :func:`repro.sim.simulate_stats_lanes`, where ``"batched"`` vs
-    ``"reference"`` actually differ.
+    ``"reference"`` actually differ.  ``chunk`` (static, default 1 ==
+    today's byte-identical programs) selects the megastep execution mode:
+    ``chunk`` events retire per scan iteration, bitwise-equal trajectories
+    (see :func:`_scan_chunked`).
     """
     from ..sim.backend import resolve_backend  # dependency-free
 
@@ -617,10 +883,10 @@ def simulate_stats(params: NetworkParams, m, num_updates: int, *,
             keys=key[None], distribution=distribution,
             power=None if power is None else jax.tree_util.tree_map(
                 lambda x: jnp.asarray(x)[None], power),
-            m_max=m_max, backend="pallas", interpret=interpret)
+            m_max=m_max, backend="pallas", interpret=interpret, chunk=chunk)
         return jax.tree_util.tree_map(lambda x: x[0], stats)
     return _simulate_stats(params, m, key, int(num_updates), int(warmup),
-                           distribution, m_max, power)
+                           distribution, m_max, power, int(chunk))
 
 
 # ---------------------------------------------------------------------------
@@ -689,6 +955,52 @@ def _route_class(mass: jax.Array, count: jax.Array, key: jax.Array,
     c = jnp.minimum(idx, c_last).astype(jnp.int32)
     mb = jax.random.randint(k_mem, (), 0, jnp.maximum(count[c], 1))
     return c, mb.astype(jnp.int32)
+
+
+def draw_class_event_blocks(classes, key: jax.Array, chunk: int, *,
+                            distribution: str = "exponential",
+                            route_prefix: Optional[jax.Array] = None
+                            ) -> tuple[jax.Array, EventBlocks]:
+    """Class-engine analogue of :func:`draw_event_blocks`: the routing
+    draw resolves a ``(class, member)`` pair per event, the downlink/CS
+    services resolve fully, uplink/computation store the law's unit parts
+    (or raw subkeys).  Same tiny-carry key chain, same per-law split
+    between vmapped block draws and the sequential scalar-shape fallback
+    — bitwise the single-step stream."""
+    law = get_law(distribution)
+    has_cs = classes.mu_cs is not None
+
+    if law.unit_draw is None:
+        def body(k, _):
+            k2, k_up, k_disp, k_svc, k_comp, k_cs = jax.random.split(k, 6)
+            c_new, mb_new = _route_class(classes.mass, classes.count, k_disp,
+                                         route_prefix)
+            svc_down = _draw(k_svc, classes.mu_d[c_new], distribution)
+            svc_cs = (_draw(k_cs, classes.mu_cs, distribution)
+                      if has_cs else ())
+            blk = EventBlocks(c_new=c_new, member=mb_new, svc_down=svc_down,
+                              up=k_up, comp=k_comp, svc_cs=svc_cs)
+            return k2, (k2, blk)
+
+        _, (chain, blks) = jax.lax.scan(body, key, None, length=chunk)
+        return chain, blks
+
+    def split6(k, _):
+        ks = jax.random.split(k, 6)
+        return ks[0], (ks[0], ks[1], ks[2], ks[3], ks[4], ks[5])
+
+    _, (chain, k_up, k_disp, k_svc, k_comp, k_cs) = jax.lax.scan(
+        split6, key, None, length=chunk)
+    c_new, mb_new = jax.vmap(lambda k: _route_class(
+        classes.mass, classes.count, k, route_prefix))(k_disp)
+    svc_down = jax.vmap(
+        lambda k, r: _draw(k, r, distribution))(k_svc, classes.mu_d[c_new])
+    up = jax.vmap(law.unit_draw)(k_up)
+    comp = jax.vmap(law.unit_draw)(k_comp)
+    svc_cs = (jax.vmap(lambda k: _draw(k, classes.mu_cs, distribution))(k_cs)
+              if has_cs else ())
+    return chain, EventBlocks(c_new=c_new, member=mb_new, svc_down=svc_down,
+                              up=up, comp=comp, svc_cs=svc_cs)
 
 
 def _class_station_counts(phase, cls, C):
@@ -782,7 +1094,34 @@ def step_class_event(classes, state: ClassEventState, *,
     the carried statistics collapse.  ``power`` (when given) holds
     per-class ``[C]`` arrays.  The emitted :class:`EventOut` reports the
     completed task's *class* in the ``client`` field.
+
+    Like :func:`step_event`, a one-event block draw over
+    :func:`step_class_event_block` — bitwise the historical inline body.
     """
+    law = get_law(distribution)
+    key, k_up, k_disp, k_disp_svc, k_comp, k_cs = jax.random.split(
+        state.key, 6)
+    c_new, mb_new = _route_class(classes.mass, classes.count, k_disp,
+                                 route_prefix)
+    svc_down = _draw(k_disp_svc, classes.mu_d[c_new], distribution)
+    if law.unit_draw is not None:
+        up, comp = law.unit_draw(k_up), law.unit_draw(k_comp)
+    else:
+        up, comp = k_up, k_comp
+    svc_cs = (_draw(k_cs, classes.mu_cs, distribution)
+              if classes.mu_cs is not None else ())
+    blk = EventBlocks(c_new=c_new, member=mb_new, svc_down=svc_down,
+                      up=up, comp=comp, svc_cs=svc_cs)
+    return step_class_event_block(classes, state._replace(key=key), blk,
+                                  distribution=distribution, power=power)
+
+
+def step_class_event_block(classes, state: ClassEventState,
+                           blk: EventBlocks, *,
+                           distribution: str = "exponential",
+                           power=None) -> tuple[ClassEventState, EventOut]:
+    """Class analogue of :func:`step_event_block`: one event with its
+    randomness pre-resolved (``state.key`` passes through untouched)."""
     C = classes.C
     m_max = state.phase.shape[0]
     has_cs = classes.mu_cs is not None
@@ -811,8 +1150,6 @@ def step_class_event(classes, state: ClassEventState, *,
     c = state.cls[j]
     mb = state.member[j]
     ph = state.phase[j]
-    key, k_up, k_disp, k_disp_svc, k_comp, k_cs = jax.random.split(
-        state.key, 6)
 
     is_down = ph == DOWN
     is_comp = ph == COMP_SERV
@@ -823,10 +1160,9 @@ def step_class_event(classes, state: ClassEventState, *,
     delay = state.round - state.disp_round[j]
     new_round = state.round + jnp.where(is_update, 1, 0).astype(jnp.int32)
 
-    c_new, mb_new = _route_class(classes.mass, classes.count, k_disp,
-                                 route_prefix)
-    svc_up = _draw(k_up, classes.mu_u[c], distribution)
-    svc_down = _draw(k_disp_svc, classes.mu_d[c_new], distribution)
+    c_new, mb_new = blk.c_new, blk.member
+    svc_up = _apply_unit(blk.up, classes.mu_u[c], distribution)
+    svc_down = blk.svc_down
 
     phase_j = jnp.where(
         is_down, COMP_WAIT,
@@ -856,7 +1192,7 @@ def step_class_event(classes, state: ClassEventState, *,
     waiting_m = (phase == COMP_WAIT) & mine
     pick = jnp.argmin(jnp.where(waiting_m, seq, _BIG_SEQ))
     do_comp = promo_comp & ~serving_m & jnp.any(waiting_m)
-    svc_c = _draw(k_comp, classes.mu_c[c], distribution)
+    svc_c = _apply_unit(blk.comp, classes.mu_c[c], distribution)
     onep = (jnp.arange(m_max) == pick) & do_comp
     phase = jnp.where(onep, COMP_SERV, phase)
     finish = jnp.where(onep, t_new + svc_c, finish)
@@ -866,10 +1202,9 @@ def step_class_event(classes, state: ClassEventState, *,
         cs_waiting = phase == CS_WAIT
         pick_cs = jnp.argmin(jnp.where(cs_waiting, seq, _BIG_SEQ))
         do_cs = promo_cs & ~jnp.any(phase == CS_SERV) & jnp.any(cs_waiting)
-        svc_cs = _draw(k_cs, classes.mu_cs, distribution)
         onec = (jnp.arange(m_max) == pick_cs) & do_cs
         phase = jnp.where(onec, CS_SERV, phase)
-        finish = jnp.where(onec, t_new + svc_cs, finish)
+        finish = jnp.where(onec, t_new + blk.svc_cs, finish)
 
     stations = jnp.arange(3 * C + 1)
     occ_new = (state.occ
@@ -892,7 +1227,7 @@ def step_class_event(classes, state: ClassEventState, *,
     t1 = jnp.where(is_update & (new_round == state.cap), t_new, state.t1)
 
     new_state = ClassEventState(
-        t=t_new, key=key, round=new_round, seq_ctr=seq_ctr,
+        t=t_new, key=state.key, round=new_round, seq_ctr=seq_ctr,
         cls=cls, member=member, phase=phase, finish=finish, seq=seq,
         disp_round=disp_round,
         warmup=state.warmup, cap=state.cap, t_cap=state.t_cap,
@@ -908,9 +1243,9 @@ def step_class_event(classes, state: ClassEventState, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_updates", "warmup", "distribution", "m_max"))
+    "num_updates", "warmup", "distribution", "m_max", "chunk"))
 def _simulate_stats_classes(classes, m, key, num_updates, warmup,
-                            distribution, m_max, power):
+                            distribution, m_max, power, chunk=1):
     mult = 4 if classes.mu_cs is not None else 3
     num_events = mult * (num_updates + warmup) + mult * m_max + 8
     cap = warmup + num_updates
@@ -919,19 +1254,34 @@ def _simulate_stats_classes(classes, m, key, num_updates, warmup,
     # hoisted loop-invariant routing CDF (see _simulate_stats)
     route_prefix = seqcumsum(classes.mass)
 
-    def body(st, _):
-        st, _ = step_class_event(classes, st, distribution=distribution,
-                                 power=power, route_prefix=route_prefix)
-        return st, None
+    if chunk == 1:
+        def body(st, _):
+            st, _ = step_class_event(classes, st, distribution=distribution,
+                                     power=power, route_prefix=route_prefix)
+            return st, None
 
-    st, _ = jax.lax.scan(body, st, None, length=num_events)
+        st, _ = jax.lax.scan(body, st, None, length=num_events)
+        return finalize_stats(st)
+
+    def draw(key):
+        return draw_class_event_blocks(classes, key, chunk,
+                                       distribution=distribution,
+                                       route_prefix=route_prefix)
+
+    def step(st, blk):
+        return step_class_event_block(classes, st, blk,
+                                      distribution=distribution, power=power)
+
+    st, _ = _scan_chunked(step, draw, st, num_events, chunk)
     return finalize_stats(st)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_updates", "warmup", "distribution", "m_max", "trace_events"))
+    "num_updates", "warmup", "distribution", "m_max", "trace_events",
+    "chunk"))
 def _simulate_stats_classes_traced(classes, m, key, num_updates, warmup,
-                                   distribution, m_max, power, trace_events):
+                                   distribution, m_max, power, trace_events,
+                                   chunk=1):
     """:func:`_simulate_stats_classes` carrying an event ring (the
     ``client`` column records the completed task's *class*; stations use
     the ``[3C+1]`` class layout).  Bitwise non-invasive, like
@@ -947,21 +1297,48 @@ def _simulate_stats_classes_traced(classes, m, key, num_updates, warmup,
     C = classes.C
     ring = event_ring_init(int(trace_events))
 
-    def body(carry, _):
-        st, ring = carry
-        st2, out = step_class_event(classes, st, distribution=distribution,
-                                    power=power, route_prefix=route_prefix)
-        ph = st.phase[out.slot]
-        ring = event_ring_append(
+    if chunk == 1:
+        def body(carry, _):
+            st, ring = carry
+            st2, out = step_class_event(classes, st,
+                                        distribution=distribution,
+                                        power=power,
+                                        route_prefix=route_prefix)
+            ph = st.phase[out.slot]
+            ring = event_ring_append(
+                ring, time=out.time,
+                station=_station_index(ph, out.client, C),
+                station_to=_station_index(st2.phase[out.slot],
+                                          st2.cls[out.slot], C),
+                kind=ph, slot=out.slot, client=out.client, delay=out.delay,
+                update=out.is_update)
+            return (st2, ring), None
+
+        (st, ring), _ = jax.lax.scan(body, (st, ring), None,
+                                     length=num_events)
+        return finalize_stats(st), ring
+
+    def draw(key):
+        return draw_class_event_blocks(classes, key, chunk,
+                                       distribution=distribution,
+                                       route_prefix=route_prefix)
+
+    def step(st, blk):
+        return step_class_event_block(classes, st, blk,
+                                      distribution=distribution, power=power)
+
+    def append(ring, pre, post, out, keep):
+        ph = pre.phase[out.slot]
+        return event_ring_append(
             ring, time=out.time,
             station=_station_index(ph, out.client, C),
-            station_to=_station_index(st2.phase[out.slot],
-                                      st2.cls[out.slot], C),
+            station_to=_station_index(post.phase[out.slot],
+                                      post.cls[out.slot], C),
             kind=ph, slot=out.slot, client=out.client, delay=out.delay,
-            update=out.is_update)
-        return (st2, ring), None
+            update=out.is_update, valid=keep)
 
-    (st, ring), _ = jax.lax.scan(body, (st, ring), None, length=num_events)
+    st, ring = _scan_chunked(step, draw, st, num_events, chunk,
+                             ring=ring, append=append)
     return finalize_stats(st), ring
 
 
@@ -969,7 +1346,8 @@ def simulate_stats_classes(classes, m, num_updates: int, *,
                            warmup: int = 0, key: Optional[jax.Array] = None,
                            seed: int = 0, distribution: str = "exponential",
                            power=None,
-                           m_max: Optional[int] = None) -> EventStats:
+                           m_max: Optional[int] = None,
+                           chunk: int = 1) -> EventStats:
     """Class-aggregated :func:`simulate_stats`: statistics over
     ``num_updates`` rounds with O(#classes) per-event state.
 
@@ -986,7 +1364,8 @@ def simulate_stats_classes(classes, m, num_updates: int, *,
     if m_max is None:
         m_max = int(m)
     return _simulate_stats_classes(classes, m, key, int(num_updates),
-                                   int(warmup), distribution, m_max, power)
+                                   int(warmup), distribution, m_max, power,
+                                   int(chunk))
 
 
 def expand_class_stats(stats: EventStats, count) -> EventStats:

@@ -162,6 +162,7 @@ class DeviceTrainer:
                  loss_fn: Callable = cross_entropy_loss,
                  sim_backend: Optional[str] = None,
                  sim_interpret: Optional[bool] = None,
+                 sim_chunk: int = 1,
                  trace_updates: int = 0):
         self.model = model
         self.net = net
@@ -172,6 +173,10 @@ class DeviceTrainer:
         # sim_interpret overrides the pallas kernel's compile/interpret auto
         self.sim_backend = sim_backend
         self.sim_interpret = sim_interpret
+        # megastep chunk for the queueing scans: next_update retires up to
+        # sim_chunk events per inner step — update semantics (and the event
+        # trajectories) are bitwise unchanged for any value
+        self.sim_chunk = int(sim_chunk)
         # repro.obs update-telemetry ring capacity (0 = tracing off: the
         # fused scan is byte-identical to the untraced program); when set,
         # each lane of :meth:`run_lanes` records its last ``trace_updates``
@@ -226,6 +231,7 @@ class DeviceTrainer:
                    loss_fn=loss_fn,
                    sim_backend=None if sim is None else sim.backend,
                    sim_interpret=None if sim is None else sim.interpret,
+                   sim_chunk=1 if sim is None else sim.chunk,
                    trace_updates=0 if trace is None else trace.updates)
 
     # -- static-shape planning ---------------------------------------------
@@ -259,13 +265,14 @@ class DeviceTrainer:
         argument instead of a closure constant."""
         backend = resolve_backend(self.sim_backend)
         interp = self.sim_interpret
+        ck = self.sim_chunk
         net_key = None if nets is None else tuple(
             np.asarray(leaf).tobytes()
             for net in nets for leaf in jax.tree_util.tree_leaves(net))
         cache_key = (tuple(np.asarray(p, np.float64).tobytes() for p in ps),
                      tuple(int(m) for m in ms),
                      np.asarray(sim_keys).tobytes(), round(horizon, 9),
-                     max_updates, backend, interp, net_key)
+                     max_updates, backend, interp, ck, net_key)
         hit = self._count_cache.get(cache_key)
         if hit is not None:
             return hit
@@ -277,7 +284,7 @@ class DeviceTrainer:
         K_bound = max(K_bound, 1)
         m_max = int(max(ms))
         key_stat = ("count", K_bound, m_max, round(horizon, 9), backend,
-                    interp, nets is not None)
+                    interp, ck, nets is not None)
         if key_stat not in self._jit_cache:
             net0, dist = self.net, self.cfg.distribution
 
@@ -288,7 +295,7 @@ class DeviceTrainer:
                 def body(st, _):
                     st, upd = events.next_update(net, st, distribution=dist,
                                                  backend=backend,
-                                                 interpret=interp)
+                                                 interpret=interp, chunk=ck)
                     return st, upd.time
 
                 _, times = jax.lax.scan(body, st, None, length=K_bound)
@@ -331,8 +338,9 @@ class DeviceTrainer:
     def _build(self, K: int, G: int, m_max: int, horizon: float,
                backend: str, interp: Optional[bool],
                lane_mode: bool = False, lane_power: bool = False,
-               trace_updates: int = 0):
+               trace_updates: int = 0, chunk: int = 1):
         tr = int(trace_updates)
+        ck = int(chunk)
         cfg = self.cfg
         n = self.n
         net0 = self.net
@@ -415,7 +423,7 @@ class DeviceTrainer:
                 st, params, snaps, grid_snaps, prev_t, dkey, aux = carry
                 st, upd = events.next_update(net, st, distribution=dist,
                                              power=power, backend=backend,
-                                             interpret=interp)
+                                             interpret=interp, chunk=ck)
                 live = upd.time <= horizon
                 j, c = upd.slot, upd.client
                 stale = jax.tree_util.tree_map(lambda s: s[j], snaps)
@@ -562,6 +570,7 @@ class DeviceTrainer:
                 f"backend")
         backend = resolve_backend(self.sim_backend)
         interp = self.sim_interpret
+        ck = self.sim_chunk
         params0 = jax.vmap(self.model.init)(init_keys)
         p_mat = jnp.asarray(np.stack([np.asarray(p, np.float64) for p in ps]))
         m_arr = jnp.asarray(np.asarray(ms, np.int32))
@@ -571,22 +580,23 @@ class DeviceTrainer:
             nets, lx, ly, lsizes, n_acts, powers = lane_args
             key_stat = ("lanes", K, G, m_max, round(horizon, 9), backend,
                         interp, lx.shape[1:], powers is not None,
-                        nets.mu_cs is not None, tr)
+                        nets.mu_cs is not None, tr, ck)
             if key_stat not in self._jit_cache:
                 self._jit_cache[key_stat] = self._build(
                     K, G, m_max, horizon, backend, interp,
                     lane_mode=True, lane_power=powers is not None,
-                    trace_updates=tr)
+                    trace_updates=tr, chunk=ck)
             fn = self._jit_cache[key_stat]
             args = (params0, nets, lx, ly, lsizes, n_acts)
             if powers is not None:
                 args = args + (powers,)
             return fn(*args, p_mat, m_arr, eta_arr, sim_keys, data_keys)
-        key_stat = (K, G, m_max, round(horizon, 9), backend, interp, tr)
+        key_stat = (K, G, m_max, round(horizon, 9), backend, interp, tr, ck)
         if key_stat not in self._jit_cache:
             self._jit_cache[key_stat] = self._build(K, G, m_max, horizon,
                                                     backend, interp,
-                                                    trace_updates=tr)
+                                                    trace_updates=tr,
+                                                    chunk=ck)
         fn = self._jit_cache[key_stat]
         return fn(params0, p_mat, m_arr, eta_arr, sim_keys, data_keys)
 

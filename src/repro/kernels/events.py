@@ -37,7 +37,7 @@ from __future__ import annotations
 # contract: padded-n — reductions here are on the bitwise padding contract
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,35 +61,30 @@ def _first_index_min(values, idx, size: int):
     return v_min, jnp.min(jnp.where(values == v_min, idx, size))
 
 
-def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
-                  mu_c_ref, mu_u_ref, fscal_ref, iscal_ref,
-                  o_finish_ref, o_phase_ref, o_client_ref, o_seq_ref,
-                  o_disp_ref, o_t_ref, o_int_ref, *,
-                  has_cs: bool, m_max: int, n: int):
-    finish = finish_ref[...]   # (1, m_max) float
-    phase = phase_ref[...]     # (1, m_max) int32
-    client = client_ref[...]
-    seq = seq_ref[...]
-    disp = disp_ref[...]
-    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m_max), 1)
-    cli = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+def _one_event(tbl, mu_c, mu_u, rand, idx, cli, *,
+               has_cs: bool, m_max: int, n: int):
+    """One table transition at registers — the shared kernel body.
 
-    e_up = fscal_ref[0, 0]     # unit-rate service variates (see module doc)
-    e_comp = fscal_ref[0, 1]
-    svc_down = fscal_ref[0, 2]  # fully drawn outside (rate known pre-argmin)
-    svc_cs = fscal_ref[0, 3]
-    c_new = iscal_ref[0, 0]
-    seq_ctr = iscal_ref[0, 1]
-    rnd = iscal_ref[0, 2]
+    ``tbl = (finish, phase, client, seq, disp)`` are the lane's loaded
+    ``(1, m_max)`` rows, ``mu_c``/``mu_u`` its loaded ``(1, n)`` rate rows
+    and ``rand = (e_up, e_comp, svc_down, svc_cs, c_new, seq_ctr, rnd)``
+    the event's outside-drawn scalars and counters.  Returns the updated
+    table rows plus the transition descriptors; :func:`_event_kernel`
+    calls it once per launch, :func:`_megastep_kernel` ``chunk`` times per
+    launch with keep-masked selects in between (identical primitives —
+    the megastep trajectory is bitwise the single-step one).
+    """
+    finish, phase, client, seq, disp = tbl
+    e_up, e_comp, svc_down, svc_cs, c_new, seq_ctr, rnd = rand
 
     def gather_i(table, j):
         # x64 mode promotes integer sums to int64: pin the gather to i32
         # contract: allow(raw-reduction): one-hot gather — exactly one non-zero term, bitwise under any association
         return jnp.sum(jnp.where(idx == j, table, 0)).astype(jnp.int32)
 
-    def gather_rate(row_ref, c):
+    def gather_rate(row, c):
         # contract: allow(raw-reduction): one-hot gather — exactly one non-zero term, bitwise under any association
-        return jnp.sum(jnp.where(cli == c, row_ref[...], 0.0))
+        return jnp.sum(jnp.where(cli == c, row, 0.0))
 
     # -- the completing slot (parallel argmin over the clock table) ---------
     t_new, j = _first_index_min(finish, idx, m_max)
@@ -105,8 +100,8 @@ def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
     is_update = is_cs if has_cs else is_up
     new_round = rnd + jnp.where(is_update, 1, 0).astype(jnp.int32)
 
-    svc_up = e_up / gather_rate(mu_u_ref, c)
-    svc_c = e_comp / gather_rate(mu_c_ref, c)
+    svc_up = e_up / gather_rate(mu_u, c)
+    svc_c = e_comp / gather_rate(mu_c, c)
 
     # -- fused phase promotion / routing of slot j --------------------------
     phase_j = jnp.where(
@@ -156,6 +151,37 @@ def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
         onec = (idx == pick_cs) & do_cs
         phase = jnp.where(onec, E.CS_SERV, phase)
         finish = jnp.where(onec, t_new + svc_cs, finish)
+    else:
+        do_cs = jnp.zeros((), jnp.bool_)
+
+    desc = (t_new, j, c, is_update, delay, new_seq_ctr, new_round, ph,
+            do_comp, do_cs)
+    return (finish, phase, client, seq, disp), desc
+
+
+def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
+                  mu_c_ref, mu_u_ref, fscal_ref, iscal_ref,
+                  o_finish_ref, o_phase_ref, o_client_ref, o_seq_ref,
+                  o_disp_ref, o_t_ref, o_int_ref, *,
+                  has_cs: bool, m_max: int, n: int):
+    tbl = (finish_ref[...],   # (1, m_max) float
+           phase_ref[...],    # (1, m_max) int32
+           client_ref[...], seq_ref[...], disp_ref[...])
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m_max), 1)
+    cli = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    rand = (fscal_ref[0, 0],   # e_up: unit-rate variate (see module doc)
+            fscal_ref[0, 1],   # e_comp
+            fscal_ref[0, 2],   # svc_down: drawn outside (rate pre-argmin)
+            fscal_ref[0, 3],   # svc_cs
+            iscal_ref[0, 0],   # c_new
+            iscal_ref[0, 1],   # seq_ctr
+            iscal_ref[0, 2])   # round
+
+    tbl, desc = _one_event(tbl, mu_c_ref[...], mu_u_ref[...], rand, idx, cli,
+                           has_cs=has_cs, m_max=m_max, n=n)
+    finish, phase, client, seq, disp = tbl
+    (t_new, j, c, is_update, delay, new_seq_ctr, new_round, ph,
+     do_comp, do_cs) = desc
 
     o_finish_ref[...] = finish
     o_phase_ref[...] = phase
@@ -172,8 +198,7 @@ def _event_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
     # transition descriptors for the caller's O(1) occupancy maintenance
     o_int_ref[0, 6] = ph
     o_int_ref[0, 7] = jnp.where(do_comp, 1, 0).astype(jnp.int32)
-    o_int_ref[0, 8] = (jnp.where(do_cs, 1, 0).astype(jnp.int32) if has_cs
-                       else jnp.zeros((), jnp.int32))
+    o_int_ref[0, 8] = jnp.where(do_cs, 1, 0).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("has_cs", "interpret"))
@@ -214,6 +239,114 @@ def event_step_tables(finish, phase, client, seq, disp_round, mu_c, mu_u,
     )(finish, phase, client, seq, disp_round, mu_c, mu_u, fscal, iscal)
 
 
+def _megastep_kernel(finish_ref, phase_ref, client_ref, seq_ref, disp_ref,
+                     mu_c_ref, mu_u_ref, fscal_ref, iscal_ref,
+                     o_finish_ref, o_phase_ref, o_client_ref, o_seq_ref,
+                     o_disp_ref, o_t_ref, o_int_ref, *,
+                     has_cs: bool, m_max: int, n: int, chunk: int,
+                     stop_on_update: bool):
+    """Retire up to ``chunk`` events per launch against the resident table.
+
+    The lane's rows load once into VMEM registers and an unrolled
+    in-kernel loop applies :func:`_one_event` ``chunk`` times with
+    keep-masked selects between iterations — amortizing the launch (and
+    the five table round-trips) over ``chunk`` events.  ``keep_i = (i <
+    rem) & ~done`` masks the tail of a partial chunk; ``stop_on_update``
+    latches ``done`` after the first retired update (the trainer's
+    ``next_update`` megastep).  Masked iterations still *compute* a
+    transition (values stay in-range: the argmin of an untouched table)
+    but select the old rows, so the loop is branch-free; descriptors are
+    written unconditionally and the wrapper masks them by the ``keep``
+    column.
+    """
+    tbl = (finish_ref[...], phase_ref[...], client_ref[...], seq_ref[...],
+           disp_ref[...])
+    mu_c = mu_c_ref[...]
+    mu_u = mu_u_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m_max), 1)
+    cli = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    seq_ctr = iscal_ref[0, 0]
+    rnd = iscal_ref[0, 1]
+    rem = iscal_ref[0, 2]
+    done = jnp.zeros((), jnp.bool_)
+
+    for i in range(chunk):
+        rand = (fscal_ref[0, 4 * i + 0], fscal_ref[0, 4 * i + 1],
+                fscal_ref[0, 4 * i + 2], fscal_ref[0, 4 * i + 3],
+                iscal_ref[0, 3 + i], seq_ctr, rnd)
+        tbl2, desc = _one_event(tbl, mu_c, mu_u, rand, idx, cli,
+                                has_cs=has_cs, m_max=m_max, n=n)
+        (t_new, j, c, is_update, delay, new_seq_ctr, new_round, ph,
+         do_comp, do_cs) = desc
+        keep = i < rem
+        if stop_on_update:
+            keep = keep & ~done
+            done = done | (keep & is_update)
+        tbl = tuple(jnp.where(keep, a, b) for a, b in zip(tbl2, tbl))
+        seq_ctr = jnp.where(keep, new_seq_ctr, seq_ctr)
+        rnd = jnp.where(keep, new_round, rnd)
+        o_t_ref[0, i] = t_new
+        o_int_ref[0, 10 * i + 0] = j
+        o_int_ref[0, 10 * i + 1] = c
+        o_int_ref[0, 10 * i + 2] = jnp.where(is_update, 1, 0).astype(
+            jnp.int32)
+        o_int_ref[0, 10 * i + 3] = delay
+        o_int_ref[0, 10 * i + 4] = new_seq_ctr
+        o_int_ref[0, 10 * i + 5] = new_round
+        o_int_ref[0, 10 * i + 6] = ph
+        o_int_ref[0, 10 * i + 7] = jnp.where(do_comp, 1, 0).astype(jnp.int32)
+        o_int_ref[0, 10 * i + 8] = jnp.where(do_cs, 1, 0).astype(jnp.int32)
+        o_int_ref[0, 10 * i + 9] = jnp.where(keep, 1, 0).astype(jnp.int32)
+
+    finish, phase, client, seq, disp = tbl
+    o_finish_ref[...] = finish
+    o_phase_ref[...] = phase
+    o_client_ref[...] = client
+    o_seq_ref[...] = seq
+    o_disp_ref[...] = disp
+
+
+@functools.partial(jax.jit, static_argnames=("has_cs", "chunk",
+                                             "stop_on_update", "interpret"))
+def megastep_tables(finish, phase, client, seq, disp_round, mu_c, mu_u,
+                    fscal, iscal, *, has_cs: bool, chunk: int,
+                    stop_on_update: bool = False,
+                    interpret: Optional[bool] = None):
+    """Up to ``chunk`` events per lane, one launch per lane.
+
+    The chunked analogue of :func:`event_step_tables`: ``fscal`` is
+    ``[K, 4 * chunk]`` (``[e_up, e_comp, svc_down, svc_cs]`` per event)
+    and ``iscal`` ``[K, 3 + chunk]`` (``[seq_ctr, round, rem]`` then the
+    ``chunk`` routed clients).  Returns the five updated tables plus the
+    per-event times ``[K, chunk]`` and descriptors ``[K, 10 * chunk]``
+    (the single-step 9 columns plus the ``keep`` mask per event).
+    """
+    interp = default_interpret() if interpret is None else interpret
+    K, m_max = finish.shape
+    n = mu_c.shape[1]
+    kernel = functools.partial(_megastep_kernel, has_cs=has_cs, m_max=m_max,
+                               n=n, chunk=chunk,
+                               stop_on_update=stop_on_update)
+    row = lambda w: pl.BlockSpec((1, w), lambda k: (k, 0))  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=(K,),
+        in_specs=[row(m_max)] * 5 + [row(n)] * 2
+        + [row(4 * chunk), row(3 + chunk)],
+        out_specs=[row(m_max)] * 5 + [row(chunk), row(10 * chunk)],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, m_max), finish.dtype),
+            jax.ShapeDtypeStruct((K, m_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, m_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, m_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, m_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, chunk), finish.dtype),
+            jax.ShapeDtypeStruct((K, 10 * chunk), jnp.int32),
+        ],
+        interpret=interp,
+    )(finish, phase, client, seq, disp_round, mu_c, mu_u, fscal, iscal)
+
+
 # ---------------------------------------------------------------------------
 # EventState-level wrapper: statistics in jnp around the kernel transition
 # ---------------------------------------------------------------------------
@@ -223,28 +356,47 @@ def _lane_randomness(params: NetworkParams, state, distribution: str,
     """Per-lane key split + outside draws, bit-matching the reference
     engine's stream (same split arity, same key roles — including the
     padding-invariant inverse-CDF routing draw of
-    ``repro.core.events._route_client``)."""
-    law = get_law(distribution)
-    dtype = state.finish.dtype
-    K, n = params.p.shape
-    n_acts = (params.n_active if params.n_active is not None
-              else jnp.full((K,), n))
+    ``repro.core.events._route_client``).
 
-    def one(key, p_row, mu_d_row, mu_cs_i, n_act):
-        key, k_up, k_disp_cli, k_disp_svc, k_comp, k_cs = jax.random.split(
-            key, 6)
-        c_new = E._route_client(p_row, k_disp_cli, n_act)
-        one_rate = jnp.ones((), dtype)
-        e_up = law.device_draw(k_up, one_rate)
-        e_comp = law.device_draw(k_comp, one_rate)
-        svc_down = law.device_draw(k_disp_svc, mu_d_row[c_new])
-        svc_cs = (law.device_draw(k_cs, mu_cs_i) if has_cs
-                  else jnp.zeros((), dtype))
-        fscal = jnp.stack([e_up, e_comp, svc_down, svc_cs]).astype(dtype)
-        return key, c_new, fscal
+    Routed through the ``chunk=1`` block draw: the single-step and
+    megastep streams must share one fusion structure, because XLA's
+    mul-add (FMA) contraction can differ between distinct fusion
+    contexts — op-identical draw code in a *different* surrounding
+    program is not enough for byte-equal floats (1-ulp divergence on the
+    lognormal's ``exp(normal - log(rate) - 0.5)`` chain).  A scan body is
+    its own fusion context, so the length-1 scan here contracts exactly
+    like the length-``E`` scan in :func:`_lane_chunk_randomness`.
+    """
+    chain, c_new, fscal = _lane_chunk_randomness(params, state, distribution,
+                                                 has_cs, 1)
+    return chain[:, 0], c_new[:, 0], fscal[:, 0]
 
-    mu_cs = params.mu_cs if has_cs else jnp.zeros_like(params.p[..., 0])
-    return jax.vmap(one)(state.key, params.p, params.mu_d, mu_cs, n_acts)
+
+def _lane_stats(st, t_new, c, is_update, delay, pw, n: int):
+    """One lane's statistics accumulation over the sojourn ending at this
+    event — line-for-line the reference engine's block, shared (vmapped)
+    by the single-step and megastep wrappers so both run identical ops."""
+    measure = (st.round >= st.warmup) & (st.round < st.cap)
+    dt_eff = jnp.where(
+        measure,
+        jnp.clip(jnp.minimum(t_new, st.t_cap)
+                 - jnp.minimum(st.t, st.t_cap), 0.0, None),
+        0.0)
+    occ_int = st.occ_int + dt_eff * st.occ
+    energy = st.energy
+    if pw is not None:
+        p_w = seqsum(pw.P_c * st.serving
+                     + pw.P_u * st.occ[2 * n:3 * n]
+                     + pw.P_d * st.occ[:n])
+        if pw.P_cs is not None:
+            p_w = p_w + pw.P_cs * st.cs_busy
+        energy = energy + dt_eff * p_w
+    upd_measured = is_update & measure
+    delay_sum = st.delay_sum.at[c].add(
+        jnp.where(upd_measured, delay.astype(st.delay_sum.dtype), 0.0))
+    delay_cnt = st.delay_cnt.at[c].add(
+        jnp.where(upd_measured, 1, 0).astype(jnp.int32))
+    return occ_int, energy, delay_sum, delay_cnt
 
 
 def step_event_pallas(params: NetworkParams, state, *,
@@ -280,36 +432,14 @@ def step_event_pallas(params: NetworkParams, state, *,
 
     # -- statistics over the sojourn ending at this event (pre-event state),
     # line-for-line the reference engine's accumulation, vmapped over lanes
-    def lane_stats(st, t_new, c, is_update, delay, pw):
-        measure = (st.round >= st.warmup) & (st.round < st.cap)
-        dt_eff = jnp.where(
-            measure,
-            jnp.clip(jnp.minimum(t_new, st.t_cap)
-                     - jnp.minimum(st.t, st.t_cap), 0.0, None),
-            0.0)
-        occ_int = st.occ_int + dt_eff * st.occ
-        energy = st.energy
-        if pw is not None:
-            p_w = seqsum(pw.P_c * st.serving
-                         + pw.P_u * st.occ[2 * n:3 * n]
-                         + pw.P_d * st.occ[:n])
-            if pw.P_cs is not None:
-                p_w = p_w + pw.P_cs * st.cs_busy
-            energy = energy + dt_eff * p_w
-        upd_measured = is_update & measure
-        delay_sum = st.delay_sum.at[c].add(
-            jnp.where(upd_measured, delay.astype(st.delay_sum.dtype), 0.0))
-        delay_cnt = st.delay_cnt.at[c].add(
-            jnp.where(upd_measured, 1, 0).astype(jnp.int32))
-        return occ_int, energy, delay_sum, delay_cnt
-
     if power is None:
         occ_int, energy, delay_sum, delay_cnt = jax.vmap(
-            lambda st, t, c, u, d: lane_stats(st, t, c, u, d, None))(
+            lambda st, t, c, u, d: _lane_stats(st, t, c, u, d, None, n))(
                 state, t_new, c, is_update, delay)
     else:
-        occ_int, energy, delay_sum, delay_cnt = jax.vmap(lane_stats)(
-            state, t_new, c, is_update, delay, power)
+        occ_int, energy, delay_sum, delay_cnt = jax.vmap(
+            lambda st, t, c, u, d, pw: _lane_stats(st, t, c, u, d, pw, n))(
+                state, t_new, c, is_update, delay, power)
 
     # -- O(1) maintenance of the occupancy carries, mirroring step_event
     # (the kernel reports the slot-j transition; promotions stay within
@@ -367,3 +497,224 @@ def step_event_pallas1(params: NetworkParams, state, *,
     down = lambda x: x[0]  # noqa: E731
     return (jax.tree_util.tree_map(down, st),
             jax.tree_util.tree_map(down, out))
+
+
+# ---------------------------------------------------------------------------
+# megastep: up to `chunk` events per kernel launch
+# ---------------------------------------------------------------------------
+
+class MegastepAux(NamedTuple):
+    """Per-event descriptors of one megastep (leaves ``[K, chunk]`` except
+    ``taken [K]``), pre-masked values — consumers gate on ``keep``."""
+
+    time: jax.Array        # event time t_new
+    slot: jax.Array        # completing slot j
+    client: jax.Array      # completing client c (pre-event)
+    delay: jax.Array       # staleness of the retiring round
+    update: jax.Array      # bool: the event retired an update
+    kind: jax.Array        # pre-event phase of slot j (the ring's kind)
+    station: jax.Array     # station of (kind, client) — ring `station`
+    station_to: jax.Array  # station slot j moved to — ring `station_to`
+    keep: jax.Array        # bool: event really happened (partial chunks)
+    taken: jax.Array       # [K] int32: number of kept events this launch
+
+
+def _lane_chunk_randomness(params: NetworkParams, state, distribution: str,
+                           has_cs: bool, chunk: int):
+    """Per-lane key chain + outside draws for ``chunk`` events.
+
+    A tiny-carry scan replays :func:`_lane_randomness`'s per-event split
+    arity and draw order ``chunk`` times (same subkeys, same scalar-shape
+    primitives — the megastep stream is bitwise the single-step stream);
+    returns ``(chain [K, chunk, 2], c_new [K, chunk], fscal [K, chunk,
+    4])`` with ``chain[:, i]`` the carried key after ``i + 1`` events.
+    """
+    law = get_law(distribution)
+    dtype = state.finish.dtype
+    K, n = params.p.shape
+    n_acts = (params.n_active if params.n_active is not None
+              else jnp.full((K,), n))
+
+    mu_cs = params.mu_cs if has_cs else jnp.zeros_like(params.p[..., 0])
+
+    def draw_one(k, p_row, mu_d_row, mu_cs_i, n_act):
+        k2, k_up, k_disp_cli, k_disp_svc, k_comp, k_cs = (
+            jax.random.split(k, 6))
+        c_new = E._route_client(p_row, k_disp_cli, n_act)
+        one_rate = jnp.ones((), dtype)
+        e_up = law.device_draw(k_up, one_rate)
+        e_comp = law.device_draw(k_comp, one_rate)
+        svc_down = law.device_draw(k_disp_svc, mu_d_row[c_new])
+        svc_cs = (law.device_draw(k_cs, mu_cs_i) if has_cs
+                  else jnp.zeros((), dtype))
+        fscal = jnp.stack([e_up, e_comp, svc_down, svc_cs]).astype(dtype)
+        return k2, c_new, fscal
+
+    def body(keys, _):
+        # hermetic draw region: optimization_barrier pins the fusion
+        # boundaries around each event's draws, so XLA's mul-add (FMA)
+        # contraction inside them cannot depend on the surrounding
+        # program.  Without it a trip-count-1 scan (the chunk=1 path) is
+        # inlined by the while-loop simplifier and the lognormal's
+        # exp(normal - log(rate) - 0.5) chain contracts differently than
+        # in the length-E scan body — a 1-ulp finish-clock split between
+        # megastep and single-step.  (The scan runs over the CHUNK axis
+        # with lanes vmapped inside, because optimization_barrier has no
+        # batching rule — the lowered per-step ops are the same either
+        # way.)
+        keys, p_b, mu_d_b, mu_cs_b, n_b = jax.lax.optimization_barrier(
+            (keys, params.p, params.mu_d, mu_cs, n_acts))
+        k2, c_new, fscal = jax.vmap(draw_one)(keys, p_b, mu_d_b, mu_cs_b,
+                                              n_b)
+        k2, c_new, fscal = jax.lax.optimization_barrier((k2, c_new, fscal))
+        return k2, (k2, c_new, fscal)
+
+    _, (chain, c_new, fscal) = jax.lax.scan(body, state.key, None,
+                                            length=chunk)
+    return (jnp.moveaxis(chain, 0, 1), jnp.moveaxis(c_new, 0, 1),
+            jnp.moveaxis(fscal, 0, 1))
+
+
+def megastep_event_pallas(params: NetworkParams, state, *, chunk: int,
+                          rem=None, distribution: str = "exponential",
+                          power=None, interpret: Optional[bool] = None,
+                          stop_on_update: bool = False):
+    """Advance up to ``chunk`` events per lane in ONE kernel launch.
+
+    The megastep analogue of :func:`step_event_pallas`: the randomness
+    block draws up front (:func:`_lane_chunk_randomness`), the table
+    transitions retire inside :func:`_megastep_kernel`'s unrolled
+    in-VMEM loop, and the statistics replay per event around the kernel
+    (a ``chunk``-length scan of the shared :func:`_lane_stats` block plus
+    the O(1) occupancy maintenance, keep-masked — bitwise ``chunk``
+    single :func:`step_event_pallas` calls).  ``rem`` bounds the kept
+    events per lane (scalar or ``[K]``; default ``chunk``);
+    ``stop_on_update`` stops each lane after its first retired update.
+    Returns ``(EventState, MegastepAux)``.
+    """
+    n = params.p.shape[-1]
+    has_cs = params.mu_cs is not None
+    K = state.finish.shape[0]
+
+    chain, c_new, fscal = _lane_chunk_randomness(params, state, distribution,
+                                                 has_cs, chunk)
+    if rem is None:
+        rem = jnp.full((K,), chunk, jnp.int32)
+    else:
+        rem = jnp.broadcast_to(jnp.asarray(rem, jnp.int32), (K,))
+    iscal = jnp.concatenate(
+        [state.seq_ctr[:, None], state.round[:, None], rem[:, None], c_new],
+        axis=1).astype(jnp.int32)
+    finish, phase, client, seq, disp, t_mat, int_mat = megastep_tables(
+        state.finish, state.phase, state.client, state.seq, state.disp_round,
+        params.mu_c, params.mu_u, fscal.reshape(K, 4 * chunk), iscal,
+        has_cs=has_cs, chunk=chunk, stop_on_update=stop_on_update,
+        interpret=interpret)
+    D = int_mat.reshape(K, chunk, 10)
+    upd_mat = D[..., 2] > 0
+    ph_pre_mat = D[..., 6]
+    keep_mat = D[..., 9] > 0
+
+    # -- statistics replay: one keep-masked `_lane_stats` + O(1) occupancy
+    # maintenance per event, sequential over the chunk (the delay/occ
+    # accumulation order of `chunk` single steps)
+    lead = lambda a: jnp.moveaxis(a, 1, 0)  # noqa: E731
+    xs = (lead(t_mat), lead(D[..., 1]), lead(upd_mat), lead(D[..., 3]),
+          lead(D[..., 4]), lead(D[..., 5]), lead(ph_pre_mat),
+          lead(D[..., 7] > 0), lead(D[..., 8] > 0), lead(keep_mat),
+          lead(c_new))
+
+    def body(st, x):
+        (t_new, c, is_update, delay, seq_ctr2, new_round, ph_pre,
+         do_comp, do_cs, keep, c_new_i) = x
+        if power is None:
+            occ_int, energy, delay_sum, delay_cnt = jax.vmap(
+                lambda s, t, cc, u, d: _lane_stats(s, t, cc, u, d, None, n))(
+                    st, t_new, c, is_update, delay)
+        else:
+            occ_int, energy, delay_sum, delay_cnt = jax.vmap(
+                lambda s, t, cc, u, d, pw: _lane_stats(s, t, cc, u, d, pw,
+                                                       n))(
+                    st, t_new, c, is_update, delay, power)
+
+        is_comp = ph_pre == E.COMP_SERV
+        is_down = ph_pre == E.DOWN
+        is_cs = ph_pre == E.CS_SERV
+        phase_j = jnp.where(
+            is_down, E.COMP_WAIT,
+            jnp.where(is_comp, E.UP,
+                      jnp.where(is_update, E.DOWN, E.CS_WAIT)))
+        client_j = jnp.where(is_update, c_new_i, c)
+        stations = jnp.arange(3 * n + 1)
+        occ_new = (st.occ
+                   + jnp.where(stations[None, :]
+                               == E._station_index(phase_j, client_j,
+                                                   n)[:, None],
+                               1.0, 0.0)
+                   - jnp.where(stations[None, :]
+                               == E._station_index(ph_pre, c, n)[:, None],
+                               1.0, 0.0))
+        delta_srv = (jnp.where(do_comp, 1.0, 0.0)
+                     - jnp.where(is_comp, 1.0, 0.0))
+        serving_new = st.serving + jnp.where(
+            jnp.arange(n)[None, :] == c[:, None], delta_srv[:, None], 0.0)
+        cs_busy_new = ((st.cs_busy & ~is_cs) | do_cs if has_cs
+                       else st.cs_busy)
+        t0 = jnp.where(is_update & (new_round == st.warmup), t_new, st.t0)
+        t1 = jnp.where(is_update & (new_round == st.cap), t_new, st.t1)
+
+        st2 = st._replace(
+            t=t_new, round=new_round, seq_ctr=seq_ctr2, t0=t0, t1=t1,
+            delay_sum=delay_sum, delay_cnt=delay_cnt, energy=energy,
+            occ_int=occ_int, occ=occ_new, serving=serving_new,
+            cs_busy=cs_busy_new)
+        sel = lambda a, b: jnp.where(  # noqa: E731
+            keep.reshape(keep.shape + (1,) * (a.ndim - 1)), a, b)
+        return jax.tree_util.tree_map(sel, st2, st), None
+
+    stf, _ = jax.lax.scan(body, state, xs)
+
+    # -- resume key: the chain entry after the last kept event ------------
+    # x64 mode promotes integer sums to int64: pin the count to i32
+    # contract: allow(raw-reduction): int32 indicator count over the chunk axis — exact integer arithmetic, never a padded client/class axis
+    taken = jnp.sum(keep_mat.astype(jnp.int32), axis=1, dtype=jnp.int32)
+    idxk = jnp.clip(taken, 1, chunk) - 1
+    k_sel = jnp.take_along_axis(chain, idxk[:, None, None], axis=1)[:, 0]
+    keys = jnp.where((taken > 0)[:, None], k_sel, state.key)
+
+    new_state = stf._replace(key=keys, client=client, phase=phase,
+                             finish=finish, seq=seq, disp_round=disp)
+    is_comp_m = ph_pre_mat == E.COMP_SERV
+    is_down_m = ph_pre_mat == E.DOWN
+    phase_j_m = jnp.where(
+        is_down_m, E.COMP_WAIT,
+        jnp.where(is_comp_m, E.UP,
+                  jnp.where(upd_mat, E.DOWN, E.CS_WAIT)))
+    client_j_m = jnp.where(upd_mat, c_new, D[..., 1])
+    aux = MegastepAux(
+        time=t_mat, slot=D[..., 0], client=D[..., 1], delay=D[..., 3],
+        update=upd_mat, kind=ph_pre_mat,
+        station=E._station_index(ph_pre_mat, D[..., 1], n),
+        station_to=E._station_index(phase_j_m, client_j_m, n),
+        keep=keep_mat, taken=taken)
+    return new_state, aux
+
+
+def megastep_event_pallas1(params: NetworkParams, state, *, chunk: int,
+                           rem=None, distribution: str = "exponential",
+                           power=None, interpret: Optional[bool] = None,
+                           stop_on_update: bool = False):
+    """Single-lane megastep (adds/strips a K=1 lane axis): the form
+    ``events.next_update`` consumes on the pallas backend."""
+    up = lambda x: x[None]  # noqa: E731
+    st, aux = megastep_event_pallas(
+        jax.tree_util.tree_map(up, params),
+        jax.tree_util.tree_map(up, state),
+        chunk=chunk,
+        rem=None if rem is None else jnp.asarray(rem, jnp.int32)[None],
+        distribution=distribution,
+        power=None if power is None else jax.tree_util.tree_map(up, power),
+        interpret=interpret, stop_on_update=stop_on_update)
+    down = lambda x: x[0]  # noqa: E731
+    return (jax.tree_util.tree_map(down, st),
+            jax.tree_util.tree_map(down, aux))

@@ -10,6 +10,21 @@ A :class:`TimingLaw` packages the two implementations every law needs:
     ``repro.core.events``, where service completions race as absolute
     clocks drawn at service start — exact for *any* law registered here).
 
+Laws may additionally provide the *unit factorization* used by the
+megastep engine (``repro.core.events`` chunked mode): ``unit_draw(key,
+shape)`` draws the rate-independent part of the sample up front, and
+``unit_apply(u, rate)`` applies a rate afterwards such that
+
+    unit_apply(unit_draw(key, shape), rate) == device_draw(key, rate, shape)
+
+**bitwise** (same primitives in the same order — e.g. the lognormal
+applies ``exp(u - log(rate) - 0.5)``, not ``exp(u - 0.5) / rate``).  The
+factorization lets a chunk of draws whose *rates* depend on simulation
+state (uplink/computation services keyed by the routed client) be
+pre-drawn as a block while the rate is applied inside the event loop.
+Laws without it (``unit_draw is None``) still work with ``chunk > 1``:
+the engine stores the raw subkeys and calls ``device_draw`` per event.
+
 Built-ins are the paper's Section 5.3.3 laws (exponential, deterministic,
 lognormal) plus a **hyperexponential** (H2) law — the balanced-means
 two-phase mixture with squared coefficient of variation ``SCV = 4``,
@@ -31,7 +46,7 @@ registration stays import-cheap.)  Both implementations must produce mean
 from __future__ import annotations
 
 import math
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +59,10 @@ class TimingLaw(NamedTuple):
 
     host_sample: Callable  # (mu: float, rng: np.random.Generator) -> float
     device_draw: Callable  # (key, rate: Array, shape) -> Array
+    # optional unit factorization (megastep block draws); both or neither:
+    unit_draw: Optional[Callable] = None  # (key, shape) -> unit part
+    unit_apply: Optional[Callable] = None  # (u, rate) -> sample, bitwise
+    #   unit_apply(unit_draw(key, shape), rate) == device_draw(key, rate, shape)
 
 
 def _check(mu: float) -> float:
@@ -84,7 +103,9 @@ def _exponential() -> TimingLaw:
     return TimingLaw(
         host_sample=lambda mu, rng: rng.exponential(1.0 / _check(mu)),
         device_draw=lambda key, rate, shape=():
-            jax.random.exponential(key, shape) / rate)
+            jax.random.exponential(key, shape) / rate,
+        unit_draw=lambda key, shape=(): jax.random.exponential(key, shape),
+        unit_apply=lambda u, rate: u / rate)
 
 
 @timing_law("deterministic")
@@ -92,13 +113,23 @@ def _deterministic() -> TimingLaw:
     return TimingLaw(
         host_sample=lambda mu, rng: 1.0 / _check(mu),
         device_draw=lambda key, rate, shape=():
-            jnp.broadcast_to(1.0 / rate, shape))
+            jnp.broadcast_to(1.0 / rate, shape),
+        # key-free: the unit part only carries the shape
+        unit_draw=lambda key, shape=(): jnp.zeros(shape),
+        unit_apply=lambda u, rate: jnp.broadcast_to(1.0 / rate, jnp.shape(u)))
 
 
 @timing_law("lognormal")
 def _lognormal() -> TimingLaw:
     # underlying normal variance sigma_N^2 = 1, mean of LN = 1/mu
     # mean = exp(mu_N + 1/2) = 1/mu  ->  mu_N = -log(mu) - 1/2
+    #
+    # No unit factorization on purpose: splitting u = normal(key) from
+    # exp(u - log(rate) - 0.5) puts a fusion boundary inside a
+    # contraction-eligible (mul-add) float chain, so the materialized-u
+    # value can differ from the fused single-step draw by 1 ulp on CPU.
+    # The raw-subkey fallback replays the whole draw in one fusion
+    # context — bitwise by construction.
     return TimingLaw(
         host_sample=lambda mu, rng:
             rng.lognormal(-math.log(_check(mu)) - 0.5, 1.0),
@@ -125,4 +156,15 @@ def _hyperexponential() -> TimingLaw:
         branch_rate = jnp.where(fast, 2.0 * q, 2.0 * (1.0 - q)) * rate
         return jax.random.exponential(k_exp, shape) / branch_rate
 
-    return TimingLaw(host_sample=host_sample, device_draw=device_draw)
+    def unit_draw(key, shape=()):
+        k_branch, k_exp = jax.random.split(key)
+        return (jax.random.uniform(k_branch, shape),
+                jax.random.exponential(k_exp, shape))
+
+    def unit_apply(u, rate):
+        branch, e = u
+        branch_rate = jnp.where(branch < q, 2.0 * q, 2.0 * (1.0 - q)) * rate
+        return e / branch_rate
+
+    return TimingLaw(host_sample=host_sample, device_draw=device_draw,
+                     unit_draw=unit_draw, unit_apply=unit_apply)

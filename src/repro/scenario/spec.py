@@ -618,11 +618,14 @@ class SimSpec:
     scenario's trajectories (``None`` = the process-wide
     ``REPRO_SIM_BACKEND`` default), for the Pallas backend an
     ``interpret``-mode override (``None`` = auto: compiled on TPU,
-    interpreted elsewhere), and the optional ``repro.obs`` telemetry
+    interpreted elsewhere), the megastep chunk size (``chunk``: events
+    retired per scan iteration / kernel launch — trajectories are bitwise
+    invariant to it, default 1), and the optional ``repro.obs`` telemetry
     channels (``trace``; ``None`` = tracing off)."""
 
     backend: Optional[str] = None     # "reference" | "batched" | "pallas"
     interpret: Optional[bool] = None
+    chunk: int = 1                    # megastep events per scan iteration
     trace: Optional[TraceSpec] = None
 
     def __post_init__(self):
@@ -634,6 +637,10 @@ class SimSpec:
             object.__setattr__(self, "backend", _check(str(self.backend)))
         if self.interpret is not None:
             object.__setattr__(self, "interpret", bool(self.interpret))
+        object.__setattr__(self, "chunk", int(self.chunk))
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be a positive integer, got "
+                             f"{self.chunk}")
         if self.trace is not None and not isinstance(self.trace, TraceSpec):
             object.__setattr__(self, "trace", TraceSpec(**dict(self.trace)))
 
@@ -643,6 +650,10 @@ class SimSpec:
         # Scenario.hash() over it — is unchanged by the trace field
         if self.trace is not None:
             d["trace"] = self.trace.to_dict()
+        # same convention for the megastep knob: absent at the default, so
+        # pre-megastep hashes are stable and chunk=1 stays byte-identical
+        if self.chunk != 1:
+            d["chunk"] = self.chunk
         return d
 
     @classmethod

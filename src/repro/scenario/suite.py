@@ -607,20 +607,15 @@ class ScenarioSuite:
                                  else scn.sim_backend)
             interp = None if scn.sim is None else scn.sim.interpret
             tr = 0 if scn.trace is None else int(scn.trace.events)
-            if tr and scn.is_class_network:
-                raise ValueError(
-                    f"scenario {name!r}: TraceSpec on a class-aggregated "
-                    "network is not supported in suite dispatch — class "
-                    "rings index stations per class, not per client; "
-                    "expand the population (aggregate=False) to trace it")
+            ck = 1 if scn.sim is None else int(scn.sim.chunk)
             key = (scn.network.law, scn.network.mu_cs is not None,
-                   _power_sig(scn), bk, interp, scn.is_class_network, tr)
+                   _power_sig(scn), bk, interp, scn.is_class_network, tr, ck)
             buckets.setdefault(key, []).append(name)
 
         programs = 0
         S = len(self.seeds)
-        for (law, has_cs, power_sig, bk, interp, is_classes, tr), members in \
-                buckets.items():
+        for (law, has_cs, power_sig, bk, interp, is_classes, tr, ck), \
+                members in buckets.items():
             has_power = power_sig is not None
             # the table size comes from ALL bucket members (trajectories
             # depend on it: init_state draws per-slot), so the *effective*
@@ -674,17 +669,18 @@ class ScenarioSuite:
             keys = jnp.stack([jax.random.PRNGKey(s)
                               for _ in todo for s in self.seeds])
             sig = ("simulate", is_classes, axis_max, law, has_cs, power_sig,
-                   mx, int(num_updates), int(warmup), bk, interp, tr)
+                   mx, int(num_updates), int(warmup), bk, interp, tr, ck)
             fn = self._jit_cache.get(sig)
             if fn is None:
                 if is_classes:
                     fn = self._jit_cache[sig] = build_class_lanes_fn(
                         bk, int(num_updates), int(warmup), law, mx,
-                        has_power)
+                        has_power, trace_events=tr, chunk=ck)
                 else:
                     fn = self._jit_cache[sig] = build_lanes_fn(
                         bk, int(num_updates), int(warmup), law, mx,
-                        has_power, interpret=interp, trace_events=tr)
+                        has_power, interpret=interp, trace_events=tr,
+                        chunk=ck)
                 programs += 1
             with self.metrics.timed("suite.dispatch", mode="simulate"):
                 out = jax.block_until_ready(
@@ -713,7 +709,23 @@ class ScenarioSuite:
                     pkey = ("drift_pred", scn.hash(), int(m_i))
                     preds = self._result_cache.get(pkey)
                     if preds is None:
+                        # Scenario.params() expands a class network, so the
+                        # closed forms always see the member population
                         preds = predict(scn.params(strategies[name][0]), m_i)
+                        if is_classes:
+                            # class rings index stations per CLASS: fold the
+                            # per-member delay predictions onto the class
+                            # axis (E0[D_c] = sum of the members' shares)
+                            cnt = np.asarray(
+                                scn.class_params(strategies[name][0]).count)
+                            lbl = np.repeat(np.arange(len(cnt)), cnt)
+                            d = np.bincount(
+                                lbl,
+                                weights=np.asarray(preds["delays"],
+                                                   dtype=np.float64),
+                                minlength=len(cnt))
+                            preds = dict(preds,
+                                         delays=[float(v) for v in d])
                         self._result_cache[pkey] = preds
                     traces[name] = [
                         decode(jax.tree_util.tree_map(

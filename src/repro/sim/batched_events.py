@@ -52,7 +52,7 @@ def stack_lanes(trees):
 
 def _make_pallas_fn(num_updates: int, warmup: int, distribution: str,
                     m_max: int, interpret: Optional[bool],
-                    trace_events: int = 0):
+                    trace_events: int = 0, chunk: int = 1):
     def fn(lane_params, m_vec, keys, power):
         mult = 4 if lane_params.mu_cs is not None else 3
         num_events = mult * (num_updates + warmup) + mult * m_max + 8
@@ -88,8 +88,44 @@ def _make_pallas_fn(num_updates: int, warmup: int, distribution: str,
                 ring = jax.vmap(app)(ring, st, st2, out)
             return (st2, ring), None
 
-        (st, ring), _ = jax.lax.scan(body, (st, ring), None,
-                                     length=num_events)
+        def megabody(carry, _):
+            from ..kernels.events import megastep_event_pallas
+
+            st, rem, ring = carry
+            st2, aux = megastep_event_pallas(
+                lane_params, st, chunk=chunk, rem=rem,
+                distribution=distribution, power=power, interpret=interpret)
+            if trace_events:
+                # per-event appends replayed from the megastep descriptors,
+                # masked by `keep` so partial chunks stay non-invasive
+                def app_ev(rg, x):
+                    t, stn, stn_to, kind, slot, client, delay, upd, keep = x
+
+                    def app(rg1, t1, s1, s2, k1, sl, c1, d1, u1, v1):
+                        return event_ring_append(
+                            rg1, time=t1, station=s1, station_to=s2,
+                            kind=k1, slot=sl, client=c1, delay=d1,
+                            update=u1, valid=v1)
+
+                    return jax.vmap(app)(rg, t, stn, stn_to, kind, slot,
+                                         client, delay, upd, keep), None
+
+                lead = lambda a: jnp.moveaxis(a, 1, 0)  # noqa: E731
+                ring, _ = jax.lax.scan(app_ev, ring, (
+                    lead(aux.time), lead(aux.station), lead(aux.station_to),
+                    lead(aux.kind), lead(aux.slot), lead(aux.client),
+                    lead(aux.delay), lead(aux.update), lead(aux.keep)))
+            return (st2, rem - chunk, ring), None
+
+        if chunk == 1:
+            (st, ring), _ = jax.lax.scan(body, (st, ring), None,
+                                         length=num_events)
+        else:
+            n_chunks = -(-num_events // chunk)
+            (st, _, ring), _ = jax.lax.scan(
+                megabody,
+                (st, jnp.full((L,), num_events, jnp.int32), ring), None,
+                length=n_chunks)
         stats = jax.vmap(finalize_stats)(st)
         return (stats, ring) if trace_events else stats
 
@@ -98,7 +134,8 @@ def _make_pallas_fn(num_updates: int, warmup: int, distribution: str,
 
 def build_lanes_fn(backend: str, num_updates: int, warmup: int,
                    distribution: str, m_max: int, has_power: bool,
-                   interpret: Optional[bool] = None, trace_events: int = 0):
+                   interpret: Optional[bool] = None, trace_events: int = 0,
+                   chunk: int = 1):
     """The compiled lane-sweep program for one static signature.
 
     Returns ``fn(lane_params, m_vec, keys, power) -> EventStats`` with a
@@ -107,19 +144,23 @@ def build_lanes_fn(backend: str, num_updates: int, warmup: int,
     ``trace_events > 0`` selects the traced program variant: the return
     becomes ``(EventStats, EventRing)`` (per-lane rings of that
     capacity), with statistics bitwise equal to the untraced program.
-    Programs are memoized per signature — repeated sweeps (and every
-    :func:`simulate_stats_lanes` call) reuse the compiled jit entry
-    instead of retracing a fresh closure.
+    ``chunk > 1`` selects the megastep variant (``chunk`` events per scan
+    iteration — one kernel launch under ``"pallas"``), trajectories
+    bitwise equal to ``chunk = 1``.  Programs are memoized per signature —
+    repeated sweeps (and every :func:`simulate_stats_lanes` call) reuse
+    the compiled jit entry instead of retracing a fresh closure.
     """
     return _build_lanes_fn(resolve_backend(backend), int(num_updates),
                            int(warmup), distribution, int(m_max),
-                           bool(has_power), interpret, int(trace_events))
+                           bool(has_power), interpret, int(trace_events),
+                           int(chunk))
 
 
 @functools.lru_cache(maxsize=None)
 def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
                     m_max: int, has_power: bool,
-                    interpret: Optional[bool], trace_events: int = 0):
+                    interpret: Optional[bool], trace_events: int = 0,
+                    chunk: int = 1):
     if backend == "reference":
         def fn(lane_params, m_vec, keys, power):
             outs = []
@@ -130,31 +171,31 @@ def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
                 if trace_events:
                     outs.append(events._simulate_stats_traced(
                         prm, m_vec[i], keys[i], nu, wu, distribution, m_max,
-                        pw, trace_events))
+                        pw, trace_events, chunk))
                 else:
                     outs.append(events._simulate_stats(
                         prm, m_vec[i], keys[i], nu, wu, distribution, m_max,
-                        pw))
+                        pw, chunk))
             return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
         return fn
 
     if backend == "pallas":
         return _make_pallas_fn(nu, wu, distribution, m_max, interpret,
-                               trace_events)
+                               trace_events, chunk)
 
     if backend == "sharded":
         from .sharded import build_sharded_lanes_fn
 
         return build_sharded_lanes_fn(nu, wu, distribution, m_max, has_power,
-                                      trace_events)
+                                      trace_events, chunk)
 
     # "batched": one jitted vmap of the single-lane scan
     if trace_events:
         def one_traced(prm, m, key, power):
             return events._simulate_stats_traced(
                 prm, m, key, nu, wu, distribution, m_max, power,
-                trace_events)
+                trace_events, chunk)
 
         if has_power:
             return jax.jit(jax.vmap(one_traced))
@@ -168,7 +209,7 @@ def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
 
     def one(prm, m, key, power):
         return events._simulate_stats(prm, m, key, nu, wu, distribution,
-                                      m_max, power)
+                                      m_max, power, chunk)
 
     if has_power:
         return jax.jit(jax.vmap(one))
@@ -184,7 +225,7 @@ def _build_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
 
 def build_class_lanes_fn(backend: str, num_updates: int, warmup: int,
                          distribution: str, m_max: int, has_power: bool,
-                         trace_events: int = 0):
+                         trace_events: int = 0, chunk: int = 1):
     """The compiled class-lane sweep program for one static signature.
 
     Like :func:`build_lanes_fn` but each lane is a class-aggregated network
@@ -192,17 +233,20 @@ def build_class_lanes_fn(backend: str, num_updates: int, warmup: int,
     ``events._simulate_stats_classes`` — per-lane state scales with the
     number of classes, not the population, so lanes with n = 10^5-10^6
     members fit on device.  ``trace_events > 0`` selects the traced
-    variant returning ``(stats, ring)``.  No pallas kernel exists for the
-    class engine; ``"pallas"`` raises.
+    variant returning ``(stats, ring)``; ``chunk > 1`` the megastep
+    variant (bitwise equal trajectories).  No pallas kernel exists for
+    the class engine; ``"pallas"`` raises.
     """
     return _build_class_lanes_fn(resolve_backend(backend), int(num_updates),
                                  int(warmup), distribution, int(m_max),
-                                 bool(has_power), int(trace_events))
+                                 bool(has_power), int(trace_events),
+                                 int(chunk))
 
 
 @functools.lru_cache(maxsize=None)
 def _build_class_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
-                          m_max: int, has_power: bool, trace_events: int = 0):
+                          m_max: int, has_power: bool, trace_events: int = 0,
+                          chunk: int = 1):
     if backend == "pallas":
         raise ValueError(
             "the class-aggregated event engine has no pallas kernel; pin "
@@ -212,11 +256,12 @@ def _build_class_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
         def one(cls_, m, key, power):
             return events._simulate_stats_classes_traced(
                 cls_, m, key, nu, wu, distribution, m_max, power,
-                trace_events)
+                trace_events, chunk)
     else:
         def one(cls_, m, key, power):
             return events._simulate_stats_classes(cls_, m, key, nu, wu,
-                                                  distribution, m_max, power)
+                                                  distribution, m_max, power,
+                                                  chunk)
 
     if backend == "reference":
         def fn(lane_classes, m_vec, keys, power):
@@ -234,7 +279,7 @@ def _build_class_lanes_fn(backend: str, nu: int, wu: int, distribution: str,
         from .sharded import build_sharded_class_lanes_fn
 
         return build_sharded_class_lanes_fn(nu, wu, distribution, m_max,
-                                            has_power, trace_events)
+                                            has_power, trace_events, chunk)
 
     # "batched": one jitted vmap of the single-lane class scan
     if has_power:
@@ -253,7 +298,8 @@ def simulate_stats_lanes(params, ms, num_updates: int, *, warmup: int = 0,
                          m_max: Optional[int] = None,
                          backend: Optional[str] = None,
                          interpret: Optional[bool] = None,
-                         trace_events: int = 0) -> EventStats:
+                         trace_events: int = 0,
+                         chunk: int = 1) -> EventStats:
     """Stationary statistics for ``L`` lanes through the selected backend.
 
     ``params`` is a list of per-lane :class:`NetworkParams` (or one
@@ -295,5 +341,5 @@ def simulate_stats_lanes(params, ms, num_updates: int, *, warmup: int = 0,
                 power)
     fn = build_lanes_fn(backend, num_updates, warmup, distribution,
                         int(m_max), power is not None, interpret=interpret,
-                        trace_events=trace_events)
+                        trace_events=trace_events, chunk=chunk)
     return fn(lane_params, m_vec, keys, power)

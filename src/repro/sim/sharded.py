@@ -43,7 +43,7 @@ def device_count() -> int:
 @functools.lru_cache(maxsize=None)
 def _build_sharded_fn(nu: int, wu: int, distribution: str, m_max: int,
                       has_power: bool, kind: str = "client",
-                      trace_events: int = 0):
+                      trace_events: int = 0, chunk: int = 1):
     """The compiled sharded lane-sweep program for one static signature.
 
     Memoized like ``batched_events._build_lanes_fn``; the returned wrapper
@@ -54,7 +54,8 @@ def _build_sharded_fn(nu: int, wu: int, distribution: str, m_max: int,
     ``trace_events > 0`` runs the traced engine variant — per-lane
     telemetry rings shard with their lanes (strictly lane-local, so the
     bitwise contract is untouched) and the return becomes
-    ``(stats, ring)``.
+    ``(stats, ring)``.  ``chunk > 1`` runs the megastep engine variant
+    (bitwise equal trajectories, lane-local like everything else here).
     """
     ndev = device_count()
 
@@ -63,21 +64,22 @@ def _build_sharded_fn(nu: int, wu: int, distribution: str, m_max: int,
             def one(prm, m, key, power):
                 return events._simulate_stats_classes_traced(
                     prm, m, key, nu, wu, distribution, m_max, power,
-                    trace_events)
+                    trace_events, chunk)
         else:
             def one(prm, m, key, power):
                 return events._simulate_stats_classes(
-                    prm, m, key, nu, wu, distribution, m_max, power)
+                    prm, m, key, nu, wu, distribution, m_max, power, chunk)
     else:
         if trace_events:
             def one(prm, m, key, power):
                 return events._simulate_stats_traced(
                     prm, m, key, nu, wu, distribution, m_max, power,
-                    trace_events)
+                    trace_events, chunk)
         else:
             def one(prm, m, key, power):
                 return events._simulate_stats(prm, m, key, nu, wu,
-                                              distribution, m_max, power)
+                                              distribution, m_max, power,
+                                              chunk)
 
     mesh = make_mesh((ndev,), ("lanes",))
     spec = jax.sharding.PartitionSpec("lanes")
@@ -125,22 +127,23 @@ def _build_sharded_fn(nu: int, wu: int, distribution: str, m_max: int,
 
 def build_sharded_lanes_fn(num_updates: int, warmup: int, distribution: str,
                            m_max: int, has_power: bool,
-                           trace_events: int = 0):
+                           trace_events: int = 0, chunk: int = 1):
     """``fn(lane_params, m_vec, keys, power) -> EventStats`` sharding the
     lane axis over all local devices (the ``"sharded"`` entry of
     ``batched_events._build_lanes_fn``)."""
     return _build_sharded_fn(int(num_updates), int(warmup), distribution,
                              int(m_max), bool(has_power), "client",
-                             int(trace_events))
+                             int(trace_events), int(chunk))
 
 
 def build_sharded_class_lanes_fn(num_updates: int, warmup: int,
                                  distribution: str, m_max: int,
-                                 has_power: bool, trace_events: int = 0):
+                                 has_power: bool, trace_events: int = 0,
+                                 chunk: int = 1):
     """Class-aggregated variant: ``fn(lane_classes, m_vec, keys, power)``
     where each lane is a :class:`~repro.core.buzen.ClassParams` network run
     through ``events._simulate_stats_classes`` — the ``"sharded"`` entry of
     ``batched_events._build_class_lanes_fn``."""
     return _build_sharded_fn(int(num_updates), int(warmup), distribution,
                              int(m_max), bool(has_power), "class",
-                             int(trace_events))
+                             int(trace_events), int(chunk))

@@ -32,6 +32,24 @@ def tracecheck():
 
     return tc
 
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_programs():
+    """Release each module's compiled executables when the module ends.
+
+    The full tier-1 run now compiles several hundred programs; keeping
+    every executable live for the whole session grows the process past
+    ~8 GB and has segfaulted XLA's CPU compiler late in the suite.
+    Programs are not shared across test modules (each module owns its
+    shapes), so clearing jit caches at module teardown caps the resident
+    set without changing any test's semantics — a builder memoized by
+    ``lru_cache`` simply recompiles on its next call.  Imported lazily so
+    jax-free modules stay jax-free.
+    """
+    yield
+    if "jax" in sys.modules:
+        sys.modules["jax"].clear_caches()
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:

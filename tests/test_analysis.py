@@ -383,11 +383,12 @@ def test_sentinel_catches_per_scenario_replanning(tracecheck):
 
 EXPECTED_PROGRAMS = {
     "suite_analyze", "suite_analyze_classes", "suite_simulate_batched",
-    "suite_simulate_batched_traced", "suite_simulate_classes",
-    "suite_simulate_pallas", "suite_simulate_sharded",
+    "suite_simulate_batched_traced", "suite_simulate_batched_megastep",
+    "suite_simulate_classes", "suite_simulate_pallas",
+    "suite_simulate_pallas_megastep", "suite_simulate_sharded",
     "simulate_reference_lane", "trainer_scan", "trainer_scan_traced",
     "trainer_scan_lane_nets", "kernel_buzen", "kernel_buzen_classes",
-    "kernel_events",
+    "kernel_events", "kernel_events_megastep",
 }
 
 

@@ -1,0 +1,301 @@
+"""Megastep (``chunk > 1``) == ``chunk`` single steps, **bitwise** (PR 10).
+
+The contract under test: for every backend (reference / batched / pallas /
+sharded), every registered timing law, CS on/off, padded-``n`` and
+class-aggregated configurations, and tracing on/off, running the event
+engine with ``chunk=E`` produces *bit-identical* trajectories and
+statistics to the single-step (``chunk=1``) program — including stats
+windows (``warmup``/``cap``) landing on exact event boundaries via masked
+partial chunks (every ``num_events`` here is chosen NOT to divide the
+chunk).  Plus: ``next_update`` megasteps don't change update semantics,
+``SimSpec(chunk=...)`` round-trips with hash stability, the fused trainer
+is bitwise invariant to ``sim_chunk``, and chunked suites hold the 1-2
+program planner budget.
+
+Both sides of every comparison run under jit: all production paths are
+jitted, and eager-vs-compiled is NOT bitwise on CPU (XLA may contract
+mul-add chains differently between the two), so an eager baseline would
+test a program that never runs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NetworkParams
+from repro.core import events as E
+from repro.core.buzen import ClassParams, pad_network
+from repro.scenario import law_names
+from repro.sim import simulate_stats_lanes
+
+LAWS = law_names()
+CHUNKS = (2, 7)  # 7 never divides the event counts below: partial chunks
+
+
+def net_params(seed, n, with_cs=False):
+    rng = np.random.default_rng(seed)
+    params = NetworkParams(
+        p=jnp.asarray(rng.dirichlet(np.ones(n) * 2.0)),
+        mu_c=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+        mu_d=jnp.asarray(rng.uniform(0.5, 4.0, n)),
+        mu_u=jnp.asarray(rng.uniform(0.5, 4.0, n)))
+    return params.with_cs(1.5) if with_cs else params
+
+
+def class_params(with_cs=False):
+    return ClassParams(
+        p=jnp.asarray([0.12, 0.08]),
+        mu_c=jnp.asarray([1.0, 2.0]), mu_d=jnp.asarray([2.0, 3.0]),
+        mu_u=jnp.asarray([3.0, 4.0]), count=jnp.asarray([3, 2]),
+        mu_cs=jnp.asarray(1.5) if with_cs else None)
+
+
+def assert_tree_equal(a, b, err=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"{err}: tree structure {ta} != {tb}"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{err}[leaf {i}]")
+
+
+# ---------------------------------------------------------------------------
+# core engine: laws x CS x partial chunks, padded-n, classes, rings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("with_cs", (False, True))
+@pytest.mark.parametrize("law", LAWS)
+def test_engine_megastep_bitwise_every_law(law, with_cs):
+    params = net_params(3, 4, with_cs)
+    key = jax.random.PRNGKey(11)
+    base = E._simulate_stats(params, 3, key, 40, 10, law, 5, None, 1)
+    for chunk in CHUNKS:
+        got = E._simulate_stats(params, 3, key, 40, 10, law, 5, None, chunk)
+        assert_tree_equal(base, got, err=f"{law}/cs={with_cs}/E={chunk}")
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_engine_megastep_bitwise_padded_n(chunk):
+    params = net_params(5, 3)
+    padded = pad_network(params, 6)
+    key = jax.random.PRNGKey(2)
+    single = E._simulate_stats(padded, 3, key, 40, 10, "exponential", 5,
+                               None, 1)
+    mega = E._simulate_stats(padded, 3, key, 40, 10, "exponential", 5,
+                             None, chunk)
+    assert_tree_equal(single, mega, err=f"padded/E={chunk}")
+    # composes with padding invariance: unpadded single == unpadded mega
+    plain = E._simulate_stats(params, 3, key, 40, 10, "exponential", 5,
+                              None, 1)
+    assert_tree_equal(E.unpad_stats(plain, 3),
+                      E.unpad_stats(mega, 3), err=f"pad-invariance/E={chunk}")
+
+
+@pytest.mark.parametrize("with_cs", (False, True))
+@pytest.mark.parametrize("law", ("exponential", "lognormal"))
+def test_class_engine_megastep_bitwise(law, with_cs):
+    cp = class_params(with_cs)
+    key = jax.random.PRNGKey(7)
+    base = E._simulate_stats_classes(cp, 3, key, 40, 10, law, 5, None, 1)
+    for chunk in (3, 8):
+        got = E._simulate_stats_classes(cp, 3, key, 40, 10, law, 5, None,
+                                        chunk)
+        assert_tree_equal(base, got, err=f"class/{law}/cs={with_cs}/"
+                                         f"E={chunk}")
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_traced_megastep_bitwise_stats_and_rings(chunk):
+    """Rings thread through the chunked carry: the traced chunked program
+    matches the traced single-step one bitwise — stats AND ring contents —
+    and tracing stays non-invasive under chunking."""
+    params = net_params(9, 4, with_cs=True)
+    key = jax.random.PRNGKey(3)
+    s1, r1 = E._simulate_stats_traced(params, 3, key, 40, 10, "exponential",
+                                      5, None, 64, 1)
+    s2, r2 = E._simulate_stats_traced(params, 3, key, 40, 10, "exponential",
+                                      5, None, 64, chunk)
+    assert_tree_equal(s1, s2, err=f"traced-stats/E={chunk}")
+    assert_tree_equal(r1, r2, err=f"ring/E={chunk}")
+    plain = E._simulate_stats(params, 3, key, 40, 10, "exponential", 5,
+                              None, chunk)
+    assert_tree_equal(plain, s2, err=f"non-invasive/E={chunk}")
+
+
+def test_traced_class_megastep_bitwise():
+    cp = class_params(with_cs=True)
+    key = jax.random.PRNGKey(4)
+    s1, r1 = E._simulate_stats_classes_traced(cp, 3, key, 40, 10,
+                                              "exponential", 5, None, 64, 1)
+    s2, r2 = E._simulate_stats_classes_traced(cp, 3, key, 40, 10,
+                                              "exponential", 5, None, 64, 8)
+    assert_tree_equal(s1, s2, err="class-traced-stats")
+    assert_tree_equal(r1, r2, err="class-ring")
+
+
+# ---------------------------------------------------------------------------
+# all four sim backends through the public lanes API
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("law", LAWS)
+@pytest.mark.parametrize("backend", ("reference", "batched", "pallas",
+                                     "sharded"))
+def test_backend_megastep_bitwise(backend, law):
+    lanes = [net_params(s, 4) for s in (0, 1)]
+    kw = dict(warmup=15, distribution=law, backend=backend,
+              interpret=True if backend == "pallas" else None)
+    base = simulate_stats_lanes(lanes, [4, 3], 90, chunk=1, **kw)
+    mega = simulate_stats_lanes(lanes, [4, 3], 90, chunk=5, **kw)
+    assert_tree_equal(base, mega, err=f"{backend}/{law}")
+
+
+@pytest.mark.parametrize("backend", ("reference", "batched", "pallas"))
+def test_backend_megastep_bitwise_cs_traced(backend):
+    lanes = [net_params(s, 3, with_cs=True) for s in (4, 5)]
+    kw = dict(warmup=10, distribution="exponential", backend=backend,
+              trace_events=64,
+              interpret=True if backend == "pallas" else None)
+    base = simulate_stats_lanes(lanes, [3, 2], 70, chunk=1, **kw)
+    mega = simulate_stats_lanes(lanes, [3, 2], 70, chunk=6, **kw)
+    assert_tree_equal(base, mega, err=f"{backend}/cs-traced")
+
+
+@pytest.mark.parametrize("backend", ("reference", "batched", "sharded"))
+def test_class_backend_megastep_bitwise(backend):
+    from repro.sim.batched_events import build_class_lanes_fn
+
+    cp = class_params(with_cs=True)
+    lanes = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *([cp] * 2))
+    m_vec = jnp.asarray([3, 2], jnp.int32)
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in (0, 1)])
+    base = build_class_lanes_fn(backend, 80, 10, "exponential", 4,
+                                False)(lanes, m_vec, keys, None)
+    mega = build_class_lanes_fn(backend, 80, 10, "exponential", 4,
+                                False, chunk=6)(lanes, m_vec, keys, None)
+    assert_tree_equal(base, mega, err=f"class/{backend}")
+
+
+# ---------------------------------------------------------------------------
+# next_update: megasteps leave update semantics bitwise unchanged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("with_cs", (False, True))
+@pytest.mark.parametrize("backend", ("batched", "pallas"))
+def test_next_update_megastep_bitwise(backend, with_cs):
+    params = net_params(6, 4, with_cs)
+    interp = True if backend == "pallas" else None
+
+    def run(chunk):
+        @jax.jit
+        def go(key):
+            st = E.init_state(params, 3, key, m_max=5,
+                              distribution="lognormal", warmup=0, cap=999)
+
+            def body(st, _):
+                st, upd = E.next_update(params, st,
+                                        distribution="lognormal",
+                                        backend=backend, interpret=interp,
+                                        chunk=chunk)
+                return st, upd
+
+            return jax.lax.scan(body, st, None, length=6)
+
+        return go(jax.random.PRNGKey(8))
+
+    st1, upds1 = run(1)
+    for chunk in (4, 9):
+        st2, upds2 = run(chunk)
+        assert_tree_equal(upds1, upds2, err=f"{backend}/upds/E={chunk}")
+        assert_tree_equal(st1, st2, err=f"{backend}/state/E={chunk}")
+
+
+def test_trainer_bitwise_under_sim_chunk():
+    from repro.fl.engine import DeviceTrainer
+    from repro.fl.models import mlp_classifier
+    from repro.fl.trainer import AsyncFLConfig
+
+    rng = np.random.default_rng(5)
+    n = 3
+    net = net_params(5, n)
+    clients = [(rng.normal(size=(6, 4)).astype(np.float32),
+                rng.integers(0, 2, size=6).astype(np.int32))
+               for _ in range(n)]
+    test = (rng.normal(size=(8, 4)).astype(np.float32),
+            rng.integers(0, 2, size=8).astype(np.int32))
+    model = mlp_classifier(4, 2, hidden=(4,))
+    cfg = AsyncFLConfig(eta=0.05, batch_size=2, eval_every_time=2.0)
+
+    def run(sim_chunk):
+        tr = DeviceTrainer(model, clients, net, cfg, test_data=test,
+                           sim_chunk=sim_chunk)
+        ps = jnp.stack([jnp.asarray(net.p)] * 2)
+        return tr.run_lanes(ps, [2, 2], [0.05, 0.05], [0, 1], 8.0)
+
+    base_logs, base_fin = run(1)
+    mega_logs, mega_fin = run(4)
+    assert_tree_equal(base_fin, mega_fin, err="trainer-params")
+    for i, (a, b) in enumerate(zip(base_logs, mega_logs)):
+        for f in ("times", "accuracies", "losses", "updates", "mean_delay",
+                  "throughput", "energy"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+                err_msg=f"trainer-log[{i}].{f}")
+
+
+# ---------------------------------------------------------------------------
+# SimSpec plumbing + suite dispatch + planner budget
+# ---------------------------------------------------------------------------
+
+def test_simspec_chunk_roundtrip_validation_and_hash():
+    from repro.scenario import NetworkSpec, Scenario, SimSpec
+
+    # absent-when-default: pre-megastep hashes must not move
+    assert "chunk" not in SimSpec().to_dict()
+    assert SimSpec.from_dict(SimSpec(chunk=8).to_dict()).chunk == 8
+    net = NetworkSpec(mu_c=[1.0, 2.0], mu_d=[3.0] * 2, mu_u=[3.0] * 2)
+    plain = Scenario(network=net)
+    chunked = Scenario(network=net, sim=SimSpec(chunk=8))
+    assert plain.hash() != chunked.hash()
+    rt = Scenario.from_dict(chunked.to_dict())
+    assert rt.hash() == chunked.hash() and rt.sim.chunk == 8
+    with pytest.raises(ValueError, match="chunk"):
+        SimSpec(chunk=0)
+
+
+def _chunked_suite(chunk, seeds=(0, 1), sim=None):
+    from repro.core import LearningConstants
+    from repro.scenario import (LearningSpec, NetworkSpec, Scenario,
+                                ScenarioSuite, SimSpec, StrategySpec)
+
+    rng = np.random.default_rng(17)
+    scns = {}
+    for i, m in enumerate((3, 4)):
+        n = 4
+        scns[f"s{i}"] = Scenario(
+            network=NetworkSpec(mu_c=rng.uniform(0.5, 4.0, n),
+                                mu_d=rng.uniform(0.5, 4.0, n),
+                                mu_u=rng.uniform(0.5, 4.0, n)),
+            learning=LearningSpec(consts=LearningConstants(M=2.0, G=5.0)),
+            strategy=StrategySpec("explicit", p=rng.dirichlet(np.ones(n)),
+                                  m=m),
+            sim=SimSpec(chunk=chunk) if chunk != 1 else sim)
+    return ScenarioSuite(scns, seeds=seeds)
+
+
+def test_suite_chunked_bitwise_and_program_budget(tracecheck):
+    """`SimSpec(chunk=...)` scenarios run through the suite bitwise equal
+    to the default, and a chunked suite still plans into 1-2 programs
+    (unique num_updates: the process-wide builder memo must not leak)."""
+    base = _chunked_suite(1).run(mode="simulate", num_updates=181,
+                                 warmup=20)
+    suite = _chunked_suite(8)
+    with tracecheck.expect(max_programs=2,
+                           pattern=tracecheck.PLANNER_PROGRAMS,
+                           what="chunked suite planner") as w:
+        res = suite.run(mode="simulate", num_updates=181, warmup=20)
+    assert res.programs == 1  # one structure bucket -> one megastep program
+    assert len(w.programs(tracecheck.PLANNER_PROGRAMS)) <= 2
+    for name in base.entries:
+        assert_tree_equal(base.entries[name], res.entries[name],
+                          err=f"suite/{name}")

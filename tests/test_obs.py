@@ -211,7 +211,11 @@ def test_suite_simulate_traced_bitwise_and_cache_roundtrip():
     assert r2.drift["s"] == r1.drift["s"]
 
 
-def test_suite_rejects_class_network_tracing():
+def test_suite_traces_class_network():
+    """Class rings (per-class station indexing) through ScenarioSuite.run:
+    traced class lanes return stats bitwise equal to the untraced run,
+    decoded rings, and drift reports whose delay predictions are folded
+    onto the class axis."""
     from repro.scenario import (ClassSpec, NetworkSpec, Scenario,
                                 ScenarioSuite, SimSpec, StrategySpec,
                                 TraceSpec)
@@ -220,11 +224,27 @@ def test_suite_rejects_class_network_tracing():
                     count=[3, 2])
     scn = Scenario(
         network=NetworkSpec(classes=cls),
-        strategy=StrategySpec("explicit", p=[0.1, 0.1], m=2),
-        sim=SimSpec(trace=TraceSpec(events=64)))
-    with pytest.raises(ValueError, match="class rings"):
-        ScenarioSuite({"c": scn}, seeds=(0,)).run(
-            mode="simulate", num_updates=50)
+        strategy=StrategySpec("explicit", p=[0.1, 0.1], m=2))
+    traced = scn.replace(sim=SimSpec(trace=TraceSpec(events=2048)))
+    r0 = ScenarioSuite({"c": scn}, seeds=(0, 1)).run(
+        mode="simulate", num_updates=400, warmup=40)
+    suite = ScenarioSuite({"c": traced}, seeds=(0, 1))
+    r1 = suite.run(mode="simulate", num_updates=400, warmup=40)
+    assert r0.traces is None and r0.drift is None
+    assert _tree_bitwise_equal(r0.entries["c"], r1.entries["c"])
+    assert len(r1.traces["c"]) == 2 and len(r1.drift["c"]) == 2
+    C = 2
+    for dec, rep in zip(r1.traces["c"], r1.drift["c"]):
+        # the "client" channel carries the CLASS index in class lanes
+        assert int(np.asarray(dec["client"]).max()) < C
+        delays = [c for c in rep["checks"] if c["metric"] == "staleness"]
+        assert delays and all(r["ok"] for r in rep["checks"]
+                              if r["metric"] == "occupancy")
+    # cache hit round-trips traces and drift
+    r2 = suite.run(mode="simulate", num_updates=400, warmup=40)
+    assert r2.cache_hits == 1
+    assert _tree_bitwise_equal(r1.traces["c"], r2.traces["c"])
+    assert r2.drift["c"] == r1.drift["c"]
 
 
 def test_tracespec_roundtrip_and_hash_stability():
